@@ -1,0 +1,89 @@
+//! End-to-end serving driver (the repo's full-stack validation):
+//!
+//!   1. loads the AOT-compiled quantized tiny-CNN artifacts (HLO text,
+//!      authored in JAX + the Pallas crossbar kernel, built by
+//!      `make artifacts`) into the PJRT CPU runtime,
+//!   2. starts the L3 coordinator (dynamic batcher + worker pool),
+//!   3. replays a Poisson arrival trace of synthetic CIFAR-100 requests,
+//!   4. reports measured latency percentiles + throughput of the
+//!      functional path, alongside the PIM simulator's modeled metrics
+//!      for the same network and mean batch.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serve`
+
+use std::time::{Duration, Instant};
+
+use pimflow::cfg::presets;
+use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
+use pimflow::nn::resnet;
+use pimflow::runtime::artifact::default_dir;
+use pimflow::sim::System;
+use pimflow::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_dir();
+    let requests = 200usize;
+    let rate_per_s = 50.0;
+
+    println!("[1/3] compiling AOT artifacts from {} ...", dir.display());
+    let server = Server::start(
+        &dir,
+        ServerConfig {
+            workers: 1,
+            policy: BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_millis(4),
+            },
+        },
+    )?;
+
+    println!("[2/3] replaying {requests} requests at ~{rate_per_s}/s (Poisson) ...");
+    let mut rng = Rng::new(2024);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(1.0 / rate_per_s)));
+        let img: Vec<i32> = (0..IMAGE_ELEMENTS)
+            .map(|_| rng.range_i64(0, 255) as i32)
+            .collect();
+        pending.push(server.submit(img)?);
+    }
+    let mut ok = 0;
+    for rx in pending {
+        let resp = rx.recv()?;
+        assert_eq!(resp.logits.len(), 100);
+        ok += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.stats();
+
+    println!("[3/3] done: {ok}/{requests} responses\n");
+    println!("== measured (functional path: rust coordinator -> PJRT/XLA) ==");
+    println!("  wall time          {wall:.3} s");
+    println!("  throughput         {:.1} req/s", ok as f64 / wall);
+    println!("  mean batch         {:.2}", snap.mean_batch);
+    println!(
+        "  latency p50/p95/p99  {:.1} / {:.1} / {:.1} ms",
+        snap.latency.median() * 1e3,
+        snap.latency.percentile(95.0) * 1e3,
+        snap.latency.p99() * 1e3
+    );
+    println!(
+        "  exec per batch p50   {:.1} ms",
+        snap.exec.median() * 1e3
+    );
+
+    // Modeled PIM metrics for the same network at the observed mean batch.
+    let mean_batch = snap.mean_batch.round().max(1.0) as u32;
+    let net = resnet::tiny(100);
+    let modeled = System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+        .try_run(&net, mean_batch)?;
+    println!("\n== modeled (PIM compact chip, same tiny-CNN, batch {mean_batch}) ==");
+    println!("  throughput         {:.0} FPS", modeled.throughput_fps);
+    println!("  energy efficiency  {:.2} TOPS/W", modeled.tops_per_watt);
+    println!("  compute share      {:.1}%", 100.0 * modeled.compute_fraction);
+    println!("  parts              {}", modeled.num_parts);
+
+    server.shutdown();
+    Ok(())
+}

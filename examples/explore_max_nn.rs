@@ -1,0 +1,42 @@
+//! Fig. 8 exploration: which is the largest ResNet this 41.5 mm² compact
+//! chip can host while holding a performance floor?
+//!
+//! Run: `cargo run --release --example explore_max_nn`
+
+use pimflow::cfg::presets;
+use pimflow::explore::{fig8_sweep, max_deployable, Floor};
+
+fn main() {
+    let batch = 256;
+    let pts = fig8_sweep(&presets::lpddr5(), batch);
+
+    println!("NN-size exploration @ batch {batch} (compact 41.5 mm², LPDDR5)\n");
+    println!(
+        "{:<10} {:>10} {:>12} {:>12} {:>12} {:>10}",
+        "network", "weights", "no-DDM FPS", "DDM FPS", "unlim FPS", "TOPS/W"
+    );
+    for p in &pts {
+        println!(
+            "{:<10} {:>9.1}M {:>12.0} {:>12.0} {:>12.0} {:>10.2}",
+            p.network,
+            p.weights as f64 / 1e6,
+            p.no_ddm.throughput_fps,
+            p.ddm.throughput_fps,
+            p.unlimited.throughput_fps,
+            p.ddm.tops_per_watt
+        );
+    }
+
+    // Sweep a family of floors like the paper's purple-oval analysis.
+    println!("\nfloor sweep (efficiency floor fixed at 4 TOPS/W):");
+    for min_fps in [1000.0, 2000.0, 3000.0, 5000.0, 8000.0] {
+        let floor = Floor {
+            min_fps,
+            min_tops_per_watt: 4.0,
+        };
+        match max_deployable(&pts, floor) {
+            Some(best) => println!("  >{min_fps:>5.0} FPS -> up to {}", best.network),
+            None => println!("  >{min_fps:>5.0} FPS -> nothing fits"),
+        }
+    }
+}

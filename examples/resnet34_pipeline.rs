@@ -1,0 +1,90 @@
+//! Deep-dive into the paper's pipeline method (Fig. 4/5) on ResNet-34:
+//! show the partition, the DDM duplication decisions, per-part intervals
+//! and bubbles, case-2 vs case-3 overlap, and the DRAM transaction trace
+//! breakdown the methodology records.
+//!
+//! Run: `cargo run --release --example resnet34_pipeline`
+
+use pimflow::cfg::presets;
+use pimflow::cfg::PipelineCase;
+use pimflow::ddm;
+use pimflow::dram::TxPayload;
+use pimflow::mapping::duplication::tiles_with_dups;
+use pimflow::nn::resnet;
+use pimflow::partition::partition;
+use pimflow::pim::ChipModel;
+use pimflow::pipeline::{schedule::part_timing, simulate};
+
+fn main() -> anyhow::Result<()> {
+    let net = resnet::resnet34(100);
+    let chip = ChipModel::new(presets::compact_rram_41mm2())?;
+    let dram = presets::lpddr5();
+    let batch = 64;
+
+    let plan = partition(&net, &chip)?;
+    let dd = ddm::run(&plan, &chip);
+
+    println!(
+        "{} partitioned into {} parts on {} tiles ({:.1} mm²)\n",
+        net.name,
+        plan.num_parts(),
+        chip.num_tiles(),
+        chip.area_mm2()
+    );
+    println!(
+        "{:<5} {:>6} {:>6} {:>6} {:>14} {:>14}  duplicated layers",
+        "part", "units", "tiles", "idle", "T_p no-DDM", "T_p DDM"
+    );
+    for (i, part) in plan.parts.iter().enumerate() {
+        let ones = vec![1u32; part.units.len()];
+        let base = part_timing(part, &chip, &ones);
+        let tuned = part_timing(part, &chip, &dd.dup_per_part[i]);
+        let used = tiles_with_dups(part, &dd.dup_per_part[i]);
+        let dups: Vec<String> = part
+            .units
+            .iter()
+            .zip(&dd.dup_per_part[i])
+            .filter(|(_, &d)| d > 1)
+            .map(|(u, &d)| format!("{}x{d}", u.origin))
+            .collect();
+        println!(
+            "{:<5} {:>6} {:>6} {:>6} {:>11.1} µs {:>11.1} µs  {}",
+            i,
+            part.units.len(),
+            used,
+            chip.num_tiles() - used,
+            base.interval_ns / 1e3,
+            tuned.interval_ns / 1e3,
+            if dups.is_empty() { "-".to_string() } else { dups.join(" ") }
+        );
+    }
+
+    for case in [PipelineCase::Case2, PipelineCase::Case3] {
+        let r = simulate(&net, &plan, &dd, &chip, &dram, batch, case)?;
+        println!(
+            "\n[{:?}] makespan {:.2} ms | {:.0} FPS | {} case-3 overlaps | bubbles {:.2} ms·tile",
+            case,
+            r.makespan_ns / 1e6,
+            r.throughput_fps,
+            r.case3_overlaps,
+            r.bubble_tile_ns() / 1e6,
+        );
+        println!(
+            "  energy: compute {:.0} µJ, wprog {:.0} µJ, leak {:.0} µJ, dram {:.0} µJ (compute share {:.1}%)",
+            r.energy.compute_j * 1e6,
+            r.energy.wprog_j * 1e6,
+            r.energy.leakage_j * 1e6,
+            r.energy.dram_j * 1e6,
+            100.0 * r.energy.compute_fraction()
+        );
+        println!(
+            "  dram trace: {} txns | weights {} KiB, intermediates {} KiB, in {} KiB, out {} KiB",
+            r.trace.len(),
+            r.trace.bytes_by_payload(TxPayload::Weights) / 1024,
+            r.trace.bytes_by_payload(TxPayload::Intermediate) / 1024,
+            r.trace.bytes_by_payload(TxPayload::Input) / 1024,
+            r.trace.bytes_by_payload(TxPayload::Output) / 1024,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+"""AOT lowering: JAX/Pallas forwards -> HLO **text** artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the text
+with ``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU
+client. HLO *text* (never ``.serialize()``) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects, while the text parser reassigns ids and round-trips cleanly.
+
+Artifact I/O contract: every runtime input/output is **int32** (the only
+8/32-bit integer type the rust ``xla`` crate can construct literals for is
+i32/i64); activations hold u8-range values, weights are baked into the HLO
+as constants so the serving path feeds images only.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import crossbar, ref
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XLA HLO text via stablehlo (return_tuple=True).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big literals as ``{...}``, which silently zeroes every baked
+    weight tensor when the text is re-parsed by the Rust runtime.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "constant({...})" in text:
+        raise RuntimeError("HLO printer elided a large constant")
+    return text
+
+
+def _spec(shape: Tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _entry_crossbar_mvm() -> Tuple[Callable, List[Tuple[int, ...]], Dict]:
+    """Standalone crossbar matmul with runtime x AND w (kernel-level artifact)."""
+
+    def fn(x, w):
+        return (crossbar.crossbar_matmul(x, w),)
+
+    meta = {
+        "description": "bit-serial crossbar matmul, x:(8,128) u8-range, w:(128,32) i8-range",
+        "macs": 8 * 128 * 32,
+    }
+    return fn, [(8, 128), (128, 32)], meta
+
+
+def _entry_crossbar_mvm_ref() -> Tuple[Callable, List[Tuple[int, ...]], Dict]:
+    """Pure-jnp oracle of the same shape (used for runtime self-checks)."""
+
+    def fn(x, w):
+        return (ref.crossbar_matmul_ref(x, w),)
+
+    meta = {"description": "jnp oracle of crossbar_mvm", "macs": 8 * 128 * 32}
+    return fn, [(8, 128), (128, 32)], meta
+
+
+def _entry_resnet_block(batch: int) -> Tuple[Callable, List[Tuple[int, ...]], Dict]:
+    params = M.init_block_params(32, 32, seed=1)
+
+    def fn(x):
+        return (M.resnet_block_forward(x, params),)
+
+    meta = {
+        "description": f"quantized ResNet BasicBlock 32ch 8x8, batch {batch}",
+        "macs": batch * 8 * 8 * 3 * 3 * 32 * 32 * 2,
+    }
+    return fn, [(batch, 8, 8, 32)], meta
+
+
+def _entry_tiny_cnn(batch: int) -> Tuple[Callable, List[Tuple[int, ...]], Dict]:
+    params = M.init_tiny_cnn_params(seed=0)
+
+    def fn(x):
+        return (M.tiny_cnn_forward(x, params),)
+
+    meta = {
+        "description": f"tiny CIFAR-100 CNN (stem + 3 basic blocks + fc), batch {batch}",
+        "param_count": M.tiny_cnn_param_count(),
+        "macs": M.tiny_cnn_macs(batch),
+        "classes": M.TINY_CNN_CLASSES,
+    }
+    return fn, [(batch, 32, 32, 3)], meta
+
+
+ENTRIES: Dict[str, Callable[[], Tuple[Callable, List[Tuple[int, ...]], Dict]]] = {
+    "crossbar_mvm": _entry_crossbar_mvm,
+    "crossbar_mvm_ref": _entry_crossbar_mvm_ref,
+    "resnet_block_b1": lambda: _entry_resnet_block(1),
+    "tiny_cnn_b1": lambda: _entry_tiny_cnn(1),
+    "tiny_cnn_b4": lambda: _entry_tiny_cnn(4),
+    "tiny_cnn_b16": lambda: _entry_tiny_cnn(16),
+}
+
+
+def build(out_dir: str, only: str | None = None) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": MANIFEST_VERSION, "entries": {}}
+
+    for name, make in ENTRIES.items():
+        if only is not None and name != only:
+            continue
+        fn, in_shapes, meta = make()
+        specs = [_spec(s) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        out_shapes = [
+            (tuple(o.shape), str(o.dtype)) for o in jax.eval_shape(fn, *specs)
+        ]
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [{"shape": list(s), "dtype": "i32"} for s in in_shapes],
+            "outputs": [{"shape": list(s), "dtype": d} for s, d in out_shapes],
+            "hlo_bytes": len(text),
+            **meta,
+        }
+        print(f"  {name}: {len(text)/1e6:.2f} MB hlo -> {fname}", file=sys.stderr)
+
+    # Golden cross-language check: a fixed image and its logits, computed
+    # by the jax reference path. The Rust runtime test replays the image
+    # through the compiled artifact and must match bit-for-bit (this is
+    # what caught the HLO large-constant elision bug).
+    if only is None or only.startswith("tiny_cnn"):
+        import numpy as np
+
+        rng = np.random.default_rng(123)
+        img = rng.integers(0, 256, (1, 32, 32, 3), dtype=np.int32)
+        params = M.init_tiny_cnn_params(seed=0)
+        logits = M.tiny_cnn_forward(jnp.asarray(img), params)
+        golden = {
+            "image": [int(v) for v in img.reshape(-1)],
+            "logits": [int(v) for v in np.asarray(logits).reshape(-1)],
+        }
+        with open(os.path.join(out_dir, "golden.json"), "w") as f:
+            json.dump(golden, f)
+        print("  golden.json: fixed-image logits for runtime cross-check", file=sys.stderr)
+
+    path = os.path.join(out_dir, "manifest.json")
+    existing = {}
+    if only is not None and os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f).get("entries", {})
+        existing.update(manifest["entries"])
+        manifest["entries"] = existing
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default=None, help="build a single entry")
+    args = ap.parse_args()
+    manifest = build(args.out, args.only)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

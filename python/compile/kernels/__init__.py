@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime)."""
+
+from .crossbar import (
+    ACT_BITS,
+    WEIGHT_BITS,
+    crossbar_matmul,
+    crossbar_params_ok,
+    lossless_adc_bits,
+    vmem_footprint_bytes,
+)
+from .ref import crossbar_matmul_ref, int_matmul_ref
+
+__all__ = [
+    "ACT_BITS",
+    "WEIGHT_BITS",
+    "crossbar_matmul",
+    "crossbar_params_ok",
+    "lossless_adc_bits",
+    "vmem_footprint_bytes",
+    "crossbar_matmul_ref",
+    "int_matmul_ref",
+]

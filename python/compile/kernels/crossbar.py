@@ -1,0 +1,286 @@
+"""Layer-1 Pallas kernel: bit-serial quantized crossbar matmul.
+
+This is the functional model of the paper's PIM compute hot-spot: an analog
+RRAM/SRAM crossbar performing matrix-vector multiplication with
+
+  * 8-bit signed weights stored as ``cell_bits``-wide conductance slices
+    (offset-encoded to unsigned, RRAM default: 2 bit/cell -> 4 slices),
+  * 8-bit unsigned activations streamed bit-serially through 1-bit DACs,
+  * a column ADC that saturates each per-subarray partial sum to
+    ``adc_bits`` of resolution,
+  * digital shift-add recombination across weight slices and activation
+    bits, and
+  * offset-correction for the unsigned weight encoding.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+substrate is an analog crossbar, not a GPU/TPU, so this kernel keeps the
+*numerics* of the array (bit-slicing, per-128-row ADC saturation) while the
+tiling follows TPU idiom: the grid walks (M/block_m, N/block_n) output
+tiles, the K dimension is chunked by ``subarray_rows`` (the crossbar's
+physical row count, 128), and each chunk's weight plane stays resident in
+VMEM across the 8-activation-bit inner loop.
+
+The kernel must run with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "crossbar_matmul",
+    "crossbar_params_ok",
+    "pad_to_multiple",
+    "ACT_BITS",
+    "WEIGHT_BITS",
+]
+
+ACT_BITS = 8  # unsigned activation width (after ReLU + requantization)
+WEIGHT_BITS = 8  # signed weight width
+WEIGHT_OFFSET = 1 << (WEIGHT_BITS - 1)  # 128: offset-encoding of signed weights
+
+
+def crossbar_params_ok(cell_bits: int, adc_bits: int, subarray_rows: int) -> bool:
+    """True when the configuration is self-consistent (not necessarily lossless)."""
+    return (
+        cell_bits in (1, 2, 4, 8)
+        and WEIGHT_BITS % cell_bits == 0
+        and 1 <= adc_bits <= 16
+        and subarray_rows >= 1
+    )
+
+
+def lossless_adc_bits(cell_bits: int, subarray_rows: int) -> int:
+    """Minimum ADC resolution that never saturates a partial sum.
+
+    A partial sum for one (weight-slice, activation-bit) pair is at most
+    ``subarray_rows * (2**cell_bits - 1)``.
+    """
+    max_partial = subarray_rows * ((1 << cell_bits) - 1)
+    bits = 1
+    while (1 << bits) - 1 < max_partial:
+        bits += 1
+    return bits
+
+
+def pad_to_multiple(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``a`` along ``axis`` up to the next multiple of ``mult``."""
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+def _crossbar_kernel(
+    x_ref,
+    w_ref,
+    o_ref,
+    *,
+    num_chunks: int,
+    subarray_rows: int,
+    cell_bits: int,
+    adc_bits: int,
+):
+    """Pallas kernel body for one (block_m, block_n) output tile.
+
+    ``x_ref``: (block_m, K) int32, unsigned activations in [0, 255].
+    ``w_ref``: (K, block_n) int32, signed weights in [-128, 127].
+    ``o_ref``: (block_m, block_n) int32 accumulator output.
+    """
+    num_slices = WEIGHT_BITS // cell_bits
+    slice_mask = (1 << cell_bits) - 1
+    adc_max = (1 << adc_bits) - 1
+
+    x_all = x_ref[...]
+    w_all = w_ref[...] + WEIGHT_OFFSET  # offset-encode to unsigned [0, 255]
+
+    block_m = x_all.shape[0]
+    block_n = w_all.shape[1]
+    acc0 = jnp.zeros((block_m, block_n), dtype=jnp.int32)
+
+    # One iteration per physical subarray along the K (crossbar-row) axis.
+    # The chunk count is static so the weight-plane slicing stays static;
+    # the activation-bit loop is a fori_loop so the lowered module does not
+    # replicate the matmul 8x.
+    acc = acc0
+    for c in range(num_chunks):
+        xs = jax.lax.dynamic_slice_in_dim(x_all, c * subarray_rows, subarray_rows, 1)
+        ws = jax.lax.dynamic_slice_in_dim(w_all, c * subarray_rows, subarray_rows, 0)
+
+        for s in range(num_slices):
+            # Conductance slice s of every weight in this subarray.
+            w_slice = (ws >> (cell_bits * s)) & slice_mask
+
+            def bit_step(t, a, xs=xs, w_slice=w_slice, s=s):
+                x_bit = (xs >> t) & 1
+                # Analog MVM of a 1-bit input vector against one slice plane.
+                partial = jax.lax.dot_general(
+                    x_bit,
+                    w_slice,
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                )
+                # Column ADC: saturate to the converter's full-scale range.
+                partial = jnp.clip(partial, 0, adc_max)
+                # Digital shift-add recombination.
+                return a + jax.lax.shift_left(partial, cell_bits * s + t)
+
+            acc = jax.lax.fori_loop(0, ACT_BITS, bit_step, acc)
+
+    # Undo the unsigned weight offset: sum_k x[m,k] * 128 was added per output.
+    xsum = jnp.sum(x_all, axis=1, keepdims=True)
+    o_ref[...] = acc - WEIGHT_OFFSET * xsum
+
+
+def _crossbar_kernel_lossless(
+    x_ref,
+    w_ref,
+    o_ref,
+    *,
+    num_chunks: int,
+    subarray_rows: int,
+):
+    """Fast-path kernel body for a lossless ADC (§Perf iteration 1).
+
+    When the ADC resolution covers the worst-case column sum, the
+    bit-serial/bit-sliced decomposition is algebraically exact:
+
+        Σ_s Σ_t 2^(b·s+t) clip(x_t @ w_s)  ==  x @ (w+128),  clip a no-op,
+
+    so after offset correction the whole stack collapses to the plain
+    integer matmul — computed here with the same per-subarray K-chunk
+    accumulation schedule (one dot per 128-row crossbar), 32× fewer dots
+    than the bit-serial path (8 activation bits × 4 weight slices).
+    """
+    x_all = x_ref[...]
+    w_all = w_ref[...]
+    block_m = x_all.shape[0]
+    block_n = w_all.shape[1]
+    acc = jnp.zeros((block_m, block_n), dtype=jnp.int32)
+    for c in range(num_chunks):
+        xs = jax.lax.dynamic_slice_in_dim(x_all, c * subarray_rows, subarray_rows, 1)
+        ws = jax.lax.dynamic_slice_in_dim(w_all, c * subarray_rows, subarray_rows, 0)
+        acc = acc + jax.lax.dot_general(
+            xs, ws, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "cell_bits",
+        "adc_bits",
+        "subarray_rows",
+        "block_m",
+        "block_n",
+        "interpret",
+        "force_bit_serial",
+    ),
+)
+def crossbar_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    cell_bits: int = 2,
+    adc_bits: int = 9,
+    subarray_rows: int = 128,
+    block_m: int = 8,
+    block_n: int = 32,
+    interpret: bool = True,
+    force_bit_serial: bool = False,
+) -> jax.Array:
+    """Quantized crossbar matmul: ``(M, K) u8-range @ (K, N) i8-range -> (M, N) i32``.
+
+    ``x`` holds unsigned 8-bit activations and ``w`` signed 8-bit weights;
+    both are accepted as any integer dtype and validated by range contract
+    (values outside the 8-bit ranges give undefined results, matching the
+    hardware's fixed word width). With the default ``adc_bits=9`` and
+    ``subarray_rows=128`` the ADC never saturates and the result equals the
+    exact integer matmul; that case dispatches to a collapsed fast-path
+    kernel (identical results, ~32× fewer dots). A saturating ADC — or
+    ``force_bit_serial=True`` (used by tests) — takes the faithful
+    bit-serial path.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"expected 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if not crossbar_params_ok(cell_bits, adc_bits, subarray_rows):
+        raise ValueError(
+            f"bad crossbar config: cell_bits={cell_bits} adc_bits={adc_bits} "
+            f"subarray_rows={subarray_rows}"
+        )
+
+    m, k = x.shape
+    _, n = w.shape
+
+    x32 = x.astype(jnp.int32)
+    w32 = w.astype(jnp.int32)
+
+    # Pad K to whole subarrays, M/N to whole blocks. Zero activation rows
+    # contribute nothing (0-bits select nothing; the offset correction term
+    # also sees x=0), so padding is value-neutral.
+    x32 = pad_to_multiple(pad_to_multiple(x32, 1, subarray_rows), 0, block_m)
+    w32 = pad_to_multiple(pad_to_multiple(w32, 0, subarray_rows), 1, block_n)
+    mp, kp = x32.shape
+    _, np_ = w32.shape
+    num_chunks = kp // subarray_rows
+
+    lossless = adc_bits >= lossless_adc_bits(cell_bits, subarray_rows)
+    if lossless and not force_bit_serial:
+        kernel = functools.partial(
+            _crossbar_kernel_lossless,
+            num_chunks=num_chunks,
+            subarray_rows=subarray_rows,
+        )
+    else:
+        kernel = functools.partial(
+            _crossbar_kernel,
+            num_chunks=num_chunks,
+            subarray_rows=subarray_rows,
+            cell_bits=cell_bits,
+            adc_bits=adc_bits,
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // block_m, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(x32, w32)
+
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(
+    k: int, *, block_m: int = 8, block_n: int = 32, subarray_rows: int = 128
+) -> Tuple[int, dict]:
+    """Estimated VMEM bytes resident per grid step (for DESIGN.md §Perf).
+
+    The kernel keeps one activation stripe (block_m, Kp), one weight panel
+    (Kp, block_n) and the int32 accumulator tile in VMEM; chunk slices are
+    views. All operands are int32 in interpret mode (4 B).
+    """
+    kp = k + ((-k) % subarray_rows)
+    parts = {
+        "x_stripe": block_m * kp * 4,
+        "w_panel": kp * block_n * 4,
+        "acc_tile": block_m * block_n * 4,
+        "slice_tmp": subarray_rows * block_n * 4 + block_m * subarray_rows * 4,
+    }
+    return sum(parts.values()), parts

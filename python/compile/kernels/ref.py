@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the crossbar kernel.
+
+``crossbar_matmul_ref`` mirrors the bit-serial / bit-sliced / ADC-saturated
+arithmetic of ``crossbar.crossbar_matmul`` with straight-line vectorized
+jnp (no Pallas), and ``int_matmul_ref`` is the exact integer matmul the
+crossbar must equal whenever the ADC is lossless.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .crossbar import ACT_BITS, WEIGHT_BITS, WEIGHT_OFFSET, pad_to_multiple
+
+__all__ = ["crossbar_matmul_ref", "int_matmul_ref"]
+
+
+def int_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Exact int32 matmul oracle."""
+    return jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def crossbar_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    cell_bits: int = 2,
+    adc_bits: int = 9,
+    subarray_rows: int = 128,
+) -> jax.Array:
+    """Vectorized reference of the crossbar decomposition.
+
+    Shapes: ``x`` (M, K) unsigned-8-bit-range ints, ``w`` (K, N) signed-8-bit
+    range ints; returns (M, N) int32.
+    """
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+
+    num_slices = WEIGHT_BITS // cell_bits
+    slice_mask = (1 << cell_bits) - 1
+    adc_max = (1 << adc_bits) - 1
+
+    x32 = pad_to_multiple(x.astype(jnp.int32), 1, subarray_rows)
+    w32 = pad_to_multiple(w.astype(jnp.int32), 0, subarray_rows) + WEIGHT_OFFSET
+    kp = x32.shape[1]
+    num_chunks = kp // subarray_rows
+
+    # (C, M, R) activation chunks and (C, R, N) weight chunks.
+    xc = x32.reshape(m, num_chunks, subarray_rows).transpose(1, 0, 2)
+    wc = w32.reshape(num_chunks, subarray_rows, n)
+
+    # (T, C, M, R) activation bit-planes; (S, C, R, N) weight slices.
+    bits = jnp.arange(ACT_BITS, dtype=jnp.int32)
+    slices = jnp.arange(num_slices, dtype=jnp.int32)
+    x_bits = (xc[None] >> bits[:, None, None, None]) & 1
+    w_slices = (wc[None] >> (cell_bits * slices[:, None, None, None])) & slice_mask
+
+    # Per (bit t, slice s, chunk c): 1-bit x-plane against one slice plane.
+    partial = jnp.einsum(
+        "tcmr,scrn->tscmn", x_bits, w_slices, preferred_element_type=jnp.int32
+    )
+    partial = jnp.clip(partial, 0, adc_max)
+
+    weight_of_bit = 1 << bits  # 2^t
+    weight_of_slice = 1 << (cell_bits * slices)  # 2^(b*s)
+    scaled = (
+        partial
+        * weight_of_bit[:, None, None, None, None]
+        * weight_of_slice[None, :, None, None, None]
+    )
+    acc = jnp.sum(scaled, axis=(0, 1, 2))  # (M, N)
+
+    xsum = jnp.sum(x32, axis=1, keepdims=True)
+    return acc - WEIGHT_OFFSET * xsum

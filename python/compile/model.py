@@ -1,0 +1,371 @@
+"""Layer-2 JAX model: fully-integer quantized CNN built on the crossbar kernel.
+
+This is the functional twin of the workload the Rust simulator schedules:
+8-bit weights / 8-bit unsigned activations / int32 accumulation, convolution
+as im2col + crossbar matmul (the paper maps CONV/FC onto crossbar subarrays
+the same way), rounded-right-shift requantization between layers.
+
+Everything here is build-time: ``aot.py`` lowers the jitted forwards to HLO
+text once, and the Rust runtime executes the artifacts; Python never sits on
+the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.crossbar import crossbar_matmul
+
+__all__ = [
+    "CrossbarOpts",
+    "QConv",
+    "QLinear",
+    "im2col",
+    "conv2d_q",
+    "requantize",
+    "avg_pool_q",
+    "linear_q",
+    "QBlock",
+    "basic_block_q",
+    "init_tiny_cnn_params",
+    "tiny_cnn_forward",
+    "init_block_params",
+    "resnet_block_forward",
+    "tiny_cnn_param_count",
+    "tiny_cnn_macs",
+]
+
+ACT_MAX = 255  # u8 activations
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarOpts:
+    """Crossbar configuration threaded through every conv/fc call."""
+
+    cell_bits: int = 2
+    adc_bits: int = 9
+    subarray_rows: int = 128
+    # §Perf: large M-blocks amortize interpret-mode grid overhead; the
+    # VMEM-resident stripe (block_m × K × 4 B ≤ 4.7 MB for the largest K)
+    # stays inside a 16 MB budget. Swept in EXPERIMENTS.md §Perf.
+    block_m: int = 1024
+    block_n: int = 32
+    interpret: bool = True
+
+    def matmul(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        return crossbar_matmul(
+            x,
+            w,
+            cell_bits=self.cell_bits,
+            adc_bits=self.adc_bits,
+            subarray_rows=self.subarray_rows,
+            block_m=self.block_m,
+            block_n=self.block_n,
+            interpret=self.interpret,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class QConv:
+    """Quantized conv parameters: HWIO int8 weights + requant shift."""
+
+    w: jax.Array  # (kh, kw, cin, cout) int32 holding int8 values
+    shift: int
+    stride: int = 1
+    pad: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QLinear:
+    w: jax.Array  # (cin, cout) int32 holding int8 values
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, pad: int) -> jax.Array:
+    """(B, H, W, C) -> (B*OH*OW, kh*kw*C) patch matrix.
+
+    Column ordering is (i, j, channel) row-major over the filter window,
+    matching ``w.reshape(kh*kw*cin, cout)`` for HWIO weights.
+    """
+    b, h, w_, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w_ + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp,
+                (0, i, j, 0),
+                (b, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(patch)
+    stacked = jnp.concatenate(cols, axis=-1)  # (B, OH, OW, kh*kw*C)
+    return stacked.reshape(b * oh * ow, kh * kw * c)
+
+
+def requantize(acc: jax.Array, shift: int, *, relu: bool = True) -> jax.Array:
+    """int32 accumulator -> u8 activation via rounded right shift.
+
+    ReLU is implicit in the lower clip at 0 (the hardware's unsigned
+    activation datapath); ``relu=False`` keeps a symmetric signed clip for
+    residual taps that feed an addition rather than the next layer.
+    """
+    rounded = (acc + (1 << (shift - 1))) >> shift
+    if relu:
+        return jnp.clip(rounded, 0, ACT_MAX)
+    return jnp.clip(rounded, -(ACT_MAX + 1) // 2, ACT_MAX // 2)
+
+
+def conv2d_q(
+    x: jax.Array,
+    conv: QConv,
+    opts: CrossbarOpts,
+    *,
+    requant: bool = True,
+) -> jax.Array:
+    """Quantized 3x3/1x1 convolution on the crossbar: im2col + matmul.
+
+    ``x``: (B, H, W, Cin) int32 u8-range. Returns (B, OH, OW, Cout) int32,
+    requantized to u8 range unless ``requant=False`` (raw accumulators).
+    """
+    kh, kw, cin, cout = conv.w.shape
+    b, h, w_, _ = x.shape
+    oh = (h + 2 * conv.pad - kh) // conv.stride + 1
+    ow = (w_ + 2 * conv.pad - kw) // conv.stride + 1
+
+    patches = im2col(x, kh, kw, conv.stride, conv.pad)
+    wmat = conv.w.reshape(kh * kw * cin, cout)
+    acc = opts.matmul(patches, wmat)
+    acc = acc.reshape(b, oh, ow, cout)
+    if requant:
+        return requantize(acc, conv.shift)
+    return acc
+
+
+def avg_pool_q(x: jax.Array) -> jax.Array:
+    """Global average pool (B, H, W, C) -> (B, C), integer floor division."""
+    b, h, w_, c = x.shape
+    return jnp.sum(x, axis=(1, 2)) // (h * w_)
+
+
+def linear_q(x: jax.Array, lin: QLinear, opts: CrossbarOpts) -> jax.Array:
+    """FC layer on the crossbar; returns raw int32 logits (no requant)."""
+    return opts.matmul(x, lin.w)
+
+
+@dataclasses.dataclass(frozen=True)
+class QBlock:
+    """BasicBlock parameters: two convs, optional 1x1 downsample projection,
+    and the left-shift applied to the identity skip so it joins the raw
+    accumulator at a matched scale."""
+
+    conv_a: QConv
+    conv_b: QConv
+    down: QConv | None = None
+    skip_bits: int = 0
+
+
+def basic_block_q(x: jax.Array, block: QBlock, opts: CrossbarOpts) -> jax.Array:
+    """ResNet BasicBlock: conv-conv + identity/1x1-projected skip, int32 adds.
+
+    The skip join happens on raw accumulators (pre-requant), mirroring the
+    chip's digital accumulation stage, then one requantization emits u8.
+    """
+    y = conv2d_q(x, block.conv_a, opts)
+    acc = conv2d_q(y, block.conv_b, opts, requant=False)
+    if block.down is not None:
+        skip = conv2d_q(x, block.down, opts, requant=False)
+    else:
+        skip = x << block.skip_bits
+    return requantize(acc + skip, block.conv_b.shift)
+
+
+# ---------------------------------------------------------------------------
+# Tiny CIFAR-100 CNN (the e2e serving artifact)
+# ---------------------------------------------------------------------------
+
+TINY_CNN_STAGES: Sequence[Tuple[int, int, int]] = (
+    # (cin, cout, stride) for the three basic blocks after the stem.
+    (16, 16, 1),
+    (16, 32, 2),
+    (32, 64, 2),
+)
+TINY_CNN_CLASSES = 100
+
+
+def _rand_w(rng: np.random.Generator, shape: Tuple[int, ...]) -> jax.Array:
+    """Synthetic int8 weights (paper evaluates system metrics, not accuracy)."""
+    return jnp.asarray(rng.integers(-128, 128, shape, dtype=np.int32))
+
+
+# --- numpy calibration helpers (build-time only) ---------------------------
+
+
+def _np_im2col(x: np.ndarray, kh: int, kw: int, stride: int, pad: int) -> np.ndarray:
+    b, h, w_, c = x.shape
+    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w_ + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                xp[:, i : i + (oh - 1) * stride + 1 : stride, j : j + (ow - 1) * stride + 1 : stride, :]
+            )
+    return np.concatenate(cols, axis=-1).reshape(b * oh * ow, kh * kw * c), oh, ow
+
+
+def _np_conv_acc(x: np.ndarray, w: np.ndarray, stride: int, pad: int) -> np.ndarray:
+    kh, kw, cin, cout = w.shape
+    patches, oh, ow = _np_im2col(x, kh, kw, stride, pad)
+    acc = patches.astype(np.int64) @ w.reshape(kh * kw * cin, cout).astype(np.int64)
+    return acc.reshape(x.shape[0], oh, ow, cout)
+
+
+def _pick_shift(acc: np.ndarray, target: int = 200) -> int:
+    """Shift such that the 99.9th percentile of |acc| lands near ``target``."""
+    hi = float(np.percentile(np.abs(acc), 99.9))
+    shift = 1
+    while (hi / (1 << shift)) > target and shift < 31:
+        shift += 1
+    return shift
+
+
+def _np_requant(acc: np.ndarray, shift: int) -> np.ndarray:
+    return np.clip((acc + (1 << (shift - 1))) >> shift, 0, ACT_MAX)
+
+
+def init_tiny_cnn_params(seed: int = 0) -> Dict[str, object]:
+    """Synthetic int8 parameters with percentile-calibrated requant shifts.
+
+    The calibration pass walks the network once in numpy on a random probe
+    batch and picks each layer's right-shift so post-requant activations
+    occupy the u8 range instead of saturating or dying — the build-time
+    analogue of post-training-quantization range calibration.
+    """
+    rng = np.random.default_rng(seed)
+    probe = rng.integers(0, 256, (2, 32, 32, 3), dtype=np.int64)
+
+    w_stem = rng.integers(-128, 128, (3, 3, 3, 16), dtype=np.int64)
+    acc = _np_conv_acc(probe, w_stem, 1, 1)
+    s_stem = _pick_shift(acc)
+    y = _np_requant(acc, s_stem)
+    params: Dict[str, object] = {
+        "stem": QConv(jnp.asarray(w_stem, jnp.int32), shift=s_stem)
+    }
+
+    for idx, (cin, cout, stride) in enumerate(TINY_CNN_STAGES):
+        w_a = rng.integers(-128, 128, (3, 3, cin, cout), dtype=np.int64)
+        w_b = rng.integers(-128, 128, (3, 3, cout, cout), dtype=np.int64)
+        w_d = (
+            rng.integers(-128, 128, (1, 1, cin, cout), dtype=np.int64)
+            if (stride != 1 or cin != cout)
+            else None
+        )
+
+        acc_a = _np_conv_acc(y, w_a, stride, 1)
+        s_a = _pick_shift(acc_a)
+        y_a = _np_requant(acc_a, s_a)
+
+        acc_b = _np_conv_acc(y_a, w_b, 1, 1)
+        s_b_pre = _pick_shift(acc_b)
+        skip_bits = max(0, s_b_pre - 1)
+        if w_d is not None:
+            skip = _np_conv_acc(y, w_d, stride, 0)
+        else:
+            skip = y.astype(np.int64) << skip_bits
+        joint = acc_b + skip
+        s_b = _pick_shift(joint)
+        y = _np_requant(joint, s_b)
+
+        down = None
+        if w_d is not None:
+            down = QConv(jnp.asarray(w_d, jnp.int32), shift=s_b, stride=stride, pad=0)
+        params[f"block{idx}"] = QBlock(
+            conv_a=QConv(jnp.asarray(w_a, jnp.int32), shift=s_a, stride=stride),
+            conv_b=QConv(jnp.asarray(w_b, jnp.int32), shift=s_b),
+            down=down,
+            skip_bits=skip_bits,
+        )
+
+    params["fc"] = QLinear(_rand_w(rng, (64, TINY_CNN_CLASSES)))
+    return params
+
+
+def tiny_cnn_forward(
+    x: jax.Array, params: Dict[str, object], opts: CrossbarOpts | None = None
+) -> jax.Array:
+    """(B, 32, 32, 3) u8-range int32 image -> (B, 100) int32 logits."""
+    opts = opts or CrossbarOpts()
+    y = conv2d_q(x, params["stem"], opts)
+    for idx in range(len(TINY_CNN_STAGES)):
+        y = basic_block_q(y, params[f"block{idx}"], opts)
+    pooled = avg_pool_q(y)
+    return linear_q(pooled, params["fc"], opts)
+
+
+def tiny_cnn_param_count() -> int:
+    n = 3 * 3 * 3 * 16
+    for cin, cout, stride in TINY_CNN_STAGES:
+        n += 3 * 3 * cin * cout + 3 * 3 * cout * cout
+        if stride != 1 or cin != cout:
+            n += cin * cout
+    return n + 64 * TINY_CNN_CLASSES
+
+
+def tiny_cnn_macs(batch: int = 1) -> int:
+    """MAC count of one forward pass (for throughput accounting)."""
+    macs = 32 * 32 * 3 * 3 * 3 * 16  # stem
+    hw = 32
+    for cin, cout, stride in TINY_CNN_STAGES:
+        hw_out = hw // stride
+        macs += hw_out * hw_out * 3 * 3 * cin * cout
+        macs += hw_out * hw_out * 3 * 3 * cout * cout
+        if stride != 1 or cin != cout:
+            macs += hw_out * hw_out * cin * cout
+        hw = hw_out
+    macs += 64 * TINY_CNN_CLASSES
+    return macs * batch
+
+
+# ---------------------------------------------------------------------------
+# Standalone ResNet basic block artifact (mid-size compile unit)
+# ---------------------------------------------------------------------------
+
+
+def init_block_params(cin: int = 32, cout: int = 32, seed: int = 1) -> QBlock:
+    """Calibrated standalone BasicBlock (mid-size AOT compile unit)."""
+    rng = np.random.default_rng(seed)
+    probe = rng.integers(0, 200, (2, 8, 8, cin), dtype=np.int64)
+    w_a = rng.integers(-128, 128, (3, 3, cin, cout), dtype=np.int64)
+    w_b = rng.integers(-128, 128, (3, 3, cout, cout), dtype=np.int64)
+
+    acc_a = _np_conv_acc(probe, w_a, 1, 1)
+    s_a = _pick_shift(acc_a)
+    y_a = _np_requant(acc_a, s_a)
+    acc_b = _np_conv_acc(y_a, w_b, 1, 1)
+    s_b_pre = _pick_shift(acc_b)
+    skip_bits = max(0, s_b_pre - 1)
+    joint = acc_b + (probe << skip_bits)
+    s_b = _pick_shift(joint)
+
+    return QBlock(
+        conv_a=QConv(jnp.asarray(w_a, jnp.int32), shift=s_a),
+        conv_b=QConv(jnp.asarray(w_b, jnp.int32), shift=s_b),
+        down=None,
+        skip_bits=skip_bits,
+    )
+
+
+def resnet_block_forward(
+    x: jax.Array, params: QBlock, opts: CrossbarOpts | None = None
+) -> jax.Array:
+    opts = opts or CrossbarOpts()
+    return basic_block_q(x, params, opts)

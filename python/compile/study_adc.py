@@ -1,0 +1,78 @@
+"""ADC-precision co-design study (build-time analysis).
+
+The paper fixes 8-bit weights/activations but leaves ADC resolution — the
+dominant area/energy term in a crossbar macro — implicit. This study sweeps
+the column-ADC resolution of the L1 kernel through the tiny CNN and
+quantifies functional degradation (logit error, top-1 agreement) against
+the lossless reference, pairing with the Rust side's `pim::adc` energy/area
+scaling to expose the accuracy/efficiency trade-off.
+
+Usage:
+    python -m compile.study_adc [--out adc_study.csv] [--batch 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels.crossbar import lossless_adc_bits
+
+
+def study(batch: int = 8, seed: int = 0, bits: List[int] | None = None) -> List[dict]:
+    """Run the sweep; returns one row per ADC resolution."""
+    bits = bits or [9, 8, 7, 6, 5, 4]
+    params = M.init_tiny_cnn_params(seed)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.integers(0, 256, (batch, 32, 32, 3), dtype=np.int32))
+
+    ref_opts = M.CrossbarOpts(adc_bits=lossless_adc_bits(2, 128))
+    ref = np.asarray(M.tiny_cnn_forward(x, params, ref_opts))
+    ref_top1 = ref.argmax(axis=1)
+
+    rows = []
+    for b in bits:
+        opts = M.CrossbarOpts(adc_bits=b)
+        out = np.asarray(M.tiny_cnn_forward(x, params, opts))
+        err = np.abs(out.astype(np.int64) - ref.astype(np.int64))
+        denom = np.abs(ref).mean() or 1.0
+        rows.append(
+            {
+                "adc_bits": b,
+                "lossless": b >= lossless_adc_bits(2, 128),
+                "mean_abs_err": float(err.mean()),
+                "max_abs_err": int(err.max()),
+                "rel_err": float(err.mean() / denom),
+                "top1_agreement": float((out.argmax(axis=1) == ref_top1).mean()),
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="adc_study.csv")
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    rows = study(batch=args.batch)
+    with open(args.out, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    for r in rows:
+        print(
+            f"  adc {r['adc_bits']}b: rel_err {r['rel_err']:.4f}, "
+            f"top1 agreement {r['top1_agreement']:.2f}",
+            file=sys.stderr,
+        )
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

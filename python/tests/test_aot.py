@@ -1,0 +1,82 @@
+"""AOT pipeline: lowering produces parseable HLO text and a sane manifest."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+class TestHloText:
+    def test_crossbar_mvm_lowers_to_hlo_text(self):
+        fn, shapes, _ = aot._entry_crossbar_mvm()
+        lowered = jax.jit(fn).lower(*[aot._spec(s) for s in shapes])
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        # interpret-mode pallas must lower to plain HLO: no custom-calls.
+        assert "custom-call" not in text
+        # large baked constants must be printed in full, never elided
+        assert "constant({...})" not in text
+
+    def test_entry_outputs_are_i32_tuple(self):
+        fn, shapes, _ = aot._entry_crossbar_mvm()
+        out = jax.eval_shape(fn, *[aot._spec(s) for s in shapes])
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].dtype == jnp.int32
+
+    def test_all_entries_have_i32_io(self):
+        for name, make in aot.ENTRIES.items():
+            fn, shapes, meta = make()
+            out = jax.eval_shape(fn, *[aot._spec(s) for s in shapes])
+            for o in out:
+                assert o.dtype == jnp.int32, name
+            assert "description" in meta, name
+
+
+class TestBuild:
+    def test_build_single_entry(self, tmp_path):
+        manifest = aot.build(str(tmp_path), only="crossbar_mvm")
+        assert set(manifest["entries"]) == {"crossbar_mvm"}
+        entry = manifest["entries"]["crossbar_mvm"]
+        hlo = (tmp_path / entry["file"]).read_text()
+        assert hlo.startswith("HloModule")
+        assert entry["inputs"][0]["shape"] == [8, 128]
+        assert entry["outputs"][0]["shape"] == [8, 32]
+        with open(tmp_path / "manifest.json") as f:
+            on_disk = json.load(f)
+        assert on_disk["version"] == aot.MANIFEST_VERSION
+
+    def test_only_merges_into_existing_manifest(self, tmp_path):
+        aot.build(str(tmp_path), only="crossbar_mvm")
+        aot.build(str(tmp_path), only="crossbar_mvm_ref")
+        with open(tmp_path / "manifest.json") as f:
+            entries = json.load(f)["entries"]
+        assert {"crossbar_mvm", "crossbar_mvm_ref"} <= set(entries)
+
+    def test_manifest_macs_positive(self, tmp_path):
+        manifest = aot.build(str(tmp_path), only="crossbar_mvm")
+        assert manifest["entries"]["crossbar_mvm"]["macs"] == 8 * 128 * 32
+
+
+class TestRepoArtifacts:
+    """Validate the checked-out artifacts/ dir when present (post `make artifacts`)."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ART, "manifest.json")),
+        reason="artifacts not built",
+    )
+    def test_manifest_files_exist(self):
+        with open(os.path.join(self.ART, "manifest.json")) as f:
+            manifest = json.load(f)
+        for name, e in manifest["entries"].items():
+            path = os.path.join(self.ART, e["file"])
+            assert os.path.exists(path), name
+            with open(path) as f:
+                assert f.read(9) == "HloModule", name

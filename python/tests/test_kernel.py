@@ -1,0 +1,224 @@
+"""L1 kernel correctness: Pallas crossbar matmul vs pure-jnp oracles.
+
+The core signal: with a lossless ADC the kernel must equal the exact integer
+matmul bit-for-bit; with a saturating ADC it must equal the oracle that
+models the same saturation. Hypothesis sweeps shapes and crossbar configs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.crossbar import (
+    crossbar_matmul,
+    crossbar_params_ok,
+    lossless_adc_bits,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import crossbar_matmul_ref, int_matmul_ref
+
+
+def rand_xw(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, (m, k), dtype=np.int32))
+    w = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int32))
+    return x, w
+
+
+class TestLossless:
+    def test_exact_vs_int_matmul(self):
+        x, w = rand_xw(13, 200, 37)
+        out = crossbar_matmul(x, w)
+        assert (out == int_matmul_ref(x, w)).all()
+
+    def test_exact_vs_ref(self):
+        x, w = rand_xw(13, 200, 37, seed=3)
+        assert (crossbar_matmul(x, w) == crossbar_matmul_ref(x, w)).all()
+
+    def test_single_subarray(self):
+        x, w = rand_xw(8, 128, 32, seed=5)
+        assert (crossbar_matmul(x, w) == int_matmul_ref(x, w)).all()
+
+    def test_k_smaller_than_subarray(self):
+        x, w = rand_xw(4, 27, 16, seed=7)  # stem conv shape: K=27 padded to 128
+        assert (crossbar_matmul(x, w) == int_matmul_ref(x, w)).all()
+
+    def test_extreme_values(self):
+        # All-max activations against all-min/max weights: worst-case ranges.
+        x = jnp.full((4, 128), 255, jnp.int32)
+        for wval in (-128, 127):
+            w = jnp.full((128, 8), wval, jnp.int32)
+            assert (crossbar_matmul(x, w) == int_matmul_ref(x, w)).all()
+
+    def test_zero_activations(self):
+        x = jnp.zeros((4, 128), jnp.int32)
+        _, w = rand_xw(4, 128, 8, seed=11)
+        assert (crossbar_matmul(x, w) == 0).all()
+
+    def test_identity_weight(self):
+        x, _ = rand_xw(8, 64, 64, seed=13)
+        w = jnp.eye(64, dtype=jnp.int32)
+        assert (crossbar_matmul(x, w) == x).all()
+
+    @pytest.mark.parametrize("cell_bits", [1, 2, 4, 8])
+    def test_all_cell_widths(self, cell_bits):
+        x, w = rand_xw(8, 128, 16, seed=cell_bits)
+        adc = lossless_adc_bits(cell_bits, 128)
+        out = crossbar_matmul(x, w, cell_bits=cell_bits, adc_bits=adc)
+        assert (out == int_matmul_ref(x, w)).all()
+
+    @pytest.mark.parametrize("rows", [32, 64, 128, 256])
+    def test_subarray_sizes(self, rows):
+        x, w = rand_xw(8, 300, 16, seed=rows)
+        adc = lossless_adc_bits(2, rows)
+        out = crossbar_matmul(x, w, subarray_rows=rows, adc_bits=adc)
+        assert (out == int_matmul_ref(x, w)).all()
+
+
+class TestSaturatingAdc:
+    def test_matches_ref_when_lossy(self):
+        x, w = rand_xw(13, 200, 37, seed=17)
+        out = crossbar_matmul(x, w, adc_bits=4)
+        ref = crossbar_matmul_ref(x, w, adc_bits=4)
+        assert (out == ref).all()
+        assert (out != int_matmul_ref(x, w)).any()  # saturation visible
+
+    def test_saturation_bounds_error_one_sided(self):
+        # Clipping partial sums can only shrink the positive contribution of
+        # the offset-encoded planes, so lossy <= lossless after offset fix
+        # is not guaranteed per element — but results must be deterministic.
+        x, w = rand_xw(8, 128, 8, seed=19)
+        a = crossbar_matmul(x, w, adc_bits=5)
+        b = crossbar_matmul(x, w, adc_bits=5)
+        assert (a == b).all()
+
+    def test_lossless_threshold(self):
+        # adc_bits exactly at the lossless boundary for (2, 128): max partial
+        # is 128*3 = 384 -> 9 bits. 9 must be exact, 8 may differ.
+        assert lossless_adc_bits(2, 128) == 9
+        x = jnp.full((2, 128), 255, jnp.int32)
+        w = jnp.full((128, 4), 127, jnp.int32)
+        assert (crossbar_matmul(x, w, adc_bits=9) == int_matmul_ref(x, w)).all()
+        assert (crossbar_matmul(x, w, adc_bits=8) != int_matmul_ref(x, w)).any()
+
+
+class TestValidation:
+    def test_rejects_bad_rank(self):
+        with pytest.raises(ValueError):
+            crossbar_matmul(jnp.zeros((2, 2, 2), jnp.int32), jnp.zeros((2, 2), jnp.int32))
+
+    def test_rejects_mismatch(self):
+        with pytest.raises(ValueError):
+            crossbar_matmul(jnp.zeros((2, 3), jnp.int32), jnp.zeros((4, 2), jnp.int32))
+
+    def test_rejects_bad_config(self):
+        x, w = rand_xw(2, 8, 2)
+        with pytest.raises(ValueError):
+            crossbar_matmul(x, w, cell_bits=3)
+        with pytest.raises(ValueError):
+            crossbar_matmul(x, w, adc_bits=0)
+
+    def test_params_ok(self):
+        assert crossbar_params_ok(2, 9, 128)
+        assert not crossbar_params_ok(3, 9, 128)
+        assert not crossbar_params_ok(2, 0, 128)
+        assert not crossbar_params_ok(2, 9, 0)
+
+
+class TestVmemEstimate:
+    def test_footprint_under_budget(self):
+        total, parts = vmem_footprint_bytes(1152, block_m=64, block_n=32)
+        assert total < 16 * 1024 * 1024  # TPU VMEM budget
+        assert set(parts) == {"x_stripe", "w_panel", "acc_tile", "slice_tmp"}
+
+    def test_scales_with_k(self):
+        a, _ = vmem_footprint_bytes(128)
+        b, _ = vmem_footprint_bytes(1280)
+        assert b > a
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 300),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_lossless_exact(m, k, n, seed):
+    """Any shape, default config: kernel == exact integer matmul."""
+    x, w = rand_xw(m, k, n, seed=seed)
+    assert (crossbar_matmul(x, w) == int_matmul_ref(x, w)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 200),
+    n=st.integers(1, 48),
+    cell_bits=st.sampled_from([1, 2, 4]),
+    adc_bits=st.integers(3, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_matches_ref_any_config(m, k, n, cell_bits, adc_bits, seed):
+    """Pallas kernel == jnp oracle under every (possibly lossy) config."""
+    x, w = rand_xw(m, k, n, seed=seed)
+    out = crossbar_matmul(x, w, cell_bits=cell_bits, adc_bits=adc_bits)
+    ref = crossbar_matmul_ref(x, w, cell_bits=cell_bits, adc_bits=adc_bits)
+    assert (out == ref).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    blocks=st.tuples(st.sampled_from([4, 8, 16, 64]), st.sampled_from([8, 32, 64])),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_block_shape_invariance(blocks, seed):
+    """Tiling is an implementation detail: result must not depend on it."""
+    bm, bn = blocks
+    x, w = rand_xw(19, 160, 41, seed=seed)
+    base = crossbar_matmul(x, w)
+    tiled = crossbar_matmul(x, w, block_m=bm, block_n=bn)
+    assert (base == tiled).all()
+
+
+class TestFastPathDispatch:
+    """§Perf iteration 1: the lossless-ADC fast path must be bit-identical
+    to the faithful bit-serial kernel (see crossbar.py docstring)."""
+
+    def test_fast_equals_bit_serial_default_config(self):
+        x, w = rand_xw(19, 300, 41, seed=23)
+        fast = crossbar_matmul(x, w)
+        slow = crossbar_matmul(x, w, force_bit_serial=True)
+        assert (fast == slow).all()
+
+    @pytest.mark.parametrize("cell_bits", [1, 2, 4])
+    def test_fast_equals_bit_serial_all_cells(self, cell_bits):
+        x, w = rand_xw(8, 160, 16, seed=cell_bits + 100)
+        adc = lossless_adc_bits(cell_bits, 128)
+        fast = crossbar_matmul(x, w, cell_bits=cell_bits, adc_bits=adc)
+        slow = crossbar_matmul(
+            x, w, cell_bits=cell_bits, adc_bits=adc, force_bit_serial=True
+        )
+        assert (fast == slow).all()
+
+    def test_lossy_adc_never_uses_fast_path(self):
+        # A saturating ADC must produce the bit-serial result (≠ exact).
+        x = jnp.full((2, 128), 255, jnp.int32)
+        w = jnp.full((128, 4), 127, jnp.int32)
+        lossy = crossbar_matmul(x, w, adc_bits=5)
+        assert (lossy != int_matmul_ref(x, w)).any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 200),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_fast_path_equivalence(m, k, n, seed):
+    x, w = rand_xw(m, k, n, seed=seed)
+    assert (
+        crossbar_matmul(x, w) == crossbar_matmul(x, w, force_bit_serial=True)
+    ).all()

@@ -1,0 +1,195 @@
+"""L2 model correctness: quantized CNN ops vs lax references + invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+
+def rand_img(b, h, w, c, seed=0, hi=256):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, hi, (b, h, w, c), dtype=np.int32))
+
+
+def lax_conv(x, w, stride, pad):
+    return lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w,
+        (stride, stride),
+        [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+
+
+OPTS = M.CrossbarOpts()
+
+
+class TestIm2col:
+    def test_ordering_matches_hwio_reshape(self):
+        x = rand_img(2, 6, 6, 3, seed=1)
+        w = jnp.asarray(np.random.default_rng(2).integers(-128, 128, (3, 3, 3, 5), dtype=np.int32))
+        patches = M.im2col(x, 3, 3, 1, 1)
+        acc = jnp.matmul(patches, w.reshape(27, 5)).reshape(2, 6, 6, 5)
+        assert (acc == lax_conv(x, w, 1, 1)).all()
+
+    def test_stride2_shape(self):
+        x = rand_img(1, 8, 8, 4)
+        p = M.im2col(x, 3, 3, 2, 1)
+        assert p.shape == (16, 36)
+
+    def test_1x1_nopad(self):
+        x = rand_img(2, 4, 4, 8)
+        p = M.im2col(x, 1, 1, 1, 0)
+        assert (p == x.reshape(32, 8)).all()
+
+
+class TestConv2dQ:
+    @pytest.mark.parametrize("stride,pad,k", [(1, 1, 3), (2, 1, 3), (1, 0, 1), (2, 0, 1)])
+    def test_raw_acc_vs_lax(self, stride, pad, k):
+        rng = np.random.default_rng(stride * 10 + pad)
+        x = rand_img(2, 8, 8, 4, seed=stride)
+        w = jnp.asarray(rng.integers(-128, 128, (k, k, 4, 6), dtype=np.int32))
+        conv = M.QConv(w, shift=8, stride=stride, pad=pad)
+        acc = M.conv2d_q(x, conv, OPTS, requant=False)
+        assert (acc == lax_conv(x, w, stride, pad)).all()
+
+    def test_requant_range(self):
+        x = rand_img(1, 8, 8, 4, seed=9)
+        w = jnp.asarray(np.random.default_rng(9).integers(-128, 128, (3, 3, 4, 6), dtype=np.int32))
+        y = M.conv2d_q(x, M.QConv(w, shift=12), OPTS)
+        assert int(y.min()) >= 0 and int(y.max()) <= M.ACT_MAX
+
+
+class TestRequantize:
+    def test_rounds_half_up(self):
+        acc = jnp.asarray([[7], [8], [-3]], jnp.int32)
+        out = M.requantize(acc, 3)  # (x+4)>>3
+        assert out.tolist() == [[1], [1], [0]]
+
+    def test_clips_to_u8(self):
+        acc = jnp.asarray([[1 << 20, -(1 << 20)]], jnp.int32)
+        out = M.requantize(acc, 4)
+        assert out.tolist() == [[255, 0]]
+
+    def test_signed_mode(self):
+        acc = jnp.asarray([[1 << 20, -(1 << 20)]], jnp.int32)
+        out = M.requantize(acc, 4, relu=False)
+        assert out.tolist() == [[127, -128]]
+
+    def test_monotone(self):
+        acc = jnp.arange(-1024, 1024, dtype=jnp.int32).reshape(-1, 1)
+        out = M.requantize(acc, 5)
+        assert (jnp.diff(out[:, 0]) >= 0).all()
+
+
+class TestBlocks:
+    def test_identity_block_shape_and_range(self):
+        params = M.init_block_params(16, 16, seed=3)
+        x = rand_img(2, 8, 8, 16, seed=4, hi=200)
+        y = M.basic_block_q(x, params, OPTS)
+        assert y.shape == x.shape
+        assert int(y.min()) >= 0 and int(y.max()) <= M.ACT_MAX
+
+    def test_zero_input_passes_zero(self):
+        params = M.init_block_params(8, 8, seed=5)
+        x = jnp.zeros((1, 8, 8, 8), jnp.int32)
+        y = M.basic_block_q(x, params, OPTS)
+        assert (y == 0).all()
+
+    def test_downsample_block(self):
+        p = M.init_tiny_cnn_params(0)["block1"]  # 16 -> 32 stride 2
+        assert p.down is not None
+        x = rand_img(1, 16, 16, 16, seed=6, hi=200)
+        y = M.basic_block_q(x, p, OPTS)
+        assert y.shape == (1, 8, 8, 32)
+
+
+class TestAvgPoolLinear:
+    def test_avg_pool_exact(self):
+        x = rand_img(3, 4, 4, 8, seed=7)
+        p = M.avg_pool_q(x)
+        ref = jnp.sum(x, axis=(1, 2)) // 16
+        assert (p == ref).all()
+
+    def test_linear_matches_matmul(self):
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.integers(0, 256, (4, 64), dtype=np.int32))
+        w = jnp.asarray(rng.integers(-128, 128, (64, 100), dtype=np.int32))
+        out = M.linear_q(x, M.QLinear(w), OPTS)
+        assert (out == jnp.matmul(x, w)).all()
+
+
+class TestTinyCnn:
+    def test_forward_shape_dtype(self):
+        params = M.init_tiny_cnn_params(0)
+        x = rand_img(2, 32, 32, 3, seed=10)
+        logits = M.tiny_cnn_forward(x, params)
+        assert logits.shape == (2, M.TINY_CNN_CLASSES)
+        assert logits.dtype == jnp.int32
+
+    def test_deterministic(self):
+        params = M.init_tiny_cnn_params(0)
+        x = rand_img(1, 32, 32, 3, seed=11)
+        a = M.tiny_cnn_forward(x, params)
+        b = M.tiny_cnn_forward(x, params)
+        assert (a == b).all()
+
+    def test_logits_alive(self):
+        """Calibration must keep the network from saturating or dying."""
+        params = M.init_tiny_cnn_params(0)
+        x = rand_img(2, 32, 32, 3, seed=12)
+        logits = M.tiny_cnn_forward(x, params)
+        assert int(jnp.abs(logits).max()) > 0
+        # different images -> different logits
+        x2 = rand_img(2, 32, 32, 3, seed=13)
+        assert (M.tiny_cnn_forward(x2, params) != logits).any()
+
+    def test_param_count_formula(self):
+        params = M.init_tiny_cnn_params(0)
+        n = int(np.prod(params["stem"].w.shape))
+        for i in range(3):
+            blk = params[f"block{i}"]
+            n += int(np.prod(blk.conv_a.w.shape)) + int(np.prod(blk.conv_b.w.shape))
+            if blk.down is not None:
+                n += int(np.prod(blk.down.w.shape))
+        n += int(np.prod(params["fc"].w.shape))
+        assert n == M.tiny_cnn_param_count()
+
+    def test_macs_scale_with_batch(self):
+        assert M.tiny_cnn_macs(4) == 4 * M.tiny_cnn_macs(1)
+
+    def test_seeds_give_different_weights(self):
+        a = M.init_tiny_cnn_params(0)
+        b = M.init_tiny_cnn_params(1)
+        assert (a["stem"].w != b["stem"].w).any()
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    stride=st.sampled_from([1, 2]),
+    cin=st.sampled_from([3, 4, 8]),
+    cout=st.sampled_from([4, 8]),
+)
+def test_hypothesis_conv_exact(seed, stride, cin, cout):
+    """conv2d_q raw accumulators == lax.conv for arbitrary small shapes."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, (1, 8, 8, cin), dtype=np.int32))
+    w = jnp.asarray(rng.integers(-128, 128, (3, 3, cin, cout), dtype=np.int32))
+    conv = M.QConv(w, shift=8, stride=stride, pad=1)
+    acc = M.conv2d_q(x, conv, OPTS, requant=False)
+    assert (acc == lax_conv(x, w, stride, 1)).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(shift=st.integers(1, 24), seed=st.integers(0, 2**31))
+def test_hypothesis_requantize_bounds(shift, seed):
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(rng.integers(-(2**30), 2**30, (16, 16), dtype=np.int32))
+    out = M.requantize(acc, shift)
+    assert int(out.min()) >= 0 and int(out.max()) <= M.ACT_MAX

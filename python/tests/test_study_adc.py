@@ -1,0 +1,22 @@
+"""ADC-precision study invariants."""
+
+from compile.study_adc import study
+
+
+class TestAdcStudy:
+    def test_lossless_point_is_exact(self):
+        rows = study(batch=2, bits=[9])
+        assert rows[0]["lossless"]
+        assert rows[0]["max_abs_err"] == 0
+        assert rows[0]["top1_agreement"] == 1.0
+
+    def test_error_grows_as_resolution_drops(self):
+        rows = study(batch=2, bits=[9, 7, 5])
+        errs = [r["rel_err"] for r in rows]
+        assert errs[0] == 0.0
+        assert errs[1] <= errs[2], f"non-monotone: {errs}"
+        assert errs[2] > 0.0
+
+    def test_low_resolution_changes_predictions(self):
+        rows = study(batch=4, bits=[4])
+        assert rows[0]["top1_agreement"] < 1.0 or rows[0]["rel_err"] > 0.05

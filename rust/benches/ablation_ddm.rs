@@ -1,0 +1,81 @@
+//! Ablation bench: DDM on/off × pipeline case2/case3 × LPDDR3/4/5 on
+//! ResNet-18/34 — the design-choice matrix DESIGN.md calls out.
+
+use pimflow::bench_harness::{align, Bench};
+use pimflow::cfg::presets;
+use pimflow::cfg::{DramKind, PipelineCase};
+use pimflow::nn::resnet;
+use pimflow::sim::System;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let r34 = resnet::resnet34(100);
+    b.case("sim_resnet34_b64_full", || {
+        System::new(presets::compact_rram_41mm2(), presets::lpddr5()).run(&r34, 64)
+    });
+    b.report();
+
+    let mut rows = vec![vec![
+        "network".to_string(),
+        "dram".to_string(),
+        "case".to_string(),
+        "ddm".to_string(),
+        "FPS".to_string(),
+        "TOPS/W".to_string(),
+        "compute%".to_string(),
+    ]];
+    for net_name in ["resnet18", "resnet34"] {
+        let net = resnet::by_name(net_name, 100).unwrap();
+        for dram_kind in DramKind::all() {
+            for case in [PipelineCase::Case2, PipelineCase::Case3] {
+                for ddm in [false, true] {
+                    let r = System::new(presets::compact_rram_41mm2(), presets::dram(dram_kind))
+                        .with_ddm(ddm)
+                        .with_case(case)
+                        .run(&net, 64);
+                    rows.push(vec![
+                        net_name.to_string(),
+                        dram_kind.name().to_string(),
+                        case.name().to_string(),
+                        ddm.to_string(),
+                        format!("{:.0}", r.throughput_fps),
+                        format!("{:.2}", r.tops_per_watt),
+                        format!("{:.1}", 100.0 * r.compute_fraction),
+                    ]);
+                }
+            }
+        }
+    }
+    println!("== DDM / pipeline-case / DRAM ablation (batch 64) ==");
+    print!("{}", align(&rows));
+
+    // Partition-strategy ablation: §II-C greedy vs Fig-2 search (both DDM).
+    use pimflow::sim::PartitionStrategy;
+    let mut rows = vec![vec![
+        "network".to_string(),
+        "strategy".to_string(),
+        "parts".to_string(),
+        "FPS".to_string(),
+        "TOPS/W".to_string(),
+    ]];
+    for net_name in ["resnet18", "resnet34", "resnet50"] {
+        let net = resnet::by_name(net_name, 100).unwrap();
+        for (label, strat) in [
+            ("greedy", PartitionStrategy::Greedy),
+            ("search", PartitionStrategy::Search),
+        ] {
+            let r = System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+                .with_strategy(strat)
+                .run(&net, 256);
+            rows.push(vec![
+                net_name.to_string(),
+                label.to_string(),
+                r.num_parts.to_string(),
+                format!("{:.0}", r.throughput_fps),
+                format!("{:.2}", r.tops_per_watt),
+            ]);
+        }
+    }
+    println!("\n== partition-strategy ablation (batch 256, DDM on) ==");
+    print!("{}", align(&rows));
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 1 (area-unlimited chip area, SRAM vs RRAM) and
+//! time the area model.
+
+use pimflow::bench_harness::Bench;
+use pimflow::report::figures;
+
+fn main() {
+    let mut b = Bench::from_env();
+    b.case("fig1_table", figures::fig1_table);
+    b.report();
+
+    let (table, csv) = figures::fig1_table();
+    print!("{}", table.render());
+    let _ = figures::write_csv(&csv, "fig1_area.csv");
+}

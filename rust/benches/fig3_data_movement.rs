@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig. 3 (normalized DRAM transaction count vs batch,
+//! compact vs area-unlimited, ResNet-18 / LPDDR5) and time one sweep point.
+
+use pimflow::bench_harness::Bench;
+use pimflow::cfg::presets;
+use pimflow::explore::{fig3_sweep, BATCHES};
+use pimflow::nn::resnet;
+use pimflow::report::figures;
+
+fn main() {
+    let net = resnet::resnet18(100);
+    let dram = presets::lpddr5();
+
+    let mut b = Bench::from_env();
+    b.case("fig3_point_batch64", || fig3_sweep(&net, &dram, &[64]));
+    b.report();
+
+    let pts = fig3_sweep(&net, &dram, &BATCHES);
+    let (table, csv) = figures::fig3_table(&pts);
+    print!("{}", table.render());
+    let _ = figures::write_csv(&csv, "fig3_data_movement.csv");
+
+    let last = pts.last().unwrap();
+    println!(
+        "shape check: ratio grows {:.2} -> {:.2} (paper grows to 264.8x on a KB-scale chip)",
+        pts[0].ratio, last.ratio
+    );
+    assert!(last.ratio > pts[0].ratio, "Fig 3 growth shape violated");
+}

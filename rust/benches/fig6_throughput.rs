@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig. 6 (throughput & energy efficiency vs batch for
+//! GPU / compact no-DDM / compact DDM / area-unlimited, ResNet-34) plus
+//! the §III-B headline factor table, and time one sweep point.
+
+use pimflow::bench_harness::Bench;
+use pimflow::cfg::presets;
+use pimflow::explore::{fig6_sweep, BATCHES};
+use pimflow::nn::resnet;
+use pimflow::report::figures;
+
+fn main() {
+    let net = resnet::resnet34(100);
+    let dram = presets::lpddr5();
+
+    let mut b = Bench::from_env();
+    b.case("fig6_point_batch64", || fig6_sweep(&net, &dram, &[64]));
+    b.report();
+
+    let pts = fig6_sweep(&net, &dram, &BATCHES);
+    let (thr, eff, csv) = figures::fig6_tables(&pts);
+    print!("{}", thr.render());
+    print!("{}", eff.render());
+    print!("{}", figures::headline_factors(&pts).render());
+    let _ = figures::write_csv(&csv, "fig6_throughput.csv");
+
+    // Shape assertions (the paper's ordering must hold at large batch).
+    let p = pts.last().unwrap();
+    assert!(p.gpu_fps < p.no_ddm.throughput_fps);
+    assert!(p.no_ddm.throughput_fps < p.ddm.throughput_fps);
+    assert!(p.ddm.throughput_fps < p.unlimited.throughput_fps);
+    assert!(p.ddm.gops_per_mm2 > p.unlimited.gops_per_mm2, "area-eff advantage");
+}

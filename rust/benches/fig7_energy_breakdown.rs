@@ -1,0 +1,30 @@
+//! Bench: regenerate Fig. 7 (computation-energy proportion vs batch) and
+//! time one sweep point.
+
+use pimflow::bench_harness::Bench;
+use pimflow::cfg::presets;
+use pimflow::explore::{fig7_sweep, BATCHES};
+use pimflow::nn::resnet;
+use pimflow::report::figures;
+
+fn main() {
+    let net = resnet::resnet34(100);
+    let dram = presets::lpddr5();
+
+    let mut b = Bench::from_env();
+    b.case("fig7_point_batch64", || fig7_sweep(&net, &dram, &[64]));
+    b.report();
+
+    let pts = fig7_sweep(&net, &dram, &BATCHES);
+    let (table, csv) = figures::fig7_table(&pts);
+    print!("{}", table.render());
+    let _ = figures::write_csv(&csv, "fig7_energy.csv");
+
+    let last = pts.last().unwrap();
+    assert!(last.compact_fraction > 0.5, "paper: >50% at scale");
+    println!(
+        "shape check: compute share rises {:.0}% -> {:.0}% (paper: 50-80%; DRAM <20% at scale)",
+        100.0 * pts[0].compact_fraction,
+        100.0 * last.compact_fraction
+    );
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate Fig. 8 (max NN size exploration) and time one row.
+
+use pimflow::bench_harness::Bench;
+use pimflow::cfg::presets;
+use pimflow::explore::{fig8_sweep, max_deployable, Floor};
+use pimflow::report::figures;
+use pimflow::sim::System;
+
+fn main() {
+    let dram = presets::lpddr5();
+
+    let mut b = Bench::from_env();
+    let net = pimflow::nn::resnet::resnet50(100);
+    b.case("fig8_row_resnet50", || {
+        System::new(presets::compact_rram_41mm2(), dram.clone()).run(&net, 64)
+    });
+    b.report();
+
+    let pts = fig8_sweep(&dram, 256);
+    let (table, csv) = figures::fig8_table(&pts);
+    print!("{}", table.render());
+    let _ = figures::write_csv(&csv, "fig8_max_nn.csv");
+
+    // The paper's recommendation logic: pick a floor between the family
+    // extremes and report the largest deployable network.
+    let floor = Floor {
+        min_fps: (pts[0].ddm.throughput_fps + pts.last().unwrap().ddm.throughput_fps) / 2.0,
+        min_tops_per_watt: 4.0,
+    };
+    match max_deployable(&pts, floor) {
+        Some(best) => println!(
+            "max deployable under floor (>{:.0} FPS, >4 TOPS/W): {} ({:.1}M)",
+            floor.min_fps,
+            best.network,
+            best.weights as f64 / 1e6
+        ),
+        None => println!("no network meets the floor"),
+    }
+    assert!(
+        pts.last().unwrap().ddm.throughput_fps < pts[0].ddm.throughput_fps,
+        "throughput must fall across the family"
+    );
+}

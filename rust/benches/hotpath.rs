@@ -1,0 +1,40 @@
+//! Hot-path micro-benchmarks for the §Perf pass: the pieces that run
+//! inside every sweep point (partition, DDM, pipeline simulate) plus the
+//! substrate primitives they lean on.
+
+use pimflow::bench_harness::Bench;
+use pimflow::cfg::presets;
+use pimflow::cfg::PipelineCase;
+use pimflow::ddm;
+use pimflow::nn::resnet;
+use pimflow::partition::partition;
+use pimflow::pim::ChipModel;
+use pimflow::pipeline::simulate;
+
+fn main() {
+    let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+    let dram = presets::lpddr5();
+    let r34 = resnet::resnet34(100);
+    let r152 = resnet::resnet152(100);
+
+    let plan34 = partition(&r34, &chip).unwrap();
+    let dd34 = ddm::run(&plan34, &chip);
+
+    let mut b = Bench::from_env();
+    b.case("resnet_build_152", || resnet::resnet152(100));
+    b.case("partition_r34", || partition(&r34, &chip).unwrap());
+    b.case("partition_r152", || partition(&r152, &chip).unwrap());
+    b.case("ddm_r34", || ddm::run(&plan34, &chip));
+    b.case("pipeline_sim_r34_b64", || {
+        simulate(&r34, &plan34, &dd34, &chip, &dram, 64, PipelineCase::Auto).unwrap()
+    });
+    b.case("pipeline_sim_r34_b1024", || {
+        simulate(&r34, &plan34, &dd34, &chip, &dram, 1024, PipelineCase::Auto).unwrap()
+    });
+    b.report();
+
+    // §Perf target: full fig6 sweep under 2 s.
+    let t0 = std::time::Instant::now();
+    let _ = pimflow::explore::fig6_sweep(&r34, &dram, &pimflow::explore::BATCHES);
+    println!("full fig6 sweep: {:.3} s (target < 2 s)", t0.elapsed().as_secs_f64());
+}

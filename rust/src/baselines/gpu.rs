@@ -1,0 +1,108 @@
+//! RTX 4090 comparison model.
+//!
+//! The paper uses the GPU only as a normalized comparison point (4.56×
+//! throughput, 157× energy efficiency in favor of the compact PIM design,
+//! §III-B). We model the GPU as an effective-throughput machine with a
+//! batch-dependent utilization curve and an idle+dynamic power split, with
+//! constants calibrated so the ResNet-34 crossover factors land in the
+//! paper's reported regime (see DESIGN.md substitution table).
+
+use crate::nn::Network;
+
+/// Batch-utilization half-point: util(n) = n / (n + N_HALF) — small CIFAR
+/// kernels underutilize a 16k-core GPU until batches are large.
+pub const N_HALF: f64 = 24.0;
+
+/// Effective sustained INT8 throughput at full utilization, ops/s.
+/// (Far below the 4090's 660 TOPS peak: tiny 32×32 convolutions are
+/// launch- and memory-bound; calibrated to the paper's relative factors.)
+pub const PEAK_EFF_OPS: f64 = 2.9e12;
+
+/// Board power model: idle + utilization-scaled dynamic power, W.
+///
+/// These are the *per-workload attributed* powers that reproduce the
+/// paper's 157× energy-efficiency factor together with the 4.56×
+/// throughput factor (the paper's own numbers imply ≈60 W attributed GPU
+/// power for this workload; charging the full 450 W TDP would inflate the
+/// factor to >1000×).
+pub const P_IDLE_W: f64 = 20.0;
+pub const P_DYN_W: f64 = 31.0;
+
+/// The GPU baseline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Rtx4090;
+
+impl Rtx4090 {
+    pub fn utilization(&self, batch: u32) -> f64 {
+        let n = batch as f64;
+        n / (n + N_HALF)
+    }
+
+    /// Inference throughput, frames/s.
+    pub fn throughput_fps(&self, net: &Network, batch: u32) -> f64 {
+        let ops = net.total_ops() as f64;
+        PEAK_EFF_OPS * self.utilization(batch) / ops
+    }
+
+    /// Board power at this operating point, W.
+    pub fn power_w(&self, batch: u32) -> f64 {
+        P_IDLE_W + P_DYN_W * self.utilization(batch)
+    }
+
+    /// Energy efficiency, TOPS/W.
+    pub fn tops_per_watt(&self, net: &Network, batch: u32) -> f64 {
+        let ops_per_s = self.throughput_fps(net, batch) * net.total_ops() as f64;
+        ops_per_s / self.power_w(batch) / 1e12
+    }
+
+    /// Energy per inference, J.
+    pub fn energy_per_ifm_j(&self, net: &Network, batch: u32) -> f64 {
+        self.power_w(batch) / self.throughput_fps(net, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::resnet;
+
+    #[test]
+    fn throughput_saturates_with_batch() {
+        let g = Rtx4090;
+        let net = resnet::resnet34(100);
+        let f1 = g.throughput_fps(&net, 1);
+        let f64_ = g.throughput_fps(&net, 64);
+        let f1024 = g.throughput_fps(&net, 1024);
+        assert!(f1 < f64_ && f64_ < f1024);
+        // saturation: 1024 within 5% of asymptote
+        let asym = PEAK_EFF_OPS / net.total_ops() as f64;
+        assert!(f1024 > 0.95 * asym);
+    }
+
+    #[test]
+    fn bigger_nets_run_slower() {
+        let g = Rtx4090;
+        let f34 = g.throughput_fps(&resnet::resnet34(100), 256);
+        let f152 = g.throughput_fps(&resnet::resnet152(100), 256);
+        assert!(f152 < f34 / 2.0);
+    }
+
+    #[test]
+    fn efficiency_is_sub_tops_per_watt() {
+        // The whole point of the paper's 157× claim: GPUs burn hundreds of
+        // watts on workloads PIM does in milliwatts.
+        let g = Rtx4090;
+        let eff = g.tops_per_watt(&resnet::resnet34(100), 1024);
+        assert!(eff < 0.1, "GPU eff {eff} should be far below PIM's >8");
+        assert!(eff > 0.0001);
+    }
+
+    #[test]
+    fn power_between_idle_and_tdp() {
+        let g = Rtx4090;
+        for &n in &[1u32, 16, 1024] {
+            let p = g.power_w(n);
+            assert!(p >= P_IDLE_W && p <= P_IDLE_W + P_DYN_W);
+        }
+    }
+}

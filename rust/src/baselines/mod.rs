@@ -1,0 +1,8 @@
+//! Comparison baselines: the area-unlimited PIM chip and the RTX 4090
+//! model the paper normalizes against.
+
+pub mod gpu;
+pub mod unlimited;
+
+pub use gpu::Rtx4090;
+pub use unlimited::unlimited_chip;

@@ -1,0 +1,222 @@
+//! Criterion-replacement micro/macro benchmark harness (offline registry
+//! carries no `criterion`).
+//!
+//! Provides warmup, adaptive iteration counts targeting a wall-clock budget,
+//! robust statistics (median + MAD), throughput reporting, and aligned table
+//! output shared by every `rust/benches/*.rs` figure harness.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn per_iter_s(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    /// Items/second given a per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.per_iter_s()
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bench {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness for CI / smoke runs (`PIMFLOW_BENCH_QUICK=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("PIMFLOW_BENCH_QUICK").is_ok() {
+            Bench {
+                warmup: Duration::from_millis(20),
+                budget: Duration::from_millis(200),
+                min_iters: 3,
+                results: Vec::new(),
+            }
+        } else {
+            Self::default()
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Run one case: warm up, estimate cost, then sample until the budget
+    /// is spent. The closure's return value is black-boxed.
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup + cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 1 {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let est = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        let target_iters = ((self.budget.as_secs_f64() / est.max(1e-9)) as u64)
+            .clamp(self.min_iters, 1_000_000);
+
+        let mut samples = Vec::with_capacity(target_iters as usize);
+        for _ in 0..target_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::from_samples(samples);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: target_iters,
+            median: Duration::from_secs_f64(s.median()),
+            mean: Duration::from_secs_f64(s.mean()),
+            stddev: Duration::from_secs_f64(s.stddev()),
+            min: Duration::from_secs_f64(s.min()),
+            max: Duration::from_secs_f64(s.max()),
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the standard results table.
+    pub fn report(&self) {
+        println!("{}", render_bench_table(&self.results));
+    }
+}
+
+/// Render bench results as an aligned table.
+pub fn render_bench_table(results: &[BenchResult]) -> String {
+    let mut rows = vec![vec![
+        "case".to_string(),
+        "iters".to_string(),
+        "median".to_string(),
+        "mean".to_string(),
+        "stddev".to_string(),
+    ]];
+    for r in results {
+        rows.push(vec![
+            r.name.clone(),
+            r.iters.to_string(),
+            crate::util::units::fmt_time(r.median.as_secs_f64()),
+            crate::util::units::fmt_time(r.mean.as_secs_f64()),
+            crate::util::units::fmt_time(r.stddev.as_secs_f64()),
+        ]);
+    }
+    align(&rows)
+}
+
+/// Align a rows-of-cells table with two-space gutters.
+pub fn align(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(Vec::len).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    for row in rows {
+        let line: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<width$}", c, width = widths[i]))
+            .collect();
+        out.push_str(line.join("  ").trim_end());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_produces_sane_stats() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(50),
+            min_iters: 5,
+            results: Vec::new(),
+        };
+        let r = b.case("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 5);
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "t".into(),
+            iters: 1,
+            median: Duration::from_millis(10),
+            mean: Duration::from_millis(10),
+            stddev: Duration::ZERO,
+            min: Duration::from_millis(10),
+            max: Duration::from_millis(10),
+        };
+        assert!((r.throughput(100.0) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn align_pads_columns() {
+        let rows = vec![
+            vec!["a".to_string(), "bb".to_string()],
+            vec!["ccc".to_string(), "d".to_string()],
+        ];
+        let out = align(&rows);
+        assert_eq!(out, "a    bb\nccc  d\n");
+    }
+
+    #[test]
+    fn align_empty() {
+        assert_eq!(align(&[]), "");
+    }
+}

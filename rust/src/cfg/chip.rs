@@ -1,0 +1,274 @@
+//! Typed PIM-chip configuration.
+//!
+//! The hierarchy mirrors the paper's Fig. 2: chip → Tile → PE → Subarray,
+//! where one *Tile* is the minimum mapping unit (no layer sharing within a
+//! tile) and duplication may happen at subarray/PE/tile granularity.
+
+use anyhow::{bail, Context};
+
+use super::toml::Value;
+
+/// Memory cell technology of the crossbar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellTech {
+    /// Resistive RAM, multi-bit conductance cells.
+    Rram { bits_per_cell: u32 },
+    /// 6T/8T SRAM compute-in-memory, one bit per cell.
+    Sram,
+}
+
+impl CellTech {
+    pub fn bits_per_cell(&self) -> u32 {
+        match self {
+            CellTech::Rram { bits_per_cell } => *bits_per_cell,
+            CellTech::Sram => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CellTech::Rram { .. } => "rram",
+            CellTech::Sram => "sram",
+        }
+    }
+}
+
+/// Full chip configuration (geometry + timing + energy at 32 nm).
+#[derive(Debug, Clone)]
+pub struct ChipConfig {
+    pub name: String,
+    pub cell: CellTech,
+    /// Crossbar rows per subarray (inputs per MVM).
+    pub subarray_rows: u32,
+    /// Crossbar columns per subarray (cell columns, not weight columns).
+    pub subarray_cols: u32,
+    pub subarrays_per_pe: u32,
+    pub pes_per_tile: u32,
+    /// Number of tiles on the chip. This is what "compact" limits.
+    pub num_tiles: u32,
+    /// Weight precision in bits (paper: 8).
+    pub weight_bits: u32,
+    /// Activation precision in bits, streamed bit-serially (paper: 8).
+    pub act_bits: u32,
+    /// One crossbar read cycle (row activate + ADC), nanoseconds.
+    pub t_read_ns: f64,
+    /// Energy of one subarray read cycle (crossbar + ADC + shift-add), pJ.
+    pub e_read_pj: f64,
+    /// On-chip buffer access energy, pJ per byte.
+    pub e_buf_pj_per_byte: f64,
+    /// NoC/H-tree transfer energy, pJ per byte.
+    pub e_noc_pj_per_byte: f64,
+    /// Tile leakage power, mW (paid whenever the chip is powered).
+    pub p_leak_mw_per_tile: f64,
+}
+
+impl ChipConfig {
+    /// Cells needed to store one weight.
+    pub fn cells_per_weight(&self) -> u32 {
+        self.weight_bits.div_ceil(self.cell.bits_per_cell())
+    }
+
+    /// Weights stored by one subarray (`rows × cols / cells_per_weight`).
+    pub fn weights_per_subarray(&self) -> u64 {
+        (self.subarray_rows as u64 * self.subarray_cols as u64) / self.cells_per_weight() as u64
+    }
+
+    /// Weight-output columns per subarray (`cols / cells_per_weight`).
+    pub fn weight_cols_per_subarray(&self) -> u32 {
+        self.subarray_cols / self.cells_per_weight()
+    }
+
+    pub fn subarrays_per_tile(&self) -> u32 {
+        self.subarrays_per_pe * self.pes_per_tile
+    }
+
+    /// Weights stored by one tile.
+    pub fn weights_per_tile(&self) -> u64 {
+        self.weights_per_subarray() * self.subarrays_per_tile() as u64
+    }
+
+    /// Total on-chip weight capacity.
+    pub fn weight_capacity(&self) -> u64 {
+        self.weights_per_tile() * self.num_tiles as u64
+    }
+
+    /// Latency of one full-precision MVM on a subarray: the activation bits
+    /// stream serially, one crossbar read per bit.
+    pub fn t_mvm_ns(&self) -> f64 {
+        self.act_bits as f64 * self.t_read_ns
+    }
+
+    /// Energy of one full-precision MVM on one subarray, pJ.
+    pub fn e_mvm_pj(&self) -> f64 {
+        self.act_bits as f64 * self.e_read_pj
+    }
+
+    /// MACs performed by one subarray MVM (`rows × weight_cols`).
+    pub fn macs_per_mvm(&self) -> u64 {
+        self.subarray_rows as u64 * self.weight_cols_per_subarray() as u64
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.subarray_rows == 0 || self.subarray_cols == 0 {
+            bail!("subarray dimensions must be positive");
+        }
+        if self.num_tiles == 0 {
+            bail!("chip needs at least one tile");
+        }
+        if self.weight_bits % self.cell.bits_per_cell() != 0 {
+            bail!(
+                "weight_bits {} not divisible by bits_per_cell {}",
+                self.weight_bits,
+                self.cell.bits_per_cell()
+            );
+        }
+        if self.subarray_cols % self.cells_per_weight() != 0 {
+            bail!("subarray_cols must hold whole weights");
+        }
+        if self.t_read_ns <= 0.0 || self.e_read_pj <= 0.0 {
+            bail!("timing/energy constants must be positive");
+        }
+        Ok(())
+    }
+
+    /// Parse from the `[chip]` table of a TOML document.
+    pub fn from_toml(v: &Value) -> anyhow::Result<Self> {
+        let get_f = |k: &str| -> anyhow::Result<f64> {
+            v.get(k)
+                .and_then(Value::as_float)
+                .with_context(|| format!("chip config missing float `{k}`"))
+        };
+        let get_u = |k: &str| -> anyhow::Result<u32> {
+            let i = v
+                .get(k)
+                .and_then(Value::as_int)
+                .with_context(|| format!("chip config missing int `{k}`"))?;
+            if i < 0 {
+                bail!("`{k}` must be non-negative");
+            }
+            Ok(i as u32)
+        };
+        let cell_kind = v
+            .get("cell.kind")
+            .and_then(Value::as_str)
+            .context("chip config missing `cell.kind`")?;
+        let cell = match cell_kind {
+            "rram" => CellTech::Rram {
+                bits_per_cell: v
+                    .get("cell.bits_per_cell")
+                    .and_then(Value::as_int)
+                    .unwrap_or(2) as u32,
+            },
+            "sram" => CellTech::Sram,
+            other => bail!("unknown cell kind `{other}`"),
+        };
+        let cfg = ChipConfig {
+            name: v
+                .get("name")
+                .and_then(Value::as_str)
+                .unwrap_or("custom")
+                .to_string(),
+            cell,
+            subarray_rows: get_u("subarray_rows")?,
+            subarray_cols: get_u("subarray_cols")?,
+            subarrays_per_pe: get_u("subarrays_per_pe")?,
+            pes_per_tile: get_u("pes_per_tile")?,
+            num_tiles: get_u("num_tiles")?,
+            weight_bits: get_u("weight_bits")?,
+            act_bits: get_u("act_bits")?,
+            t_read_ns: get_f("t_read_ns")?,
+            e_read_pj: get_f("e_read_pj")?,
+            e_buf_pj_per_byte: get_f("e_buf_pj_per_byte")?,
+            e_noc_pj_per_byte: get_f("e_noc_pj_per_byte")?,
+            p_leak_mw_per_tile: get_f("p_leak_mw_per_tile")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Resize to a given tile count, keeping all other parameters.
+    pub fn with_tiles(&self, num_tiles: u32) -> Self {
+        ChipConfig {
+            num_tiles,
+            name: format!("{}@{}t", self.name, num_tiles),
+            ..self.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+
+    #[test]
+    fn derived_capacities_rram() {
+        let c = presets::compact_rram_41mm2();
+        assert_eq!(c.cells_per_weight(), 4); // 8-bit weights, 2 b/cell
+        assert_eq!(c.weights_per_subarray(), 128 * 128 / 4);
+        assert_eq!(c.weight_cols_per_subarray(), 32);
+        assert_eq!(
+            c.weight_capacity(),
+            c.weights_per_tile() * c.num_tiles as u64
+        );
+    }
+
+    #[test]
+    fn sram_needs_eight_cells() {
+        let mut c = presets::compact_rram_41mm2();
+        c.cell = CellTech::Sram;
+        assert_eq!(c.cells_per_weight(), 8);
+        assert_eq!(c.weight_cols_per_subarray(), 16);
+    }
+
+    #[test]
+    fn mvm_latency_is_bit_serial() {
+        let c = presets::compact_rram_41mm2();
+        assert!((c.t_mvm_ns() - 8.0 * c.t_read_ns).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_bad_geometry() {
+        let mut c = presets::compact_rram_41mm2();
+        c.num_tiles = 0;
+        assert!(c.validate().is_err());
+        let mut c2 = presets::compact_rram_41mm2();
+        c2.weight_bits = 7; // not divisible by 2 bits/cell
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn parses_from_toml() {
+        let doc = crate::cfg::toml::parse(
+            r#"
+            name = "test"
+            subarray_rows = 128
+            subarray_cols = 128
+            subarrays_per_pe = 8
+            pes_per_tile = 8
+            num_tiles = 4
+            weight_bits = 8
+            act_bits = 8
+            t_read_ns = 50.0
+            e_read_pj = 20.0
+            e_buf_pj_per_byte = 1.0
+            e_noc_pj_per_byte = 2.0
+            p_leak_mw_per_tile = 0.5
+            [cell]
+            kind = "rram"
+            bits_per_cell = 2
+            "#,
+        )
+        .unwrap();
+        let c = ChipConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.num_tiles, 4);
+        assert_eq!(c.cell, CellTech::Rram { bits_per_cell: 2 });
+    }
+
+    #[test]
+    fn with_tiles_rescales() {
+        let c = presets::compact_rram_41mm2();
+        let big = c.with_tiles(c.num_tiles * 3);
+        assert_eq!(big.weight_capacity(), 3 * c.weight_capacity());
+    }
+}

@@ -1,0 +1,196 @@
+//! Typed off-chip DRAM configuration (DRAMPower-style accounting inputs).
+//!
+//! Numbers are derived from the public datasheets the paper cites
+//! (Micron LPDDR3/LPDDR4, JEDEC JESD209-5C LPDDR5): peak transfer rate ×
+//! bus width gives bandwidth; IDD currents × voltage at the rated rate
+//! reduce to an effective pJ/bit plus a background (standby) power.
+
+use anyhow::{bail, Context};
+
+use super::toml::Value;
+
+/// DRAM generation (the paper evaluates all three; LPDDR5 is the default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DramKind {
+    Lpddr3,
+    Lpddr4,
+    Lpddr5,
+}
+
+impl DramKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DramKind::Lpddr3 => "lpddr3",
+            DramKind::Lpddr4 => "lpddr4",
+            DramKind::Lpddr5 => "lpddr5",
+        }
+    }
+
+    pub fn all() -> [DramKind; 3] {
+        [DramKind::Lpddr3, DramKind::Lpddr4, DramKind::Lpddr5]
+    }
+}
+
+/// DRAM device + channel configuration.
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    pub kind: DramKind,
+    /// Transfer rate in MT/s (e.g. 4266 for the paper's LPDDR5).
+    pub transfer_mts: f64,
+    /// Total bus width in bits (paper: 128).
+    pub bus_bits: u32,
+    /// Effective read energy, pJ per bit (I/O + array + periphery).
+    pub e_read_pj_per_bit: f64,
+    /// Effective write energy, pJ per bit.
+    pub e_write_pj_per_bit: f64,
+    /// Row activate+precharge energy per row-buffer miss, nJ.
+    pub e_act_nj: f64,
+    /// Row-buffer size per access granularity, bytes (amortizes `e_act_nj`).
+    pub row_bytes: u32,
+    /// Background/standby power of the whole DRAM subsystem, mW.
+    pub p_background_mw: f64,
+    /// Fixed per-transaction controller latency, ns (tRCD+tRP+queueing).
+    pub t_overhead_ns: f64,
+}
+
+impl DramConfig {
+    /// Peak bandwidth in bytes/second.
+    pub fn peak_bw_bytes_per_s(&self) -> f64 {
+        self.transfer_mts * 1e6 * (self.bus_bits as f64 / 8.0)
+    }
+
+    /// Transfer time for `bytes` at peak bandwidth plus fixed overhead, ns.
+    pub fn transfer_ns(&self, bytes: u64) -> f64 {
+        self.t_overhead_ns + bytes as f64 / self.peak_bw_bytes_per_s() * 1e9
+    }
+
+    /// Energy to read `bytes`, joules (bit energy + amortized activates).
+    pub fn read_energy_j(&self, bytes: u64) -> f64 {
+        let bits = bytes as f64 * 8.0;
+        let rows = (bytes as f64 / self.row_bytes as f64).ceil();
+        bits * self.e_read_pj_per_bit * 1e-12 + rows * self.e_act_nj * 1e-9
+    }
+
+    /// Energy to write `bytes`, joules.
+    pub fn write_energy_j(&self, bytes: u64) -> f64 {
+        let bits = bytes as f64 * 8.0;
+        let rows = (bytes as f64 / self.row_bytes as f64).ceil();
+        bits * self.e_write_pj_per_bit * 1e-12 + rows * self.e_act_nj * 1e-9
+    }
+
+    /// Background energy over a window, joules.
+    pub fn background_energy_j(&self, window_s: f64) -> f64 {
+        self.p_background_mw * 1e-3 * window_s
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.transfer_mts <= 0.0 || self.bus_bits == 0 {
+            bail!("dram bandwidth parameters must be positive");
+        }
+        if self.e_read_pj_per_bit <= 0.0 || self.e_write_pj_per_bit <= 0.0 {
+            bail!("dram energy parameters must be positive");
+        }
+        if self.row_bytes == 0 {
+            bail!("row_bytes must be positive");
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(v: &Value) -> anyhow::Result<Self> {
+        let get_f = |k: &str| -> anyhow::Result<f64> {
+            v.get(k)
+                .and_then(Value::as_float)
+                .with_context(|| format!("dram config missing float `{k}`"))
+        };
+        let kind = match v
+            .get("kind")
+            .and_then(Value::as_str)
+            .context("dram config missing `kind`")?
+        {
+            "lpddr3" => DramKind::Lpddr3,
+            "lpddr4" => DramKind::Lpddr4,
+            "lpddr5" => DramKind::Lpddr5,
+            other => bail!("unknown dram kind `{other}`"),
+        };
+        let cfg = DramConfig {
+            kind,
+            transfer_mts: get_f("transfer_mts")?,
+            bus_bits: v
+                .get("bus_bits")
+                .and_then(Value::as_int)
+                .context("dram config missing `bus_bits`")? as u32,
+            e_read_pj_per_bit: get_f("e_read_pj_per_bit")?,
+            e_write_pj_per_bit: get_f("e_write_pj_per_bit")?,
+            e_act_nj: get_f("e_act_nj")?,
+            row_bytes: v
+                .get("row_bytes")
+                .and_then(Value::as_int)
+                .unwrap_or(2048) as u32,
+            p_background_mw: get_f("p_background_mw")?,
+            t_overhead_ns: get_f("t_overhead_ns")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+
+    #[test]
+    fn lpddr5_peak_bandwidth_matches_paper_spec() {
+        // 4266 MT/s × 128-bit bus = 68.3 GB/s
+        let d = presets::lpddr5();
+        let bw = d.peak_bw_bytes_per_s();
+        assert!((bw - 68.256e9).abs() / 68.256e9 < 0.01, "bw={bw}");
+    }
+
+    #[test]
+    fn generations_ordered_by_efficiency() {
+        let (d3, d4, d5) = (presets::lpddr3(), presets::lpddr4(), presets::lpddr5());
+        assert!(d3.e_read_pj_per_bit > d4.e_read_pj_per_bit);
+        assert!(d4.e_read_pj_per_bit > d5.e_read_pj_per_bit);
+        assert!(d3.peak_bw_bytes_per_s() < d4.peak_bw_bytes_per_s());
+        assert!(d4.peak_bw_bytes_per_s() < d5.peak_bw_bytes_per_s());
+    }
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let d = presets::lpddr5();
+        assert!(d.transfer_ns(1 << 20) > d.transfer_ns(1 << 10));
+        // fixed overhead dominates tiny transfers
+        assert!(d.transfer_ns(1) >= d.t_overhead_ns);
+    }
+
+    #[test]
+    fn energy_scales_with_bytes() {
+        let d = presets::lpddr5();
+        let small = d.read_energy_j(1024);
+        let big = d.read_energy_j(1024 * 1024);
+        assert!(big > 500.0 * small);
+        assert!(d.write_energy_j(1024) > 0.0);
+    }
+
+    #[test]
+    fn parses_from_toml() {
+        let doc = crate::cfg::toml::parse(
+            r#"
+            kind = "lpddr4"
+            transfer_mts = 3200.0
+            bus_bits = 64
+            e_read_pj_per_bit = 8.0
+            e_write_pj_per_bit = 9.0
+            e_act_nj = 2.0
+            row_bytes = 2048
+            p_background_mw = 300.0
+            t_overhead_ns = 60.0
+            "#,
+        )
+        .unwrap();
+        let d = DramConfig::from_toml(&doc).unwrap();
+        assert_eq!(d.kind, DramKind::Lpddr4);
+        assert_eq!(d.bus_bits, 64);
+    }
+}

@@ -1,0 +1,106 @@
+//! Configuration: a minimal TOML parser plus typed chip / DRAM / simulation
+//! configs and calibrated presets.
+//!
+//! Config files carry three tables:
+//!
+//! ```toml
+//! [chip]
+//! name = "compact"
+//! num_tiles = 13
+//! # ... see ChipConfig
+//!
+//! [dram]
+//! kind = "lpddr5"
+//! # ... see DramConfig
+//!
+//! [sim]
+//! network = "resnet34"
+//! batch = 64
+//! ```
+
+pub mod chip;
+pub mod dram;
+pub mod presets;
+pub mod sim;
+pub mod toml;
+
+pub use chip::{CellTech, ChipConfig};
+pub use dram::{DramConfig, DramKind};
+pub use sim::{PipelineCase, SimConfig};
+
+use anyhow::Context;
+use std::path::Path;
+
+/// A fully parsed config file (all tables optional; presets fill gaps).
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub chip: ChipConfig,
+    pub dram: DramConfig,
+    pub sim: SimConfig,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            chip: presets::compact_rram_41mm2(),
+            dram: presets::lpddr5(),
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse a TOML document; absent tables fall back to presets.
+    pub fn from_str(text: &str) -> anyhow::Result<Self> {
+        let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = Config::default();
+        if let Some(chip) = doc.get("chip") {
+            cfg.chip = ChipConfig::from_toml(chip).context("[chip]")?;
+        }
+        if let Some(dram) = doc.get("dram") {
+            cfg.dram = DramConfig::from_toml(dram).context("[dram]")?;
+        }
+        if let Some(sim) = doc.get("sim") {
+            cfg.sim = SimConfig::from_toml(sim).context("[sim]")?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_uses_presets() {
+        let c = Config::from_str("").unwrap();
+        assert_eq!(c.chip.num_tiles, 205);
+        assert_eq!(c.dram.kind, DramKind::Lpddr5);
+    }
+
+    #[test]
+    fn partial_override() {
+        let c = Config::from_str(
+            r#"
+            [sim]
+            network = "resnet50"
+            batch = 128
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.sim.network, "resnet50");
+        assert_eq!(c.sim.batch, 128);
+        assert_eq!(c.chip.num_tiles, 205); // preset untouched
+    }
+
+    #[test]
+    fn bad_table_is_an_error() {
+        assert!(Config::from_str("[sim]\nbatch = 0").is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! Simulation-run configuration (what a CLI invocation or sweep point runs).
+
+use anyhow::{bail, Context};
+
+use super::dram::DramKind;
+use super::toml::Value;
+
+/// Which pipeline schedule to use for compact chips (paper Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineCase {
+    /// Plain multi-part pipeline: load part, stream batch, switch (case 2).
+    Case2,
+    /// Overlapped prefetch of the next part into idle tiles (case 3).
+    Case3,
+    /// Pick case 3 whenever the capacity condition allows, else case 2.
+    Auto,
+}
+
+impl PipelineCase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineCase::Case2 => "case2",
+            PipelineCase::Case3 => "case3",
+            PipelineCase::Auto => "auto",
+        }
+    }
+}
+
+/// One simulation run description.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Network to deploy, by name ("resnet18" … "resnet152", "tiny").
+    pub network: String,
+    /// Batch size `n` (number of IFMs streamed per part residency).
+    pub batch: u32,
+    /// Enable the Dynamic Duplication Method (Algorithm 1).
+    pub ddm: bool,
+    pub pipeline_case: PipelineCase,
+    pub dram: DramKind,
+    /// PRNG seed for synthetic workload generation.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            network: "resnet34".into(),
+            batch: 64,
+            ddm: true,
+            pipeline_case: PipelineCase::Auto,
+            dram: DramKind::Lpddr5,
+            seed: 0,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.batch == 0 {
+            bail!("batch must be positive");
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(v: &Value) -> anyhow::Result<Self> {
+        let mut cfg = SimConfig::default();
+        if let Some(n) = v.get("network").and_then(Value::as_str) {
+            cfg.network = n.to_string();
+        }
+        if let Some(b) = v.get("batch").and_then(Value::as_int) {
+            if b <= 0 {
+                bail!("batch must be positive");
+            }
+            cfg.batch = b as u32;
+        }
+        if let Some(d) = v.get("ddm").and_then(Value::as_bool) {
+            cfg.ddm = d;
+        }
+        if let Some(c) = v.get("pipeline_case").and_then(Value::as_str) {
+            cfg.pipeline_case = match c {
+                "case2" => PipelineCase::Case2,
+                "case3" => PipelineCase::Case3,
+                "auto" => PipelineCase::Auto,
+                other => bail!("unknown pipeline case `{other}`"),
+            };
+        }
+        if let Some(d) = v.get("dram").and_then(Value::as_str) {
+            cfg.dram = match d {
+                "lpddr3" => DramKind::Lpddr3,
+                "lpddr4" => DramKind::Lpddr4,
+                "lpddr5" => DramKind::Lpddr5,
+                other => bail!("unknown dram kind `{other}`"),
+            };
+        }
+        if let Some(s) = v.get("seed").and_then(Value::as_int) {
+            cfg.seed = s as u64;
+        }
+        cfg.validate().context("invalid [sim] config")?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let doc = crate::cfg::toml::parse(
+            r#"
+            network = "resnet18"
+            batch = 256
+            ddm = false
+            pipeline_case = "case3"
+            dram = "lpddr3"
+            seed = 7
+            "#,
+        )
+        .unwrap();
+        let c = SimConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.network, "resnet18");
+        assert_eq!(c.batch, 256);
+        assert!(!c.ddm);
+        assert_eq!(c.pipeline_case, PipelineCase::Case3);
+        assert_eq!(c.dram, DramKind::Lpddr3);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn rejects_zero_batch() {
+        let doc = crate::cfg::toml::parse("batch = 0").unwrap();
+        assert!(SimConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_case() {
+        let doc = crate::cfg::toml::parse("pipeline_case = \"case9\"").unwrap();
+        assert!(SimConfig::from_toml(&doc).is_err());
+    }
+}

@@ -1,0 +1,316 @@
+//! Minimal TOML parser (the offline registry has no `toml`/`serde`).
+//!
+//! Supported subset — everything the pimflow config files use:
+//! comments (`#`), `[table]` / `[dotted.table]` headers, bare keys,
+//! string / integer / float / boolean scalars, and flat arrays of scalars.
+//! Unsupported syntax produces a positioned error rather than silence.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Float accessor; integers coerce.
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup into nested tables: `get("chip.tiles")`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Parse a TOML document into a root table.
+pub fn parse(input: &str) -> Result<Value, ParseError> {
+    let mut root = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated table header"))?
+                .trim();
+            if inner.is_empty() {
+                return Err(err(lineno, "empty table name"));
+            }
+            current_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if current_path.iter().any(|p| p.is_empty()) {
+                return Err(err(lineno, "empty table path segment"));
+            }
+            ensure_table(&mut root, &current_path, lineno)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let val = parse_value(line[eq + 1..].trim(), lineno)?;
+        let table = ensure_table(&mut root, &current_path, lineno)?;
+        if table.insert(key.to_string(), val).is_some() {
+            return Err(err(lineno, format!("duplicate key `{key}`")));
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a string literal must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, ParseError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            _ => return Err(err(lineno, format!("`{part}` is not a table"))),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quote in string (escapes unsupported)"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue; // trailing comma
+            }
+            let v = parse_value(part, lineno)?;
+            if matches!(v, Value::Array(_)) {
+                return Err(err(lineno, "nested arrays unsupported"));
+            }
+            items.push(v);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let num = s.replace('_', "");
+    if num.contains('.') || num.contains('e') || num.contains('E') {
+        if let Ok(f) = num.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    } else if let Ok(i) = num.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    Err(err(lineno, format!("cannot parse value `{s}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let v = parse(
+            r#"
+            name = "compact"
+            tiles = 32
+            t_read_ns = 50.0
+            ddm = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("compact"));
+        assert_eq!(v.get("tiles").unwrap().as_int(), Some(32));
+        assert_eq!(v.get("t_read_ns").unwrap().as_float(), Some(50.0));
+        assert_eq!(v.get("ddm").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_tables_and_dotted_paths() {
+        let v = parse(
+            r#"
+            [chip]
+            tiles = 8
+            [chip.cell]
+            kind = "rram"
+            bits = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(v.get("chip.tiles").unwrap().as_int(), Some(8));
+        assert_eq!(v.get("chip.cell.kind").unwrap().as_str(), Some("rram"));
+        assert_eq!(v.get("chip.cell.bits").unwrap().as_int(), Some(2));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("batches = [1, 16, 256]").unwrap();
+        let arr = v.get("batches").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_int(), Some(256));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let v = parse(
+            r#"
+            # full line comment
+            count = 1_000_000  # trailing comment
+            note = "a # not a comment"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(v.get("count").unwrap().as_int(), Some(1_000_000));
+        assert_eq!(v.get("note").unwrap().as_str(), Some("a # not a comment"));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let v = parse("x = 3").unwrap();
+        assert_eq!(v.get("x").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn error_has_line_number() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_string() {
+        assert!(parse("s = \"oops").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let v = parse("xs = []").unwrap();
+        assert!(v.get("xs").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let v = parse("e = 1.5e-9").unwrap();
+        assert!((v.get("e").unwrap().as_float().unwrap() - 1.5e-9).abs() < 1e-24);
+    }
+}

@@ -1,0 +1,310 @@
+//! From-scratch command-line argument parser (no `clap` offline).
+//!
+//! Model: `pimflow <subcommand> [--flag] [--key value] [positional...]`.
+//! Subcommands declare their options up front so `--help` is generated and
+//! unknown flags are hard errors.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Context};
+
+/// Declared option for a subcommand.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+impl Opt {
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        Opt {
+            name,
+            takes_value: false,
+            default: None,
+            help,
+        }
+    }
+
+    pub fn value(name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        Opt {
+            name,
+            takes_value: true,
+            default,
+            help,
+        }
+    }
+}
+
+/// Declared subcommand.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+/// Parsed invocation.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_u32(&self, name: &str) -> anyhow::Result<Option<u32>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse::<u32>()
+                    .with_context(|| format!("--{name} expects an unsigned integer, got `{s}`"))?,
+            )),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse::<u64>()
+                    .with_context(|| format!("--{name} expects an unsigned integer, got `{s}`"))?,
+            )),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse::<f64>()
+                    .with_context(|| format!("--{name} expects a number, got `{s}`"))?,
+            )),
+        }
+    }
+}
+
+/// Top-level application spec.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    /// Render the top-level or per-command help text.
+    pub fn help(&self, command: Option<&str>) -> String {
+        let mut out = String::new();
+        match command.and_then(|c| self.commands.iter().find(|k| k.name == c)) {
+            Some(cmd) => {
+                let _ = writeln!(out, "{} {} — {}", self.name, cmd.name, cmd.about);
+                let _ = writeln!(out, "\nOptions:");
+                for o in &cmd.opts {
+                    let meta = if o.takes_value { " <value>" } else { "" };
+                    let def = o
+                        .default
+                        .map(|d| format!(" [default: {d}]"))
+                        .unwrap_or_default();
+                    let _ = writeln!(out, "  --{}{}\t{}{}", o.name, meta, o.help, def);
+                }
+            }
+            None => {
+                let _ = writeln!(out, "{} — {}", self.name, self.about);
+                let _ = writeln!(out, "\nUsage: {} <command> [options]\n", self.name);
+                let _ = writeln!(out, "Commands:");
+                for c in &self.commands {
+                    let _ = writeln!(out, "  {:<14} {}", c.name, c.about);
+                }
+                let _ = writeln!(out, "\nRun `{} <command> --help` for options.", self.name);
+            }
+        }
+        out
+    }
+
+    /// Parse argv (excluding argv[0]). `--help` anywhere returns the
+    /// `Help` variant instead of an error.
+    pub fn parse(&self, args: &[String]) -> anyhow::Result<Invocation> {
+        let Some(cmd_name) = args.first() else {
+            return Ok(Invocation::Help(self.help(None)));
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Ok(Invocation::Help(self.help(args.get(1).map(String::as_str))));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .with_context(|| {
+                format!(
+                    "unknown command `{cmd_name}`; available: {}",
+                    self.commands
+                        .iter()
+                        .map(|c| c.name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+
+        let mut parsed = Parsed {
+            command: cmd.name.to_string(),
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        };
+        for o in &cmd.opts {
+            if let (true, Some(d)) = (o.takes_value, o.default) {
+                parsed.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Ok(Invocation::Help(self.help(Some(cmd.name))));
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let opt = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .with_context(|| format!("unknown option `--{name}` for `{}`", cmd.name))?;
+                if opt.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .with_context(|| format!("--{name} expects a value"))?
+                                .clone()
+                        }
+                    };
+                    parsed.values.insert(name.to_string(), val);
+                } else {
+                    if inline.is_some() {
+                        bail!("flag --{name} does not take a value");
+                    }
+                    parsed.flags.push(name.to_string());
+                }
+            } else {
+                parsed.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Invocation::Run(parsed))
+    }
+}
+
+/// Result of parsing: run a command or print help.
+#[derive(Debug)]
+pub enum Invocation {
+    Run(Parsed),
+    Help(String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "pimflow",
+            about: "compact PIM exploration",
+            commands: vec![Command {
+                name: "run",
+                about: "run one simulation",
+                opts: vec![
+                    Opt::value("batch", Some("64"), "batch size"),
+                    Opt::value("network", Some("resnet34"), "network"),
+                    Opt::flag("no-ddm", "disable DDM"),
+                ],
+            }],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let inv = app()
+            .parse(&argv(&["run", "--batch", "256", "--no-ddm", "extra"]))
+            .unwrap();
+        let Invocation::Run(p) = inv else {
+            panic!("expected run")
+        };
+        assert_eq!(p.get("batch"), Some("256"));
+        assert_eq!(p.get("network"), Some("resnet34")); // default
+        assert!(p.flag("no-ddm"));
+        assert_eq!(p.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let Invocation::Run(p) = app().parse(&argv(&["run", "--batch=8"])).unwrap() else {
+            panic!()
+        };
+        assert_eq!(p.get_u32("batch").unwrap(), Some(8));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(app().parse(&argv(&["nope"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(app().parse(&argv(&["run", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(app().parse(&argv(&["run", "--batch"])).is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(
+            app().parse(&argv(&[])).unwrap(),
+            Invocation::Help(_)
+        ));
+        assert!(matches!(
+            app().parse(&argv(&["--help"])).unwrap(),
+            Invocation::Help(_)
+        ));
+        let Invocation::Help(h) = app().parse(&argv(&["run", "--help"])).unwrap() else {
+            panic!()
+        };
+        assert!(h.contains("--batch"));
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let Invocation::Run(p) = app().parse(&argv(&["run", "--batch", "abc"])).unwrap() else {
+            panic!()
+        };
+        assert!(p.get_u32("batch").is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Dynamic batcher: group queued requests into batches bounded by a max
+//! size and a max linger time — the serving-side analogue of the paper's
+//! batched pipelining (throughput grows with batch; latency caps it).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (usually the largest artifact variant).
+    pub max_batch: usize,
+    /// Maximum time the first request of a batch may wait.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Outcome of one gather call.
+#[derive(Debug)]
+pub enum Gather<T> {
+    /// A non-empty batch.
+    Batch(Vec<T>),
+    /// Channel closed and drained — shut down.
+    Closed,
+}
+
+/// Pull one batch from `rx` according to `policy`. Blocks for the first
+/// request, then lingers up to `max_wait` (measured from the first
+/// request's arrival) to fill the batch. Generic over the queued item so
+/// both raw requests and reply-carrying jobs can flow through it.
+pub fn gather<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Gather<T> {
+    let first = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => return Gather::Closed,
+    };
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Gather::Batch(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> u64 {
+        id
+    }
+
+    #[test]
+    fn gathers_up_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let g = gather(
+            &rx,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        let Gather::Batch(b) = g else { panic!() };
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[3], 3);
+    }
+
+    #[test]
+    fn linger_times_out_with_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        let t0 = Instant::now();
+        let g = gather(
+            &rx,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(20),
+            },
+        );
+        let Gather::Batch(b) = g else { panic!() };
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        drop(tx);
+    }
+
+    #[test]
+    fn closed_channel_reports_closed() {
+        let (tx, rx) = mpsc::channel::<u64>();
+        drop(tx);
+        assert!(matches!(gather(&rx, BatchPolicy::default()), Gather::Closed));
+    }
+
+    #[test]
+    fn drains_after_sender_dropped() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(7)).unwrap();
+        drop(tx);
+        let Gather::Batch(b) = gather(&rx, BatchPolicy::default()) else {
+            panic!()
+        };
+        assert_eq!(b.len(), 1);
+        assert!(matches!(gather(&rx, BatchPolicy::default()), Gather::Closed));
+    }
+}

@@ -1,0 +1,18 @@
+//! Serving coordinator (L3 request path): request types, dynamic
+//! [`batcher`], [`worker`] pool, and the [`server::Server`] façade.
+//!
+//! Request flow: `Server::submit` → queue → `gather` (max-batch /
+//! max-wait policy) → smallest fitting AOT artifact variant → PJRT
+//! execute → per-request reply channels. All Rust; Python was only used
+//! at build time to author and lower the model.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod request;
+pub mod server;
+pub mod worker;
+
+pub use batcher::BatchPolicy;
+pub use request::{InferRequest, InferResponse, RequestId, IMAGE_ELEMENTS};
+pub use loadgen::{run_load, Arrival, LoadReport};
+pub use server::{Server, ServerConfig, StatsSnapshot};

@@ -1,0 +1,82 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Instant;
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// One inference request: a CIFAR-shaped image, u8-range i32 values.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub id: RequestId,
+    /// Flattened (32, 32, 3) image, values 0..=255.
+    pub image: Vec<i32>,
+    pub enqueued_at: Instant,
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: RequestId,
+    /// 100-way int32 logits.
+    pub logits: Vec<i32>,
+    /// Queueing + batching + execution latency, seconds.
+    pub latency_s: f64,
+    /// Batch size this request was served in.
+    pub batch: usize,
+}
+
+impl InferResponse {
+    /// Argmax class index.
+    pub fn top_class(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Expected image element count (32·32·3).
+pub const IMAGE_ELEMENTS: usize = 32 * 32 * 3;
+
+/// Validate an image payload.
+pub fn validate_image(image: &[i32]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        image.len() == IMAGE_ELEMENTS,
+        "image must have {IMAGE_ELEMENTS} elements, got {}",
+        image.len()
+    );
+    anyhow::ensure!(
+        image.iter().all(|&v| (0..=255).contains(&v)),
+        "image values must be u8-range"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates_shape_and_range() {
+        assert!(validate_image(&vec![0; IMAGE_ELEMENTS]).is_ok());
+        assert!(validate_image(&vec![0; 10]).is_err());
+        assert!(validate_image(&vec![256; IMAGE_ELEMENTS]).is_err());
+        assert!(validate_image(&vec![-1; IMAGE_ELEMENTS]).is_err());
+    }
+
+    #[test]
+    fn top_class_is_argmax() {
+        let mut logits = vec![0i32; 100];
+        logits[42] = 7;
+        let r = InferResponse {
+            id: 1,
+            logits,
+            latency_s: 0.0,
+            batch: 1,
+        };
+        assert_eq!(r.top_class(), 42);
+    }
+}

@@ -1,0 +1,232 @@
+//! Server façade: spawn workers, accept requests, expose stats.
+//!
+//! This is the L3 serving path end to end: `submit()` → queue → dynamic
+//! batcher → PJRT executor (AOT artifact) → reply channel. Python is never
+//! involved.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::ExecutorPool;
+use crate::util::stats::Summary;
+
+use super::batcher::BatchPolicy;
+use super::request::{validate_image, InferRequest, InferResponse};
+use super::worker::{run_worker, Job, ServeStats};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 1,
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// Latency/throughput snapshot.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub served: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub latency: Summary,
+    pub exec: Summary,
+}
+
+/// The serving coordinator.
+pub struct Server {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<u64>>,
+    stats: Arc<Mutex<ServeStats>>,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+impl Server {
+    /// Compile artifacts and start `cfg.workers` worker threads.
+    pub fn start(artifacts_dir: &Path, cfg: ServerConfig) -> Result<Server> {
+        anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let queue = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            // The xla handles are not Send, so each worker thread builds
+            // its own PJRT client + compiled executables; a handshake
+            // channel reports compile success before start() returns.
+            let queue = Arc::clone(&queue);
+            let stats = Arc::clone(&stats);
+            let policy = cfg.policy;
+            let dir = artifacts_dir.to_path_buf();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+            let handle = std::thread::Builder::new()
+                .name(format!("pimflow-worker-{w}"))
+                .spawn(move || {
+                    let pool = match ExecutorPool::load(&dir) {
+                        Ok(p) => {
+                            let _ = ready_tx.send(Ok(()));
+                            p
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!("{e:#}")));
+                            return 0;
+                        }
+                    };
+                    run_worker(&pool, &queue, policy, &stats)
+                })
+                .context("spawning worker")?;
+            ready_rx
+                .recv()
+                .context("worker died before reporting readiness")?
+                .map_err(|e| anyhow::anyhow!("worker {w} failed to load artifacts: {e}"))?;
+            workers.push(handle);
+        }
+        Ok(Server {
+            tx: Some(tx),
+            workers,
+            stats,
+            next_id: AtomicU64::new(1),
+            started: Instant::now(),
+        })
+    }
+
+    /// Submit one image; returns the reply channel.
+    pub fn submit(&self, image: Vec<i32>) -> Result<Receiver<InferResponse>> {
+        validate_image(&image)?;
+        let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .context("server is shut down")?
+            .send(Job {
+                req: InferRequest {
+                    id,
+                    image,
+                    enqueued_at: Instant::now(),
+                },
+                reply,
+            })
+            .ok()
+            .context("worker queue closed")?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_wait(&self, image: Vec<i32>) -> Result<InferResponse> {
+        let rx = self.submit(image)?;
+        rx.recv().context("inference dropped (execution failed?)")
+    }
+
+    /// Snapshot serving statistics.
+    pub fn stats(&self) -> StatsSnapshot {
+        let s = self.stats.lock().expect("stats lock poisoned");
+        StatsSnapshot {
+            served: s.served,
+            batches: s.batches,
+            mean_batch: s.mean_batch(),
+            latency: Summary::from_samples(s.latencies_s.clone()),
+            exec: Summary::from_samples(s.exec_s.clone()),
+        }
+    }
+
+    /// Requests served per wall-clock second since start.
+    pub fn throughput(&self) -> f64 {
+        let s = self.stats.lock().expect("stats lock poisoned");
+        s.served as f64 / self.started.elapsed().as_secs_f64()
+    }
+
+    /// Stop accepting requests, drain, and join workers. Returns total
+    /// requests served.
+    pub fn shutdown(mut self) -> u64 {
+        self.tx.take(); // close the queue
+        let mut total = 0;
+        for w in self.workers.drain(..) {
+            total += w.join().unwrap_or(0);
+        }
+        total
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::IMAGE_ELEMENTS;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let server = Server::start(&dir, ServerConfig::default()).unwrap();
+        let mut rng = crate::util::Rng::new(11);
+        let mut pending = Vec::new();
+        for _ in 0..6 {
+            let img: Vec<i32> = (0..IMAGE_ELEMENTS)
+                .map(|_| rng.range_i64(0, 255) as i32)
+                .collect();
+            pending.push(server.submit(img).unwrap());
+        }
+        for rx in pending {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.logits.len(), 100);
+            assert!(resp.latency_s >= 0.0);
+            assert!(resp.batch >= 1);
+        }
+        let snap = server.stats();
+        assert_eq!(snap.served, 6);
+        assert!(snap.batches >= 1);
+        let total = server.shutdown();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn same_image_gives_same_logits() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let server = Server::start(&dir, ServerConfig::default()).unwrap();
+        let img = vec![7i32; IMAGE_ELEMENTS];
+        let a = server.submit_wait(img.clone()).unwrap();
+        let b = server.submit_wait(img).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_ne!(a.id, b.id);
+    }
+
+    #[test]
+    fn rejects_bad_images() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let server = Server::start(&dir, ServerConfig::default()).unwrap();
+        assert!(server.submit(vec![1, 2, 3]).is_err());
+        assert!(server.submit(vec![999; IMAGE_ELEMENTS]).is_err());
+    }
+}

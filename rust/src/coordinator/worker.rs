@@ -1,0 +1,133 @@
+//! Worker: owns a compiled executor pool and serves gathered batches.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::runtime::ExecutorPool;
+
+use super::batcher::{gather, BatchPolicy, Gather};
+use super::request::{InferRequest, InferResponse};
+
+/// Internal job: request + reply channel.
+pub struct Job {
+    pub req: InferRequest,
+    pub reply: Sender<InferResponse>,
+}
+
+/// Shared serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub served: u64,
+    pub batches: u64,
+    pub latencies_s: Vec<f64>,
+    pub batch_sizes: Vec<usize>,
+    pub exec_s: Vec<f64>,
+}
+
+impl ServeStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+}
+
+/// Worker main loop: gather → pick variant → execute → reply.
+/// Returns the number of requests served.
+pub fn run_worker(
+    pool: &ExecutorPool,
+    queue: &Mutex<Receiver<Job>>,
+    policy: BatchPolicy,
+    stats: &Arc<Mutex<ServeStats>>,
+) -> u64 {
+    let mut served = 0u64;
+    loop {
+        // Serialize batch formation; execution happens outside the lock.
+        let gathered = {
+            let rx = queue.lock().expect("queue lock poisoned");
+            gather(&*rx, policy)
+        };
+        let jobs = match gathered {
+            Gather::Closed => break,
+            Gather::Batch(jobs) => jobs,
+        };
+
+        let exe = pool.pick(jobs.len());
+        let per = exe.item_elements();
+        let mut items = Vec::with_capacity(jobs.len() * per);
+        for j in &jobs {
+            items.extend_from_slice(&j.req.image);
+        }
+        let t0 = Instant::now();
+        let result = exe.run_padded(&items, jobs.len());
+        let exec_s = t0.elapsed().as_secs_f64();
+
+        match result {
+            Ok(outputs) => {
+                let now = Instant::now();
+                let batch = jobs.len();
+                {
+                    let mut s = stats.lock().expect("stats lock poisoned");
+                    s.batches += 1;
+                    s.batch_sizes.push(batch);
+                    s.exec_s.push(exec_s);
+                    for j in &jobs {
+                        s.served += 1;
+                        s.latencies_s
+                            .push((now - j.req.enqueued_at).as_secs_f64());
+                    }
+                }
+                for (j, logits) in jobs.into_iter().zip(outputs) {
+                    let latency_s = (now - j.req.enqueued_at).as_secs_f64();
+                    served += 1;
+                    // receiver may have hung up; that's fine
+                    let _ = j.reply.send(InferResponse {
+                        id: j.req.id,
+                        logits,
+                        latency_s,
+                        batch,
+                    });
+                }
+            }
+            Err(e) => {
+                log::error!("batch execution failed: {e:#}");
+                // drop replies: senders see a closed channel
+            }
+        }
+    }
+    served
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn stats_aggregate() {
+        let mut s = ServeStats::default();
+        s.batch_sizes.extend([2, 4]);
+        assert!((s.mean_batch() - 3.0).abs() < 1e-12);
+        assert_eq!(ServeStats::default().mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn worker_exits_on_closed_queue() {
+        // No artifacts needed: queue closes before any batch forms.
+        let Ok(pool) = crate::runtime::ExecutorPool::load(std::path::Path::new(
+            env!("CARGO_MANIFEST_DIR"),
+        ).join("artifacts").as_path()) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (tx, rx) = mpsc::channel::<Job>();
+        drop(tx);
+        let queue = Mutex::new(rx);
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let served = run_worker(&pool, &queue, BatchPolicy::default(), &stats);
+        assert_eq!(served, 0);
+    }
+}

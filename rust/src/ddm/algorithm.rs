@@ -1,0 +1,191 @@
+//! Algorithm 1 — the Dynamic Duplication Method (DDM).
+//!
+//! Faithful implementation of the paper's pseudo-code: per part, while
+//! extra tiles `E` remain (at least the smallest unit's footprint), pick
+//! the bottleneck layer via the ITP and grant it one more copy, except
+//! that FC layers are never duplicated (`dupNum=1`) and each layer is
+//! capped at `MAX[i]` (∝ O²) copies. `Flag` becomes a per-unit skip set so
+//! un-duplicable bottlenecks don't livelock the loop.
+
+use crate::mapping::duplication::{extra_tiles, max_dup, next_copy_cost};
+use crate::partition::{Part, PartitionPlan};
+use crate::pim::ChipModel;
+
+use super::itp;
+
+/// Duplication factors chosen for one part (parallel to `part.units`).
+pub type PartDups = Vec<u32>;
+
+/// Result of running Algorithm 1 over a whole partition plan.
+#[derive(Debug, Clone)]
+pub struct DdmResult {
+    /// `dup_per_part[p][i]` = dupNum of unit `i` in part `p`.
+    pub dup_per_part: Vec<PartDups>,
+}
+
+impl DdmResult {
+    /// All-ones result (DDM disabled).
+    pub fn disabled(plan: &PartitionPlan) -> Self {
+        DdmResult {
+            dup_per_part: plan.parts.iter().map(|p| vec![1; p.units.len()]).collect(),
+        }
+    }
+
+    /// Total extra tile-copies granted (diagnostic).
+    pub fn total_extra_copies(&self) -> u64 {
+        self.dup_per_part
+            .iter()
+            .flatten()
+            .map(|&d| (d.saturating_sub(1)) as u64)
+            .sum()
+    }
+}
+
+/// Run Algorithm 1 on one part.
+pub fn ddm_part(part: &Part, chip: &ChipModel) -> PartDups {
+    let n = part.units.len();
+    let mut dups: PartDups = vec![1; n];
+    if n == 0 {
+        return dups;
+    }
+    // line 3: minimum tile footprint among this part's layers
+    let min_tile = part.units.iter().map(|u| u.tiles).min().unwrap_or(1).max(1);
+    // Flag bookkeeping: units proven un-duplicable are skipped thereafter.
+    let mut skip = vec![false; n];
+
+    // line 4: while E >= min_tile (plus: stop when every unit is skipped)
+    loop {
+        let e = extra_tiles(part, chip, &dups);
+        if e < min_tile {
+            break;
+        }
+        // line 5: update ITP, select bottleneck layer l
+        let Some(l) = itp::bottleneck(chip, &part.units, &dups, &skip) else {
+            break; // all layers skipped
+        };
+        let unit = &part.units[l];
+        // line 6: enough extra tiles for one more copy of l?
+        if e >= next_copy_cost(unit) {
+            if unit.is_fc {
+                // lines 8-9: FC layers are never duplicated
+                dups[l] = 1;
+                skip[l] = true;
+            } else if dups[l] + 1 > max_dup(chip, unit) {
+                // lines 10-11: cap at MAX[l]
+                skip[l] = true;
+            } else {
+                // line 7: grant the copy
+                dups[l] += 1;
+            }
+        } else {
+            // line 13-14: bottleneck unaffordable — skip it and let the
+            // search consider the next-slowest layer.
+            skip[l] = true;
+        }
+    }
+    dups
+}
+
+/// Run Algorithm 1 over every part of the plan.
+pub fn run(plan: &PartitionPlan, chip: &ChipModel) -> DdmResult {
+    DdmResult {
+        dup_per_part: plan.parts.iter().map(|p| ddm_part(p, chip)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::ddm::itp::part_interval_ns;
+    use crate::mapping::duplication::tiles_with_dups;
+    use crate::nn::resnet;
+    use crate::partition::partition;
+    use crate::pim::ChipModel;
+
+    fn setup(net: &str) -> (ChipModel, crate::partition::PartitionPlan) {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let plan = partition(&resnet::by_name(net, 100).unwrap(), &chip).unwrap();
+        (chip, plan)
+    }
+
+    #[test]
+    fn result_always_fits_chip() {
+        for net in ["resnet18", "resnet34", "resnet50"] {
+            let (chip, plan) = setup(net);
+            let res = run(&plan, &chip);
+            for (part, dups) in plan.parts.iter().zip(&res.dup_per_part) {
+                assert!(
+                    tiles_with_dups(part, dups) <= chip.num_tiles(),
+                    "{net} overflows"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn never_worse_than_no_ddm() {
+        let (chip, plan) = setup("resnet34");
+        let res = run(&plan, &chip);
+        for (part, dups) in plan.parts.iter().zip(&res.dup_per_part) {
+            let base = part_interval_ns(&chip, &part.units, &vec![1; part.units.len()]);
+            let tuned = part_interval_ns(&chip, &part.units, dups);
+            assert!(tuned <= base + 1e-9);
+        }
+    }
+
+    #[test]
+    fn ddm_improves_some_part() {
+        // The whole point: at least one part must get faster.
+        let (chip, plan) = setup("resnet34");
+        let res = run(&plan, &chip);
+        let improved = plan.parts.iter().zip(&res.dup_per_part).any(|(part, dups)| {
+            let base = part_interval_ns(&chip, &part.units, &vec![1; part.units.len()]);
+            let tuned = part_interval_ns(&chip, &part.units, dups);
+            tuned < base * 0.75
+        });
+        assert!(improved, "DDM produced no meaningful speedup on any part");
+    }
+
+    #[test]
+    fn fc_layers_never_duplicated() {
+        for net in ["resnet18", "resnet34", "resnet50"] {
+            let (chip, plan) = setup(net);
+            let res = run(&plan, &chip);
+            for (part, dups) in plan.parts.iter().zip(&res.dup_per_part) {
+                for (u, &d) in part.units.iter().zip(dups) {
+                    if u.is_fc {
+                        assert_eq!(d, 1, "{net}: FC duplicated");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn caps_respected() {
+        let (chip, plan) = setup("resnet34");
+        let res = run(&plan, &chip);
+        for (part, dups) in plan.parts.iter().zip(&res.dup_per_part) {
+            for (u, &d) in part.units.iter().zip(dups) {
+                assert!(d >= 1 && d <= chip.max_dup(&u.layer));
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_is_all_ones() {
+        let (_, plan) = setup("resnet18");
+        let res = DdmResult::disabled(&plan);
+        assert!(res.dup_per_part.iter().flatten().all(|&d| d == 1));
+        assert_eq!(res.total_extra_copies(), 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (chip, plan) = setup("resnet50");
+        let a = run(&plan, &chip);
+        let b = run(&plan, &chip);
+        assert_eq!(a.dup_per_part, b.dup_per_part);
+    }
+}

@@ -1,0 +1,112 @@
+//! Inference-time predictor (ITP).
+//!
+//! Paper §II-D: *"Based on the Roofline Model, we observe that the
+//! inference time of each layer in PIM designs is proportional to the size
+//! of the output feature map (O×O)"* — with duplication dividing the
+//! sequential MVM count. The ITP ranks a part's units by predicted latency
+//! so Algorithm 1 can pick the bottleneck each iteration.
+
+use crate::partition::MapUnit;
+use crate::pim::ChipModel;
+
+/// Predicted per-IFM latency of `unit` at duplication `dup`, ns.
+pub fn predict_ns(chip: &ChipModel, unit: &MapUnit, dup: u32) -> f64 {
+    chip.layer_latency_ns(&unit.layer, dup)
+}
+
+/// Index of the bottleneck unit (max predicted latency) among units not in
+/// `skip`. Ties break toward the earlier unit, matching a stable search.
+pub fn bottleneck(
+    chip: &ChipModel,
+    units: &[MapUnit],
+    dups: &[u32],
+    skip: &[bool],
+) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, u) in units.iter().enumerate() {
+        if skip[i] {
+            continue;
+        }
+        let t = predict_ns(chip, u, dups[i]);
+        match best {
+            Some((_, bt)) if bt >= t => {}
+            _ => best = Some((i, t)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Part-level pipeline rate: the slowest unit's latency (the pipeline's
+/// steady-state interval `T_p`).
+pub fn part_interval_ns(chip: &ChipModel, units: &[MapUnit], dups: &[u32]) -> f64 {
+    units
+        .iter()
+        .zip(dups)
+        .map(|(u, &d)| predict_ns(chip, u, d))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+    use crate::partition::partition;
+    use crate::pim::ChipModel;
+
+    fn setup() -> (ChipModel, crate::partition::PartitionPlan) {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let plan = partition(&resnet::resnet34(100), &chip).unwrap();
+        (chip, plan)
+    }
+
+    #[test]
+    fn prediction_proportional_to_out_pixels() {
+        let (chip, plan) = setup();
+        let part = &plan.parts[0];
+        for u in &part.units {
+            let t = predict_ns(&chip, u, 1);
+            let expected = u.layer.out_pixels() as f64 * chip.cfg.t_mvm_ns();
+            assert!((t - expected).abs() < 1e-9, "{}", u.layer.name);
+        }
+    }
+
+    #[test]
+    fn bottleneck_is_argmax() {
+        let (chip, plan) = setup();
+        let part = &plan.parts[0];
+        let dups = vec![1; part.units.len()];
+        let skip = vec![false; part.units.len()];
+        let b = bottleneck(&chip, &part.units, &dups, &skip).unwrap();
+        let tb = predict_ns(&chip, &part.units[b], 1);
+        for (u, &d) in part.units.iter().zip(&dups) {
+            assert!(predict_ns(&chip, u, d) <= tb + 1e-9);
+        }
+    }
+
+    #[test]
+    fn skip_excludes_units() {
+        let (chip, plan) = setup();
+        let part = &plan.parts[0];
+        let dups = vec![1; part.units.len()];
+        let mut skip = vec![false; part.units.len()];
+        let b = bottleneck(&chip, &part.units, &dups, &skip).unwrap();
+        skip[b] = true;
+        let b2 = bottleneck(&chip, &part.units, &dups, &skip);
+        assert_ne!(b2, Some(b));
+        // all skipped -> none
+        let all = vec![true; part.units.len()];
+        assert_eq!(bottleneck(&chip, &part.units, &dups, &all), None);
+    }
+
+    #[test]
+    fn duplication_lowers_interval() {
+        let (chip, plan) = setup();
+        let part = &plan.parts[0];
+        let base = part_interval_ns(&chip, &part.units, &vec![1; part.units.len()]);
+        // duplicate every unit 2x (hypothetically)
+        let duped = part_interval_ns(&chip, &part.units, &vec![2; part.units.len()]);
+        assert!(duped < base);
+        assert!((base / duped - 2.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,8 @@
+//! Dynamic Duplication Method (paper §II-D, Algorithm 1): use idle tiles
+//! to duplicate each part's bottleneck layers, guided by the roofline
+//! inference-time predictor ([`itp`]).
+
+pub mod algorithm;
+pub mod itp;
+
+pub use algorithm::{ddm_part, run, DdmResult, PartDups};

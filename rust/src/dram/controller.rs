@@ -1,0 +1,119 @@
+//! DRAM controller façade: schedule reads/writes, accumulate energy, and
+//! record the transaction trace (DRAMPower-substitute accounting).
+
+use crate::cfg::dram::DramConfig;
+
+use super::trace::{Trace, TxKind, TxPayload};
+
+/// Stateful controller: owns the trace and energy counters.
+#[derive(Debug, Clone)]
+pub struct DramController {
+    pub cfg: DramConfig,
+    trace: Trace,
+    energy_j: f64,
+}
+
+impl DramController {
+    pub fn new(cfg: DramConfig) -> Self {
+        DramController {
+            cfg,
+            trace: Trace::new(),
+            energy_j: 0.0,
+        }
+    }
+
+    /// Issue a read of `bytes` at `time_ns`; returns the transfer latency
+    /// in ns.
+    pub fn read(&mut self, time_ns: f64, bytes: u64, payload: TxPayload) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.trace.record(time_ns, TxKind::Read, bytes, payload);
+        self.energy_j += self.cfg.read_energy_j(bytes);
+        self.cfg.transfer_ns(bytes)
+    }
+
+    /// Issue a write of `bytes` at `time_ns`; returns the latency in ns.
+    pub fn write(&mut self, time_ns: f64, bytes: u64, payload: TxPayload) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.trace.record(time_ns, TxKind::Write, bytes, payload);
+        self.energy_j += self.cfg.write_energy_j(bytes);
+        self.cfg.transfer_ns(bytes)
+    }
+
+    /// Transaction energy so far (excludes background), J.
+    pub fn transaction_energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    /// Background energy for a window of `window_s` seconds, J.
+    pub fn background_energy_j(&self, window_s: f64) -> f64 {
+        self.cfg.background_energy_j(window_s)
+    }
+
+    /// Total DRAM energy for a run that spanned `window_s`, J.
+    pub fn total_energy_j(&self, window_s: f64) -> f64 {
+        self.energy_j + self.background_energy_j(window_s)
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// Bus burst size in bytes (one column access across the bus).
+    pub fn burst_bytes(&self) -> u64 {
+        // BL16 on LPDDR4/5, BL8 on LPDDR3; both land on bus_bits*16/8 ≈ 256B
+        // for a 128-bit bus. Use bus width × 16 beats.
+        (self.cfg.bus_bits as u64 / 8) * 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+
+    #[test]
+    fn read_write_accumulate_energy_and_trace() {
+        let mut c = DramController::new(presets::lpddr5());
+        let lat = c.read(0.0, 1 << 20, TxPayload::Weights);
+        assert!(lat > 0.0);
+        c.write(lat, 1 << 10, TxPayload::Intermediate);
+        assert_eq!(c.trace().len(), 2);
+        assert!(c.transaction_energy_j() > 0.0);
+    }
+
+    #[test]
+    fn zero_byte_ops_are_free() {
+        let mut c = DramController::new(presets::lpddr5());
+        assert_eq!(c.read(0.0, 0, TxPayload::Input), 0.0);
+        assert_eq!(c.trace().len(), 0);
+        assert_eq!(c.transaction_energy_j(), 0.0);
+    }
+
+    #[test]
+    fn background_scales_with_window() {
+        let c = DramController::new(presets::lpddr5());
+        let e1 = c.background_energy_j(1.0);
+        let e2 = c.background_energy_j(2.0);
+        assert!((e2 - 2.0 * e1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lpddr3_slower_than_lpddr5() {
+        let mut c3 = DramController::new(presets::lpddr3());
+        let mut c5 = DramController::new(presets::lpddr5());
+        let l3 = c3.read(0.0, 1 << 20, TxPayload::Weights);
+        let l5 = c5.read(0.0, 1 << 20, TxPayload::Weights);
+        assert!(l3 > 2.0 * l5);
+        assert!(c3.transaction_energy_j() > 2.0 * c5.transaction_energy_j());
+    }
+
+    #[test]
+    fn burst_bytes_for_128bit_bus() {
+        let c = DramController::new(presets::lpddr5());
+        assert_eq!(c.burst_bytes(), 256);
+    }
+}

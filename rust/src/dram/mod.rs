@@ -1,0 +1,11 @@
+//! Off-chip DRAM model (DRAMPower-substitute): the spec tables live in
+//! [`crate::cfg::dram`]; this module adds the transaction [`trace`] (the
+//! paper's *(time, r/w, 32-bit address)* recording) and the stateful
+//! [`controller`] that converts traffic into latency + energy.
+
+pub mod controller;
+pub mod export;
+pub mod trace;
+
+pub use controller::DramController;
+pub use trace::{Trace, Transaction, TxKind, TxPayload};

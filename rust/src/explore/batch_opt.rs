@@ -1,0 +1,122 @@
+//! Batch-size auto-tuning.
+//!
+//! §II-C: *"by setting a suitable batch size n that considers the latency
+//! to get the inference result"* — throughput grows monotonically with n
+//! while the first result's latency (fill + whole-batch residency of part
+//! 1) also grows. This module finds the smallest batch meeting a target
+//! fraction of asymptotic throughput, and the largest batch meeting a
+//! result-latency SLO.
+
+use crate::cfg::dram::DramConfig;
+use crate::nn::Network;
+use crate::sim::{System, SystemReport};
+
+/// One evaluated batch point.
+#[derive(Debug, Clone)]
+pub struct BatchPoint {
+    pub batch: u32,
+    pub throughput_fps: f64,
+    /// Latency until the *whole batch* completes, s (the paper's "latency
+    /// to get the inference result" is bounded by this).
+    pub batch_latency_s: f64,
+}
+
+fn eval(sys: &System, net: &Network, batch: u32) -> anyhow::Result<BatchPoint> {
+    let r: SystemReport = sys.try_run(net, batch)?;
+    Ok(BatchPoint {
+        batch,
+        throughput_fps: r.throughput_fps,
+        batch_latency_s: r.pipeline.makespan_ns * 1e-9,
+    })
+}
+
+/// Smallest power-of-two batch whose throughput reaches `frac` of the
+/// throughput at `max_batch`.
+pub fn min_batch_for_throughput(
+    sys: &System,
+    net: &Network,
+    frac: f64,
+    max_batch: u32,
+) -> anyhow::Result<BatchPoint> {
+    let asymptote = eval(sys, net, max_batch)?.throughput_fps;
+    let mut b = 1u32;
+    loop {
+        let p = eval(sys, net, b)?;
+        if p.throughput_fps >= frac * asymptote || b >= max_batch {
+            return Ok(p);
+        }
+        b *= 2;
+    }
+}
+
+/// Largest power-of-two batch whose full-batch latency stays under
+/// `slo_s`; None if even batch 1 misses it.
+pub fn max_batch_for_latency(
+    sys: &System,
+    net: &Network,
+    slo_s: f64,
+    max_batch: u32,
+) -> anyhow::Result<Option<BatchPoint>> {
+    let mut best: Option<BatchPoint> = None;
+    let mut b = 1u32;
+    while b <= max_batch {
+        let p = eval(sys, net, b)?;
+        if p.batch_latency_s <= slo_s {
+            best = Some(p);
+        } else {
+            break; // latency is monotone in batch
+        }
+        b *= 2;
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+
+    fn sys() -> System {
+        System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+    }
+
+    fn dram() -> DramConfig {
+        presets::lpddr5()
+    }
+
+    #[test]
+    fn min_batch_hits_fraction() {
+        let _ = dram();
+        let net = resnet::resnet18(100);
+        let p = min_batch_for_throughput(&sys(), &net, 0.8, 1024).unwrap();
+        let asym = sys().try_run(&net, 1024).unwrap().throughput_fps;
+        assert!(p.throughput_fps >= 0.8 * asym);
+        // and the previous power of two must miss it (minimality)
+        if p.batch > 1 {
+            let prev = sys().try_run(&net, p.batch / 2).unwrap().throughput_fps;
+            assert!(prev < 0.8 * asym);
+        }
+    }
+
+    #[test]
+    fn latency_slo_binds() {
+        let net = resnet::resnet18(100);
+        // generous SLO: some batch fits; tiny SLO: none does
+        let some = max_batch_for_latency(&sys(), &net, 1.0, 256).unwrap();
+        assert!(some.is_some());
+        let none = max_batch_for_latency(&sys(), &net, 1e-9, 256).unwrap();
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn latency_monotone_in_batch() {
+        let net = resnet::resnet18(100);
+        let mut prev = 0.0;
+        for b in [1u32, 4, 16, 64] {
+            let p = eval(&sys(), &net, b).unwrap();
+            assert!(p.batch_latency_s >= prev);
+            prev = p.batch_latency_s;
+        }
+    }
+}

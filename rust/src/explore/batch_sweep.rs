@@ -1,0 +1,157 @@
+//! Batch-size sweeps: the workload generators behind Figs. 3, 6 and 7.
+
+use crate::baselines::{unlimited_chip, Rtx4090};
+use crate::cfg::dram::DramConfig;
+use crate::cfg::presets;
+use crate::nn::Network;
+use crate::sim::{System, SystemReport};
+
+/// The paper's batch axis (Figs. 3/6/7 sweep 1 → 1024).
+pub const BATCHES: [u32; 6] = [1, 4, 16, 64, 256, 1024];
+
+/// One Fig. 6 sweep point: the paper's four designs plus our search-
+/// partitioned variant (Fig. 2's "search iteration") at a batch size.
+#[derive(Debug, Clone)]
+pub struct Fig6Point {
+    pub batch: u32,
+    pub gpu_fps: f64,
+    pub gpu_tops_per_watt: f64,
+    pub no_ddm: SystemReport,
+    pub ddm: SystemReport,
+    /// DDM + DP boundary search instead of greedy §II-C packing.
+    pub ddm_search: SystemReport,
+    pub unlimited: SystemReport,
+}
+
+/// Run the Fig. 6 sweep (throughput + energy efficiency vs batch).
+pub fn fig6_sweep(net: &Network, dram: &DramConfig, batches: &[u32]) -> Vec<Fig6Point> {
+    let compact = presets::compact_rram_41mm2();
+    let unlim_cfg = unlimited_chip(&compact, net);
+    let gpu = Rtx4090;
+    batches
+        .iter()
+        .map(|&b| Fig6Point {
+            batch: b,
+            gpu_fps: gpu.throughput_fps(net, b),
+            gpu_tops_per_watt: gpu.tops_per_watt(net, b),
+            no_ddm: System::new(compact.clone(), dram.clone())
+                .with_ddm(false)
+                .run(net, b),
+            ddm: System::new(compact.clone(), dram.clone()).run(net, b),
+            ddm_search: System::new(compact.clone(), dram.clone())
+                .with_strategy(crate::sim::PartitionStrategy::Search)
+                .run(net, b),
+            unlimited: System::new(unlim_cfg.clone(), dram.clone()).run(net, b),
+        })
+        .collect()
+}
+
+/// One Fig. 3 point: DRAM transaction counts, compact vs unlimited.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig3Point {
+    pub batch: u32,
+    pub compact_txns: u64,
+    pub unlimited_txns: u64,
+    /// Normalized: compact / unlimited (the paper's y-axis; 264.8× at 1024
+    /// in their far-smaller compact configuration).
+    pub ratio: f64,
+}
+
+/// Run the Fig. 3 sweep (data-movement transactions vs batch, ResNet-18
+/// in the paper).
+pub fn fig3_sweep(net: &Network, dram: &DramConfig, batches: &[u32]) -> Vec<Fig3Point> {
+    let compact = presets::compact_rram_41mm2();
+    let unlim_cfg = unlimited_chip(&compact, net);
+    batches
+        .iter()
+        .map(|&b| {
+            let c = System::new(compact.clone(), dram.clone()).run(net, b);
+            let u = System::new(unlim_cfg.clone(), dram.clone()).run(net, b);
+            let burst = 256; // 128-bit bus × BL16
+            let ct = c.trace().transaction_count(burst);
+            let ut = u.trace().transaction_count(burst);
+            Fig3Point {
+                batch: b,
+                compact_txns: ct,
+                unlimited_txns: ut,
+                ratio: ct as f64 / ut as f64,
+            }
+        })
+        .collect()
+}
+
+/// One Fig. 7 point: computation-energy share of total system energy.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig7Point {
+    pub batch: u32,
+    pub compact_fraction: f64,
+    pub unlimited_fraction: f64,
+}
+
+/// Run the Fig. 7 sweep.
+pub fn fig7_sweep(net: &Network, dram: &DramConfig, batches: &[u32]) -> Vec<Fig7Point> {
+    let compact = presets::compact_rram_41mm2();
+    let unlim_cfg = unlimited_chip(&compact, net);
+    batches
+        .iter()
+        .map(|&b| Fig7Point {
+            batch: b,
+            compact_fraction: System::new(compact.clone(), dram.clone())
+                .run(net, b)
+                .compute_fraction,
+            unlimited_fraction: System::new(unlim_cfg.clone(), dram.clone())
+                .run(net, b)
+                .compute_fraction,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+
+    const SMALL: [u32; 3] = [1, 16, 256];
+
+    #[test]
+    fn fig3_ratio_grows_with_batch() {
+        // Paper Fig. 3 shape: the compact/unlimited transaction ratio
+        // starts near 1 (weight loads dominate both) and grows with batch
+        // as per-IFM intermediate spills dominate. The paper's 264.8×
+        // endpoint comes from a KB-scale compact chip; our 3.4 MB-capacity
+        // compact chip saturates far lower (see EXPERIMENTS.md).
+        let net = resnet::resnet18(100);
+        let pts = fig3_sweep(&net, &presets::lpddr5(), &[1, 64, 1024]);
+        assert!(pts[0].ratio < pts[1].ratio && pts[1].ratio < pts[2].ratio);
+        for p in &pts {
+            assert!(p.compact_txns >= p.unlimited_txns);
+        }
+        assert!(pts[0].ratio < 1.5, "starts near 1: {}", pts[0].ratio);
+        assert!(pts[2].ratio > 4.0, "ratio {}", pts[2].ratio);
+    }
+
+    #[test]
+    fn fig6_ordering_holds_at_every_batch() {
+        let net = resnet::resnet34(100);
+        for p in fig6_sweep(&net, &presets::lpddr5(), &SMALL) {
+            assert!(p.gpu_fps < p.ddm.throughput_fps, "batch {}", p.batch);
+            assert!(p.no_ddm.throughput_fps <= p.ddm.throughput_fps);
+            assert!(p.ddm.throughput_fps <= p.unlimited.throughput_fps * 1.05);
+            assert!(p.gpu_tops_per_watt < p.ddm.tops_per_watt);
+        }
+    }
+
+    #[test]
+    fn fig7_fractions_monotone_nondecreasing() {
+        let net = resnet::resnet34(100);
+        let pts = fig7_sweep(&net, &presets::lpddr5(), &SMALL);
+        for w in pts.windows(2) {
+            assert!(w[1].compact_fraction >= w[0].compact_fraction - 0.02);
+        }
+        for p in &pts {
+            assert!(p.compact_fraction > 0.0 && p.compact_fraction < 1.0);
+            assert!(p.unlimited_fraction >= p.compact_fraction - 0.05);
+        }
+    }
+}

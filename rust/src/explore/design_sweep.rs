@@ -1,0 +1,133 @@
+//! Chip design-space exploration — the "exploring" half of the paper's
+//! title applied to the hardware itself: sweep tile granularity, tile
+//! count (area budget) and ADC resolution, and report the
+//! area/throughput/efficiency trade-off with Pareto marking.
+//!
+//! This extends the paper's fixed-geometry evaluation into the
+//! co-exploration its reference [15] (He et al., ICCAD'22) performs.
+
+use crate::cfg::chip::ChipConfig;
+use crate::cfg::dram::DramConfig;
+use crate::cfg::presets;
+use crate::nn::Network;
+use crate::pim::{adc, area};
+use crate::sim::System;
+
+/// One design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub label: String,
+    pub subarrays_per_tile: u32,
+    pub num_tiles: u32,
+    pub adc_bits: u32,
+    pub area_mm2: f64,
+    pub throughput_fps: f64,
+    pub tops_per_watt: f64,
+    pub gops_per_mm2: f64,
+    /// True if no other swept point dominates it on (FPS, TOPS/W, −area).
+    pub pareto: bool,
+}
+
+/// Build a chip variant: `spt` subarrays per tile, area budget in mm².
+fn variant(spt: u32, area_budget_mm2: f64, adc_bits: u32) -> ChipConfig {
+    let mut cfg = presets::compact_rram_41mm2();
+    cfg.subarrays_per_pe = spt;
+    cfg.pes_per_tile = 1;
+    // ADC resolution scales read energy/latency (pim::adc model); the
+    // default 9-bit converter is the lossless point.
+    cfg.e_read_pj = 70.0 * adc::energy_scale(adc_bits) / adc::energy_scale(9);
+    cfg.t_read_ns = 30.0 * (adc_bits as f64 / 9.0);
+    // Tile count from the area budget.
+    let tile_mm2 = area::tile_area_mm2(&cfg);
+    let pim_budget = (area_budget_mm2 - presets::CHIP_FIXED_OVERHEAD_MM2).max(tile_mm2);
+    cfg.num_tiles = (pim_budget / tile_mm2).floor().max(1.0) as u32;
+    cfg.name = format!("spt{spt}-adc{adc_bits}-{:.0}mm2", area_budget_mm2);
+    cfg
+}
+
+/// Sweep the design space for one network/batch.
+pub fn design_sweep(net: &Network, dram: &DramConfig, batch: u32) -> Vec<DesignPoint> {
+    let mut points = Vec::new();
+    for &spt in &[2u32, 4, 8, 16] {
+        for &budget in &[41.5f64, 60.0, 80.0] {
+            for &adc_bits in &[7u32, 9] {
+                let cfg = variant(spt, budget, adc_bits);
+                let Ok(r) = System::new(cfg.clone(), dram.clone()).try_run(net, batch) else {
+                    continue;
+                };
+                points.push(DesignPoint {
+                    label: cfg.name.clone(),
+                    subarrays_per_tile: spt,
+                    num_tiles: cfg.num_tiles,
+                    adc_bits,
+                    area_mm2: r.area_mm2,
+                    throughput_fps: r.throughput_fps,
+                    tops_per_watt: r.tops_per_watt,
+                    gops_per_mm2: r.gops_per_mm2,
+                    pareto: false,
+                });
+            }
+        }
+    }
+    mark_pareto(&mut points);
+    points
+}
+
+/// Mark non-dominated points: maximize FPS and TOPS/W, minimize area.
+pub fn mark_pareto(points: &mut [DesignPoint]) {
+    for i in 0..points.len() {
+        let dominated = (0..points.len()).any(|j| {
+            j != i
+                && points[j].throughput_fps >= points[i].throughput_fps
+                && points[j].tops_per_watt >= points[i].tops_per_watt
+                && points[j].area_mm2 <= points[i].area_mm2
+                && (points[j].throughput_fps > points[i].throughput_fps
+                    || points[j].tops_per_watt > points[i].tops_per_watt
+                    || points[j].area_mm2 < points[i].area_mm2)
+        });
+        points[i].pareto = !dominated;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::resnet;
+
+    #[test]
+    fn sweep_produces_valid_points() {
+        let pts = design_sweep(&resnet::resnet18(100), &presets::lpddr5(), 32);
+        assert!(pts.len() >= 12, "{}", pts.len());
+        for p in &pts {
+            assert!(p.area_mm2 > 0.0 && p.throughput_fps > 0.0 && p.tops_per_watt > 0.0);
+        }
+        // at least one Pareto point exists, never all of them
+        let n_pareto = pts.iter().filter(|p| p.pareto).count();
+        assert!(n_pareto >= 1 && n_pareto < pts.len());
+    }
+
+    #[test]
+    fn bigger_budget_means_more_tiles() {
+        let small = variant(4, 41.5, 9);
+        let big = variant(4, 80.0, 9);
+        assert!(big.num_tiles > small.num_tiles);
+    }
+
+    #[test]
+    fn lossy_adc_is_cheaper_per_read() {
+        let lossy = variant(4, 41.5, 7);
+        let lossless = variant(4, 41.5, 9);
+        assert!(lossy.e_read_pj < lossless.e_read_pj);
+        assert!(lossy.t_read_ns < lossless.t_read_ns);
+    }
+
+    #[test]
+    fn pareto_marking_handles_degenerate_sets() {
+        let mut pts = vec![];
+        mark_pareto(&mut pts); // empty ok
+        let mut one = design_sweep(&resnet::resnet18(100), &presets::lpddr5(), 4);
+        one.truncate(1);
+        mark_pareto(&mut one);
+        assert!(one[0].pareto);
+    }
+}

@@ -1,0 +1,12 @@
+//! Exploration drivers: the parameter sweeps behind the paper's figures
+//! (batch-size sweeps for Figs. 3/6/7, NN-size sweep for Fig. 8).
+
+pub mod batch_opt;
+pub mod batch_sweep;
+pub mod design_sweep;
+pub mod nn_sweep;
+
+pub use batch_sweep::{fig3_sweep, fig6_sweep, fig7_sweep, Fig3Point, Fig6Point, Fig7Point, BATCHES};
+pub use batch_opt::{max_batch_for_latency, min_batch_for_throughput, BatchPoint};
+pub use design_sweep::{design_sweep, DesignPoint};
+pub use nn_sweep::{fig8_sweep, max_deployable, Fig8Point, Floor, EXPLORE_BATCH};

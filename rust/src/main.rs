@@ -1,0 +1,491 @@
+//! pimflow CLI — leader entrypoint.
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//! `run` (one simulation point), `fig1/fig3/fig4/fig6/fig7/fig8`
+//! (regenerate each figure), `explore` (max-NN search with a floor),
+//! `serve` (the L3 serving path over AOT artifacts), `plan` (inspect a
+//! partition + DDM decision).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use pimflow::cfg::{presets, Config, DramKind, PipelineCase};
+use pimflow::cli::{App, Command, Invocation, Opt, Parsed};
+use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
+use pimflow::explore;
+use pimflow::nn::resnet;
+use pimflow::report::figures;
+use pimflow::report::Table;
+use pimflow::sim::System;
+use pimflow::util::{logger, Rng};
+
+fn app() -> App {
+    let net_opt = || Opt::value("network", Some("resnet34"), "network (resnet18/34/50/101/152, tiny)");
+    let batch_opt = || Opt::value("batch", Some("64"), "batch size n");
+    let dram_opt = || Opt::value("dram", Some("lpddr5"), "dram kind (lpddr3/4/5)");
+    let csv_flag = || Opt::flag("csv", "also write results/<fig>.csv");
+    App {
+        name: "pimflow",
+        about: "system-performance optimization & exploration for compact PIM chips",
+        commands: vec![
+            Command {
+                name: "run",
+                about: "simulate one operating point on the compact chip",
+                opts: vec![
+                    net_opt(),
+                    batch_opt(),
+                    dram_opt(),
+                    Opt::flag("no-ddm", "disable the dynamic duplication method"),
+                    Opt::flag("search", "use the Fig-2 search partitioner instead of greedy"),
+                    Opt::value("case", Some("auto"), "pipeline case (case2/case3/auto)"),
+                    Opt::value("config", None, "TOML config file overriding presets"),
+                ],
+            },
+            Command {
+                name: "plan",
+                about: "show the partition + DDM duplication decision",
+                opts: vec![net_opt()],
+            },
+            Command {
+                name: "fig1",
+                about: "Fig 1: area-unlimited chip area, SRAM vs RRAM",
+                opts: vec![csv_flag()],
+            },
+            Command {
+                name: "fig3",
+                about: "Fig 3: DRAM transactions vs batch, compact vs unlimited",
+                opts: vec![Opt::value("network", Some("resnet18"), "network"), dram_opt(), csv_flag()],
+            },
+            Command {
+                name: "fig4",
+                about: "Fig 4: closed-form pipeline case timings",
+                opts: vec![batch_opt()],
+            },
+            Command {
+                name: "fig6",
+                about: "Fig 6: throughput & energy efficiency vs batch (4 designs)",
+                opts: vec![net_opt(), dram_opt(), csv_flag()],
+            },
+            Command {
+                name: "fig7",
+                about: "Fig 7: computation-energy share vs batch",
+                opts: vec![net_opt(), dram_opt(), csv_flag()],
+            },
+            Command {
+                name: "fig8",
+                about: "Fig 8: max-NN-size exploration across the ResNet family",
+                opts: vec![batch_opt(), dram_opt(), csv_flag()],
+            },
+            Command {
+                name: "explore",
+                about: "recommend the largest deployable network for a floor",
+                opts: vec![
+                    Opt::value("min-fps", Some("3000"), "throughput floor (FPS)"),
+                    Opt::value("min-tops-per-watt", Some("8"), "efficiency floor"),
+                    batch_opt(),
+                    dram_opt(),
+                ],
+            },
+            Command {
+                name: "design",
+                about: "design-space exploration: tile/area/ADC Pareto sweep",
+                opts: vec![
+                    Opt::value("network", Some("resnet18"), "network"),
+                    batch_opt(),
+                    dram_opt(),
+                ],
+            },
+            Command {
+                name: "trace",
+                about: "export the DRAM transaction trace (paper §II-A format)",
+                opts: vec![
+                    net_opt(),
+                    batch_opt(),
+                    dram_opt(),
+                    Opt::value("out", Some("results/trace.csv"), "output path"),
+                ],
+            },
+            Command {
+                name: "serve",
+                about: "serve the AOT tiny-CNN over the batching coordinator",
+                opts: vec![
+                    Opt::value("requests", Some("64"), "number of synthetic requests"),
+                    Opt::value("workers", Some("1"), "worker threads"),
+                    Opt::value("max-batch", Some("16"), "dynamic batcher max batch"),
+                    Opt::value("max-wait-ms", Some("5"), "dynamic batcher linger"),
+                    Opt::value("artifacts", None, "artifacts dir (default ./artifacts)"),
+                    Opt::value("rate", Some("0"), "Poisson arrival rate (req/s, 0=burst)"),
+                ],
+            },
+        ],
+    }
+}
+
+fn dram_of(p: &Parsed) -> Result<pimflow::cfg::DramConfig> {
+    Ok(match p.get_or("dram", "lpddr5") {
+        "lpddr3" => presets::dram(DramKind::Lpddr3),
+        "lpddr4" => presets::dram(DramKind::Lpddr4),
+        "lpddr5" => presets::dram(DramKind::Lpddr5),
+        other => anyhow::bail!("unknown dram `{other}`"),
+    })
+}
+
+fn cmd_run(p: &Parsed) -> Result<()> {
+    let mut cfg = Config::default();
+    if let Some(path) = p.get("config") {
+        cfg = Config::from_file(Path::new(path))?;
+    }
+    let net = resnet::by_name(p.get_or("network", &cfg.sim.network.clone()), 100)?;
+    let batch = p.get_u32("batch")?.unwrap_or(cfg.sim.batch);
+    let case = match p.get_or("case", "auto") {
+        "case2" => PipelineCase::Case2,
+        "case3" => PipelineCase::Case3,
+        _ => PipelineCase::Auto,
+    };
+    let dram = dram_of(p)?;
+    let ddm = !p.flag("no-ddm");
+    let strategy = if p.flag("search") {
+        pimflow::sim::PartitionStrategy::Search
+    } else {
+        pimflow::sim::PartitionStrategy::Greedy
+    };
+    let report = System::new(cfg.chip.clone(), dram)
+        .with_ddm(ddm)
+        .with_case(case)
+        .with_strategy(strategy)
+        .try_run(&net, batch)?;
+
+    let mut t = Table::new(
+        format!("{} on {} (batch {batch}, ddm={ddm})", net.name, report.chip_name),
+        vec!["metric", "value"],
+    );
+    t.row(vec!["parts".into(), report.num_parts.to_string()]);
+    t.row(vec!["throughput".into(), format!("{:.0} FPS", report.throughput_fps)]);
+    t.row(vec![
+        "per-IFM latency".into(),
+        pimflow::util::units::fmt_time(report.per_ifm_ns * 1e-9),
+    ]);
+    t.row(vec!["energy eff".into(), format!("{:.2} TOPS/W", report.tops_per_watt)]);
+    t.row(vec!["area eff".into(), format!("{:.1} GOPS/mm²", report.gops_per_mm2)]);
+    t.row(vec!["chip area".into(), format!("{:.1} mm²", report.area_mm2)]);
+    t.row(vec![
+        "compute energy share".into(),
+        format!("{:.1}%", 100.0 * report.compute_fraction),
+    ]);
+    t.row(vec![
+        "DRAM transactions".into(),
+        report.trace().transaction_count(256).to_string(),
+    ]);
+    t.row(vec![
+        "case-3 overlaps".into(),
+        report.pipeline.case3_overlaps.to_string(),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_plan(p: &Parsed) -> Result<()> {
+    let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
+    let chip = pimflow::pim::ChipModel::new(presets::compact_rram_41mm2())?;
+    let plan = pimflow::partition::partition(&net, &chip)?;
+    let dd = pimflow::ddm::run(&plan, &chip);
+    let mut t = Table::new(
+        format!("partition of {} onto {} tiles", net.name, chip.num_tiles()),
+        vec!["part", "units", "tiles", "idle", "bottleneck", "dup>1"],
+    );
+    for (i, part) in plan.parts.iter().enumerate() {
+        let dups = &dd.dup_per_part[i];
+        let timing = pimflow::pipeline::schedule::part_timing(part, &chip, dups);
+        let used = pimflow::mapping::duplication::tiles_with_dups(part, dups);
+        let bn = part
+            .units
+            .iter()
+            .zip(&timing.unit_ns)
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(u, _)| u.layer.name.clone())
+            .unwrap_or_default();
+        let dup_list: Vec<String> = part
+            .units
+            .iter()
+            .zip(dups)
+            .filter(|(_, &d)| d > 1)
+            .map(|(u, &d)| format!("{}x{}", u.layer.name, d))
+            .collect();
+        t.row(vec![
+            i.to_string(),
+            part.units.len().to_string(),
+            used.to_string(),
+            (chip.num_tiles() - used).to_string(),
+            bn,
+            if dup_list.is_empty() { "-".into() } else { dup_list.join(" ") },
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_fig1(p: &Parsed) -> Result<()> {
+    let (t, csv) = figures::fig1_table();
+    print!("{}", t.render());
+    if p.flag("csv") {
+        let path = figures::write_csv(&csv, "fig1_area.csv")?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_fig3(p: &Parsed) -> Result<()> {
+    let net = resnet::by_name(p.get_or("network", "resnet18"), 100)?;
+    let pts = explore::fig3_sweep(&net, &dram_of(p)?, &explore::BATCHES);
+    let (t, csv) = figures::fig3_table(&pts);
+    print!("{}", t.render());
+    if p.flag("csv") {
+        println!("wrote {}", figures::write_csv(&csv, "fig3_data_movement.csv")?.display());
+    }
+    Ok(())
+}
+
+fn cmd_fig4(p: &Parsed) -> Result<()> {
+    use pimflow::pipeline::case;
+    let n = p.get_u32("batch")?.unwrap_or(64) as u64;
+    let t_unit = 100.0; // abstract T
+    let mut t = Table::new(
+        format!("Fig 4 closed forms (L=5, T=100, n={n})"),
+        vec!["case", "t(n)", "t(perIFM)"],
+    );
+    t.row(vec![
+        "case1 (unlimited)".into(),
+        format!("{:.0}", case::t_case1(n, 5, t_unit)),
+        format!("{:.1}", case::t_per_ifm_case1(n, 5, t_unit)),
+    ]);
+    t.row(vec![
+        "case2 (compact)".into(),
+        format!("{:.0}", case::t_case2(n, 5, t_unit, 10.0 * t_unit)),
+        format!("{:.1}", case::t_per_ifm_case2(n, 5, t_unit, 10.0 * t_unit)),
+    ]);
+    t.row(vec![
+        "case3 (overlap)".into(),
+        format!("{:.0}", case::t_case3(n, 5, t_unit, 4.0 * t_unit, 2.0 * t_unit)),
+        format!("{:.1}", case::t_per_ifm_case3(n, 5, t_unit, 4.0 * t_unit, 2.0 * t_unit)),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_fig6(p: &Parsed) -> Result<()> {
+    let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
+    let pts = explore::fig6_sweep(&net, &dram_of(p)?, &explore::BATCHES);
+    let (thr, eff, csv) = figures::fig6_tables(&pts);
+    print!("{}", thr.render());
+    print!("{}", eff.render());
+    print!("{}", figures::headline_factors(&pts).render());
+    if p.flag("csv") {
+        println!("wrote {}", figures::write_csv(&csv, "fig6_throughput.csv")?.display());
+    }
+    Ok(())
+}
+
+fn cmd_fig7(p: &Parsed) -> Result<()> {
+    let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
+    let pts = explore::fig7_sweep(&net, &dram_of(p)?, &explore::BATCHES);
+    let (t, csv) = figures::fig7_table(&pts);
+    print!("{}", t.render());
+    if p.flag("csv") {
+        println!("wrote {}", figures::write_csv(&csv, "fig7_energy.csv")?.display());
+    }
+    Ok(())
+}
+
+fn cmd_fig8(p: &Parsed) -> Result<()> {
+    let batch = p.get_u32("batch")?.unwrap_or(explore::EXPLORE_BATCH);
+    let pts = explore::fig8_sweep(&dram_of(p)?, batch);
+    let (t, csv) = figures::fig8_table(&pts);
+    print!("{}", t.render());
+    if p.flag("csv") {
+        println!("wrote {}", figures::write_csv(&csv, "fig8_max_nn.csv")?.display());
+    }
+    Ok(())
+}
+
+fn cmd_explore(p: &Parsed) -> Result<()> {
+    let batch = p.get_u32("batch")?.unwrap_or(explore::EXPLORE_BATCH);
+    let floor = explore::Floor {
+        min_fps: p.get_f64("min-fps")?.unwrap_or(3000.0),
+        min_tops_per_watt: p.get_f64("min-tops-per-watt")?.unwrap_or(8.0),
+    };
+    let pts = explore::fig8_sweep(&dram_of(p)?, batch);
+    let (t, _) = figures::fig8_table(&pts);
+    print!("{}", t.render());
+    match explore::max_deployable(&pts, floor) {
+        Some(best) => println!(
+            "recommendation: deploy up to {} ({:.1}M weights) for >{:.0} FPS and >{:.1} TOPS/W",
+            best.network,
+            best.weights as f64 / 1e6,
+            floor.min_fps,
+            floor.min_tops_per_watt
+        ),
+        None => println!(
+            "no network in the family meets the floor (>{:.0} FPS, >{:.1} TOPS/W)",
+            floor.min_fps, floor.min_tops_per_watt
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_serve(p: &Parsed) -> Result<()> {
+    let n = p.get_u32("requests")?.unwrap_or(64) as usize;
+    let workers = p.get_u32("workers")?.unwrap_or(1) as usize;
+    let max_batch = p.get_u32("max-batch")?.unwrap_or(16) as usize;
+    let max_wait = p.get_u64("max-wait-ms")?.unwrap_or(5);
+    let rate = p.get_f64("rate")?.unwrap_or(0.0);
+    let dir = p
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(pimflow::runtime::artifact::default_dir);
+
+    println!("compiling artifacts from {} ...", dir.display());
+    let server = Server::start(
+        &dir,
+        ServerConfig {
+            workers,
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: std::time::Duration::from_millis(max_wait),
+            },
+        },
+    )?;
+
+    let mut rng = Rng::new(1234);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rate > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(1.0 / rate)));
+        }
+        let img: Vec<i32> = (0..IMAGE_ELEMENTS)
+            .map(|_| rng.range_i64(0, 255) as i32)
+            .collect();
+        pending.push(server.submit(img)?);
+    }
+    let mut classes = std::collections::BTreeMap::new();
+    for rx in pending {
+        let resp = rx.recv()?;
+        *classes.entry(resp.top_class()).or_insert(0u32) += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.stats();
+    let mut t = Table::new("serving report", vec!["metric", "value"]);
+    t.row(vec!["requests".into(), snap.served.to_string()]);
+    t.row(vec!["wall time".into(), format!("{wall:.3} s")]);
+    t.row(vec!["throughput".into(), format!("{:.1} req/s", n as f64 / wall)]);
+    t.row(vec!["batches".into(), snap.batches.to_string()]);
+    t.row(vec!["mean batch".into(), format!("{:.2}", snap.mean_batch)]);
+    t.row(vec![
+        "latency p50/p95/p99".into(),
+        format!(
+            "{:.1} / {:.1} / {:.1} ms",
+            snap.latency.median() * 1e3,
+            snap.latency.percentile(95.0) * 1e3,
+            snap.latency.p99() * 1e3
+        ),
+    ]);
+    t.row(vec![
+        "exec per batch p50".into(),
+        format!("{:.1} ms", snap.exec.median() * 1e3),
+    ]);
+    t.row(vec!["distinct top classes".into(), classes.len().to_string()]);
+    print!("{}", t.render());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_design(p: &Parsed) -> Result<()> {
+    let net = resnet::by_name(p.get_or("network", "resnet18"), 100)?;
+    let batch = p.get_u32("batch")?.unwrap_or(32);
+    let pts = pimflow::explore::design_sweep(&net, &dram_of(p)?, batch);
+    let mut t = Table::new(
+        format!("design-space sweep: {} @ batch {batch}", net.name),
+        vec!["design", "tiles", "area mm²", "FPS", "TOPS/W", "GOPS/mm²", "pareto"],
+    );
+    for d in &pts {
+        t.row(vec![
+            d.label.clone(),
+            d.num_tiles.to_string(),
+            format!("{:.1}", d.area_mm2),
+            format!("{:.0}", d.throughput_fps),
+            format!("{:.2}", d.tops_per_watt),
+            format!("{:.1}", d.gops_per_mm2),
+            if d.pareto { "*".into() } else { "".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_trace(p: &Parsed) -> Result<()> {
+    let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
+    let batch = p.get_u32("batch")?.unwrap_or(64);
+    let dram = dram_of(p)?;
+    let report = System::new(presets::compact_rram_41mm2(), dram.clone()).try_run(&net, batch)?;
+    let out = std::path::PathBuf::from(p.get_or("out", "results/trace.csv"));
+    pimflow::dram::export::write_paper_format(report.trace(), &out)?;
+    let a = pimflow::dram::export::analyze(report.trace(), &dram);
+    let mut t = Table::new("trace analysis", vec!["metric", "value"]);
+    t.row(vec!["transactions".into(), a.transactions.to_string()]);
+    t.row(vec!["total".into(), pimflow::util::units::fmt_bytes(a.total_bytes)]);
+    t.row(vec!["weights".into(), pimflow::util::units::fmt_bytes(a.weights_bytes)]);
+    t.row(vec!["intermediates".into(), pimflow::util::units::fmt_bytes(a.intermediate_bytes)]);
+    t.row(vec!["input+output".into(), pimflow::util::units::fmt_bytes(a.io_bytes)]);
+    t.row(vec![
+        "mean bandwidth".into(),
+        format!("{:.2} GB/s", a.mean_bw_bytes_per_s / 1e9),
+    ]);
+    t.row(vec![
+        "peak utilization".into(),
+        format!("{:.1}%", 100.0 * a.peak_utilization),
+    ]);
+    t.row(vec![
+        "sequential fraction".into(),
+        format!("{:.1}%", 100.0 * a.sequential_fraction),
+    ]);
+    print!("{}", t.render());
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn dispatch(p: Parsed) -> Result<()> {
+    match p.command.as_str() {
+        "run" => cmd_run(&p),
+        "plan" => cmd_plan(&p),
+        "fig1" => cmd_fig1(&p),
+        "fig3" => cmd_fig3(&p),
+        "fig4" => cmd_fig4(&p),
+        "fig6" => cmd_fig6(&p),
+        "fig7" => cmd_fig7(&p),
+        "fig8" => cmd_fig8(&p),
+        "explore" => cmd_explore(&p),
+        "design" => cmd_design(&p),
+        "trace" => cmd_trace(&p),
+        "serve" => cmd_serve(&p),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn main() {
+    logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match app().parse(&args) {
+        Ok(Invocation::Help(h)) => print!("{h}"),
+        Ok(Invocation::Run(p)) => {
+            if let Err(e) = dispatch(p) {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

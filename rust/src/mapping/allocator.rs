@@ -1,0 +1,160 @@
+//! Tile allocator: contiguous first-fit placement of a part's units with
+//! their duplication factors.
+
+use anyhow::bail;
+
+use crate::partition::Part;
+use crate::pim::ChipModel;
+
+/// Placement of one unit: `dup` copies, each `tiles_per_copy` tiles,
+/// occupying `[tile_start, tile_start + dup*tiles_per_copy)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub unit_idx: usize,
+    pub dup: u32,
+    pub tile_start: u32,
+    pub tiles_per_copy: u32,
+}
+
+impl Placement {
+    pub fn tiles_total(&self) -> u32 {
+        self.dup * self.tiles_per_copy
+    }
+
+    pub fn tile_end(&self) -> u32 {
+        self.tile_start + self.tiles_total()
+    }
+}
+
+/// A complete mapping of one part onto the chip.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    pub placements: Vec<Placement>,
+    pub used_tiles: u32,
+    pub idle_tiles: u32,
+}
+
+impl Mapping {
+    /// Tiles that hold the `i`-th unit (any copy).
+    pub fn tiles_of(&self, unit_idx: usize) -> Option<std::ops::Range<u32>> {
+        self.placements
+            .iter()
+            .find(|p| p.unit_idx == unit_idx)
+            .map(|p| p.tile_start..p.tile_end())
+    }
+}
+
+/// Place `part`'s units with duplication factors `dups` (parallel array;
+/// all 1s for no DDM). Fails if the total exceeds the chip.
+pub fn map_part(part: &Part, chip: &ChipModel, dups: &[u32]) -> anyhow::Result<Mapping> {
+    if dups.len() != part.units.len() {
+        bail!(
+            "dups len {} != units len {}",
+            dups.len(),
+            part.units.len()
+        );
+    }
+    let budget = chip.num_tiles();
+    let mut placements = Vec::with_capacity(part.units.len());
+    let mut cursor = 0u32;
+    for (i, unit) in part.units.iter().enumerate() {
+        let dup = dups[i].max(1);
+        let total = dup * unit.tiles;
+        if cursor + total > budget {
+            bail!(
+                "part overflows chip: unit {} (dup {dup}) at tile {cursor} needs {total} of {budget}",
+                unit.layer.name
+            );
+        }
+        placements.push(Placement {
+            unit_idx: i,
+            dup,
+            tile_start: cursor,
+            tiles_per_copy: unit.tiles,
+        });
+        cursor += total;
+    }
+    Ok(Mapping {
+        placements,
+        used_tiles: cursor,
+        idle_tiles: budget - cursor,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+    use crate::partition::partition;
+    use crate::pim::ChipModel;
+
+    fn setup() -> (ChipModel, crate::partition::PartitionPlan) {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let plan = partition(&resnet::resnet34(100), &chip).unwrap();
+        (chip, plan)
+    }
+
+    #[test]
+    fn no_ddm_mapping_fits_every_part() {
+        let (chip, plan) = setup();
+        for part in &plan.parts {
+            let dups = vec![1; part.units.len()];
+            let m = map_part(part, &chip, &dups).unwrap();
+            assert_eq!(m.used_tiles + m.idle_tiles, chip.num_tiles());
+            assert_eq!(m.used_tiles, part.tiles_used());
+        }
+    }
+
+    #[test]
+    fn placements_do_not_overlap() {
+        let (chip, plan) = setup();
+        let part = &plan.parts[0];
+        let m = map_part(part, &chip, &vec![1; part.units.len()]).unwrap();
+        for w in m.placements.windows(2) {
+            assert!(w[0].tile_end() <= w[1].tile_start);
+        }
+    }
+
+    #[test]
+    fn duplication_consumes_idle_tiles() {
+        let (chip, plan) = setup();
+        let part = &plan.parts[0];
+        let base = map_part(part, &chip, &vec![1; part.units.len()]).unwrap();
+        if base.idle_tiles >= part.units[0].tiles {
+            let mut dups = vec![1; part.units.len()];
+            dups[0] = 2;
+            let dup_map = map_part(part, &chip, &dups).unwrap();
+            assert_eq!(
+                dup_map.idle_tiles,
+                base.idle_tiles - part.units[0].tiles
+            );
+        }
+    }
+
+    #[test]
+    fn overflow_is_rejected() {
+        let (chip, plan) = setup();
+        let part = &plan.parts[0];
+        let mut dups = vec![1; part.units.len()];
+        dups[0] = chip.num_tiles() + 1; // absurd duplication
+        assert!(map_part(part, &chip, &dups).is_err());
+    }
+
+    #[test]
+    fn wrong_dups_len_rejected() {
+        let (chip, plan) = setup();
+        assert!(map_part(&plan.parts[0], &chip, &[1]).is_err());
+    }
+
+    #[test]
+    fn tiles_of_lookup() {
+        let (chip, plan) = setup();
+        let part = &plan.parts[0];
+        let m = map_part(part, &chip, &vec![1; part.units.len()]).unwrap();
+        let r = m.tiles_of(0).unwrap();
+        assert_eq!(r.start, 0);
+        assert_eq!(r.end - r.start, part.units[0].tiles);
+        assert!(m.tiles_of(usize::MAX).is_none());
+    }
+}

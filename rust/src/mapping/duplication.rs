@@ -1,0 +1,63 @@
+//! Duplication bookkeeping shared by Algorithm 1 and the mapper: costs,
+//! caps, and feasibility of adding one more copy of a unit.
+
+use crate::partition::{MapUnit, Part};
+use crate::pim::ChipModel;
+
+/// Tiles consumed by raising `unit` from `dup` to `dup+1` copies
+/// (Algorithm 1 charges `N_tile[l]` per extra copy).
+pub fn next_copy_cost(unit: &MapUnit) -> u32 {
+    unit.tiles
+}
+
+/// The paper's per-layer duplication cap `MAX[i]`: up to `O²` copies —
+/// at which point the layer computes in a single MVM round.
+pub fn max_dup(chip: &ChipModel, unit: &MapUnit) -> u32 {
+    chip.max_dup(&unit.layer)
+}
+
+/// Total tiles a part occupies under `dups`.
+pub fn tiles_with_dups(part: &Part, dups: &[u32]) -> u32 {
+    part.units
+        .iter()
+        .zip(dups)
+        .map(|(u, &d)| u.tiles * d.max(1))
+        .sum()
+}
+
+/// Extra (idle) tiles under `dups` — Algorithm 1's `E`.
+pub fn extra_tiles(part: &Part, chip: &ChipModel, dups: &[u32]) -> u32 {
+    chip.num_tiles().saturating_sub(tiles_with_dups(part, dups))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+    use crate::partition::partition;
+    use crate::pim::ChipModel;
+
+    #[test]
+    fn extra_tiles_shrinks_with_duplication() {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let plan = partition(&resnet::resnet34(100), &chip).unwrap();
+        let part = &plan.parts[0];
+        let mut dups = vec![1u32; part.units.len()];
+        let e0 = extra_tiles(part, &chip, &dups);
+        dups[0] += 1;
+        let e1 = extra_tiles(part, &chip, &dups);
+        assert_eq!(e0.saturating_sub(e1), part.units[0].tiles);
+    }
+
+    #[test]
+    fn max_dup_matches_out_pixels() {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let plan = partition(&resnet::resnet18(100), &chip).unwrap();
+        for part in &plan.parts {
+            for u in &part.units {
+                assert_eq!(max_dup(&chip, u) as u64, u.layer.out_pixels());
+            }
+        }
+    }
+}

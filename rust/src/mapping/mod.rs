@@ -1,0 +1,8 @@
+//! Weight-to-tile mapping: place each part's units (and their duplicates)
+//! onto concrete tile ranges, enforcing the paper's constraint that a tile
+//! hosts at most one layer.
+
+pub mod allocator;
+pub mod duplication;
+
+pub use allocator::{map_part, Mapping, Placement};

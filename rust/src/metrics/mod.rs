@@ -1,0 +1,67 @@
+//! Metric definitions shared by the simulator, baselines, and reports:
+//! throughput (FPS), energy efficiency (TOPS/W), area efficiency
+//! (GOPS/mm²), and the Fig. 7 energy breakdown.
+
+use crate::nn::Network;
+use crate::pim::EnergyLedger;
+
+/// Throughput in frames (IFMs) per second.
+pub fn fps(batch: u32, makespan_s: f64) -> f64 {
+    batch as f64 / makespan_s
+}
+
+/// Energy efficiency in TOPS/W: total ops executed over total energy.
+/// (ops/J == ops-per-second per watt.)
+pub fn tops_per_watt(net: &Network, batch: u32, total_energy_j: f64) -> f64 {
+    let ops = net.total_ops() as f64 * batch as f64;
+    ops / total_energy_j / 1e12
+}
+
+/// Area efficiency in GOPS/mm² at the achieved throughput.
+pub fn gops_per_mm2(net: &Network, throughput_fps: f64, area_mm2: f64) -> f64 {
+    let ops_per_s = throughput_fps * net.total_ops() as f64;
+    ops_per_s / area_mm2 / 1e9
+}
+
+/// Energy-per-inference in joules.
+pub fn energy_per_ifm_j(batch: u32, total_energy_j: f64) -> f64 {
+    total_energy_j / batch as f64
+}
+
+/// Fig. 7's quantity: on-chip (computation) share of total system energy.
+pub fn compute_fraction(e: &EnergyLedger) -> f64 {
+    e.compute_fraction()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::resnet;
+
+    #[test]
+    fn fps_definition() {
+        assert!((fps(100, 0.5) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tops_per_watt_definition() {
+        let net = resnet::resnet34(100);
+        // 1 batch, energy such that eff = ops / E / 1e12
+        let e = net.total_ops() as f64 / 1e12; // -> exactly 1 TOPS/W
+        assert!((tops_per_watt(&net, 1, e) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gops_per_mm2_definition() {
+        let net = resnet::resnet34(100);
+        let thr = 1000.0;
+        let v = gops_per_mm2(&net, thr, 41.5);
+        let expect = thr * net.total_ops() as f64 / 41.5 / 1e9;
+        assert!((v - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_per_ifm() {
+        assert!((energy_per_ifm_j(10, 1.0) - 0.1).abs() < 1e-12);
+    }
+}

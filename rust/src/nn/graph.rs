@@ -1,0 +1,133 @@
+//! Network = named, ordered list of layers (linear chain with residual
+//! joins modeled as digital `Add` layers).
+//!
+//! The pipeline scheduler treats the crossbar layers as the pipeline
+//! stages; digital layers only contribute activation traffic.
+
+use super::layer::{Layer, LayerKind};
+
+/// A deployable network description.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Input image spatial size (CIFAR: 32).
+    pub input_hw: u32,
+    pub input_ch: u32,
+}
+
+impl Network {
+    pub fn new(name: impl Into<String>, input_hw: u32, input_ch: u32) -> Self {
+        Network {
+            name: name.into(),
+            layers: Vec::new(),
+            input_hw,
+            input_ch,
+        }
+    }
+
+    pub fn push(&mut self, layer: Layer) {
+        self.layers.push(layer);
+    }
+
+    /// All weight-bearing (crossbar-mapped) layers, in execution order.
+    pub fn crossbar_layers(&self) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.is_crossbar()).collect()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(Layer::weights).sum()
+    }
+
+    /// Weight bytes at 8-bit quantization.
+    pub fn weight_bytes(&self) -> u64 {
+        self.total_weights()
+    }
+
+    /// Total MACs for one IFM.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Total ops (2 × MACs) for one IFM — throughput accounting unit.
+    pub fn total_ops(&self) -> u64 {
+        2 * self.total_macs()
+    }
+
+    /// Input image bytes (8-bit).
+    pub fn input_bytes(&self) -> u64 {
+        self.input_hw as u64 * self.input_hw as u64 * self.input_ch as u64
+    }
+
+    /// Output bytes (final crossbar layer's OFM).
+    pub fn output_bytes(&self) -> u64 {
+        self.crossbar_layers()
+            .last()
+            .map(|l| l.ofm_bytes().max(l.crossbar_n() as u64))
+            .unwrap_or(0)
+    }
+
+    /// Largest single-layer weight count (drives channel-splitting).
+    pub fn max_layer_weights(&self) -> u64 {
+        self.layers.iter().map(Layer::weights).max().unwrap_or(0)
+    }
+
+    /// Sanity checks: positive shapes, consistent channel chaining among
+    /// conv layers where determinable.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.layers.is_empty() {
+            anyhow::bail!("network `{}` has no layers", self.name);
+        }
+        for l in &self.layers {
+            if let LayerKind::Conv { kernel, stride, .. } = &l.kind {
+                if *kernel == 0 || *stride == 0 || l.in_hw == 0 {
+                    anyhow::bail!("layer `{}` has zero dimensions", l.name);
+                }
+            }
+            if l.is_crossbar() && l.weights() == 0 {
+                anyhow::bail!("crossbar layer `{}` has no weights", l.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Network {
+        let mut n = Network::new("toy", 8, 3);
+        n.push(Layer::conv("c1", 8, 3, 8, 3, 1, 1));
+        n.push(Layer::conv("c2", 8, 8, 8, 3, 2, 1));
+        n.push(Layer {
+            name: "pool".into(),
+            kind: LayerKind::GlobalAvgPool,
+            in_hw: 4,
+        });
+        n.push(Layer::fc("fc", 8, 10));
+        n
+    }
+
+    #[test]
+    fn totals() {
+        let n = toy();
+        assert_eq!(n.total_weights(), 216 + 576 + 80);
+        assert_eq!(n.crossbar_layers().len(), 3);
+        assert_eq!(n.total_ops(), 2 * n.total_macs());
+        assert_eq!(n.input_bytes(), 8 * 8 * 3);
+        assert_eq!(n.output_bytes(), 10);
+        n.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_network_invalid() {
+        let n = Network::new("empty", 8, 3);
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn max_layer_weights() {
+        assert_eq!(toy().max_layer_weights(), 576);
+    }
+}

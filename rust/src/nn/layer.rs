@@ -1,0 +1,219 @@
+//! Layer IR: the shapes the mapper/scheduler need, nothing more.
+//!
+//! Only CONV and FC layers occupy crossbar storage (the paper maps those
+//! onto subarrays); pooling / residual adds run on the chip's digital units
+//! and are modeled as zero-weight layers that still move activation bytes.
+
+/// Kind of layer plus its shape parameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution, square kernels, NHWC shapes.
+    Conv {
+        in_ch: u32,
+        out_ch: u32,
+        kernel: u32,
+        stride: u32,
+        pad: u32,
+    },
+    /// Fully connected.
+    Fc { in_features: u32, out_features: u32 },
+    /// Global average pool (digital unit; no weights).
+    GlobalAvgPool,
+    /// Residual add join (digital unit; no weights).
+    Add,
+}
+
+/// One layer instance with resolved input spatial size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input feature-map height=width (square maps; CIFAR pipeline).
+    pub in_hw: u32,
+}
+
+impl Layer {
+    pub fn conv(
+        name: impl Into<String>,
+        in_hw: u32,
+        in_ch: u32,
+        out_ch: u32,
+        kernel: u32,
+        stride: u32,
+        pad: u32,
+    ) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv {
+                in_ch,
+                out_ch,
+                kernel,
+                stride,
+                pad,
+            },
+            in_hw,
+        }
+    }
+
+    pub fn fc(name: impl Into<String>, in_features: u32, out_features: u32) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Fc {
+                in_features,
+                out_features,
+            },
+            in_hw: 1,
+        }
+    }
+
+    /// Output feature-map height=width.
+    pub fn out_hw(&self) -> u32 {
+        match &self.kind {
+            LayerKind::Conv {
+                kernel,
+                stride,
+                pad,
+                ..
+            } => (self.in_hw + 2 * pad - kernel) / stride + 1,
+            LayerKind::Fc { .. } => 1,
+            LayerKind::GlobalAvgPool => 1,
+            LayerKind::Add => self.in_hw,
+        }
+    }
+
+    /// Output pixels `O×O` — the paper's latency/duplication driver.
+    pub fn out_pixels(&self) -> u64 {
+        let o = self.out_hw() as u64;
+        o * o
+    }
+
+    pub fn out_ch(&self) -> u32 {
+        match &self.kind {
+            LayerKind::Conv { out_ch, .. } => *out_ch,
+            LayerKind::Fc { out_features, .. } => *out_features,
+            LayerKind::GlobalAvgPool => 0, // channel count preserved; caller tracks
+            LayerKind::Add => 0,
+        }
+    }
+
+    /// Weight count (zero for digital layers).
+    pub fn weights(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv {
+                in_ch,
+                out_ch,
+                kernel,
+                ..
+            } => *kernel as u64 * *kernel as u64 * *in_ch as u64 * *out_ch as u64,
+            LayerKind::Fc {
+                in_features,
+                out_features,
+            } => *in_features as u64 * *out_features as u64,
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate count for one IFM.
+    pub fn macs(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { .. } => self.out_pixels() * self.crossbar_k() as u64 * self.out_ch() as u64,
+            LayerKind::Fc { .. } => self.weights(),
+            _ => 0,
+        }
+    }
+
+    /// Rows of the unrolled weight matrix (`k²·C_in` for conv).
+    pub fn crossbar_k(&self) -> u32 {
+        match &self.kind {
+            LayerKind::Conv { in_ch, kernel, .. } => kernel * kernel * in_ch,
+            LayerKind::Fc { in_features, .. } => *in_features,
+            _ => 0,
+        }
+    }
+
+    /// Columns of the unrolled weight matrix (`C_out`).
+    pub fn crossbar_n(&self) -> u32 {
+        match &self.kind {
+            LayerKind::Conv { out_ch, .. } => *out_ch,
+            LayerKind::Fc { out_features, .. } => *out_features,
+            _ => 0,
+        }
+    }
+
+    /// True when this layer occupies crossbar storage.
+    pub fn is_crossbar(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+    }
+
+    pub fn is_fc(&self) -> bool {
+        matches!(self.kind, LayerKind::Fc { .. })
+    }
+
+    /// Output feature-map bytes per IFM at 8-bit activations.
+    pub fn ofm_bytes(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { out_ch, .. } => self.out_pixels() * *out_ch as u64,
+            LayerKind::Fc { out_features, .. } => *out_features as u64,
+            LayerKind::GlobalAvgPool => 0, // negligible (C bytes); folded into next layer
+            LayerKind::Add => 0,
+        }
+    }
+
+    /// Input feature-map bytes per IFM at 8-bit activations.
+    pub fn ifm_bytes(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { in_ch, .. } => {
+                self.in_hw as u64 * self.in_hw as u64 * *in_ch as u64
+            }
+            LayerKind::Fc { in_features, .. } => *in_features as u64,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes() {
+        let l = Layer::conv("c", 32, 3, 64, 3, 1, 1);
+        assert_eq!(l.out_hw(), 32);
+        assert_eq!(l.out_pixels(), 1024);
+        assert_eq!(l.weights(), 3 * 3 * 3 * 64);
+        assert_eq!(l.crossbar_k(), 27);
+        assert_eq!(l.crossbar_n(), 64);
+        assert_eq!(l.macs(), 1024 * 27 * 64);
+        assert_eq!(l.ofm_bytes(), 1024 * 64);
+        assert_eq!(l.ifm_bytes(), 32 * 32 * 3);
+    }
+
+    #[test]
+    fn strided_conv_halves_hw() {
+        let l = Layer::conv("s", 32, 64, 128, 3, 2, 1);
+        assert_eq!(l.out_hw(), 16);
+        let one = Layer::conv("p", 32, 64, 128, 1, 2, 0);
+        assert_eq!(one.out_hw(), 16);
+    }
+
+    #[test]
+    fn fc_is_flat() {
+        let l = Layer::fc("fc", 512, 100);
+        assert_eq!(l.weights(), 51_200);
+        assert_eq!(l.macs(), 51_200);
+        assert_eq!(l.out_pixels(), 1);
+        assert!(l.is_fc() && l.is_crossbar());
+    }
+
+    #[test]
+    fn digital_layers_have_no_weights() {
+        let p = Layer {
+            name: "pool".into(),
+            kind: LayerKind::GlobalAvgPool,
+            in_hw: 4,
+        };
+        assert_eq!(p.weights(), 0);
+        assert!(!p.is_crossbar());
+        assert_eq!(p.out_hw(), 1);
+    }
+}

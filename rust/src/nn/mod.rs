@@ -1,0 +1,10 @@
+//! Neural-network IR: layers, the network graph, and the paper's ResNet
+//! family (plus the tiny CNN served by the AOT artifacts).
+
+pub mod graph;
+pub mod layer;
+pub mod quant;
+pub mod resnet;
+
+pub use graph::Network;
+pub use layer::{Layer, LayerKind};

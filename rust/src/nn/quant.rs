@@ -1,0 +1,80 @@
+//! 8-bit quantization spec shared between the simulator and the AOT
+//! artifacts (paper: "weights and activations of NN are quantized to 8-bit"
+//! following WAGE-style integer inference [22]).
+
+/// Fixed quantization format of the deployed networks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantSpec {
+    /// Weight bits (signed).
+    pub weight_bits: u32,
+    /// Activation bits (unsigned, post-ReLU).
+    pub act_bits: u32,
+    /// Accumulator bits (digital shift-add output).
+    pub acc_bits: u32,
+}
+
+impl Default for QuantSpec {
+    fn default() -> Self {
+        QuantSpec {
+            weight_bits: 8,
+            act_bits: 8,
+            acc_bits: 32,
+        }
+    }
+}
+
+impl QuantSpec {
+    /// Bytes to store `n` weights.
+    pub fn weight_bytes(&self, n: u64) -> u64 {
+        (n * self.weight_bits as u64).div_ceil(8)
+    }
+
+    /// Bytes to store `n` activations.
+    pub fn act_bytes(&self, n: u64) -> u64 {
+        (n * self.act_bits as u64).div_ceil(8)
+    }
+
+    /// Worst-case accumulator magnitude for a K-row dot product: guards
+    /// the digital datapath width.
+    pub fn max_abs_acc(&self, k: u64) -> u64 {
+        let max_act = (1u64 << self.act_bits) - 1;
+        let max_w = 1u64 << (self.weight_bits - 1);
+        k * max_act * max_w
+    }
+
+    /// True if `acc_bits` can hold any K-row dot product without overflow.
+    pub fn acc_fits(&self, k: u64) -> bool {
+        let max = self.max_abs_acc(k);
+        max < (1u64 << (self.acc_bits - 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_8_8_32() {
+        let q = QuantSpec::default();
+        assert_eq!((q.weight_bits, q.act_bits, q.acc_bits), (8, 8, 32));
+    }
+
+    #[test]
+    fn byte_packing() {
+        let q = QuantSpec::default();
+        assert_eq!(q.weight_bytes(10), 10);
+        let q4 = QuantSpec {
+            weight_bits: 4,
+            ..q
+        };
+        assert_eq!(q4.weight_bytes(10), 5);
+    }
+
+    #[test]
+    fn acc_width_guard() {
+        let q = QuantSpec::default();
+        // 255*128*K < 2^31 requires K < 65793: all our layers are far below.
+        assert!(q.acc_fits(4608)); // largest ResNet K = 3*3*512
+        assert!(!q.acc_fits(70_000));
+    }
+}

@@ -1,0 +1,294 @@
+//! ResNet builders for CIFAR-100 (the paper's workloads) plus the tiny CNN
+//! that the AOT serving artifacts implement.
+//!
+//! Architecture follows He et al. [20] with the standard CIFAR adaptation:
+//! 3×3 stride-1 stem at 32×32, no max-pool, stages at spatial sizes
+//! 32/16/8/4, and a `num_classes` head. Parameter counts with 100 classes
+//! land on the paper's reported sizes: ResNet-50 ≈ 23.7 M, ResNet-101 ≈
+//! 42.6 M, ResNet-152 ≈ 58.2 M (Fig. 1 / Fig. 8).
+
+use super::graph::Network;
+use super::layer::{Layer, LayerKind};
+
+const STAGE_HW: [u32; 4] = [32, 16, 8, 4];
+const BASIC_CH: [u32; 4] = [64, 128, 256, 512];
+
+fn add_layer(net: &mut Network, hw: u32) {
+    net.push(Layer {
+        name: format!("add{}", net.layers.len()),
+        kind: LayerKind::Add,
+        in_hw: hw,
+    });
+}
+
+/// Basic residual block (two 3×3 convs) as used by ResNet-18/34.
+fn basic_block(net: &mut Network, stage: usize, block: usize, in_ch: u32, out_ch: u32, stride: u32) {
+    let hw_in = if stride == 2 {
+        STAGE_HW[stage - 1]
+    } else {
+        STAGE_HW[stage]
+    };
+    let hw_out = STAGE_HW[stage];
+    let tag = format!("s{stage}b{block}");
+    net.push(Layer::conv(
+        format!("{tag}conv1"),
+        hw_in,
+        in_ch,
+        out_ch,
+        3,
+        stride,
+        1,
+    ));
+    net.push(Layer::conv(format!("{tag}conv2"), hw_out, out_ch, out_ch, 3, 1, 1));
+    if stride != 1 || in_ch != out_ch {
+        net.push(Layer::conv(format!("{tag}ds"), hw_in, in_ch, out_ch, 1, stride, 0));
+    }
+    add_layer(net, hw_out);
+}
+
+/// Bottleneck block (1×1 reduce, 3×3, 1×1 expand ×4) for ResNet-50/101/152.
+fn bottleneck_block(
+    net: &mut Network,
+    stage: usize,
+    block: usize,
+    in_ch: u32,
+    width: u32,
+    stride: u32,
+) {
+    let out_ch = width * 4;
+    let hw_in = if stride == 2 {
+        STAGE_HW[stage - 1]
+    } else {
+        STAGE_HW[stage]
+    };
+    let hw_out = STAGE_HW[stage];
+    let tag = format!("s{stage}b{block}");
+    net.push(Layer::conv(format!("{tag}conv1"), hw_in, in_ch, width, 1, 1, 0));
+    net.push(Layer::conv(
+        format!("{tag}conv2"),
+        hw_in,
+        width,
+        width,
+        3,
+        stride,
+        1,
+    ));
+    net.push(Layer::conv(format!("{tag}conv3"), hw_out, width, out_ch, 1, 1, 0));
+    if stride != 1 || in_ch != out_ch {
+        net.push(Layer::conv(format!("{tag}ds"), hw_in, in_ch, out_ch, 1, stride, 0));
+    }
+    add_layer(net, hw_out);
+}
+
+fn build_basic(name: &str, blocks: [u32; 4], num_classes: u32) -> Network {
+    let mut net = Network::new(name, 32, 3);
+    net.push(Layer::conv("conv1", 32, 3, 64, 3, 1, 1));
+    let mut in_ch = 64;
+    for (stage, &count) in blocks.iter().enumerate() {
+        let out_ch = BASIC_CH[stage];
+        for b in 0..count {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            basic_block(&mut net, stage, b as usize, in_ch, out_ch, stride);
+            in_ch = out_ch;
+        }
+    }
+    net.push(Layer {
+        name: "gap".into(),
+        kind: LayerKind::GlobalAvgPool,
+        in_hw: 4,
+    });
+    net.push(Layer::fc("fc", 512, num_classes));
+    net
+}
+
+fn build_bottleneck(name: &str, blocks: [u32; 4], num_classes: u32) -> Network {
+    let mut net = Network::new(name, 32, 3);
+    net.push(Layer::conv("conv1", 32, 3, 64, 3, 1, 1));
+    let mut in_ch = 64;
+    for (stage, &count) in blocks.iter().enumerate() {
+        let width = BASIC_CH[stage];
+        for b in 0..count {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            bottleneck_block(&mut net, stage, b as usize, in_ch, width, stride);
+            in_ch = width * 4;
+        }
+    }
+    net.push(Layer {
+        name: "gap".into(),
+        kind: LayerKind::GlobalAvgPool,
+        in_hw: 4,
+    });
+    net.push(Layer::fc("fc", 2048, num_classes));
+    net
+}
+
+pub fn resnet18(num_classes: u32) -> Network {
+    build_basic("resnet18", [2, 2, 2, 2], num_classes)
+}
+
+pub fn resnet34(num_classes: u32) -> Network {
+    build_basic("resnet34", [3, 4, 6, 3], num_classes)
+}
+
+pub fn resnet50(num_classes: u32) -> Network {
+    build_bottleneck("resnet50", [3, 4, 6, 3], num_classes)
+}
+
+pub fn resnet101(num_classes: u32) -> Network {
+    build_bottleneck("resnet101", [3, 4, 23, 3], num_classes)
+}
+
+pub fn resnet152(num_classes: u32) -> Network {
+    build_bottleneck("resnet152", [3, 8, 36, 3], num_classes)
+}
+
+/// The tiny CNN implemented by the AOT serving artifacts
+/// (`python/compile/model.py::tiny_cnn_forward`): stem 3→16 plus three
+/// basic blocks (16, 32↓, 64↓) and a 100-way head.
+pub fn tiny(num_classes: u32) -> Network {
+    let mut net = Network::new("tiny", 32, 3);
+    net.push(Layer::conv("stem", 32, 3, 16, 3, 1, 1));
+    // block0: 16ch @32
+    net.push(Layer::conv("b0conv1", 32, 16, 16, 3, 1, 1));
+    net.push(Layer::conv("b0conv2", 32, 16, 16, 3, 1, 1));
+    add_layer(&mut net, 32);
+    // block1: 16->32 stride2 @16
+    net.push(Layer::conv("b1conv1", 32, 16, 32, 3, 2, 1));
+    net.push(Layer::conv("b1conv2", 16, 32, 32, 3, 1, 1));
+    net.push(Layer::conv("b1ds", 32, 16, 32, 1, 2, 0));
+    add_layer(&mut net, 16);
+    // block2: 32->64 stride2 @8
+    net.push(Layer::conv("b2conv1", 16, 32, 64, 3, 2, 1));
+    net.push(Layer::conv("b2conv2", 8, 64, 64, 3, 1, 1));
+    net.push(Layer::conv("b2ds", 16, 32, 64, 1, 2, 0));
+    add_layer(&mut net, 8);
+    net.push(Layer {
+        name: "gap".into(),
+        kind: LayerKind::GlobalAvgPool,
+        in_hw: 8,
+    });
+    net.push(Layer::fc("fc", 64, num_classes));
+    net
+}
+
+/// Look up a builder by name (CLI / config entry point).
+pub fn by_name(name: &str, num_classes: u32) -> anyhow::Result<Network> {
+    Ok(match name {
+        "resnet18" => resnet18(num_classes),
+        "resnet34" => resnet34(num_classes),
+        "resnet50" => resnet50(num_classes),
+        "resnet101" => resnet101(num_classes),
+        "resnet152" => resnet152(num_classes),
+        "tiny" => tiny(num_classes),
+        other => anyhow::bail!(
+            "unknown network `{other}` (try resnet18/34/50/101/152 or tiny)"
+        ),
+    })
+}
+
+/// The paper's evaluation family, smallest to largest (Fig. 8 x-axis).
+pub fn paper_family(num_classes: u32) -> Vec<Network> {
+    vec![
+        resnet18(num_classes),
+        resnet34(num_classes),
+        resnet50(num_classes),
+        resnet101(num_classes),
+        resnet152(num_classes),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper-reported parameter counts (Fig. 8): R50 23.7M, R101 42.6M,
+    /// R152 58M ("58 million parameters", Fig. 1).
+    #[test]
+    fn param_counts_match_paper() {
+        let cases = [
+            (resnet50(100), 23.7e6, 0.02),
+            (resnet101(100), 42.6e6, 0.02),
+            (resnet152(100), 58.2e6, 0.02),
+        ];
+        for (net, expect, tol) in cases {
+            let w = net.total_weights() as f64;
+            assert!(
+                (w - expect).abs() / expect < tol,
+                "{}: {w:.3e} weights, expected ≈{expect:.3e}",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn basic_variants_standard_sizes() {
+        // Standard conv+fc counts for CIFAR ResNet-18/34 (no BN folding).
+        let r18 = resnet18(100).total_weights() as f64;
+        let r34 = resnet34(100).total_weights() as f64;
+        assert!((r18 - 11.2e6).abs() / 11.2e6 < 0.03, "r18={r18:.3e}");
+        assert!((r34 - 21.3e6).abs() / 21.3e6 < 0.03, "r34={r34:.3e}");
+    }
+
+    #[test]
+    fn family_sorted_by_size() {
+        let fam = paper_family(100);
+        for w in fam.windows(2) {
+            assert!(w[0].total_weights() < w[1].total_weights());
+        }
+    }
+
+    #[test]
+    fn all_validate() {
+        for net in paper_family(100) {
+            net.validate().unwrap();
+        }
+        tiny(100).validate().unwrap();
+    }
+
+    #[test]
+    fn layer_counts() {
+        // R34: 1 stem + 32 convs + 3 downsample + 1 fc crossbar layers
+        let r34 = resnet34(100);
+        assert_eq!(r34.crossbar_layers().len(), 1 + 32 + 3 + 1);
+        // R50: 1 + 48 convs + 4 ds + 1 fc
+        let r50 = resnet50(100);
+        assert_eq!(r50.crossbar_layers().len(), 1 + 48 + 4 + 1);
+    }
+
+    #[test]
+    fn spatial_chain_is_consistent() {
+        for net in paper_family(100) {
+            // stem at 32, last conv at 4
+            let convs = net.crossbar_layers();
+            assert_eq!(convs[0].in_hw, 32);
+            let last_conv = convs[convs.len() - 2];
+            assert_eq!(last_conv.out_hw(), 4, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn tiny_matches_python_param_count() {
+        // Must equal python/compile/model.py::tiny_cnn_param_count()
+        let expected = 3 * 3 * 3 * 16
+            + (3 * 3 * 16 * 16 + 3 * 3 * 16 * 16)
+            + (3 * 3 * 16 * 32 + 3 * 3 * 32 * 32 + 16 * 32)
+            + (3 * 3 * 32 * 64 + 3 * 3 * 64 * 64 + 32 * 64)
+            + 64 * 100;
+        assert_eq!(tiny(100).total_weights(), expected as u64);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(by_name("resnet50", 100).unwrap().name, "resnet50");
+        assert!(by_name("vgg", 100).is_err());
+    }
+
+    #[test]
+    fn macs_reasonable_for_cifar() {
+        // CIFAR R18 ≈ 0.5-0.7 GMACs; R34 ≈ 1.1-1.3 GMACs.
+        let m18 = resnet18(100).total_macs() as f64;
+        let m34 = resnet34(100).total_macs() as f64;
+        assert!(m18 > 3e8 && m18 < 8e8, "r18 macs {m18:.2e}");
+        assert!(m34 > 0.9e9 && m34 < 1.6e9, "r34 macs {m34:.2e}");
+    }
+}

@@ -1,0 +1,207 @@
+//! Channel-splitting: when one layer's weights exceed the whole chip,
+//! split along output channels (and input channels if still oversized),
+//! matching the paper's §II-C criteria and [15].
+
+use crate::nn::{Layer, LayerKind};
+use crate::pim::ChipModel;
+
+/// A slice of a layer produced by channel splitting. `piece`/`of` identify
+/// the slice; `in_split` marks input-channel splits whose outputs are
+/// partial sums that the digital accumulator merges.
+#[derive(Debug, Clone)]
+pub struct LayerSlice {
+    pub layer: Layer,
+    pub piece: u32,
+    pub of: u32,
+    pub in_split: bool,
+}
+
+/// Split `layer` into slices that each fit within `max_tiles` tiles.
+/// Returns a single identity slice when no split is needed.
+pub fn split_to_fit(layer: &Layer, chip: &ChipModel, max_tiles: u32) -> Vec<LayerSlice> {
+    if chip.layer_tiles(layer) <= max_tiles {
+        return vec![LayerSlice {
+            layer: layer.clone(),
+            piece: 0,
+            of: 1,
+            in_split: false,
+        }];
+    }
+
+    // First try output-channel splitting: each slice keeps full K.
+    let out_slices = out_channel_split(layer, chip, max_tiles);
+    if let Some(slices) = out_slices {
+        return slices;
+    }
+
+    // Output splitting alone cannot fit (K itself too large): split input
+    // channels as well. Slices then produce partial sums.
+    in_channel_split(layer, chip, max_tiles)
+}
+
+fn with_out_ch(layer: &Layer, out_ch: u32) -> Layer {
+    let mut l = layer.clone();
+    match &mut l.kind {
+        LayerKind::Conv { out_ch: oc, .. } => *oc = out_ch,
+        LayerKind::Fc { out_features, .. } => *out_features = out_ch,
+        _ => unreachable!("only crossbar layers are split"),
+    }
+    l
+}
+
+fn with_in_ch(layer: &Layer, in_ch: u32) -> Layer {
+    let mut l = layer.clone();
+    match &mut l.kind {
+        LayerKind::Conv { in_ch: ic, .. } => *ic = in_ch,
+        LayerKind::Fc { in_features, .. } => *in_features = in_ch,
+        _ => unreachable!("only crossbar layers are split"),
+    }
+    l
+}
+
+fn out_channel_split(layer: &Layer, chip: &ChipModel, max_tiles: u32) -> Option<Vec<LayerSlice>> {
+    let n = layer.crossbar_n();
+    // Smallest useful slice: one weight-column group.
+    let min_cols = chip.cfg.weight_cols_per_subarray().max(1);
+    if chip.layer_tiles(&with_out_ch(layer, min_cols.min(n))) > max_tiles {
+        return None;
+    }
+    // Find the largest per-slice out_ch that fits, then split evenly.
+    let mut per = n;
+    while chip.layer_tiles(&with_out_ch(layer, per)) > max_tiles {
+        per = per.div_ceil(2);
+    }
+    let pieces = n.div_ceil(per);
+    let per = n.div_ceil(pieces); // rebalance
+    let mut out = Vec::new();
+    let mut taken = 0;
+    for i in 0..pieces {
+        let this = per.min(n - taken);
+        taken += this;
+        out.push(LayerSlice {
+            layer: with_out_ch(layer, this),
+            piece: i,
+            of: pieces,
+            in_split: false,
+        });
+    }
+    Some(out)
+}
+
+fn in_channel_split(layer: &Layer, chip: &ChipModel, max_tiles: u32) -> Vec<LayerSlice> {
+    // Halve input channels until one full-width slice fits; then apply
+    // output splitting within each input slice if still needed.
+    let in_ch0 = match &layer.kind {
+        LayerKind::Conv { in_ch, .. } => *in_ch,
+        LayerKind::Fc { in_features, .. } => *in_features,
+        _ => unreachable!(),
+    };
+    let mut per_in = in_ch0;
+    while per_in > 1 && chip.layer_tiles(&with_in_ch(layer, per_in)) > max_tiles {
+        // Also acceptable once output splitting can handle the rest.
+        if out_channel_split(&with_in_ch(layer, per_in), chip, max_tiles).is_some() {
+            break;
+        }
+        per_in = per_in.div_ceil(2);
+    }
+    let in_pieces = in_ch0.div_ceil(per_in);
+    let mut out = Vec::new();
+    let mut idx = 0;
+    let mut taken = 0;
+    for _ in 0..in_pieces {
+        let this_in = per_in.min(in_ch0 - taken);
+        taken += this_in;
+        let sub = with_in_ch(layer, this_in);
+        let sub_slices =
+            out_channel_split(&sub, chip, max_tiles).unwrap_or_else(|| {
+                vec![LayerSlice {
+                    layer: sub.clone(),
+                    piece: 0,
+                    of: 1,
+                    in_split: false,
+                }]
+            });
+        let total = in_pieces * sub_slices.len() as u32;
+        for s in sub_slices {
+            out.push(LayerSlice {
+                layer: s.layer,
+                piece: idx,
+                of: total,
+                in_split: in_pieces > 1,
+            });
+            idx += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::Layer;
+    use crate::pim::ChipModel;
+
+    fn chip() -> ChipModel {
+        ChipModel::new(presets::compact_rram_41mm2()).unwrap()
+    }
+
+    #[test]
+    fn small_layer_is_identity() {
+        let c = chip();
+        let l = Layer::conv("l", 8, 64, 64, 3, 1, 1);
+        let s = split_to_fit(&l, &c, c.num_tiles());
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].of, 1);
+        assert!(!s[0].in_split);
+    }
+
+    #[test]
+    fn oversized_layer_splits_on_out_channels() {
+        let c = chip();
+        // 3×3×512×512 needs 144 tiles; force max 50.
+        let l = Layer::conv("big", 4, 512, 512, 3, 1, 1);
+        let s = split_to_fit(&l, &c, 50);
+        assert!(s.len() > 1);
+        // slices cover all output channels exactly
+        let total: u32 = s.iter().map(|x| x.layer.crossbar_n()).sum();
+        assert_eq!(total, 512);
+        for x in &s {
+            assert!(c.layer_tiles(&x.layer) <= 50, "{:?}", x.layer);
+            assert!(!x.in_split);
+        }
+    }
+
+    #[test]
+    fn extreme_layer_splits_input_channels_too() {
+        let c = chip();
+        // K = 9×4096 is 288 row-chunks; with max_tiles=64 even a minimal
+        // column slice (32 outputs = 1 col-chunk = 288 subarrays = 72
+        // tiles) cannot fit, forcing an input split.
+        let l = Layer::conv("huge", 4, 4096, 64, 3, 1, 1);
+        let s = split_to_fit(&l, &c, 64);
+        assert!(s.len() > 1);
+        assert!(s.iter().any(|x| x.in_split));
+        for x in &s {
+            assert!(c.layer_tiles(&x.layer) <= 64);
+        }
+        // input channels covered exactly once per output group
+        let in_total: u32 = s
+            .iter()
+            .map(|x| match &x.layer.kind {
+                crate::nn::LayerKind::Conv { in_ch, .. } => *in_ch,
+                _ => 0,
+            })
+            .sum();
+        assert!(in_total >= 4096);
+    }
+
+    #[test]
+    fn slices_keep_out_pixels() {
+        let c = chip();
+        let l = Layer::conv("big", 4, 512, 512, 3, 1, 1);
+        for s in split_to_fit(&l, &c, 50) {
+            assert_eq!(s.layer.out_pixels(), l.out_pixels());
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Greedy by-layer partitioning (paper §II-C): map as many consecutive
+//! layers as possible per loading process, channel-splitting any layer
+//! that cannot fit on the chip at all.
+
+use anyhow::Context;
+
+use crate::nn::Network;
+use crate::pim::ChipModel;
+
+use super::channel::split_to_fit;
+
+/// One mapping unit: a whole layer or a channel slice of one, with its
+/// tile/subarray footprint.
+#[derive(Debug, Clone)]
+pub struct MapUnit {
+    pub layer: crate::nn::Layer,
+    /// Original layer name (slices share it).
+    pub origin: String,
+    /// (piece, of) when channel-split.
+    pub split: Option<(u32, u32)>,
+    /// Tiles for ONE copy of this unit (Algorithm 1's `N_tile[i]`).
+    pub tiles: u32,
+    pub subarrays: u64,
+    pub is_fc: bool,
+}
+
+/// One residency of the chip: the units mapped together.
+#[derive(Debug, Clone)]
+pub struct Part {
+    pub units: Vec<MapUnit>,
+}
+
+impl Part {
+    pub fn tiles_used(&self) -> u32 {
+        self.units.iter().map(|u| u.tiles).sum()
+    }
+
+    pub fn weights(&self) -> u64 {
+        self.units.iter().map(|u| u.layer.weights()).sum()
+    }
+}
+
+/// The full partition (Algorithm 1 line 1: "divide NN into m parts").
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub parts: Vec<Part>,
+    pub network: String,
+}
+
+impl PartitionPlan {
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn total_units(&self) -> usize {
+        self.parts.iter().map(|p| p.units.len()).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.parts.iter().map(Part::weights).sum()
+    }
+
+    /// Intermediate bytes spilled at the boundary **into** part `p`
+    /// (p ≥ 1): the OFM of the previous part's last compute unit.
+    pub fn boundary_bytes_into(&self, p: usize) -> u64 {
+        if p == 0 {
+            return 0;
+        }
+        self.parts[p - 1]
+            .units
+            .last()
+            .map(|u| u.layer.ofm_bytes())
+            .unwrap_or(0)
+    }
+}
+
+/// Greedy partition of `net` for `chip` (§II-C).
+pub fn partition(net: &Network, chip: &ChipModel) -> anyhow::Result<PartitionPlan> {
+    net.validate()?;
+    let budget = chip.num_tiles();
+
+    // Expand layers into units, channel-splitting chip-oversized layers.
+    let mut units: Vec<MapUnit> = Vec::new();
+    for layer in net.crossbar_layers() {
+        for slice in split_to_fit(layer, chip, budget) {
+            let tiles = chip.layer_tiles(&slice.layer);
+            units.push(MapUnit {
+                origin: layer.name.clone(),
+                split: if slice.of > 1 {
+                    Some((slice.piece, slice.of))
+                } else {
+                    None
+                },
+                tiles,
+                subarrays: chip.layer_subarrays(&slice.layer),
+                is_fc: slice.layer.is_fc(),
+                layer: slice.layer,
+            });
+        }
+    }
+
+    // Greedy fill.
+    let mut parts: Vec<Part> = Vec::new();
+    let mut current = Part { units: Vec::new() };
+    let mut used = 0u32;
+    for unit in units {
+        anyhow::ensure!(
+            unit.tiles <= budget,
+            "unit {} needs {} tiles > chip {}",
+            unit.layer.name,
+            unit.tiles,
+            budget
+        );
+        if used + unit.tiles > budget {
+            parts.push(std::mem::replace(&mut current, Part { units: Vec::new() }));
+            used = 0;
+        }
+        used += unit.tiles;
+        current.units.push(unit);
+    }
+    if !current.units.is_empty() {
+        parts.push(current);
+    }
+
+    let plan = PartitionPlan {
+        parts,
+        network: net.name.clone(),
+    };
+    plan.parts
+        .iter()
+        .all(|p| p.tiles_used() <= budget)
+        .then_some(())
+        .context("internal: part exceeds tile budget")?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+    use crate::pim::ChipModel;
+
+    fn chip() -> ChipModel {
+        ChipModel::new(presets::compact_rram_41mm2()).unwrap()
+    }
+
+    #[test]
+    fn every_part_fits_budget() {
+        let c = chip();
+        for net in resnet::paper_family(100) {
+            let plan = partition(&net, &c).unwrap();
+            for part in &plan.parts {
+                assert!(part.tiles_used() <= c.num_tiles(), "{}", net.name);
+                assert!(!part.units.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn weights_are_conserved() {
+        let c = chip();
+        let net = resnet::resnet34(100);
+        let plan = partition(&net, &c).unwrap();
+        // channel splits conserve total weights (slices partition channels)
+        assert_eq!(plan.total_weights(), net.total_weights());
+    }
+
+    #[test]
+    fn layer_order_is_preserved() {
+        let c = chip();
+        let net = resnet::resnet18(100);
+        let plan = partition(&net, &c).unwrap();
+        let flat: Vec<&str> = plan
+            .parts
+            .iter()
+            .flat_map(|p| p.units.iter().map(|u| u.origin.as_str()))
+            .collect();
+        let expect: Vec<&str> = net.crossbar_layers().iter().map(|l| l.name.as_str()).collect();
+        // dedup consecutive (splits repeat the origin)
+        let mut dedup = flat.clone();
+        dedup.dedup();
+        assert_eq!(dedup, expect);
+    }
+
+    #[test]
+    fn compact_chip_needs_multiple_parts() {
+        let c = chip();
+        let plan = partition(&resnet::resnet34(100), &c).unwrap();
+        assert!(
+            plan.num_parts() >= 3,
+            "R34 at 16% capacity should need several parts, got {}",
+            plan.num_parts()
+        );
+    }
+
+    #[test]
+    fn unlimited_chip_is_single_part() {
+        let net = resnet::resnet34(100);
+        let base = presets::compact_rram_41mm2();
+        let c = ChipModel::new(crate::baselines::unlimited::unlimited_chip(&base, &net)).unwrap();
+        let plan = partition(&net, &c).unwrap();
+        assert_eq!(plan.num_parts(), 1);
+    }
+
+    #[test]
+    fn boundary_bytes_are_positive_between_parts() {
+        let c = chip();
+        let plan = partition(&resnet::resnet34(100), &c).unwrap();
+        for p in 1..plan.num_parts() {
+            assert!(plan.boundary_bytes_into(p) > 0, "boundary {p}");
+        }
+        assert_eq!(plan.boundary_bytes_into(0), 0);
+    }
+
+    #[test]
+    fn greedy_is_maximal() {
+        // No part could accept its successor's first unit.
+        let c = chip();
+        let plan = partition(&resnet::resnet50(100), &c).unwrap();
+        for w in plan.parts.windows(2) {
+            let next_first = &w[1].units[0];
+            assert!(w[0].tiles_used() + next_first.tiles > c.num_tiles());
+        }
+    }
+}

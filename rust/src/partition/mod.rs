@@ -1,0 +1,14 @@
+//! NN partitioning for compact chips (paper §II-C).
+//!
+//! Criteria: *"partition by layer based on the available storage size, and
+//! further partition by channels if necessary"* — greedy packing of
+//! consecutive crossbar layers into parts that fit the chip's tile budget,
+//! with channel-splitting for any single layer whose weights exceed the
+//! whole chip.
+
+pub mod channel;
+pub mod layerwise;
+pub mod search;
+
+pub use layerwise::{partition, MapUnit, Part, PartitionPlan};
+pub use search::{search_partition, SearchOutcome};

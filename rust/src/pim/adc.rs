@@ -1,0 +1,53 @@
+//! Column-ADC model: resolution requirements and energy/area scaling.
+//!
+//! Each crossbar read converts per-column analog partial sums. ADC energy
+//! scales roughly 4× per extra 2 bits (class-B SAR scaling), and the
+//! lossless resolution follows from the worst-case column sum — mirroring
+//! the L1 Pallas kernel's `lossless_adc_bits`.
+
+/// Minimum ADC bits so a partial sum of `rows` cells at `cell_bits` each
+/// never saturates (matches `python/compile/kernels/crossbar.py`).
+pub fn lossless_bits(cell_bits: u32, rows: u32) -> u32 {
+    let max_partial = rows as u64 * ((1u64 << cell_bits) - 1);
+    let mut bits = 1;
+    while (1u64 << bits) - 1 < max_partial {
+        bits += 1;
+    }
+    bits
+}
+
+/// Relative ADC energy vs an 8-bit reference converter (SAR ~4×/2bits).
+pub fn energy_scale(bits: u32) -> f64 {
+    2f64.powi(bits as i32 - 8)
+}
+
+/// Relative ADC area vs the 8-bit reference.
+pub fn area_scale(bits: u32) -> f64 {
+    2f64.powi(bits as i32 - 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_kernel_constant() {
+        // 2 bit/cell, 128 rows: max partial 384 -> 9 bits (kernel default).
+        assert_eq!(lossless_bits(2, 128), 9);
+        assert_eq!(lossless_bits(1, 128), 8);
+        assert_eq!(lossless_bits(4, 128), 11);
+    }
+
+    #[test]
+    fn monotone_in_rows_and_bits() {
+        assert!(lossless_bits(2, 256) > lossless_bits(2, 64));
+        assert!(lossless_bits(4, 128) > lossless_bits(1, 128));
+    }
+
+    #[test]
+    fn scaling_reference_point() {
+        assert!((energy_scale(8) - 1.0).abs() < 1e-12);
+        assert!((energy_scale(10) - 4.0).abs() < 1e-12);
+        assert!((area_scale(6) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,109 @@
+//! Chip area model, calibrated to the paper's endpoints (see
+//! `cfg::presets` for the derivation):
+//!
+//! * per-weight crossbar + subarray-periphery + tile share:
+//!   RRAM 4.581 µm², SRAM 15.61 µm²;
+//! * fixed chip overhead (global buffer, accumulators, pooling, controller,
+//!   I/O): 26.1 mm².
+//!
+//! These reproduce Fig. 1 (ResNet-152: 292.7 mm² RRAM / 934.5 mm² SRAM),
+//! the 123.8 mm² area-unlimited ResNet-34 chip, and the 41.5 mm² compact
+//! chip (13 tiles).
+
+use crate::cfg::chip::{CellTech, ChipConfig};
+use crate::cfg::presets::{
+    AREA_PER_WEIGHT_RRAM_UM2, AREA_PER_WEIGHT_SRAM_UM2, CHIP_FIXED_OVERHEAD_MM2,
+};
+
+use super::cell;
+
+/// Calibrated per-weight area (cells + ADC/DAC/decoders + tile share), µm².
+pub fn area_per_weight_um2(tech: CellTech) -> f64 {
+    match tech {
+        CellTech::Rram { .. } => AREA_PER_WEIGHT_RRAM_UM2,
+        CellTech::Sram => AREA_PER_WEIGHT_SRAM_UM2,
+    }
+}
+
+/// Area of one subarray in µm² (weights × per-weight share).
+pub fn subarray_area_um2(cfg: &ChipConfig) -> f64 {
+    cfg.weights_per_subarray() as f64 * area_per_weight_um2(cfg.cell)
+}
+
+/// Area of one tile in mm².
+pub fn tile_area_mm2(cfg: &ChipConfig) -> f64 {
+    subarray_area_um2(cfg) * cfg.subarrays_per_tile() as f64 * 1e-6
+}
+
+/// Total chip area in mm² (tiles + fixed overhead).
+pub fn chip_area_mm2(cfg: &ChipConfig) -> f64 {
+    tile_area_mm2(cfg) * cfg.num_tiles as f64 + CHIP_FIXED_OVERHEAD_MM2
+}
+
+/// Area a network of `weights` parameters needs when every weight is
+/// resident (Fig. 1's "area-unlimited" bars).
+pub fn unlimited_area_mm2(base: &ChipConfig, weights: u64) -> f64 {
+    let tiles = weights.div_ceil(base.weights_per_tile()).max(1) as u32;
+    chip_area_mm2(&base.with_tiles(tiles))
+}
+
+/// Share of the per-weight area attributable to raw cells (diagnostic).
+pub fn cell_area_fraction(cfg: &ChipConfig) -> f64 {
+    let cells = cell::cell_area_um2(cfg.cell) * cfg.cells_per_weight() as f64;
+    cells / area_per_weight_um2(cfg.cell)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+
+    #[test]
+    fn fig1_resnet152_endpoints() {
+        let w = resnet::resnet152(100).total_weights();
+        let rram = unlimited_area_mm2(&presets::compact_rram_41mm2(), w);
+        assert!(
+            (rram - 292.7).abs() / 292.7 < 0.02,
+            "RRAM R152 area {rram:.1} should be ≈292.7 mm²"
+        );
+        let sram = unlimited_area_mm2(&presets::compact_sram(), w);
+        assert!(
+            (sram - 934.5).abs() / 934.5 < 0.02,
+            "SRAM R152 area {sram:.1} should be ≈934.5 mm²"
+        );
+    }
+
+    #[test]
+    fn compact_is_about_one_third_of_unlimited_r34() {
+        let compact = chip_area_mm2(&presets::compact_rram_41mm2());
+        let w = resnet::resnet34(100).total_weights();
+        let unlim = unlimited_area_mm2(&presets::compact_rram_41mm2(), w);
+        let ratio = compact / unlim;
+        assert!(
+            (0.30..0.37).contains(&ratio),
+            "compact/unlimited = {ratio:.3}, paper: ~1/3"
+        );
+    }
+
+    #[test]
+    fn sram_chip_larger_than_rram() {
+        let w = 10_000_000;
+        let r = unlimited_area_mm2(&presets::compact_rram_41mm2(), w);
+        let s = unlimited_area_mm2(&presets::compact_sram(), w);
+        assert!(s > 2.0 * r);
+    }
+
+    #[test]
+    fn cells_are_minor_area_share() {
+        // Periphery dominates PIM area; cells < 20% of the per-weight cost.
+        let frac = cell_area_fraction(&presets::compact_rram_41mm2());
+        assert!(frac < 0.2, "cell fraction {frac}");
+    }
+
+    #[test]
+    fn area_monotone_in_tiles() {
+        let base = presets::compact_rram_41mm2();
+        assert!(chip_area_mm2(&base.with_tiles(base.num_tiles * 2)) > chip_area_mm2(&base));
+    }
+}

@@ -1,0 +1,33 @@
+//! On-chip buffer energy accounting (tile I/O buffers + global buffer).
+
+use crate::cfg::chip::ChipConfig;
+
+/// Energy to move `bytes` through a tile buffer (read or write), pJ.
+pub fn access_pj(cfg: &ChipConfig, bytes: u64) -> f64 {
+    bytes as f64 * cfg.e_buf_pj_per_byte
+}
+
+/// Energy for a full layer activation pass: read IFM stripe per output
+/// pixel's K window + write OFM, pJ. `ifm_bytes`/`ofm_bytes` are per-IFM.
+pub fn layer_traffic_pj(cfg: &ChipConfig, ifm_bytes: u64, ofm_bytes: u64) -> f64 {
+    access_pj(cfg, ifm_bytes) + access_pj(cfg, ofm_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+
+    #[test]
+    fn linear_in_bytes() {
+        let c = presets::compact_rram_41mm2();
+        assert!((access_pj(&c, 2048) - 2.0 * access_pj(&c, 1024)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layer_traffic_adds_both_directions() {
+        let c = presets::compact_rram_41mm2();
+        let t = layer_traffic_pj(&c, 1000, 500);
+        assert!((t - access_pj(&c, 1500)).abs() < 1e-9);
+    }
+}

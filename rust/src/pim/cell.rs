@@ -1,0 +1,49 @@
+//! Memory-cell-level constants at 32 nm.
+//!
+//! The raw cell array is a small share of PIM area — peripheral circuits
+//! (ADCs, drivers, decoders) dominate — but cell choice fixes how many
+//! cells one 8-bit weight needs, which is what scales Fig. 1's SRAM/RRAM
+//! gap: 1 bit/cell SRAM needs 4× the cells of 2 bit/cell RRAM and larger
+//! cells besides.
+
+use crate::cfg::chip::CellTech;
+
+/// Feature size (meters) of the paper's process node.
+pub const FEATURE_NM: f64 = 32.0;
+
+/// Physical cell area in µm².
+pub fn cell_area_um2(tech: CellTech) -> f64 {
+    let f_um = FEATURE_NM * 1e-3;
+    match tech {
+        // 1T1R RRAM cell ≈ 12 F² (NeuroSim-style assumption for MLC).
+        CellTech::Rram { .. } => 12.0 * f_um * f_um,
+        // 8T compute SRAM cell ≈ 210 F².
+        CellTech::Sram => 210.0 * f_um * f_um,
+    }
+}
+
+/// Cell read energy in fJ per cell per read cycle.
+pub fn cell_read_fj(tech: CellTech) -> f64 {
+    match tech {
+        CellTech::Rram { .. } => 1.2, // current-mode sense through the cell
+        CellTech::Sram => 0.4,        // bitline discharge share
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rram_cell_smaller_than_sram() {
+        let r = cell_area_um2(CellTech::Rram { bits_per_cell: 2 });
+        let s = cell_area_um2(CellTech::Sram);
+        assert!(r < s / 10.0, "rram {r} vs sram {s}");
+    }
+
+    #[test]
+    fn cell_areas_are_sub_um2() {
+        assert!(cell_area_um2(CellTech::Rram { bits_per_cell: 2 }) < 0.1);
+        assert!(cell_area_um2(CellTech::Sram) < 0.5);
+    }
+}

@@ -1,0 +1,158 @@
+//! Chip-level facade: the performance/energy queries every scheduler layer
+//! (partition, mapping, DDM, pipeline, sim) asks of the hardware.
+
+use crate::cfg::chip::{CellTech, ChipConfig};
+use crate::nn::Layer;
+
+use super::{area, buffer, noc, pe, subarray, tile};
+
+/// Crossbar weight-programming energy, pJ per weight (RRAM SET/RESET pulses
+/// across 4 cells vs SRAM write).
+pub fn wprog_pj_per_weight(cell: CellTech) -> f64 {
+    match cell {
+        CellTech::Rram { .. } => 40.0,
+        CellTech::Sram => 2.0,
+    }
+}
+
+/// The chip macro-model: validated config + derived query methods.
+#[derive(Debug, Clone)]
+pub struct ChipModel {
+    pub cfg: ChipConfig,
+}
+
+impl ChipModel {
+    pub fn new(cfg: ChipConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        Ok(ChipModel { cfg })
+    }
+
+    /// Subarrays one copy of `layer`'s weights occupies.
+    pub fn layer_subarrays(&self, layer: &Layer) -> u64 {
+        subarray::subarrays_for(&self.cfg, layer.crossbar_k(), layer.crossbar_n())
+    }
+
+    /// Tiles one copy of `layer` occupies (minimum mapping granularity).
+    pub fn layer_tiles(&self, layer: &Layer) -> u32 {
+        tile::tiles_for_matrix(&self.cfg, layer.crossbar_k(), layer.crossbar_n())
+    }
+
+    /// Per-IFM latency of `layer` with duplication factor `dup`:
+    /// `⌈O²/dup⌉ × t_mvm` (paper §II-D: inference time ∝ O×O; PipeLayer-
+    /// style duplication divides the sequential MVM count).
+    pub fn layer_latency_ns(&self, layer: &Layer, dup: u32) -> f64 {
+        let dup = dup.max(1) as u64;
+        let mvms = layer.out_pixels().div_ceil(dup);
+        mvms as f64 * self.cfg.t_mvm_ns()
+    }
+
+    /// Maximum useful duplication for `layer`: `O²` copies collapse the
+    /// layer to a single MVM round (paper: `MAX[i]` from O×O, e.g. O=8 →
+    /// up to 64).
+    pub fn max_dup(&self, layer: &Layer) -> u32 {
+        layer.out_pixels().min(u32::MAX as u64) as u32
+    }
+
+    /// Per-IFM compute energy of `layer`, pJ: every output pixel activates
+    /// all of the layer's subarrays once (duplication redistributes work
+    /// but not the activation count), plus PE accumulation and buffer/NoC
+    /// activation traffic.
+    pub fn layer_compute_pj(&self, layer: &Layer) -> f64 {
+        let s = self.layer_subarrays(layer);
+        let mvm = layer.out_pixels() as f64 * subarray::mvm_energy_pj(&self.cfg, s);
+        let accum = layer.out_pixels() as f64 * pe::accum_energy_pj(&self.cfg, s);
+        let traffic = buffer::layer_traffic_pj(&self.cfg, layer.ifm_bytes(), layer.ofm_bytes())
+            + noc::transfer_pj(&self.cfg, layer.ifm_bytes() + layer.ofm_bytes());
+        mvm + accum + traffic
+    }
+
+    /// Energy to program one copy of `layer`'s weights into crossbars, pJ.
+    pub fn layer_wprog_pj(&self, layer: &Layer) -> f64 {
+        layer.weights() as f64 * wprog_pj_per_weight(self.cfg.cell)
+    }
+
+    /// Whole-chip leakage power, W.
+    pub fn leak_w(&self) -> f64 {
+        self.cfg.num_tiles as f64 * self.cfg.p_leak_mw_per_tile * 1e-3
+    }
+
+    pub fn area_mm2(&self) -> f64 {
+        area::chip_area_mm2(&self.cfg)
+    }
+
+    pub fn num_tiles(&self) -> u32 {
+        self.cfg.num_tiles
+    }
+
+    /// Can the whole network reside on-chip at once?
+    pub fn fits_entirely(&self, total_tiles: u32) -> bool {
+        total_tiles <= self.cfg.num_tiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+
+    fn chip() -> ChipModel {
+        ChipModel::new(presets::compact_rram_41mm2()).unwrap()
+    }
+
+    #[test]
+    fn latency_divides_by_dup() {
+        let c = chip();
+        let l = crate::nn::Layer::conv("l", 32, 64, 64, 3, 1, 1); // O²=1024
+        let t1 = c.layer_latency_ns(&l, 1);
+        let t4 = c.layer_latency_ns(&l, 4);
+        assert!((t1 / t4 - 4.0).abs() < 1e-9);
+        // full duplication collapses to one MVM round
+        let tmax = c.layer_latency_ns(&l, c.max_dup(&l));
+        assert!((tmax - c.cfg.t_mvm_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dup_zero_treated_as_one() {
+        let c = chip();
+        let l = crate::nn::Layer::conv("l", 8, 8, 8, 3, 1, 1);
+        assert_eq!(c.layer_latency_ns(&l, 0), c.layer_latency_ns(&l, 1));
+    }
+
+    #[test]
+    fn energy_independent_of_duplication_claim() {
+        // layer_compute_pj has no dup argument by design: duplication moves
+        // work in time, not in activation count.
+        let c = chip();
+        let l = crate::nn::Layer::conv("l", 16, 32, 32, 3, 1, 1);
+        assert!(c.layer_compute_pj(&l) > 0.0);
+    }
+
+    #[test]
+    fn resnet34_energy_order_of_magnitude() {
+        // ≈ MACs/4096 × 800 pJ ≈ 250 µJ per IFM for CIFAR ResNet-34.
+        let c = chip();
+        let net = resnet::resnet34(100);
+        let total_pj: f64 = net
+            .crossbar_layers()
+            .iter()
+            .map(|l| c.layer_compute_pj(l))
+            .sum();
+        let uj = total_pj * 1e-6;
+        assert!(uj > 50.0 && uj < 2000.0, "{uj} µJ/IFM");
+    }
+
+    #[test]
+    fn max_dup_follows_out_pixels() {
+        let c = chip();
+        let l8 = crate::nn::Layer::conv("l", 8, 8, 8, 3, 1, 1); // O=8
+        assert_eq!(c.max_dup(&l8), 64);
+    }
+
+    #[test]
+    fn fc_layer_one_mvm() {
+        let c = chip();
+        let fc = crate::nn::Layer::fc("fc", 512, 100);
+        assert_eq!(c.layer_latency_ns(&fc, 1), c.cfg.t_mvm_ns());
+    }
+}

@@ -1,0 +1,103 @@
+//! Energy ledger: per-component joule accounting for the Fig. 7 breakdown.
+//!
+//! The paper splits total system energy into (1) *computation energy* — all
+//! on-chip components — and (2) off-chip DRAM energy. The ledger keeps the
+//! on-chip side itemized (crossbar compute, buffers, NoC, weight
+//! programming, leakage) so ablations can attribute changes.
+
+/// Joule totals by component.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyLedger {
+    /// Crossbar MVM + ADC + accumulation energy, J.
+    pub compute_j: f64,
+    /// Tile/global buffer access energy, J.
+    pub buffer_j: f64,
+    /// On-chip network energy, J.
+    pub noc_j: f64,
+    /// Crossbar weight-programming energy, J.
+    pub wprog_j: f64,
+    /// Leakage over the makespan, J.
+    pub leakage_j: f64,
+    /// Off-chip DRAM energy (transactions + background), J.
+    pub dram_j: f64,
+}
+
+impl EnergyLedger {
+    pub fn on_chip_j(&self) -> f64 {
+        self.compute_j + self.buffer_j + self.noc_j + self.wprog_j + self.leakage_j
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.on_chip_j() + self.dram_j
+    }
+
+    /// Fig. 7's y-axis: computation (on-chip) share of total energy.
+    pub fn compute_fraction(&self) -> f64 {
+        let total = self.total_j();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.on_chip_j() / total
+        }
+    }
+
+    pub fn add(&mut self, other: &EnergyLedger) {
+        self.compute_j += other.compute_j;
+        self.buffer_j += other.buffer_j;
+        self.noc_j += other.noc_j;
+        self.wprog_j += other.wprog_j;
+        self.leakage_j += other.leakage_j;
+        self.dram_j += other.dram_j;
+    }
+
+    pub fn scaled(&self, k: f64) -> EnergyLedger {
+        EnergyLedger {
+            compute_j: self.compute_j * k,
+            buffer_j: self.buffer_j * k,
+            noc_j: self.noc_j * k,
+            wprog_j: self.wprog_j * k,
+            leakage_j: self.leakage_j * k,
+            dram_j: self.dram_j * k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum() {
+        let e = EnergyLedger {
+            compute_j: 6.0,
+            buffer_j: 1.0,
+            noc_j: 0.5,
+            wprog_j: 0.5,
+            leakage_j: 0.0,
+            dram_j: 2.0,
+        };
+        assert!((e.total_j() - 10.0).abs() < 1e-12);
+        assert!((e.compute_fraction() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_total_fraction_is_zero() {
+        assert_eq!(EnergyLedger::default().compute_fraction(), 0.0);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = EnergyLedger {
+            compute_j: 1.0,
+            ..Default::default()
+        };
+        let b = EnergyLedger {
+            dram_j: 2.0,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert!((a.total_j() - 3.0).abs() < 1e-12);
+        let half = a.scaled(0.5);
+        assert!((half.total_j() - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,21 @@
+//! PIM chip macro-model (NeuroSim-substitute; see DESIGN.md).
+//!
+//! Hierarchy: [`cell`] → [`subarray`] (crossbar + [`adc`]) → [`pe`] →
+//! [`tile`] (minimum mapping unit) → [`chip::ChipModel`] (facade), with
+//! [`area`] and [`energy`] providing the calibrated 32 nm accounting and
+//! [`buffer`]/[`noc`] the on-chip data-movement costs.
+
+pub mod adc;
+pub mod area;
+pub mod buffer;
+pub mod cell;
+pub mod chip;
+pub mod energy;
+pub mod noc;
+pub mod pe;
+pub mod power;
+pub mod subarray;
+pub mod tile;
+
+pub use chip::ChipModel;
+pub use energy::EnergyLedger;

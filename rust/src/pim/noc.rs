@@ -1,0 +1,45 @@
+//! On-chip network (H-tree) model: latency and energy to move activations
+//! between tiles and the global buffer.
+
+use crate::cfg::chip::ChipConfig;
+
+/// NoC link bandwidth, bytes per ns (32 GB/s H-tree trunk at 32 nm).
+pub const NOC_BYTES_PER_NS: f64 = 32.0;
+
+/// Transfer latency for `bytes` across the H-tree, ns. Hop count grows
+/// with tile count (log2 levels).
+pub fn transfer_ns(cfg: &ChipConfig, bytes: u64) -> f64 {
+    let hops = (cfg.num_tiles as f64).log2().ceil().max(1.0);
+    let per_hop_ns = 2.0;
+    hops * per_hop_ns + bytes as f64 / NOC_BYTES_PER_NS
+}
+
+/// Transfer energy for `bytes`, pJ.
+pub fn transfer_pj(cfg: &ChipConfig, bytes: u64) -> f64 {
+    bytes as f64 * cfg.e_noc_pj_per_byte
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+
+    #[test]
+    fn latency_has_hop_floor() {
+        let c = presets::compact_rram_41mm2();
+        assert!(transfer_ns(&c, 0) >= 2.0);
+    }
+
+    #[test]
+    fn more_tiles_more_hops() {
+        let c = presets::compact_rram_41mm2();
+        let big = c.with_tiles(2048);
+        assert!(transfer_ns(&big, 1024) > transfer_ns(&c, 1024));
+    }
+
+    #[test]
+    fn energy_linear() {
+        let c = presets::compact_rram_41mm2();
+        assert!((transfer_pj(&c, 100) - 100.0 * c.e_noc_pj_per_byte).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,42 @@
+//! Processing-engine level: a cluster of subarrays sharing input routing
+//! and a partial-sum accumulator tree.
+
+use crate::cfg::chip::ChipConfig;
+
+/// Subarrays per PE (from config).
+pub fn subarrays(cfg: &ChipConfig) -> u32 {
+    cfg.subarrays_per_pe
+}
+
+/// Weights stored per PE.
+pub fn weights_per_pe(cfg: &ChipConfig) -> u64 {
+    cfg.weights_per_subarray() * cfg.subarrays_per_pe as u64
+}
+
+/// Accumulator-tree energy per MVM output element, pJ: each of the PE's
+/// subarray outputs passes one adder stage per tree level.
+pub fn accum_energy_pj(cfg: &ChipConfig, active_subarrays: u64) -> f64 {
+    // ~0.05 pJ per 32-bit add at 32 nm; log2 tree depth.
+    let depth = (cfg.subarrays_per_pe as f64).log2().ceil().max(1.0);
+    0.05 * active_subarrays as f64 * depth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+
+    #[test]
+    fn capacity_composes() {
+        let c = presets::compact_rram_41mm2();
+        assert_eq!(weights_per_pe(&c), 4 * 4096);
+        assert_eq!(subarrays(&c), 4);
+    }
+
+    #[test]
+    fn accum_energy_scales() {
+        let c = presets::compact_rram_41mm2();
+        assert!(accum_energy_pj(&c, 4) > accum_energy_pj(&c, 1));
+        assert!(accum_energy_pj(&c, 4) < 10.0); // small vs e_mvm=800pJ
+    }
+}

@@ -1,0 +1,114 @@
+//! Chip power budget: average/peak power draw at an operating point and a
+//! TDP feasibility check — the constraint that ultimately bounds how much
+//! duplication a compact chip can exploit (every duplicate copy fires its
+//! subarrays in parallel).
+
+use crate::cfg::chip::ChipConfig;
+use crate::nn::Layer;
+
+use super::chip::ChipModel;
+
+/// Power draw summary for one layer executing at full rate.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerPower {
+    /// Average dynamic power while the layer streams, W.
+    pub dynamic_w: f64,
+    /// Peak instantaneous power (all subarrays × dup active), W.
+    pub peak_w: f64,
+}
+
+/// Dynamic power of `layer` at duplication `dup`: every copy activates its
+/// subarrays once per MVM round; more duplication = more parallel reads =
+/// proportionally higher draw for proportionally less time.
+pub fn layer_power(chip: &ChipModel, layer: &Layer, dup: u32) -> LayerPower {
+    let dup = dup.max(1) as f64;
+    let subarrays = chip.layer_subarrays(layer) as f64;
+    // one MVM round: `subarrays` reads over t_mvm
+    let e_round_j = subarrays * chip.cfg.e_mvm_pj() * 1e-12;
+    let t_round_s = chip.cfg.t_mvm_ns() * 1e-9;
+    let per_copy_w = e_round_j / t_round_s;
+    LayerPower {
+        dynamic_w: per_copy_w * dup,
+        peak_w: per_copy_w * dup,
+    }
+}
+
+/// Whole-chip power at an operating point: the streaming part's layers all
+/// fire concurrently in the pipeline.
+pub fn part_power_w(chip: &ChipModel, layers: &[(&Layer, u32)]) -> f64 {
+    let dynamic: f64 = layers
+        .iter()
+        .map(|(l, d)| layer_power(chip, l, *d).dynamic_w)
+        .sum();
+    dynamic + chip.leak_w()
+}
+
+/// Default thermal budget for a mobile-class 41.5 mm² accelerator, W.
+pub fn default_tdp_w(cfg: &ChipConfig) -> f64 {
+    // ~0.15 W/mm² mobile budget.
+    0.15 * super::area::chip_area_mm2(cfg)
+}
+
+/// Does the mapped part stay within the TDP?
+pub fn within_tdp(chip: &ChipModel, layers: &[(&Layer, u32)]) -> bool {
+    part_power_w(chip, layers) <= default_tdp_w(&chip.cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::ddm;
+    use crate::nn::resnet;
+    use crate::partition::partition;
+
+    fn chip() -> ChipModel {
+        ChipModel::new(presets::compact_rram_41mm2()).unwrap()
+    }
+
+    #[test]
+    fn duplication_scales_power_linearly() {
+        let c = chip();
+        let l = Layer::conv("l", 16, 64, 64, 3, 1, 1);
+        let p1 = layer_power(&c, &l, 1);
+        let p4 = layer_power(&c, &l, 4);
+        assert!((p4.dynamic_w / p1.dynamic_w - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compact_chip_parts_fit_mobile_tdp() {
+        // The paper's efficiency story requires sub-watt compute; every
+        // DDM-mapped part must stay within the ~6 W mobile budget.
+        let c = chip();
+        let net = resnet::resnet34(100);
+        let plan = partition(&net, &c).unwrap();
+        let dd = ddm::run(&plan, &c);
+        for (part, dups) in plan.parts.iter().zip(&dd.dup_per_part) {
+            let layers: Vec<(&Layer, u32)> = part
+                .units
+                .iter()
+                .zip(dups)
+                .map(|(u, &d)| (&u.layer, d))
+                .collect();
+            let p = part_power_w(&c, &layers);
+            assert!(
+                within_tdp(&c, &layers),
+                "part draws {p:.2} W > TDP {:.2} W",
+                default_tdp_w(&c.cfg)
+            );
+        }
+    }
+
+    #[test]
+    fn tdp_scales_with_area() {
+        let small = presets::compact_rram_41mm2();
+        let big = small.with_tiles(small.num_tiles * 3);
+        assert!(default_tdp_w(&big) > default_tdp_w(&small));
+    }
+
+    #[test]
+    fn power_includes_leakage_floor() {
+        let c = chip();
+        assert!(part_power_w(&c, &[]) >= c.leak_w());
+    }
+}

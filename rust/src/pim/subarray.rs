@@ -1,0 +1,56 @@
+//! Subarray model: one crossbar (rows × cols cells) plus its DAC row
+//! drivers, column ADCs, and shift-add — the unit that executes one MVM.
+
+use crate::cfg::chip::ChipConfig;
+
+/// How many subarrays a `K × N` weight matrix occupies: `K` rows split into
+/// row-chunks of `subarray_rows`, `N` outputs split into column chunks of
+/// `weight_cols_per_subarray`.
+pub fn subarrays_for(cfg: &ChipConfig, k: u32, n: u32) -> u64 {
+    let row_chunks = k.div_ceil(cfg.subarray_rows) as u64;
+    let col_chunks = n.div_ceil(cfg.weight_cols_per_subarray()) as u64;
+    row_chunks * col_chunks
+}
+
+/// Latency of one full-precision MVM (all of a layer's subarrays fire in
+/// parallel; activation bits stream serially), ns.
+pub fn mvm_latency_ns(cfg: &ChipConfig) -> f64 {
+    cfg.t_mvm_ns()
+}
+
+/// Energy of activating `count` subarrays for one MVM, pJ.
+pub fn mvm_energy_pj(cfg: &ChipConfig, count: u64) -> f64 {
+    count as f64 * cfg.e_mvm_pj()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+
+    #[test]
+    fn exact_fit_single_subarray() {
+        let c = presets::compact_rram_41mm2(); // 128 rows, 32 weight cols
+        assert_eq!(subarrays_for(&c, 128, 32), 1);
+    }
+
+    #[test]
+    fn row_and_col_chunking() {
+        let c = presets::compact_rram_41mm2();
+        assert_eq!(subarrays_for(&c, 129, 32), 2); // one extra row chunk
+        assert_eq!(subarrays_for(&c, 128, 33), 2); // one extra col chunk
+        assert_eq!(subarrays_for(&c, 576, 64), 5 * 2); // resnet stage1 conv
+    }
+
+    #[test]
+    fn tiny_layer_still_takes_one() {
+        let c = presets::compact_rram_41mm2();
+        assert_eq!(subarrays_for(&c, 27, 16), 1);
+    }
+
+    #[test]
+    fn sram_needs_more_column_chunks() {
+        let c = presets::compact_sram(); // 16 weight cols per subarray
+        assert_eq!(subarrays_for(&c, 128, 32), 2);
+    }
+}

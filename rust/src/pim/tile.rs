@@ -1,0 +1,64 @@
+//! Tile level: the paper's minimum mapping unit. One tile hosts PEs ×
+//! subarrays, an input/output buffer, and a local accumulator; **mapping
+//! more than one layer onto the same tile is not allowed** (§II-D).
+
+use crate::cfg::chip::ChipConfig;
+
+use super::subarray;
+
+/// Subarrays per tile.
+pub fn subarrays(cfg: &ChipConfig) -> u32 {
+    cfg.subarrays_per_tile()
+}
+
+/// Tiles needed to hold a `K × N` weight matrix (one layer copy).
+pub fn tiles_for_matrix(cfg: &ChipConfig, k: u32, n: u32) -> u32 {
+    let needed = subarray::subarrays_for(cfg, k, n);
+    needed.div_ceil(subarrays(cfg) as u64).max(1) as u32
+}
+
+/// Tile input-buffer size in bytes: one IFM stripe per mapped layer —
+/// sized for the largest K the tile can consume in one MVM round.
+pub fn buffer_bytes(cfg: &ChipConfig) -> u64 {
+    // K rows × act bits, double-buffered.
+    2 * (cfg.subarray_rows as u64 * cfg.subarrays_per_tile() as u64 * cfg.act_bits as u64) / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+
+    #[test]
+    fn resnet34_biggest_layer_tile_count() {
+        let c = presets::compact_rram_41mm2();
+        // 3×3×512×512: 36 row-chunks × 16 col-chunks = 576 subarrays,
+        // 4 subarrays/tile -> 144 tiles.
+        assert_eq!(tiles_for_matrix(&c, 3 * 3 * 512, 512), 144);
+    }
+
+    #[test]
+    fn small_layer_takes_one_tile() {
+        let c = presets::compact_rram_41mm2();
+        assert_eq!(tiles_for_matrix(&c, 27, 64), 1);
+    }
+
+    #[test]
+    fn every_resnet_layer_fits_some_tile_count() {
+        let c = presets::compact_rram_41mm2();
+        for net in resnet::paper_family(100) {
+            for l in net.crossbar_layers() {
+                let t = tiles_for_matrix(&c, l.crossbar_k(), l.crossbar_n());
+                assert!(t >= 1 && t <= c.num_tiles * 4, "{} needs {t}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn buffer_is_kilobytes() {
+        let c = presets::compact_rram_41mm2();
+        let b = buffer_bytes(&c);
+        assert!(b >= 1024 && b < 1 << 20, "{b}");
+    }
+}

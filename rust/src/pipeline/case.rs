@@ -1,0 +1,87 @@
+//! Closed-form pipeline timing from the paper's Fig. 4 (uniform layer time
+//! `T`, `L` layers, batch `n`). These formulas anchor unit tests and the
+//! `fig4` CLI output; the general simulator in [`super::sim`] handles
+//! heterogeneous layer times.
+
+/// Case 1 — area-unlimited chip, classic layer pipeline:
+/// `t(n) = (n + L - 1) · T`.
+pub fn t_case1(n: u64, l: u64, t: f64) -> f64 {
+    (n + l - 1) as f64 * t
+}
+
+/// Case 1 per-IFM latency (→ `T` as n → ∞).
+pub fn t_per_ifm_case1(n: u64, l: u64, t: f64) -> f64 {
+    t_case1(n, l, t) / n as f64
+}
+
+/// Case 2 — compact chip, two parts, reload between them:
+/// `t(n) = (2n + L - 2) · T + T1` where `T1` loads the intermediate data
+/// and the second part's weights.
+pub fn t_case2(n: u64, l: u64, t: f64, t1: f64) -> f64 {
+    (2 * n + l - 2) as f64 * t + t1
+}
+
+pub fn t_per_ifm_case2(n: u64, l: u64, t: f64, t1: f64) -> f64 {
+    t_case2(n, l, t, t1) / n as f64
+}
+
+/// Case 3 — compact chip with overlapped prefetch: part 2's first layer is
+/// pre-loaded during part 1's compute (capacity permitting):
+/// `t(n) = (2n + L - 1) · T + T2 + T3` with `T2`/`T3` the split loads.
+pub fn t_case3(n: u64, l: u64, t: f64, t2: f64, t3: f64) -> f64 {
+    (2 * n + l - 1) as f64 * t + t2 + t3
+}
+
+pub fn t_per_ifm_case3(n: u64, l: u64, t: f64, t2: f64, t3: f64) -> f64 {
+    t_case3(n, l, t, t2, t3) / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: f64 = 100.0;
+
+    #[test]
+    fn case1_amortizes_to_t() {
+        // paper: t(perIFM) ≈ T for continuous inputs
+        let per = t_per_ifm_case1(10_000, 5, T);
+        assert!((per - T).abs() / T < 0.001);
+        // exact closed form at small n
+        assert_eq!(t_case1(1, 5, T), 5.0 * T);
+        assert_eq!(t_case1(3, 5, T), 7.0 * T);
+    }
+
+    #[test]
+    fn case2_amortizes_to_2t() {
+        // paper: per-IFM → 2T for the two-part compact pipeline
+        let per = t_per_ifm_case2(100_000, 5, T, 40.0 * T);
+        assert!((per - 2.0 * T).abs() / (2.0 * T) < 0.01);
+    }
+
+    #[test]
+    fn case3_beats_case2_when_loads_split_well() {
+        // With T2+T3 comparable to T1, case 3 pays one extra T but hides
+        // the load: for the paper's example (part 2 pre-loadable) the
+        // difference is (T2+T3) - T1 + T.
+        let n = 64;
+        let c2 = t_case2(n, 5, T, 10.0 * T);
+        let c3 = t_case3(n, 5, T, 4.0 * T, 2.0 * T);
+        assert!(c3 < c2);
+    }
+
+    #[test]
+    fn per_ifm_decreases_with_batch() {
+        for &n in &[1u64, 2, 8, 64, 512] {
+            let big = t_per_ifm_case2(n * 2, 5, T, 10.0 * T);
+            let small = t_per_ifm_case2(n, 5, T, 10.0 * T);
+            assert!(big < small + 1e-9);
+        }
+    }
+
+    #[test]
+    fn batch_one_has_no_pipeline_benefit() {
+        assert_eq!(t_case1(1, 7, T), 7.0 * T);
+        assert_eq!(t_case2(1, 5, T, 0.0), 5.0 * T);
+    }
+}

@@ -1,0 +1,10 @@
+//! The paper's pipeline method for compact PIM chips (Fig. 4):
+//! closed-form [`case`] formulas, per-part [`schedule`] timing,
+//! [`bubble`] accounting, and the batch-level [`sim`] simulator.
+
+pub mod bubble;
+pub mod case;
+pub mod schedule;
+pub mod sim;
+
+pub use sim::{simulate, PartExec, PipelineReport};

@@ -1,0 +1,93 @@
+//! Per-part pipeline timing: steady-state interval (bottleneck), fill
+//! latency, and makespan for a batch streamed through the part.
+
+use crate::ddm::itp;
+use crate::partition::Part;
+use crate::pim::ChipModel;
+
+/// Timing summary of one part under given duplication factors.
+#[derive(Debug, Clone)]
+pub struct PartTiming {
+    /// Per-unit latencies T_l (ns) under the chosen duplication.
+    pub unit_ns: Vec<f64>,
+    /// Steady-state pipeline interval T_p = max T_l (ns).
+    pub interval_ns: f64,
+    /// Fill latency Σ T_l — the first IFM's traversal (ns).
+    pub fill_ns: f64,
+}
+
+impl PartTiming {
+    /// Makespan to stream `n` IFMs through the part (classic heterogeneous
+    /// pipeline: fill + (n-1) intervals).
+    pub fn makespan_ns(&self, n: u64) -> f64 {
+        self.fill_ns + (n.saturating_sub(1)) as f64 * self.interval_ns
+    }
+}
+
+/// Compute a part's timing for duplication factors `dups`.
+pub fn part_timing(part: &Part, chip: &ChipModel, dups: &[u32]) -> PartTiming {
+    assert_eq!(part.units.len(), dups.len());
+    let unit_ns: Vec<f64> = part
+        .units
+        .iter()
+        .zip(dups)
+        .map(|(u, &d)| itp::predict_ns(chip, u, d))
+        .collect();
+    let interval_ns = unit_ns.iter().copied().fold(0.0, f64::max);
+    let fill_ns = unit_ns.iter().sum();
+    PartTiming {
+        unit_ns,
+        interval_ns,
+        fill_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+    use crate::partition::partition;
+    use crate::pim::ChipModel;
+
+    fn first_part() -> (ChipModel, crate::partition::Part) {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let plan = partition(&resnet::resnet34(100), &chip).unwrap();
+        (chip, plan.parts[0].clone())
+    }
+
+    #[test]
+    fn interval_is_max_and_fill_is_sum() {
+        let (chip, part) = first_part();
+        let t = part_timing(&part, &chip, &vec![1; part.units.len()]);
+        let max = t.unit_ns.iter().copied().fold(0.0, f64::max);
+        let sum: f64 = t.unit_ns.iter().sum();
+        assert_eq!(t.interval_ns, max);
+        assert!((t.fill_ns - sum).abs() < 1e-9);
+        assert!(t.fill_ns >= t.interval_ns);
+    }
+
+    #[test]
+    fn makespan_matches_case1_formula() {
+        // With uniform layer times the makespan must equal (n+L-1)T.
+        let (chip, part) = first_part();
+        let l = part.units.len() as u64;
+        let mut t = part_timing(&part, &chip, &vec![1; part.units.len()]);
+        // force uniform times
+        let tt = 100.0;
+        t.unit_ns = vec![tt; l as usize];
+        t.interval_ns = tt;
+        t.fill_ns = tt * l as f64;
+        let n = 37;
+        let expect = crate::pipeline::case::t_case1(n, l, tt);
+        assert!((t.makespan_ns(n) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn makespan_batch_one_is_fill() {
+        let (chip, part) = first_part();
+        let t = part_timing(&part, &chip, &vec![1; part.units.len()]);
+        assert_eq!(t.makespan_ns(1), t.fill_ns);
+        assert_eq!(t.makespan_ns(0), t.fill_ns); // degenerate guard
+    }
+}

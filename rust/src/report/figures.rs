@@ -1,0 +1,307 @@
+//! Figure/table emitters: turn sweep results into the paper's rows
+//! (printed tables + CSV files under `results/`).
+
+use std::path::Path;
+
+use crate::baselines::unlimited_chip;
+
+
+use crate::cfg::presets;
+use crate::explore::{Fig3Point, Fig6Point, Fig7Point, Fig8Point};
+use crate::nn::resnet;
+use crate::pim::area;
+use crate::util::csv::Csv;
+
+use super::table::Table;
+
+/// Fig. 1: chip area required to store all weights, SRAM vs RRAM.
+pub fn fig1_table() -> (Table, Csv) {
+    let rram = presets::compact_rram_41mm2();
+    let sram = presets::compact_sram();
+    let mut t = Table::new(
+        "Fig 1: area-unlimited chip area (mm², 32nm)",
+        vec!["network", "weights(M)", "rram_mm2", "sram_mm2"],
+    );
+    let mut csv = Csv::new(vec!["network", "weights", "rram_mm2", "sram_mm2"]);
+    for net in resnet::paper_family(100) {
+        let w = net.total_weights();
+        let a_r = area::unlimited_area_mm2(&rram, w);
+        let a_s = area::unlimited_area_mm2(&sram, w);
+        t.row(vec![
+            net.name.clone(),
+            format!("{:.1}", w as f64 / 1e6),
+            format!("{a_r:.1}"),
+            format!("{a_s:.1}"),
+        ]);
+        csv.row(vec![
+            net.name.clone(),
+            w.to_string(),
+            format!("{a_r:.2}"),
+            format!("{a_s:.2}"),
+        ]);
+    }
+    (t, csv)
+}
+
+/// Fig. 3: normalized DRAM transaction count vs batch.
+pub fn fig3_table(points: &[Fig3Point]) -> (Table, Csv) {
+    let mut t = Table::new(
+        "Fig 3: DRAM transactions, compact vs area-unlimited (LPDDR5)",
+        vec!["batch", "compact_txns", "unlimited_txns", "ratio"],
+    );
+    let mut csv = Csv::new(vec!["batch", "compact_txns", "unlimited_txns", "ratio"]);
+    for p in points {
+        t.row(vec![
+            p.batch.to_string(),
+            p.compact_txns.to_string(),
+            p.unlimited_txns.to_string(),
+            format!("{:.1}x", p.ratio),
+        ]);
+        csv.row(vec![
+            p.batch.to_string(),
+            p.compact_txns.to_string(),
+            p.unlimited_txns.to_string(),
+            format!("{:.3}", p.ratio),
+        ]);
+    }
+    (t, csv)
+}
+
+/// Fig. 6: throughput + energy efficiency under different batch sizes.
+pub fn fig6_tables(points: &[Fig6Point]) -> (Table, Table, Csv) {
+    let mut thr = Table::new(
+        "Fig 6a: throughput (FPS) vs batch",
+        vec!["batch", "gpu", "no_ddm", "ddm", "ddm+search", "unlimited"],
+    );
+    let mut eff = Table::new(
+        "Fig 6b: energy efficiency (TOPS/W) vs batch",
+        vec!["batch", "gpu", "no_ddm", "ddm", "ddm+search", "unlimited"],
+    );
+    let mut csv = Csv::new(vec![
+        "batch",
+        "gpu_fps",
+        "no_ddm_fps",
+        "ddm_fps",
+        "ddm_search_fps",
+        "unlimited_fps",
+        "gpu_tpw",
+        "no_ddm_tpw",
+        "ddm_tpw",
+        "ddm_search_tpw",
+        "unlimited_tpw",
+    ]);
+    for p in points {
+        thr.row(vec![
+            p.batch.to_string(),
+            format!("{:.0}", p.gpu_fps),
+            format!("{:.0}", p.no_ddm.throughput_fps),
+            format!("{:.0}", p.ddm.throughput_fps),
+            format!("{:.0}", p.ddm_search.throughput_fps),
+            format!("{:.0}", p.unlimited.throughput_fps),
+        ]);
+        eff.row(vec![
+            p.batch.to_string(),
+            format!("{:.4}", p.gpu_tops_per_watt),
+            format!("{:.2}", p.no_ddm.tops_per_watt),
+            format!("{:.2}", p.ddm.tops_per_watt),
+            format!("{:.2}", p.ddm_search.tops_per_watt),
+            format!("{:.2}", p.unlimited.tops_per_watt),
+        ]);
+        csv.row(vec![
+            p.batch.to_string(),
+            format!("{:.2}", p.gpu_fps),
+            format!("{:.2}", p.no_ddm.throughput_fps),
+            format!("{:.2}", p.ddm.throughput_fps),
+            format!("{:.2}", p.ddm_search.throughput_fps),
+            format!("{:.2}", p.unlimited.throughput_fps),
+            format!("{:.5}", p.gpu_tops_per_watt),
+            format!("{:.3}", p.no_ddm.tops_per_watt),
+            format!("{:.3}", p.ddm.tops_per_watt),
+            format!("{:.3}", p.ddm_search.tops_per_watt),
+            format!("{:.3}", p.unlimited.tops_per_watt),
+        ]);
+    }
+    (thr, eff, csv)
+}
+
+/// §III-B headline factors derived from a Fig. 6 sweep (at the largest batch).
+pub fn headline_factors(points: &[Fig6Point]) -> Table {
+    let p = points.last().expect("non-empty sweep");
+    let mut t = Table::new(
+        format!("Headline factors (batch {})", p.batch),
+        vec!["metric", "measured", "paper"],
+    );
+    t.row(vec![
+        "DDM vs no-DDM throughput".into(),
+        format!("{:.2}x", p.ddm.throughput_fps / p.no_ddm.throughput_fps),
+        "2.35x".into(),
+    ]);
+    t.row(vec![
+        "DDM vs no-DDM energy eff".into(),
+        format!(
+            "{:+.1}%",
+            (p.ddm.tops_per_watt / p.no_ddm.tops_per_watt - 1.0) * 100.0
+        ),
+        "+0.5%".into(),
+    ]);
+    t.row(vec![
+        "compact/unlimited throughput".into(),
+        format!(
+            "{:.1}%",
+            100.0 * p.ddm.throughput_fps / p.unlimited.throughput_fps
+        ),
+        "56.5%".into(),
+    ]);
+    t.row(vec![
+        "compact/unlimited energy eff".into(),
+        format!(
+            "{:.1}%",
+            100.0 * p.ddm.tops_per_watt / p.unlimited.tops_per_watt
+        ),
+        "58.6%".into(),
+    ]);
+    t.row(vec![
+        "area efficiency ratio".into(),
+        format!("{:.2}x", p.ddm.gops_per_mm2 / p.unlimited.gops_per_mm2),
+        "1.3x".into(),
+    ]);
+    t.row(vec![
+        "DDM+search vs no-DDM throughput".into(),
+        format!("{:.2}x", p.ddm_search.throughput_fps / p.no_ddm.throughput_fps),
+        "2.35x".into(),
+    ]);
+    t.row(vec![
+        "DDM+search/unlimited throughput".into(),
+        format!(
+            "{:.1}%",
+            100.0 * p.ddm_search.throughput_fps / p.unlimited.throughput_fps
+        ),
+        "56.5%".into(),
+    ]);
+    t.row(vec![
+        "vs GPU throughput".into(),
+        format!("{:.2}x", p.ddm.throughput_fps / p.gpu_fps),
+        "4.56x".into(),
+    ]);
+    t.row(vec![
+        "vs GPU energy eff".into(),
+        format!("{:.0}x", p.ddm.tops_per_watt / p.gpu_tops_per_watt),
+        "157x".into(),
+    ]);
+    t
+}
+
+/// Fig. 7: computation-energy proportion vs batch.
+pub fn fig7_table(points: &[Fig7Point]) -> (Table, Csv) {
+    let mut t = Table::new(
+        "Fig 7: computation energy proportion of total energy",
+        vec!["batch", "compact", "unlimited"],
+    );
+    let mut csv = Csv::new(vec!["batch", "compact_fraction", "unlimited_fraction"]);
+    for p in points {
+        t.row(vec![
+            p.batch.to_string(),
+            format!("{:.1}%", 100.0 * p.compact_fraction),
+            format!("{:.1}%", 100.0 * p.unlimited_fraction),
+        ]);
+        csv.row(vec![
+            p.batch.to_string(),
+            format!("{:.4}", p.compact_fraction),
+            format!("{:.4}", p.unlimited_fraction),
+        ]);
+    }
+    (t, csv)
+}
+
+/// Fig. 8: NN-size exploration.
+pub fn fig8_table(points: &[Fig8Point]) -> (Table, Csv) {
+    let mut t = Table::new(
+        "Fig 8: max NN size exploration (compact 41.5mm² chip)",
+        vec![
+            "network",
+            "weights(M)",
+            "no_ddm_fps",
+            "ddm_fps",
+            "unlimited_fps",
+            "ddm_tops_per_w",
+        ],
+    );
+    let mut csv = Csv::new(vec![
+        "network",
+        "weights",
+        "no_ddm_fps",
+        "ddm_fps",
+        "unlimited_fps",
+        "no_ddm_tpw",
+        "ddm_tpw",
+        "unlimited_tpw",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.network.clone(),
+            format!("{:.1}", p.weights as f64 / 1e6),
+            format!("{:.0}", p.no_ddm.throughput_fps),
+            format!("{:.0}", p.ddm.throughput_fps),
+            format!("{:.0}", p.unlimited.throughput_fps),
+            format!("{:.2}", p.ddm.tops_per_watt),
+        ]);
+        csv.row(vec![
+            p.network.clone(),
+            p.weights.to_string(),
+            format!("{:.2}", p.no_ddm.throughput_fps),
+            format!("{:.2}", p.ddm.throughput_fps),
+            format!("{:.2}", p.unlimited.throughput_fps),
+            format!("{:.3}", p.no_ddm.tops_per_watt),
+            format!("{:.3}", p.ddm.tops_per_watt),
+            format!("{:.3}", p.unlimited.tops_per_watt),
+        ]);
+    }
+    (t, csv)
+}
+
+/// Fig. 1 helper (used by the CLI): write a CSV under `results/`.
+pub fn write_csv(csv: &Csv, name: &str) -> std::io::Result<std::path::PathBuf> {
+    let path = Path::new("results").join(name);
+    csv.write(&path)?;
+    Ok(path)
+}
+
+/// Area-unlimited chip area for one network (convenience for Fig. 1 tests).
+pub fn unlimited_area_for(net_name: &str) -> anyhow::Result<f64> {
+    let net = resnet::by_name(net_name, 100)?;
+    let cfg = unlimited_chip(&presets::compact_rram_41mm2(), &net);
+    Ok(area::chip_area_mm2(&cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_reproduces_paper_endpoints() {
+        let (t, csv) = fig1_table();
+        let rendered = t.render();
+        assert!(rendered.contains("resnet152"));
+        assert_eq!(csv.num_rows(), 5);
+        // R152 endpoints (the two numbers the paper states)
+        let s = csv.to_string();
+        let r152 = s.lines().last().unwrap();
+        let cells: Vec<&str> = r152.split(',').collect();
+        let rram: f64 = cells[2].parse().unwrap();
+        let sram: f64 = cells[3].parse().unwrap();
+        assert!((rram - 292.7).abs() / 292.7 < 0.02, "rram {rram}");
+        assert!((sram - 934.5).abs() / 934.5 < 0.02, "sram {sram}");
+    }
+
+    #[test]
+    fn headline_table_renders() {
+        use crate::cfg::presets;
+        use crate::explore::fig6_sweep;
+        let net = crate::nn::resnet::resnet34(100);
+        let pts = fig6_sweep(&net, &presets::lpddr5(), &[64]);
+        let t = headline_factors(&pts);
+        let s = t.render();
+        assert!(s.contains("2.35x"));
+        assert!(s.contains("DDM vs no-DDM"));
+    }
+}

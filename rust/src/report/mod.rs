@@ -1,0 +1,6 @@
+//! Report generation: aligned tables + CSV series for every figure.
+
+pub mod figures;
+pub mod table;
+
+pub use table::Table;

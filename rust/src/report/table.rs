@@ -1,0 +1,68 @@
+//! Aligned-table rendering shared by CLI reports and benches.
+
+/// A titled table of string cells with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: Vec<&str>) -> Self {
+        Table {
+            title: title.into(),
+            rows: vec![header.into_iter().map(String::from).collect()],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.rows[0].len(), "table width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn num_data_rows(&self) -> usize {
+        self.rows.len() - 1
+    }
+
+    /// Render with a title, header separator, and aligned columns.
+    pub fn render(&self) -> String {
+        let body = crate::bench_harness::align(&self.rows);
+        let mut lines: Vec<&str> = body.lines().collect();
+        let sep = "-".repeat(lines.first().map(|l| l.chars().count()).unwrap_or(0));
+        let mut out = format!("== {} ==\n", self.title);
+        if !lines.is_empty() {
+            out.push_str(lines.remove(0));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for l in lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_title_and_separator() {
+        let mut t = Table::new("Fig X", vec!["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.starts_with("== Fig X =="));
+        assert!(s.contains("---"));
+        assert!(s.contains("1"));
+        assert_eq!(t.num_data_rows(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_bad_width() {
+        Table::new("t", vec!["a"]).row(vec!["1".into(), "2".into()]);
+    }
+}

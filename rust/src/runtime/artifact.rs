@@ -1,0 +1,220 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Every artifact is an HLO-text file plus typed i32 tensor
+//! I/O specs (see aot.py for why i32 is the interchange dtype).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::{self, Json};
+
+/// Tensor spec: shape + dtype (always i32 in the current contract).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub macs: u64,
+    pub description: String,
+}
+
+impl ArtifactEntry {
+    /// Leading dimension of the first input — the batch capacity of this
+    /// compiled variant.
+    pub fn batch_capacity(&self) -> usize {
+        self.inputs
+            .first()
+            .and_then(|t| t.shape.first())
+            .copied()
+            .unwrap_or(1)
+    }
+}
+
+/// Parsed manifest + its directory (for resolving files).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: u64,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+fn parse_specs(v: Option<&Json>, what: &str) -> anyhow::Result<Vec<TensorSpec>> {
+    let arr = v
+        .and_then(Json::as_arr)
+        .with_context(|| format!("manifest entry missing `{what}`"))?;
+    arr.iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("tensor missing shape")?
+                .iter()
+                .map(|d| d.as_u64().map(|x| x as usize).context("bad dim"))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            Ok(TensorSpec {
+                shape,
+                dtype: t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("i32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let doc = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_u64)
+            .context("manifest missing version")?;
+        let mut entries = BTreeMap::new();
+        let obj = doc
+            .get("entries")
+            .and_then(Json::as_obj)
+            .context("manifest missing entries")?;
+        for (name, e) in obj {
+            let entry = ArtifactEntry {
+                name: name.clone(),
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("entry missing file")?
+                    .to_string(),
+                inputs: parse_specs(e.get("inputs"), "inputs")?,
+                outputs: parse_specs(e.get("outputs"), "outputs")?,
+                macs: e.get("macs").and_then(Json::as_u64).unwrap_or(0),
+                description: e
+                    .get("description")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            };
+            for t in entry.inputs.iter().chain(&entry.outputs) {
+                if t.dtype != "i32" && t.dtype != "int32" {
+                    bail!("entry {name}: unsupported dtype {}", t.dtype);
+                }
+            }
+            entries.insert(name.clone(), entry);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            version,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.entries.get(name).with_context(|| {
+            format!(
+                "artifact `{name}` not in manifest (have: {})",
+                self.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Entries whose name starts with `prefix`, sorted by batch capacity —
+    /// the batcher uses this to pick the smallest fitting variant.
+    pub fn variants(&self, prefix: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> = self
+            .entries
+            .values()
+            .filter(|e| e.name.starts_with(prefix))
+            .collect();
+        v.sort_by_key(|e| e.batch_capacity());
+        v
+    }
+}
+
+/// Default artifacts directory: `$PIMFLOW_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("PIMFLOW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 2,
+        "entries": {
+            "tiny_cnn_b1": {"file": "tiny_cnn_b1.hlo.txt",
+                "inputs": [{"shape": [1,32,32,3], "dtype": "i32"}],
+                "outputs": [{"shape": [1,100], "dtype": "int32"}],
+                "macs": 22000000, "description": "tiny"},
+            "tiny_cnn_b4": {"file": "tiny_cnn_b4.hlo.txt",
+                "inputs": [{"shape": [4,32,32,3], "dtype": "i32"}],
+                "outputs": [{"shape": [4,100], "dtype": "int32"}],
+                "macs": 88000000, "description": "tiny"}
+        }
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.version, 2);
+        let e = m.entry("tiny_cnn_b1").unwrap();
+        assert_eq!(e.inputs[0].elements(), 32 * 32 * 3);
+        assert_eq!(e.batch_capacity(), 1);
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/a/tiny_cnn_b1.hlo.txt"));
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn variants_sorted_by_capacity() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let v = m.variants("tiny_cnn");
+        assert_eq!(v.len(), 2);
+        assert!(v[0].batch_capacity() < v[1].batch_capacity());
+    }
+
+    #[test]
+    fn rejects_non_i32() {
+        let bad = SAMPLE.replace("\"i32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn repo_manifest_loads_when_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.contains_key("crossbar_mvm"));
+            assert!(!m.variants("tiny_cnn").is_empty());
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT client wrapper: load HLO text, compile, execute. Adapted from the
+//! verified `/opt/xla-example/load_hlo` pattern — HLO *text* is the
+//! interchange format (serialized protos from jax ≥ 0.5 carry 64-bit ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus compiled-executable factory.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text file and compile it for this client.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<CompiledModule> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledModule { exe })
+    }
+}
+
+/// A compiled executable. Inputs/outputs are i32 tensors per the artifact
+/// contract; jax lowering used `return_tuple=True` so results unwrap from
+/// a 1-tuple (or n-tuple).
+pub struct CompiledModule {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledModule {
+    /// Execute with i32 tensors: `(data, dims)` pairs. Returns the flat
+    /// i32 contents of each tuple element.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[usize])]) -> Result<Vec<Vec<i32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            anyhow::ensure!(
+                data.len() == dims.iter().product::<usize>(),
+                "input data len {} != shape {:?}",
+                data.len(),
+                dims
+            );
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .context("reshaping input literal")?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing module")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // jax lowered with return_tuple=True: decompose the tuple.
+        let elems = result.to_tuple().context("decomposing result tuple")?;
+        elems
+            .into_iter()
+            .map(|l| l.to_vec::<i32>().context("reading i32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn client_comes_up() {
+        let c = RuntimeClient::cpu().unwrap();
+        assert!(c.device_count() >= 1);
+        assert!(!c.platform().is_empty());
+    }
+
+    /// End-to-end: compile the crossbar artifact and check its numerics
+    /// against a host-side integer matmul — the same oracle the Python
+    /// tests use.
+    #[test]
+    fn crossbar_artifact_matches_integer_matmul() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let entry = manifest.entry("crossbar_mvm").unwrap();
+        let client = RuntimeClient::cpu().unwrap();
+        let module = client.compile_hlo_file(&manifest.hlo_path(entry)).unwrap();
+
+        let mut rng = crate::util::Rng::new(42);
+        let x: Vec<i32> = (0..8 * 128).map(|_| rng.range_i64(0, 255) as i32).collect();
+        let w: Vec<i32> = (0..128 * 32)
+            .map(|_| rng.range_i64(-128, 127) as i32)
+            .collect();
+        let out = module
+            .run_i32(&[(&x, &[8, 128]), (&w, &[128, 32])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let y = &out[0];
+        assert_eq!(y.len(), 8 * 32);
+        for m in 0..8 {
+            for n in 0..32 {
+                let expect: i64 = (0..128)
+                    .map(|k| x[m * 128 + k] as i64 * w[k * 32 + n] as i64)
+                    .sum();
+                assert_eq!(y[m * 32 + n] as i64, expect, "({m},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn run_rejects_bad_shapes() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let entry = manifest.entry("crossbar_mvm").unwrap();
+        let client = RuntimeClient::cpu().unwrap();
+        let module = client.compile_hlo_file(&manifest.hlo_path(entry)).unwrap();
+        let x = vec![0i32; 7];
+        let w = vec![0i32; 128 * 32];
+        assert!(module.run_i32(&[(&x, &[8, 128]), (&w, &[128, 32])]).is_err());
+    }
+}

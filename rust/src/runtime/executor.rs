@@ -1,0 +1,189 @@
+//! High-level executor: an artifact entry bound to its compiled module,
+//! with shape validation, batch padding, and a startup self-check.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactEntry, Manifest};
+use super::client::{CompiledModule, RuntimeClient};
+
+/// One compiled artifact ready to serve.
+pub struct Executor {
+    pub entry: ArtifactEntry,
+    module: CompiledModule,
+}
+
+impl Executor {
+    /// Compile `entry` from `manifest` on `client`.
+    pub fn build(client: &RuntimeClient, manifest: &Manifest, name: &str) -> Result<Executor> {
+        let entry = manifest.entry(name)?.clone();
+        let module = client
+            .compile_hlo_file(&manifest.hlo_path(&entry))
+            .with_context(|| format!("compiling executor for `{name}`"))?;
+        Ok(Executor { entry, module })
+    }
+
+    /// Run with exactly the artifact's declared shapes.
+    pub fn run(&self, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "`{}` expects {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        let mut pairs: Vec<(&[i32], &[usize])> = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&self.entry.inputs) {
+            anyhow::ensure!(
+                data.len() == spec.elements(),
+                "`{}` input expects {} elements ({:?}), got {}",
+                self.entry.name,
+                spec.elements(),
+                spec.shape,
+                data.len()
+            );
+            pairs.push((data, &spec.shape));
+        }
+        self.module.run_i32(&pairs)
+    }
+
+    /// Batch capacity of this compiled variant.
+    pub fn capacity(&self) -> usize {
+        self.entry.batch_capacity()
+    }
+
+    /// Per-item element count of the first input (e.g. 32·32·3).
+    pub fn item_elements(&self) -> usize {
+        let spec = &self.entry.inputs[0];
+        spec.elements() / self.capacity().max(1)
+    }
+
+    /// Per-item element count of the first output (e.g. 100 logits).
+    pub fn out_item_elements(&self) -> usize {
+        let spec = &self.entry.outputs[0];
+        spec.elements() / self.capacity().max(1)
+    }
+
+    /// Run `count ≤ capacity` items through a single-input batched
+    /// artifact, zero-padding the tail, and return per-item outputs.
+    pub fn run_padded(&self, items: &[i32], count: usize) -> Result<Vec<Vec<i32>>> {
+        let cap = self.capacity();
+        anyhow::ensure!(count >= 1 && count <= cap, "count {count} > capacity {cap}");
+        let per_in = self.item_elements();
+        anyhow::ensure!(
+            items.len() == count * per_in,
+            "items len {} != {count} × {per_in}",
+            items.len()
+        );
+        let mut padded = items.to_vec();
+        padded.resize(cap * per_in, 0);
+        let outs = self.run(&[&padded])?;
+        let per_out = self.out_item_elements();
+        Ok((0..count)
+            .map(|i| outs[0][i * per_out..(i + 1) * per_out].to_vec())
+            .collect())
+    }
+}
+
+/// Serving bundle: the tiny-CNN batch variants compiled and self-checked.
+pub struct ExecutorPool {
+    /// Sorted by ascending capacity.
+    pub variants: Vec<Executor>,
+}
+
+impl ExecutorPool {
+    /// Compile all `tiny_cnn_*` variants and self-check the runtime by
+    /// comparing `crossbar_mvm` against its `_ref` oracle artifact.
+    pub fn load(dir: &Path) -> Result<ExecutorPool> {
+        let manifest = Manifest::load(dir)?;
+        let client = RuntimeClient::cpu()?;
+        Self::self_check(&client, &manifest)?;
+        let mut variants = Vec::new();
+        for e in manifest.variants("tiny_cnn") {
+            variants.push(Executor::build(&client, &manifest, &e.name)?);
+        }
+        anyhow::ensure!(!variants.is_empty(), "no tiny_cnn artifacts in {dir:?}");
+        Ok(ExecutorPool { variants })
+    }
+
+    /// Runtime self-check: the Pallas-kernel artifact and the pure-jnp
+    /// oracle artifact must agree bit-for-bit on random inputs.
+    fn self_check(client: &RuntimeClient, manifest: &Manifest) -> Result<()> {
+        let (Ok(kernel), Ok(oracle)) = (
+            Executor::build(client, manifest, "crossbar_mvm"),
+            Executor::build(client, manifest, "crossbar_mvm_ref"),
+        ) else {
+            log::warn!("self-check artifacts missing; skipping");
+            return Ok(());
+        };
+        let mut rng = crate::util::Rng::new(7);
+        let x: Vec<i32> = (0..8 * 128).map(|_| rng.range_i64(0, 255) as i32).collect();
+        let w: Vec<i32> = (0..128 * 32)
+            .map(|_| rng.range_i64(-128, 127) as i32)
+            .collect();
+        let a = kernel.run(&[&x, &w])?;
+        let b = oracle.run(&[&x, &w])?;
+        anyhow::ensure!(a == b, "runtime self-check failed: kernel != oracle");
+        log::info!("runtime self-check passed (crossbar_mvm == oracle)");
+        Ok(())
+    }
+
+    /// Smallest variant that fits `count` items; falls back to the largest.
+    pub fn pick(&self, count: usize) -> &Executor {
+        self.variants
+            .iter()
+            .find(|e| e.capacity() >= count)
+            .unwrap_or_else(|| self.variants.last().expect("non-empty pool"))
+    }
+
+    pub fn max_capacity(&self) -> usize {
+        self.variants.last().map(|e| e.capacity()).unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn pool_loads_and_self_checks() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let pool = ExecutorPool::load(&dir).unwrap();
+        assert!(pool.max_capacity() >= 4);
+        // pick() semantics
+        assert!(pool.pick(1).capacity() >= 1);
+        assert!(pool.pick(3).capacity() >= 3);
+        let over = pool.pick(10_000);
+        assert_eq!(over.capacity(), pool.max_capacity());
+    }
+
+    #[test]
+    fn tiny_cnn_inference_is_deterministic_and_padded() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let pool = ExecutorPool::load(&dir).unwrap();
+        let exe = pool.pick(2);
+        let per = exe.item_elements();
+        let mut rng = crate::util::Rng::new(3);
+        let items: Vec<i32> = (0..2 * per).map(|_| rng.range_i64(0, 255) as i32).collect();
+        let out1 = exe.run_padded(&items, 2).unwrap();
+        let out2 = exe.run_padded(&items, 2).unwrap();
+        assert_eq!(out1, out2);
+        assert_eq!(out1.len(), 2);
+        assert_eq!(out1[0].len(), 100);
+        // padding must not affect the real items: compare against b1 run
+        let exe1 = pool.pick(1);
+        let single = exe1.run_padded(&items[..per], 1).unwrap();
+        assert_eq!(single[0], out1[0], "batch padding changed item 0");
+    }
+}

@@ -1,0 +1,12 @@
+//! Serving runtime: PJRT client ([`client`]), artifact manifest
+//! ([`artifact`]), and the compiled-executable pool ([`executor`]) the
+//! coordinator dispatches batches to. Python never runs here — artifacts
+//! were AOT-compiled to HLO text at build time.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactEntry, Manifest, TensorSpec};
+pub use client::{CompiledModule, RuntimeClient};
+pub use executor::{Executor, ExecutorPool};

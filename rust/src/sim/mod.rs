@@ -1,0 +1,227 @@
+//! Top-level system simulator: compose chip + DRAM + partition + DDM +
+//! pipeline into one call and emit a [`SystemReport`] with the paper's
+//! metrics.
+
+use crate::cfg::chip::ChipConfig;
+use crate::cfg::dram::DramConfig;
+use crate::cfg::sim::PipelineCase;
+use crate::ddm::{self, DdmResult};
+use crate::dram::Trace;
+use crate::metrics;
+use crate::nn::Network;
+use crate::partition::{partition, PartitionPlan};
+use crate::pim::{ChipModel, EnergyLedger};
+use crate::pipeline::{simulate, PipelineReport};
+
+/// One simulated operating point with every reported metric.
+#[derive(Debug, Clone)]
+pub struct SystemReport {
+    pub network: String,
+    pub chip_name: String,
+    pub batch: u32,
+    pub num_parts: usize,
+    pub throughput_fps: f64,
+    pub per_ifm_ns: f64,
+    pub tops_per_watt: f64,
+    pub gops_per_mm2: f64,
+    pub area_mm2: f64,
+    pub energy: EnergyLedger,
+    /// Fig. 7: on-chip computation share of total energy.
+    pub compute_fraction: f64,
+    pub pipeline: PipelineReport,
+}
+
+impl SystemReport {
+    pub fn trace(&self) -> &Trace {
+        &self.pipeline.trace
+    }
+}
+
+/// How part boundaries are chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// The paper's §II-C greedy packing (default; what the figures use).
+    Greedy,
+    /// Fig. 2's "search iteration": DP boundary search minimizing
+    /// Σ_p T_p under per-part DDM (see `partition::search`).
+    Search,
+}
+
+/// Configured simulator: chip + DRAM + scheduling options.
+#[derive(Debug, Clone)]
+pub struct System {
+    pub chip: ChipConfig,
+    pub dram: DramConfig,
+    ddm: bool,
+    case: PipelineCase,
+    strategy: PartitionStrategy,
+}
+
+impl System {
+    pub fn new(chip: ChipConfig, dram: DramConfig) -> Self {
+        System {
+            chip,
+            dram,
+            ddm: true,
+            case: PipelineCase::Auto,
+            strategy: PartitionStrategy::Greedy,
+        }
+    }
+
+    /// Enable/disable the Dynamic Duplication Method.
+    pub fn with_ddm(mut self, on: bool) -> Self {
+        self.ddm = on;
+        self
+    }
+
+    pub fn with_case(mut self, case: PipelineCase) -> Self {
+        self.case = case;
+        self
+    }
+
+    /// Select the partition strategy (greedy §II-C vs Fig. 2 search).
+    pub fn with_strategy(mut self, strategy: PartitionStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Partition `net` for this chip (exposed for inspection/tests).
+    pub fn plan(&self, net: &Network) -> anyhow::Result<PartitionPlan> {
+        let chip = ChipModel::new(self.chip.clone())?;
+        let greedy = partition(net, &chip)?;
+        Ok(match self.strategy {
+            PartitionStrategy::Greedy => greedy,
+            PartitionStrategy::Search => {
+                crate::partition::search_partition(&greedy, &chip)?.plan
+            }
+        })
+    }
+
+    /// Fallible run.
+    pub fn try_run(&self, net: &Network, batch: u32) -> anyhow::Result<SystemReport> {
+        let chip = ChipModel::new(self.chip.clone())?;
+        let plan = self.plan(net)?;
+        let dd: DdmResult = if self.ddm {
+            ddm::run(&plan, &chip)
+        } else {
+            DdmResult::disabled(&plan)
+        };
+        let pipe = simulate(net, &plan, &dd, &chip, &self.dram, batch, self.case)?;
+        let makespan_s = pipe.makespan_ns * 1e-9;
+        let area = chip.area_mm2();
+        let total_e = pipe.energy.total_j();
+        Ok(SystemReport {
+            network: net.name.clone(),
+            chip_name: chip.cfg.name.clone(),
+            batch,
+            num_parts: plan.num_parts(),
+            throughput_fps: metrics::fps(batch, makespan_s),
+            per_ifm_ns: pipe.per_ifm_ns,
+            tops_per_watt: metrics::tops_per_watt(net, batch, total_e),
+            gops_per_mm2: metrics::gops_per_mm2(
+                net,
+                metrics::fps(batch, makespan_s),
+                area,
+            ),
+            area_mm2: area,
+            compute_fraction: pipe.energy.compute_fraction(),
+            energy: pipe.energy,
+            pipeline: pipe,
+        })
+    }
+
+    /// Run, panicking on configuration errors (presets are pre-validated).
+    pub fn run(&self, net: &Network, batch: u32) -> SystemReport {
+        self.try_run(net, batch).expect("system simulation failed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::unlimited::unlimited_chip;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+
+    fn compact() -> System {
+        System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+    }
+
+    fn unlimited(net: &Network) -> System {
+        System::new(
+            unlimited_chip(&presets::compact_rram_41mm2(), net),
+            presets::lpddr5(),
+        )
+    }
+
+    #[test]
+    fn report_metrics_are_consistent() {
+        let net = resnet::resnet34(100);
+        let r = compact().run(&net, 64);
+        assert!(r.throughput_fps > 0.0);
+        assert!(r.num_parts >= 3);
+        // cross-check: fps and per_ifm agree
+        let fps_from_latency = 1e9 / r.per_ifm_ns;
+        assert!((r.throughput_fps - fps_from_latency).abs() / r.throughput_fps < 1e-6);
+        // Fig-8 regime: compact chip should stay above 8 TOPS/W
+        assert!(
+            r.tops_per_watt > 4.0,
+            "eff {} TOPS/W too low",
+            r.tops_per_watt
+        );
+    }
+
+    #[test]
+    fn paper_ordering_gpu_noddm_ddm_unlimited() {
+        let net = resnet::resnet34(100);
+        let batch = 256;
+        let ddm = compact().run(&net, batch);
+        let noddm = compact().with_ddm(false).run(&net, batch);
+        let unlim = unlimited(&net).run(&net, batch);
+        let gpu = crate::baselines::Rtx4090.throughput_fps(&net, batch);
+        assert!(
+            gpu < noddm.throughput_fps,
+            "gpu {gpu} !< noddm {}",
+            noddm.throughput_fps
+        );
+        assert!(noddm.throughput_fps < ddm.throughput_fps);
+        assert!(
+            ddm.throughput_fps < unlim.throughput_fps,
+            "ddm {} !< unlimited {}",
+            ddm.throughput_fps,
+            unlim.throughput_fps
+        );
+    }
+
+    #[test]
+    fn compact_has_better_area_efficiency() {
+        // §III-B: compact+DDM beats unlimited on GOPS/mm² (≈1.3×).
+        let net = resnet::resnet34(100);
+        let ddm = compact().run(&net, 256);
+        let unlim = unlimited(&net).run(&net, 256);
+        assert!(
+            ddm.gops_per_mm2 > unlim.gops_per_mm2,
+            "area eff: compact {} vs unlimited {}",
+            ddm.gops_per_mm2,
+            unlim.gops_per_mm2
+        );
+    }
+
+    #[test]
+    fn compute_fraction_rises_with_batch() {
+        // Fig. 7: weight reloads amortize, compute share grows.
+        let net = resnet::resnet34(100);
+        let small = compact().run(&net, 1);
+        let big = compact().run(&net, 1024);
+        assert!(big.compute_fraction > small.compute_fraction);
+        assert!(big.compute_fraction > 0.5, "{}", big.compute_fraction);
+    }
+
+    #[test]
+    fn invalid_chip_is_an_error() {
+        let mut cfg = presets::compact_rram_41mm2();
+        cfg.num_tiles = 0;
+        let sys = System::new(cfg, presets::lpddr5());
+        assert!(sys.try_run(&resnet::resnet18(100), 4).is_err());
+    }
+}

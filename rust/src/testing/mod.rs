@@ -1,0 +1,119 @@
+//! Property-testing substrate (offline registry carries no `proptest`).
+//!
+//! A generator is any `FnMut(&mut Rng) -> T`. [`check`] runs N random cases
+//! and, on failure, retries with the same seed to report a reproducible
+//! counterexample including the case index and seed.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (overridable via `PIMFLOW_PROP_CASES`).
+pub fn default_cases() -> u32 {
+    std::env::var("PIMFLOW_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run a property over `cases` random inputs. Panics with the seed and case
+/// index on the first failure so the counterexample replays exactly.
+pub fn check_with<T: std::fmt::Debug>(
+    seed: u64,
+    cases: u32,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// [`check_with`] using the default case count and a seed derived from the
+/// property name (stable across runs).
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = fnv1a(name.as_bytes());
+    check_with(seed, default_cases(), gen, prop);
+}
+
+/// FNV-1a for stable name→seed derivation.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Assert helper: build a `Result<(), String>` from a condition.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_with(
+            1,
+            32,
+            |r| r.range_u64(0, 100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        check_with(
+            2,
+            64,
+            |r| r.range_u64(0, 100),
+            |&v| {
+                if v < 90 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn name_seed_is_stable() {
+        assert_eq!(fnv1a(b"abc"), fnv1a(b"abc"));
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        fn p(v: u64) -> Result<(), String> {
+            prop_assert!(v < 10, "v={v} not < 10");
+            Ok(())
+        }
+        assert!(p(5).is_ok());
+        assert_eq!(p(20).unwrap_err(), "v=20 not < 10");
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal CSV writer for figure-series emission into `results/`.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// In-memory CSV table with RFC-4180 quoting on write.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Csv {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; must match the header width.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn quote(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    /// Render to a CSV string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .map(|c| Self::quote(c))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["1", "2"]).row(vec!["3", "4"]);
+        assert_eq!(c.to_string(), "a,b\n1,2\n3,4\n");
+    }
+
+    #[test]
+    fn quotes_special_cells() {
+        let mut c = Csv::new(vec!["x"]);
+        c.row(vec!["has,comma"]);
+        c.row(vec!["has\"quote"]);
+        assert_eq!(c.to_string(), "x\n\"has,comma\"\n\"has\"\"quote\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_mismatched_row() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["1"]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("pimflow_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(vec!["a"]);
+        c.row(vec!["1"]);
+        c.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\n1\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

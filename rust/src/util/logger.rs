@@ -1,0 +1,63 @@
+//! Minimal `log`-facade backend writing to stderr, controlled by
+//! `PIMFLOW_LOG` (error|warn|info|debug|trace; default info).
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::Once;
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:<5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger once; later calls are no-ops. Safe to call from tests.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("PIMFLOW_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        let logger: Box<StderrLogger> = Box::new(StderrLogger { max: level });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(match level {
+                Level::Error => LevelFilter::Error,
+                Level::Warn => LevelFilter::Warn,
+                Level::Info => LevelFilter::Info,
+                Level::Debug => LevelFilter::Debug,
+                Level::Trace => LevelFilter::Trace,
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke test");
+    }
+}

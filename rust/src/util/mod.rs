@@ -1,0 +1,15 @@
+//! Small self-contained utilities: deterministic PRNG, streaming statistics,
+//! SI-unit formatting, CSV emission, and a minimal logger.
+//!
+//! These exist because the offline registry carries no `rand`, `csv`, or
+//! `env_logger`; everything here is dependency-free.
+
+pub mod csv;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod units;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,197 @@
+//! Streaming statistics: Welford mean/variance plus percentile summaries.
+
+/// Streaming mean/variance accumulator (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Full-sample summary with percentiles (stores the sample).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    sorted: Vec<f64>,
+    w: Welford,
+}
+
+impl Summary {
+    pub fn from_samples(mut xs: Vec<f64>) -> Self {
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        Summary { sorted: xs, w }
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.w.mean()
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.w.stddev()
+    }
+
+    pub fn min(&self) -> f64 {
+        *self.sorted.first().unwrap_or(&f64::NAN)
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap_or(&f64::NAN)
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = p / 100.0 * (self.sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Relative difference `|a-b| / max(|a|,|b|)`, 0 when both are 0.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs());
+    if denom == 0.0 {
+        0.0
+    } else {
+        (a - b).abs() / denom
+    }
+}
+
+/// Geometric mean of strictly positive samples.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // sample variance of this classic set is 32/7
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(w.min(), 2.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s = Summary::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 4.0);
+        assert!((s.median() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let s = Summary::from_samples(vec![]);
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::from_samples(vec![3.5]);
+        assert_eq!(s.median(), 3.5);
+        assert_eq!(s.min(), 3.5);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn rel_diff_cases() {
+        assert_eq!(rel_diff(0.0, 0.0), 0.0);
+        assert!((rel_diff(1.0, 2.0) - 0.5).abs() < 1e-12);
+        assert!((rel_diff(-1.0, 1.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+}

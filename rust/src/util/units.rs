@@ -1,0 +1,109 @@
+//! SI-unit formatting for report tables: seconds, joules, bytes, ops.
+
+/// Format seconds with an auto-selected SI prefix.
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a == 0.0 {
+        "0 s".to_string()
+    } else if a < 1e-6 {
+        format!("{:.2} ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+/// Format joules with an auto-selected SI prefix.
+pub fn fmt_energy(joules: f64) -> String {
+    let a = joules.abs();
+    if a == 0.0 {
+        "0 J".to_string()
+    } else if a < 1e-9 {
+        format!("{:.2} pJ", joules * 1e12)
+    } else if a < 1e-6 {
+        format!("{:.2} nJ", joules * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2} µJ", joules * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2} mJ", joules * 1e3)
+    } else {
+        format!("{joules:.3} J")
+    }
+}
+
+/// Format a byte count (binary prefixes).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b < KIB {
+        format!("{bytes} B")
+    } else if b < KIB * KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else if b < KIB * KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    }
+}
+
+/// Format an operation count (decimal prefixes: K/M/G/T).
+pub fn fmt_ops(ops: f64) -> String {
+    let a = ops.abs();
+    if a < 1e3 {
+        format!("{ops:.0}")
+    } else if a < 1e6 {
+        format!("{:.2} K", ops / 1e3)
+    } else if a < 1e9 {
+        format!("{:.2} M", ops / 1e6)
+    } else if a < 1e12 {
+        format!("{:.2} G", ops / 1e9)
+    } else {
+        format!("{:.2} T", ops / 1e12)
+    }
+}
+
+/// Format a ratio as `N.NNx`.
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_prefixes() {
+        assert_eq!(fmt_time(0.0), "0 s");
+        assert_eq!(fmt_time(2.5e-9), "2.50 ns");
+        assert_eq!(fmt_time(3.2e-6), "3.20 µs");
+        assert_eq!(fmt_time(4.5e-3), "4.50 ms");
+        assert_eq!(fmt_time(1.5), "1.500 s");
+    }
+
+    #[test]
+    fn energy_prefixes() {
+        assert_eq!(fmt_energy(5e-12), "5.00 pJ");
+        assert_eq!(fmt_energy(5e-9), "5.00 nJ");
+        assert_eq!(fmt_energy(5e-6), "5.00 µJ");
+        assert_eq!(fmt_energy(5e-3), "5.00 mJ");
+        assert_eq!(fmt_energy(2.0), "2.000 J");
+    }
+
+    #[test]
+    fn byte_prefixes() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn ops_prefixes() {
+        assert_eq!(fmt_ops(500.0), "500");
+        assert_eq!(fmt_ops(1.5e3), "1.50 K");
+        assert_eq!(fmt_ops(2e9), "2.00 G");
+        assert_eq!(fmt_ops(3e12), "3.00 T");
+    }
+}

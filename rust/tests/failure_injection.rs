@@ -1,0 +1,183 @@
+//! Failure injection: corrupted artifacts, degenerate networks, hostile
+//! configs — everything must fail loudly and cleanly, never hang or UB.
+
+use std::path::PathBuf;
+
+use pimflow::cfg::presets;
+use pimflow::nn::{Layer, LayerKind, Network};
+use pimflow::partition::partition;
+use pimflow::pim::ChipModel;
+use pimflow::runtime::{ExecutorPool, Manifest};
+use pimflow::sim::System;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pimflow_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------- artifact-layer failures ----------
+
+#[test]
+fn missing_manifest_is_a_clean_error() {
+    let dir = tmpdir("nomanifest");
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("manifest"), "{err}");
+}
+
+#[test]
+fn corrupted_manifest_json_is_rejected() {
+    let dir = tmpdir("badjson");
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn manifest_missing_fields_is_rejected() {
+    let dir = tmpdir("nofields");
+    std::fs::write(dir.join("manifest.json"), r#"{"version": 2}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 2, "entries": {"x": {"inputs": [], "outputs": []}}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err()); // no file field
+}
+
+#[test]
+fn truncated_hlo_text_fails_at_compile() {
+    let dir = tmpdir("badhlo");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 2, "entries": {"tiny_cnn_b1": {
+            "file": "t.hlo.txt",
+            "inputs": [{"shape": [1,32,32,3], "dtype": "i32"}],
+            "outputs": [{"shape": [1,100], "dtype": "i32"}]}}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("t.hlo.txt"), "HloModule truncated_garbage {").unwrap();
+    assert!(ExecutorPool::load(&dir).is_err());
+}
+
+#[test]
+fn hlo_file_absent_fails_at_load() {
+    let dir = tmpdir("nofile");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 2, "entries": {"tiny_cnn_b1": {
+            "file": "missing.hlo.txt",
+            "inputs": [{"shape": [1,32,32,3], "dtype": "i32"}],
+            "outputs": [{"shape": [1,100], "dtype": "i32"}]}}}"#,
+    )
+    .unwrap();
+    assert!(ExecutorPool::load(&dir).is_err());
+}
+
+// ---------- simulator-layer failures & degenerate inputs ----------
+
+#[test]
+fn single_layer_network_simulates() {
+    let mut net = Network::new("one", 8, 3);
+    net.push(Layer::conv("only", 8, 3, 16, 3, 1, 1));
+    let r = System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+        .try_run(&net, 4)
+        .unwrap();
+    assert_eq!(r.num_parts, 1);
+    assert!(r.throughput_fps > 0.0);
+}
+
+#[test]
+fn fc_only_network_simulates_without_duplication() {
+    let mut net = Network::new("fc_only", 1, 1);
+    net.push(Layer::fc("fc1", 512, 512));
+    net.push(Layer::fc("fc2", 512, 100));
+    let sys = System::new(presets::compact_rram_41mm2(), presets::lpddr5());
+    let r = sys.try_run(&net, 8).unwrap();
+    assert!(r.throughput_fps > 0.0);
+    // DDM must not have duplicated FC layers — identical to no-DDM.
+    let no = sys.with_ddm(false).try_run(&net, 8).unwrap();
+    assert!((r.throughput_fps - no.throughput_fps).abs() / no.throughput_fps < 1e-9);
+}
+
+#[test]
+fn network_larger_than_chip_capacity_channel_splits() {
+    // A single conv whose weights exceed the whole compact chip.
+    let mut net = Network::new("giant", 8, 2048);
+    net.push(Layer::conv("huge", 8, 2048, 2048, 3, 1, 1)); // 37.7M weights
+    let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+    let plan = partition(&net, &chip).unwrap();
+    assert!(plan.num_parts() > 1);
+    assert_eq!(plan.total_weights(), net.total_weights());
+    let r = System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+        .try_run(&net, 2)
+        .unwrap();
+    assert!(r.throughput_fps > 0.0);
+}
+
+#[test]
+fn empty_network_is_rejected() {
+    let net = Network::new("empty", 32, 3);
+    assert!(System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+        .try_run(&net, 1)
+        .is_err());
+}
+
+#[test]
+fn zero_dimension_layer_is_rejected() {
+    let mut net = Network::new("zero", 8, 3);
+    net.push(Layer::conv("bad", 0, 3, 8, 3, 1, 1));
+    assert!(System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+        .try_run(&net, 1)
+        .is_err());
+}
+
+#[test]
+fn hostile_chip_configs_error_not_panic() {
+    use pimflow::cfg::chip::CellTech;
+    let base = presets::compact_rram_41mm2();
+    for mutate in [
+        Box::new(|c: &mut pimflow::cfg::ChipConfig| c.num_tiles = 0)
+            as Box<dyn Fn(&mut pimflow::cfg::ChipConfig)>,
+        Box::new(|c| c.subarray_rows = 0),
+        Box::new(|c| c.t_read_ns = -1.0),
+        Box::new(|c| c.weight_bits = 7),
+        Box::new(|c| {
+            c.cell = CellTech::Rram { bits_per_cell: 3 };
+        }),
+    ] {
+        let mut cfg = base.clone();
+        mutate(&mut cfg);
+        assert!(
+            System::new(cfg, presets::lpddr5())
+                .try_run(&pimflow::nn::resnet::tiny(100), 1)
+                .is_err(),
+            "hostile config accepted"
+        );
+    }
+}
+
+#[test]
+fn toml_config_attack_surface() {
+    // Deep nesting, huge numbers, duplicate keys, broken strings.
+    for bad in [
+        "batch = 99999999999999999999999999",
+        "a = 1\na = 2",
+        "s = \"unterminated",
+        "[sim]\nbatch = -5",
+        "[sim]\npipeline_case = \"nonsense\"",
+    ] {
+        assert!(
+            pimflow::cfg::Config::from_str(bad).is_err(),
+            "accepted: {bad}"
+        );
+    }
+}
+
+#[test]
+fn batch_zero_is_rejected_by_simulator() {
+    let err = System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+        .try_run(&pimflow::nn::resnet::tiny(100), 0);
+    assert!(err.is_err());
+}

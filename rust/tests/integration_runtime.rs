@@ -1,0 +1,192 @@
+//! Runtime + coordinator integration over the real AOT artifacts.
+//! These tests skip gracefully when `make artifacts` has not run.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
+use pimflow::runtime::{Executor, ExecutorPool, Manifest, RuntimeClient};
+use pimflow::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn kernel_artifact_equals_oracle_artifact_on_many_inputs() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = RuntimeClient::cpu().unwrap();
+    let kernel = Executor::build(&client, &manifest, "crossbar_mvm").unwrap();
+    let oracle = Executor::build(&client, &manifest, "crossbar_mvm_ref").unwrap();
+
+    let mut rng = Rng::new(99);
+    for trial in 0..5 {
+        let x: Vec<i32> = (0..8 * 128).map(|_| rng.range_i64(0, 255) as i32).collect();
+        let w: Vec<i32> = (0..128 * 32)
+            .map(|_| rng.range_i64(-128, 127) as i32)
+            .collect();
+        let a = kernel.run(&[&x, &w]).unwrap();
+        let b = oracle.run(&[&x, &w]).unwrap();
+        assert_eq!(a, b, "trial {trial}");
+    }
+}
+
+#[test]
+fn batch_variants_agree_on_shared_items() {
+    // The same image must produce identical logits through the b1, b4 and
+    // b16 compiled variants (weights are baked constants).
+    let dir = require_artifacts!();
+    let pool = ExecutorPool::load(&dir).unwrap();
+    let mut rng = Rng::new(5);
+    let per = pool.variants[0].item_elements();
+    let img: Vec<i32> = (0..per).map(|_| rng.range_i64(0, 255) as i32).collect();
+    let mut outputs = Vec::new();
+    for exe in &pool.variants {
+        let out = exe.run_padded(&img, 1).unwrap();
+        outputs.push(out[0].clone());
+    }
+    for pair in outputs.windows(2) {
+        assert_eq!(pair[0], pair[1], "variants disagree");
+    }
+}
+
+#[test]
+fn resnet_block_artifact_runs() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = RuntimeClient::cpu().unwrap();
+    let block = Executor::build(&client, &manifest, "resnet_block_b1").unwrap();
+    let mut rng = Rng::new(17);
+    let x: Vec<i32> = (0..8 * 8 * 32).map(|_| rng.range_i64(0, 200) as i32).collect();
+    let out = block.run(&[&x]).unwrap();
+    assert_eq!(out[0].len(), 8 * 8 * 32);
+    // u8-range activations out of the quantized block
+    assert!(out[0].iter().all(|&v| (0..=255).contains(&v)));
+}
+
+#[test]
+fn server_sustains_concurrent_load() {
+    let dir = require_artifacts!();
+    let server = std::sync::Arc::new(
+        Server::start(
+            &dir,
+            ServerConfig {
+                workers: 2,
+                policy: BatchPolicy {
+                    max_batch: 16,
+                    max_wait: Duration::from_millis(2),
+                },
+            },
+        )
+        .unwrap(),
+    );
+
+    let n_threads = 4;
+    let per_thread = 10;
+    let mut joins = Vec::new();
+    for t in 0..n_threads {
+        let server = std::sync::Arc::clone(&server);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + t as u64);
+            for _ in 0..per_thread {
+                let img: Vec<i32> = (0..IMAGE_ELEMENTS)
+                    .map(|_| rng.range_i64(0, 255) as i32)
+                    .collect();
+                let resp = server.submit_wait(img).unwrap();
+                assert_eq!(resp.logits.len(), 100);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = server.stats();
+    assert_eq!(snap.served, (n_threads * per_thread) as u64);
+    assert!(snap.latency.p99() < 60.0, "p99 {}s is absurd", snap.latency.p99());
+}
+
+#[test]
+fn batching_kicks_in_under_burst() {
+    let dir = require_artifacts!();
+    let server = Server::start(
+        &dir,
+        ServerConfig {
+            workers: 1,
+            policy: BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_millis(50),
+            },
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(2);
+    let mut pending = Vec::new();
+    for _ in 0..16 {
+        let img: Vec<i32> = (0..IMAGE_ELEMENTS)
+            .map(|_| rng.range_i64(0, 255) as i32)
+            .collect();
+        pending.push(server.submit(img).unwrap());
+    }
+    let responses: Vec<_> = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let snap = server.stats();
+    // a burst of 16 with a generous linger must form far fewer than 16 batches
+    assert!(
+        snap.batches <= 8,
+        "batching ineffective: {} batches for 16 requests",
+        snap.batches
+    );
+    assert!(responses.iter().any(|r| r.batch > 1));
+}
+
+#[test]
+fn golden_logits_match_python_reference() {
+    // artifacts/golden.json holds a fixed image and the logits computed by
+    // the JAX reference path at AOT time; the compiled artifact must
+    // reproduce them bit-for-bit through the Rust runtime.
+    let dir = require_artifacts!();
+    let golden_path = dir.join("golden.json");
+    if !golden_path.exists() {
+        eprintln!("skipping: golden.json not built");
+        return;
+    }
+    let text = std::fs::read_to_string(&golden_path).unwrap();
+    let doc = pimflow::util::json::parse(&text).unwrap();
+    let image: Vec<i32> = doc
+        .get("image")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+    let expect: Vec<i32> = doc
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(image.len(), IMAGE_ELEMENTS);
+    assert_eq!(expect.len(), 100);
+
+    let pool = ExecutorPool::load(&dir).unwrap();
+    for exe in &pool.variants {
+        let out = exe.run_padded(&image, 1).unwrap();
+        assert_eq!(out[0], expect, "{} deviates from python golden", exe.entry.name);
+    }
+}

@@ -1,0 +1,237 @@
+//! Property-based invariants over randomized chips, networks, and
+//! schedules, using the in-tree `testing` substrate (proptest is not
+//! available offline).
+
+use pimflow::cfg::chip::{CellTech, ChipConfig};
+use pimflow::cfg::{presets, PipelineCase};
+use pimflow::ddm;
+use pimflow::mapping::{duplication, map_part};
+use pimflow::nn::{resnet, Layer};
+use pimflow::partition::partition;
+use pimflow::pim::ChipModel;
+use pimflow::pipeline::simulate;
+use pimflow::prop_assert;
+use pimflow::testing::check;
+use pimflow::util::Rng;
+
+/// Random but valid chip config around the preset geometry.
+fn random_chip(r: &mut Rng) -> ChipConfig {
+    let mut cfg = presets::compact_rram_41mm2();
+    cfg.subarrays_per_pe = *r.choose(&[2u32, 4, 8]);
+    cfg.pes_per_tile = *r.choose(&[1u32, 2]);
+    cfg.num_tiles = r.range_u64(64, 512) as u32;
+    if r.chance(0.3) {
+        cfg.cell = CellTech::Sram;
+    }
+    cfg
+}
+
+fn random_net(r: &mut Rng) -> pimflow::nn::Network {
+    let nets = ["resnet18", "resnet34", "resnet50", "tiny"];
+    resnet::by_name(nets[r.index(nets.len())], 100).unwrap()
+}
+
+#[test]
+fn prop_partition_parts_always_fit_and_conserve_weights() {
+    check(
+        "partition_fits",
+        |r| (random_chip(r), random_net(r)),
+        |(cfg, net)| {
+            let chip = ChipModel::new(cfg.clone()).map_err(|e| e.to_string())?;
+            let plan = partition(net, &chip).map_err(|e| e.to_string())?;
+            for part in &plan.parts {
+                prop_assert!(
+                    part.tiles_used() <= chip.num_tiles(),
+                    "part uses {} of {}",
+                    part.tiles_used(),
+                    chip.num_tiles()
+                );
+                prop_assert!(!part.units.is_empty(), "empty part");
+            }
+            prop_assert!(
+                plan.total_weights() == net.total_weights(),
+                "weights not conserved: {} vs {}",
+                plan.total_weights(),
+                net.total_weights()
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ddm_always_fits_and_never_slows_any_part() {
+    check(
+        "ddm_fits",
+        |r| (random_chip(r), random_net(r)),
+        |(cfg, net)| {
+            let chip = ChipModel::new(cfg.clone()).map_err(|e| e.to_string())?;
+            let plan = partition(net, &chip).map_err(|e| e.to_string())?;
+            let dd = ddm::run(&plan, &chip);
+            for (part, dups) in plan.parts.iter().zip(&dd.dup_per_part) {
+                prop_assert!(
+                    duplication::tiles_with_dups(part, dups) <= chip.num_tiles(),
+                    "DDM overflow"
+                );
+                let base =
+                    pimflow::ddm::itp::part_interval_ns(&chip, &part.units, &vec![1; dups.len()]);
+                let tuned = pimflow::ddm::itp::part_interval_ns(&chip, &part.units, dups);
+                prop_assert!(tuned <= base + 1e-9, "DDM slowed a part: {tuned} > {base}");
+                for (u, &d) in part.units.iter().zip(dups) {
+                    prop_assert!(d >= 1, "dup zero");
+                    prop_assert!(!u.is_fc || d == 1, "FC duplicated");
+                    prop_assert!(d <= chip.max_dup(&u.layer), "cap exceeded");
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mapping_placements_are_disjoint() {
+    check(
+        "mapping_disjoint",
+        |r| (random_chip(r), random_net(r)),
+        |(cfg, net)| {
+            let chip = ChipModel::new(cfg.clone()).map_err(|e| e.to_string())?;
+            let plan = partition(net, &chip).map_err(|e| e.to_string())?;
+            let dd = ddm::run(&plan, &chip);
+            for (part, dups) in plan.parts.iter().zip(&dd.dup_per_part) {
+                let m = map_part(part, &chip, dups).map_err(|e| e.to_string())?;
+                let mut covered = vec![false; chip.num_tiles() as usize];
+                for p in &m.placements {
+                    for t in p.tile_start..p.tile_end() {
+                        prop_assert!(!covered[t as usize], "tile {t} double-booked");
+                        covered[t as usize] = true;
+                    }
+                }
+                let used = covered.iter().filter(|&&c| c).count() as u32;
+                prop_assert!(used == m.used_tiles, "used mismatch");
+                prop_assert!(
+                    m.used_tiles + m.idle_tiles == chip.num_tiles(),
+                    "tiles do not sum"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_throughput_monotone_in_batch() {
+    check(
+        "throughput_monotone",
+        |r| {
+            let b1 = r.range_u64(1, 200) as u32;
+            (random_net(r), b1, b1 * 2 + r.range_u64(0, 64) as u32)
+        },
+        |(net, b1, b2)| {
+            let sys = pimflow::sim::System::new(
+                presets::compact_rram_41mm2(),
+                presets::lpddr5(),
+            );
+            let r1 = sys.try_run(net, *b1).map_err(|e| e.to_string())?;
+            let r2 = sys.try_run(net, *b2).map_err(|e| e.to_string())?;
+            prop_assert!(
+                r2.throughput_fps >= r1.throughput_fps * 0.995,
+                "batch {} -> {} lowered FPS {} -> {}",
+                b1,
+                b2,
+                r1.throughput_fps,
+                r2.throughput_fps
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_energy_positive_and_fraction_bounded() {
+    check(
+        "energy_sane",
+        |r| {
+            (
+                random_net(r),
+                r.range_u64(1, 512) as u32,
+                *r.choose(&[PipelineCase::Case2, PipelineCase::Case3, PipelineCase::Auto]),
+            )
+        },
+        |(net, batch, case)| {
+            let r = pimflow::sim::System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+                .with_case(*case)
+                .try_run(net, *batch)
+                .map_err(|e| e.to_string())?;
+            let e = &r.energy;
+            for (name, v) in [
+                ("compute", e.compute_j),
+                ("wprog", e.wprog_j),
+                ("leak", e.leakage_j),
+                ("dram", e.dram_j),
+            ] {
+                prop_assert!(v > 0.0 && v.is_finite(), "{name} = {v}");
+            }
+            let f = e.compute_fraction();
+            prop_assert!((0.0..=1.0).contains(&f), "fraction {f}");
+            prop_assert!(r.per_ifm_ns > 0.0, "non-positive latency");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_layer_latency_scaling_laws() {
+    check(
+        "latency_laws",
+        |r| {
+            let hw = *r.choose(&[4u32, 8, 16, 32]);
+            let cin = *r.choose(&[16u32, 64, 256]);
+            let cout = *r.choose(&[16u32, 64, 512]);
+            (Layer::conv("l", hw, cin, cout, 3, 1, 1), r.range_u64(1, 16) as u32)
+        },
+        |(layer, dup)| {
+            let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+            let t1 = chip.layer_latency_ns(layer, 1);
+            let td = chip.layer_latency_ns(layer, *dup);
+            // duplication can only help, and at most by dup x
+            prop_assert!(td <= t1 + 1e-9, "dup slowed layer");
+            prop_assert!(
+                td * (*dup as f64) >= t1 - 1e-9,
+                "superlinear speedup: {t1} -> {td} at dup {dup}"
+            );
+            // latency ∝ O² at dup 1
+            let expect = layer.out_pixels() as f64 * chip.cfg.t_mvm_ns();
+            prop_assert!((t1 - expect).abs() < 1e-6, "latency law broken");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulate_trace_grows_linearly_with_batch_intermediates() {
+    check(
+        "trace_linear",
+        |r| (random_net(r), r.range_u64(2, 64) as u32),
+        |(net, batch)| {
+            let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+            let plan = partition(net, &chip).map_err(|e| e.to_string())?;
+            let dd = ddm::run(&plan, &chip);
+            let dram = presets::lpddr5();
+            let r1 = simulate(net, &plan, &dd, &chip, &dram, *batch, PipelineCase::Auto)
+                .map_err(|e| e.to_string())?;
+            let r2 = simulate(net, &plan, &dd, &chip, &dram, *batch * 2, PipelineCase::Auto)
+                .map_err(|e| e.to_string())?;
+            use pimflow::dram::TxPayload::*;
+            prop_assert!(
+                r2.trace.bytes_by_payload(Intermediate)
+                    == 2 * r1.trace.bytes_by_payload(Intermediate),
+                "intermediate bytes not linear in batch"
+            );
+            prop_assert!(
+                r2.trace.bytes_by_payload(Weights) == r1.trace.bytes_by_payload(Weights),
+                "weight bytes depend on batch"
+            );
+            Ok(())
+        },
+    );
+}
