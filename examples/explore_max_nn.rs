@@ -4,26 +4,32 @@
 //! Run: `cargo run --release --example explore_max_nn`
 
 use pimflow::cfg::presets;
-use pimflow::explore::{fig8_sweep, max_deployable, Floor};
+use pimflow::explore::{fig8_sweep, find_net, max_deployable, Design, Engine, Floor};
+use pimflow::nn::resnet;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let batch = 256;
-    let pts = fig8_sweep(&presets::lpddr5(), batch);
+    let engine = Engine::compact(presets::lpddr5());
+    let pts = fig8_sweep(&engine, batch)?;
 
     println!("NN-size exploration @ batch {batch} (compact 41.5 mm², LPDDR5)\n");
     println!(
         "{:<10} {:>10} {:>12} {:>12} {:>12} {:>10}",
         "network", "weights", "no-DDM FPS", "DDM FPS", "unlim FPS", "TOPS/W"
     );
-    for p in &pts {
+    for net in resnet::paper_family(100) {
+        let row = |d: Design| find_net(&pts, d, &net.name).expect("swept");
+        let no_ddm = row(Design::CompactNoDdm);
+        let ddm = row(Design::CompactDdm);
+        let unlim = row(Design::Unlimited);
         println!(
             "{:<10} {:>9.1}M {:>12.0} {:>12.0} {:>12.0} {:>10.2}",
-            p.network,
-            p.weights as f64 / 1e6,
-            p.no_ddm.throughput_fps,
-            p.ddm.throughput_fps,
-            p.unlimited.throughput_fps,
-            p.ddm.tops_per_watt
+            net.name,
+            ddm.weights as f64 / 1e6,
+            no_ddm.throughput_fps,
+            ddm.throughput_fps,
+            unlim.throughput_fps,
+            ddm.tops_per_watt
         );
     }
 
@@ -39,4 +45,5 @@ fn main() {
             None => println!("  >{min_fps:>5.0} FPS -> nothing fits"),
         }
     }
+    Ok(())
 }

@@ -1,47 +1,58 @@
 //! Quickstart: simulate ResNet-34 on the paper's 41.5 mm² compact PIM
-//! chip, with and without the Dynamic Duplication Method, and compare
-//! against the area-unlimited chip and the GPU baseline.
+//! chip through the sweep engine — one `Design` axis covering compact
+//! no-DDM / DDM / DDM+search, the area-unlimited chip, and the GPU
+//! baseline, with the plan cache doing the batch-invariant work once.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use pimflow::baselines::{unlimited_chip, Rtx4090};
 use pimflow::cfg::presets;
 use pimflow::nn::resnet;
-use pimflow::sim::System;
+use pimflow::sim::{find, Design, Engine};
 
 fn main() -> anyhow::Result<()> {
     let net = resnet::resnet34(100);
     let batch = 64;
 
-    let compact = presets::compact_rram_41mm2();
-    let dram = presets::lpddr5();
-
-    let ddm = System::new(compact.clone(), dram.clone()).try_run(&net, batch)?;
-    let no_ddm = System::new(compact.clone(), dram.clone())
-        .with_ddm(false)
-        .try_run(&net, batch)?;
-    let unlimited =
-        System::new(unlimited_chip(&compact, &net), dram).try_run(&net, batch)?;
-    let gpu_fps = Rtx4090.throughput_fps(&net, batch);
+    let engine = Engine::compact(presets::lpddr5());
+    let points = engine.sweep(&net, &Design::ALL, &[batch])?;
 
     println!("ResNet-34 / CIFAR-100 @ batch {batch} (8-bit, LPDDR5)\n");
     println!(
         "{:<22} {:>10} {:>12} {:>12} {:>10}",
         "design", "FPS", "TOPS/W", "GOPS/mm²", "area mm²"
     );
-    for (name, r) in [("compact no-DDM", &no_ddm), ("compact + DDM", &ddm), ("area-unlimited", &unlimited)] {
-        println!(
-            "{:<22} {:>10.0} {:>12.2} {:>12.1} {:>10.1}",
-            name, r.throughput_fps, r.tops_per_watt, r.gops_per_mm2, r.area_mm2
-        );
+    for p in &points {
+        if p.design == Design::Gpu {
+            println!(
+                "{:<22} {:>10.0}   (normalized comparison model)",
+                p.design.label(),
+                p.throughput_fps
+            );
+        } else {
+            println!(
+                "{:<22} {:>10.0} {:>12.2} {:>12.1} {:>10.1}",
+                p.design.label(),
+                p.throughput_fps,
+                p.tops_per_watt,
+                p.gops_per_mm2,
+                p.area_mm2
+            );
+        }
     }
-    println!("{:<22} {:>10.0}   (normalized comparison model)", "rtx 4090", gpu_fps);
 
+    let ddm = find(&points, Design::CompactDdm, batch).unwrap();
+    let no_ddm = find(&points, Design::CompactNoDdm, batch).unwrap();
+    let unlimited = find(&points, Design::Unlimited, batch).unwrap();
     println!(
         "\nDDM speedup: {:.2}x | compact/unlimited throughput: {:.1}% | parts: {}",
         ddm.throughput_fps / no_ddm.throughput_fps,
         100.0 * ddm.throughput_fps / unlimited.throughput_fps,
         ddm.num_parts,
+    );
+    let stats = engine.cache_stats();
+    println!(
+        "plan cache: {} misses / {} hits (plan + DDM computed once per design)",
+        stats.misses, stats.hits
     );
     Ok(())
 }

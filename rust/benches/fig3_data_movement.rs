@@ -1,21 +1,24 @@
 //! Bench: regenerate Fig. 3 (normalized DRAM transaction count vs batch,
-//! compact vs area-unlimited, ResNet-18 / LPDDR5) and time one sweep point.
+//! compact vs area-unlimited, ResNet-18 / LPDDR5) and time one sweep
+//! point through the shared engine.
 
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
-use pimflow::explore::{fig3_sweep, BATCHES};
+use pimflow::explore::{fig3_sweep, Engine, BATCHES};
 use pimflow::nn::resnet;
 use pimflow::report::figures;
 
 fn main() {
     let net = resnet::resnet18(100);
-    let dram = presets::lpddr5();
+    let engine = Engine::compact(presets::lpddr5());
 
     let mut b = Bench::from_env();
-    b.case("fig3_point_batch64", || fig3_sweep(&net, &dram, &[64]));
+    b.case("fig3_point_batch64", || {
+        fig3_sweep(&engine, &net, &[64]).unwrap()
+    });
     b.report();
 
-    let pts = fig3_sweep(&net, &dram, &BATCHES);
+    let pts = fig3_sweep(&engine, &net, &BATCHES).unwrap();
     let (table, csv) = figures::fig3_table(&pts);
     print!("{}", table.render());
     let _ = figures::write_csv(&csv, "fig3_data_movement.csv");

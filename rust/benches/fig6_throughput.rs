@@ -1,32 +1,49 @@
 //! Bench: regenerate Fig. 6 (throughput & energy efficiency vs batch for
-//! GPU / compact no-DDM / compact DDM / area-unlimited, ResNet-34) plus
-//! the §III-B headline factor table, and time one sweep point.
+//! GPU / compact no-DDM / compact DDM / DDM+search / area-unlimited,
+//! ResNet-34) plus the §III-B headline factor table, and time one sweep
+//! point through the shared engine.
 
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
-use pimflow::explore::{fig6_sweep, BATCHES};
+use pimflow::explore::{fig6_sweep, find, Design, Engine, BATCHES};
 use pimflow::nn::resnet;
 use pimflow::report::figures;
 
 fn main() {
     let net = resnet::resnet34(100);
-    let dram = presets::lpddr5();
+    let engine = Engine::compact(presets::lpddr5());
 
     let mut b = Bench::from_env();
-    b.case("fig6_point_batch64", || fig6_sweep(&net, &dram, &[64]));
+    b.case("fig6_point_batch64", || {
+        fig6_sweep(&engine, &net, &[64]).unwrap()
+    });
     b.report();
 
-    let pts = fig6_sweep(&net, &dram, &BATCHES);
-    let (thr, eff, csv) = figures::fig6_tables(&pts);
+    let pts = fig6_sweep(&engine, &net, &BATCHES).unwrap();
+    let (thr, eff, csv) = figures::fig6_tables(&pts).unwrap();
     print!("{}", thr.render());
     print!("{}", eff.render());
-    print!("{}", figures::headline_factors(&pts).render());
+    print!("{}", figures::headline_factors(&pts).unwrap().render());
     let _ = figures::write_csv(&csv, "fig6_throughput.csv");
 
+    let stats = engine.cache_stats();
+    println!(
+        "plan cache: {} misses (one per simulated design), {} hits",
+        stats.misses, stats.hits
+    );
+    assert_eq!(stats.misses, 4, "plan/DDM must be computed once per design");
+
     // Shape assertions (the paper's ordering must hold at large batch).
-    let p = pts.last().unwrap();
-    assert!(p.gpu_fps < p.no_ddm.throughput_fps);
-    assert!(p.no_ddm.throughput_fps < p.ddm.throughput_fps);
-    assert!(p.ddm.throughput_fps < p.unlimited.throughput_fps);
-    assert!(p.ddm.gops_per_mm2 > p.unlimited.gops_per_mm2, "area-eff advantage");
+    let last = *BATCHES.last().unwrap();
+    let gpu = find(&pts, Design::Gpu, last).unwrap();
+    let no_ddm = find(&pts, Design::CompactNoDdm, last).unwrap();
+    let ddm = find(&pts, Design::CompactDdm, last).unwrap();
+    let unlim = find(&pts, Design::Unlimited, last).unwrap();
+    assert!(gpu.throughput_fps < no_ddm.throughput_fps);
+    assert!(no_ddm.throughput_fps < ddm.throughput_fps);
+    assert!(ddm.throughput_fps < unlim.throughput_fps);
+    assert!(
+        ddm.gops_per_mm2 > unlim.gops_per_mm2,
+        "area-eff advantage"
+    );
 }

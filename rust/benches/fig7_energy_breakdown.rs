@@ -1,21 +1,23 @@
 //! Bench: regenerate Fig. 7 (computation-energy proportion vs batch) and
-//! time one sweep point.
+//! time one sweep point through the shared engine.
 
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
-use pimflow::explore::{fig7_sweep, BATCHES};
+use pimflow::explore::{fig7_sweep, Engine, BATCHES};
 use pimflow::nn::resnet;
 use pimflow::report::figures;
 
 fn main() {
     let net = resnet::resnet34(100);
-    let dram = presets::lpddr5();
+    let engine = Engine::compact(presets::lpddr5());
 
     let mut b = Bench::from_env();
-    b.case("fig7_point_batch64", || fig7_sweep(&net, &dram, &[64]));
+    b.case("fig7_point_batch64", || {
+        fig7_sweep(&engine, &net, &[64]).unwrap()
+    });
     b.report();
 
-    let pts = fig7_sweep(&net, &dram, &BATCHES);
+    let pts = fig7_sweep(&engine, &net, &BATCHES).unwrap();
     let (table, csv) = figures::fig7_table(&pts);
     print!("{}", table.render());
     let _ = figures::write_csv(&csv, "fig7_energy.csv");

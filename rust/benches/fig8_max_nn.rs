@@ -1,30 +1,34 @@
-//! Bench: regenerate Fig. 8 (max NN size exploration) and time one row.
+//! Bench: regenerate Fig. 8 (max NN size exploration) through the shared
+//! engine and time one row.
 
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
-use pimflow::explore::{fig8_sweep, max_deployable, Floor};
+use pimflow::explore::{ddm_row, fig8_sweep, max_deployable, Design, Engine, Floor};
+use pimflow::nn::resnet;
+
 use pimflow::report::figures;
-use pimflow::sim::System;
 
 fn main() {
-    let dram = presets::lpddr5();
+    let engine = Engine::compact(presets::lpddr5());
 
     let mut b = Bench::from_env();
-    let net = pimflow::nn::resnet::resnet50(100);
+    let net = resnet::resnet50(100);
     b.case("fig8_row_resnet50", || {
-        System::new(presets::compact_rram_41mm2(), dram.clone()).run(&net, 64)
+        engine.run(Design::CompactDdm, &net, 64).unwrap()
     });
     b.report();
 
-    let pts = fig8_sweep(&dram, 256);
-    let (table, csv) = figures::fig8_table(&pts);
+    let pts = fig8_sweep(&engine, 256).unwrap();
+    let (table, csv) = figures::fig8_table(&pts).unwrap();
     print!("{}", table.render());
     let _ = figures::write_csv(&csv, "fig8_max_nn.csv");
 
     // The paper's recommendation logic: pick a floor between the family
     // extremes and report the largest deployable network.
+    let first = ddm_row(&pts, "resnet18").unwrap();
+    let last = ddm_row(&pts, "resnet152").unwrap();
     let floor = Floor {
-        min_fps: (pts[0].ddm.throughput_fps + pts.last().unwrap().ddm.throughput_fps) / 2.0,
+        min_fps: (first.throughput_fps + last.throughput_fps) / 2.0,
         min_tops_per_watt: 4.0,
     };
     match max_deployable(&pts, floor) {
@@ -37,7 +41,7 @@ fn main() {
         None => println!("no network meets the floor"),
     }
     assert!(
-        pts.last().unwrap().ddm.throughput_fps < pts[0].ddm.throughput_fps,
+        last.throughput_fps < first.throughput_fps,
         "throughput must fall across the family"
     );
 }

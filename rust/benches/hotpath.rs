@@ -1,15 +1,19 @@
 //! Hot-path micro-benchmarks for the §Perf pass: the pieces that run
-//! inside every sweep point (partition, DDM, pipeline simulate) plus the
-//! substrate primitives they lean on.
+//! inside every sweep point (partition, DDM, pipeline simulate), the
+//! substrate primitives they lean on, and the engine-vs-uncached sweep
+//! comparison (the engine computes each design's plan/DDM once per
+//! network and fans batch points out in parallel).
 
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
 use pimflow::cfg::PipelineCase;
 use pimflow::ddm;
+use pimflow::explore::{fig6_sweep, BATCHES};
 use pimflow::nn::resnet;
 use pimflow::partition::partition;
 use pimflow::pim::ChipModel;
 use pimflow::pipeline::simulate;
+use pimflow::sim::{Design, Engine, System};
 
 fn main() {
     let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
@@ -31,10 +35,65 @@ fn main() {
     b.case("pipeline_sim_r34_b1024", || {
         simulate(&r34, &plan34, &dd34, &chip, &dram, 1024, PipelineCase::Auto).unwrap()
     });
+
+    // The acceptance comparison: the uncached path re-plans at every
+    // (design, batch) point; the engine plans once per design and then
+    // only pays the pipeline simulation. Both cover the same fig6 grid.
+    let sweep_batches = [1u32, 16, 256];
+    b.case("fig6_grid_uncached_system", || {
+        let compact = presets::compact_rram_41mm2();
+        let unlim = pimflow::baselines::unlimited_chip(&compact, &r34);
+        for &n in &sweep_batches {
+            let _ = System::new(compact.clone(), dram.clone())
+                .with_ddm(false)
+                .run(&r34, n);
+            let _ = System::new(compact.clone(), dram.clone()).run(&r34, n);
+            let _ = System::new(compact.clone(), dram.clone())
+                .with_strategy(pimflow::sim::PartitionStrategy::Search)
+                .run(&r34, n);
+            let _ = System::new(unlim.clone(), dram.clone()).run(&r34, n);
+        }
+    });
+    let warm = Engine::compact(dram.clone());
+    for d in Design::FIG6 {
+        warm.warm(d, &r34).unwrap();
+    }
+    b.case("fig6_grid_engine_warm", || {
+        warm.sweep(&r34, &Design::FIG6, &sweep_batches).unwrap()
+    });
+    b.case("fig6_grid_engine_cold", || {
+        Engine::compact(dram.clone())
+            .sweep(&r34, &Design::FIG6, &sweep_batches)
+            .unwrap()
+    });
     b.report();
+
+    let results = b.results();
+    let uncached = results
+        .iter()
+        .find(|r| r.name == "fig6_grid_uncached_system")
+        .unwrap()
+        .per_iter_s();
+    let engine = results
+        .iter()
+        .find(|r| r.name == "fig6_grid_engine_warm")
+        .unwrap()
+        .per_iter_s();
+    println!(
+        "engine speedup over uncached fig6 grid: {:.2}x (cached planning + parallel fan-out)",
+        uncached / engine
+    );
+    assert!(
+        engine < uncached,
+        "engine-backed sweep must beat the uncached path: {engine}s vs {uncached}s"
+    );
 
     // §Perf target: full fig6 sweep under 2 s.
     let t0 = std::time::Instant::now();
-    let _ = pimflow::explore::fig6_sweep(&r34, &dram, &pimflow::explore::BATCHES);
-    println!("full fig6 sweep: {:.3} s (target < 2 s)", t0.elapsed().as_secs_f64());
+    let eng = Engine::compact(dram.clone());
+    let _ = fig6_sweep(&eng, &r34, &BATCHES);
+    println!(
+        "full fig6 sweep: {:.3} s (target < 2 s)",
+        t0.elapsed().as_secs_f64()
+    );
 }

@@ -6,10 +6,14 @@
 //! 1) also grows. This module finds the smallest batch meeting a target
 //! fraction of asymptotic throughput, and the largest batch meeting a
 //! result-latency SLO.
+//!
+//! The probes run through the [`Engine`], so the chip/plan/DDM work is
+//! computed once and every batch probe pays only the pipeline simulation.
 
-use crate::cfg::dram::DramConfig;
+use anyhow::Result;
+
 use crate::nn::Network;
-use crate::sim::{System, SystemReport};
+use crate::sim::engine::{Design, Engine};
 
 /// One evaluated batch point.
 #[derive(Debug, Clone)]
@@ -21,8 +25,8 @@ pub struct BatchPoint {
     pub batch_latency_s: f64,
 }
 
-fn eval(sys: &System, net: &Network, batch: u32) -> anyhow::Result<BatchPoint> {
-    let r: SystemReport = sys.try_run(net, batch)?;
+fn eval(engine: &Engine, design: Design, net: &Network, batch: u32) -> Result<BatchPoint> {
+    let r = engine.system_report(design, net, batch)?;
     Ok(BatchPoint {
         batch,
         throughput_fps: r.throughput_fps,
@@ -33,15 +37,16 @@ fn eval(sys: &System, net: &Network, batch: u32) -> anyhow::Result<BatchPoint> {
 /// Smallest power-of-two batch whose throughput reaches `frac` of the
 /// throughput at `max_batch`.
 pub fn min_batch_for_throughput(
-    sys: &System,
+    engine: &Engine,
+    design: Design,
     net: &Network,
     frac: f64,
     max_batch: u32,
-) -> anyhow::Result<BatchPoint> {
-    let asymptote = eval(sys, net, max_batch)?.throughput_fps;
+) -> Result<BatchPoint> {
+    let asymptote = eval(engine, design, net, max_batch)?.throughput_fps;
     let mut b = 1u32;
     loop {
-        let p = eval(sys, net, b)?;
+        let p = eval(engine, design, net, b)?;
         if p.throughput_fps >= frac * asymptote || b >= max_batch {
             return Ok(p);
         }
@@ -52,15 +57,16 @@ pub fn min_batch_for_throughput(
 /// Largest power-of-two batch whose full-batch latency stays under
 /// `slo_s`; None if even batch 1 misses it.
 pub fn max_batch_for_latency(
-    sys: &System,
+    engine: &Engine,
+    design: Design,
     net: &Network,
     slo_s: f64,
     max_batch: u32,
-) -> anyhow::Result<Option<BatchPoint>> {
+) -> Result<Option<BatchPoint>> {
     let mut best: Option<BatchPoint> = None;
     let mut b = 1u32;
     while b <= max_batch {
-        let p = eval(sys, net, b)?;
+        let p = eval(engine, design, net, b)?;
         if p.batch_latency_s <= slo_s {
             best = Some(p);
         } else {
@@ -77,44 +83,48 @@ mod tests {
     use crate::cfg::presets;
     use crate::nn::resnet;
 
-    fn sys() -> System {
-        System::new(presets::compact_rram_41mm2(), presets::lpddr5())
-    }
-
-    fn dram() -> DramConfig {
-        presets::lpddr5()
+    fn engine() -> Engine {
+        Engine::compact(presets::lpddr5())
     }
 
     #[test]
     fn min_batch_hits_fraction() {
-        let _ = dram();
         let net = resnet::resnet18(100);
-        let p = min_batch_for_throughput(&sys(), &net, 0.8, 1024).unwrap();
-        let asym = sys().try_run(&net, 1024).unwrap().throughput_fps;
+        let eng = engine();
+        let p = min_batch_for_throughput(&eng, Design::CompactDdm, &net, 0.8, 1024).unwrap();
+        let asym = eval(&eng, Design::CompactDdm, &net, 1024)
+            .unwrap()
+            .throughput_fps;
         assert!(p.throughput_fps >= 0.8 * asym);
         // and the previous power of two must miss it (minimality)
         if p.batch > 1 {
-            let prev = sys().try_run(&net, p.batch / 2).unwrap().throughput_fps;
+            let prev = eval(&eng, Design::CompactDdm, &net, p.batch / 2)
+                .unwrap()
+                .throughput_fps;
             assert!(prev < 0.8 * asym);
         }
+        // the whole probe ladder shares one plan
+        assert_eq!(eng.cache_stats().misses, 1);
     }
 
     #[test]
     fn latency_slo_binds() {
         let net = resnet::resnet18(100);
+        let eng = engine();
         // generous SLO: some batch fits; tiny SLO: none does
-        let some = max_batch_for_latency(&sys(), &net, 1.0, 256).unwrap();
+        let some = max_batch_for_latency(&eng, Design::CompactDdm, &net, 1.0, 256).unwrap();
         assert!(some.is_some());
-        let none = max_batch_for_latency(&sys(), &net, 1e-9, 256).unwrap();
+        let none = max_batch_for_latency(&eng, Design::CompactDdm, &net, 1e-9, 256).unwrap();
         assert!(none.is_none());
     }
 
     #[test]
     fn latency_monotone_in_batch() {
         let net = resnet::resnet18(100);
+        let eng = engine();
         let mut prev = 0.0;
         for b in [1u32, 4, 16, 64] {
-            let p = eval(&sys(), &net, b).unwrap();
+            let p = eval(&eng, Design::CompactDdm, &net, b).unwrap();
             assert!(p.batch_latency_s >= prev);
             prev = p.batch_latency_s;
         }

@@ -1,52 +1,28 @@
 //! Batch-size sweeps: the workload generators behind Figs. 3, 6 and 7.
+//!
+//! All three run through the shared [`Engine`]: one plan/DDM computation
+//! per (design, network), batch points fanned out in parallel, uniform
+//! [`DesignPoint`] rows out. Figs. 3 and 7 are derived views over the
+//! same (compact-DDM, unlimited) grid.
 
-use crate::baselines::{unlimited_chip, Rtx4090};
-use crate::cfg::dram::DramConfig;
-use crate::cfg::presets;
+use anyhow::Result;
+
 use crate::nn::Network;
-use crate::sim::{System, SystemReport};
+use crate::sim::engine::{find, Design, DesignPoint, Engine};
 
 /// The paper's batch axis (Figs. 3/6/7 sweep 1 → 1024).
 pub const BATCHES: [u32; 6] = [1, 4, 16, 64, 256, 1024];
 
-/// One Fig. 6 sweep point: the paper's four designs plus our search-
-/// partitioned variant (Fig. 2's "search iteration") at a batch size.
-#[derive(Debug, Clone)]
-pub struct Fig6Point {
-    pub batch: u32,
-    pub gpu_fps: f64,
-    pub gpu_tops_per_watt: f64,
-    pub no_ddm: SystemReport,
-    pub ddm: SystemReport,
-    /// DDM + DP boundary search instead of greedy §II-C packing.
-    pub ddm_search: SystemReport,
-    pub unlimited: SystemReport,
+/// DRAM burst used to count Fig. 3 transactions (128-bit bus × BL16).
+pub const FIG3_BURST_BYTES: u64 = 256;
+
+/// Run the Fig. 6 sweep (throughput + energy efficiency vs batch) over
+/// all five designs. Returns the flat (design-major, batch-minor) grid.
+pub fn fig6_sweep(engine: &Engine, net: &Network, batches: &[u32]) -> Result<Vec<DesignPoint>> {
+    engine.sweep(net, &Design::FIG6, batches)
 }
 
-/// Run the Fig. 6 sweep (throughput + energy efficiency vs batch).
-pub fn fig6_sweep(net: &Network, dram: &DramConfig, batches: &[u32]) -> Vec<Fig6Point> {
-    let compact = presets::compact_rram_41mm2();
-    let unlim_cfg = unlimited_chip(&compact, net);
-    let gpu = Rtx4090;
-    batches
-        .iter()
-        .map(|&b| Fig6Point {
-            batch: b,
-            gpu_fps: gpu.throughput_fps(net, b),
-            gpu_tops_per_watt: gpu.tops_per_watt(net, b),
-            no_ddm: System::new(compact.clone(), dram.clone())
-                .with_ddm(false)
-                .run(net, b),
-            ddm: System::new(compact.clone(), dram.clone()).run(net, b),
-            ddm_search: System::new(compact.clone(), dram.clone())
-                .with_strategy(crate::sim::PartitionStrategy::Search)
-                .run(net, b),
-            unlimited: System::new(unlim_cfg.clone(), dram.clone()).run(net, b),
-        })
-        .collect()
-}
-
-/// One Fig. 3 point: DRAM transaction counts, compact vs unlimited.
+/// One Fig. 3 row: DRAM transaction counts, compact vs unlimited.
 #[derive(Debug, Clone, Copy)]
 pub struct Fig3Point {
     pub batch: u32,
@@ -58,18 +34,16 @@ pub struct Fig3Point {
 }
 
 /// Run the Fig. 3 sweep (data-movement transactions vs batch, ResNet-18
-/// in the paper).
-pub fn fig3_sweep(net: &Network, dram: &DramConfig, batches: &[u32]) -> Vec<Fig3Point> {
-    let compact = presets::compact_rram_41mm2();
-    let unlim_cfg = unlimited_chip(&compact, net);
-    batches
+/// in the paper) and derive the transaction-count rows.
+pub fn fig3_sweep(engine: &Engine, net: &Network, batches: &[u32]) -> Result<Vec<Fig3Point>> {
+    let pts = engine.sweep(net, &[Design::CompactDdm, Design::Unlimited], batches)?;
+    Ok(batches
         .iter()
         .map(|&b| {
-            let c = System::new(compact.clone(), dram.clone()).run(net, b);
-            let u = System::new(unlim_cfg.clone(), dram.clone()).run(net, b);
-            let burst = 256; // 128-bit bus × BL16
-            let ct = c.trace().transaction_count(burst);
-            let ut = u.trace().transaction_count(burst);
+            let c = find(&pts, Design::CompactDdm, b).expect("compact point");
+            let u = find(&pts, Design::Unlimited, b).expect("unlimited point");
+            let ct = c.system().pipeline.trace.transaction_count(FIG3_BURST_BYTES);
+            let ut = u.system().pipeline.trace.transaction_count(FIG3_BURST_BYTES);
             Fig3Point {
                 batch: b,
                 compact_txns: ct,
@@ -77,10 +51,10 @@ pub fn fig3_sweep(net: &Network, dram: &DramConfig, batches: &[u32]) -> Vec<Fig3
                 ratio: ct as f64 / ut as f64,
             }
         })
-        .collect()
+        .collect())
 }
 
-/// One Fig. 7 point: computation-energy share of total system energy.
+/// One Fig. 7 row: computation-energy share of total system energy.
 #[derive(Debug, Clone, Copy)]
 pub struct Fig7Point {
     pub batch: u32,
@@ -88,22 +62,21 @@ pub struct Fig7Point {
     pub unlimited_fraction: f64,
 }
 
-/// Run the Fig. 7 sweep.
-pub fn fig7_sweep(net: &Network, dram: &DramConfig, batches: &[u32]) -> Vec<Fig7Point> {
-    let compact = presets::compact_rram_41mm2();
-    let unlim_cfg = unlimited_chip(&compact, net);
-    batches
+/// Run the Fig. 7 sweep and derive the energy-share rows.
+pub fn fig7_sweep(engine: &Engine, net: &Network, batches: &[u32]) -> Result<Vec<Fig7Point>> {
+    let pts = engine.sweep(net, &[Design::CompactDdm, Design::Unlimited], batches)?;
+    Ok(batches
         .iter()
         .map(|&b| Fig7Point {
             batch: b,
-            compact_fraction: System::new(compact.clone(), dram.clone())
-                .run(net, b)
+            compact_fraction: find(&pts, Design::CompactDdm, b)
+                .expect("compact point")
                 .compute_fraction,
-            unlimited_fraction: System::new(unlim_cfg.clone(), dram.clone())
-                .run(net, b)
+            unlimited_fraction: find(&pts, Design::Unlimited, b)
+                .expect("unlimited point")
                 .compute_fraction,
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]
@@ -114,6 +87,10 @@ mod tests {
 
     const SMALL: [u32; 3] = [1, 16, 256];
 
+    fn engine() -> Engine {
+        Engine::compact(presets::lpddr5())
+    }
+
     #[test]
     fn fig3_ratio_grows_with_batch() {
         // Paper Fig. 3 shape: the compact/unlimited transaction ratio
@@ -122,7 +99,7 @@ mod tests {
         // endpoint comes from a KB-scale compact chip; our 3.4 MB-capacity
         // compact chip saturates far lower (see EXPERIMENTS.md).
         let net = resnet::resnet18(100);
-        let pts = fig3_sweep(&net, &presets::lpddr5(), &[1, 64, 1024]);
+        let pts = fig3_sweep(&engine(), &net, &[1, 64, 1024]).unwrap();
         assert!(pts[0].ratio < pts[1].ratio && pts[1].ratio < pts[2].ratio);
         for p in &pts {
             assert!(p.compact_txns >= p.unlimited_txns);
@@ -134,18 +111,26 @@ mod tests {
     #[test]
     fn fig6_ordering_holds_at_every_batch() {
         let net = resnet::resnet34(100);
-        for p in fig6_sweep(&net, &presets::lpddr5(), &SMALL) {
-            assert!(p.gpu_fps < p.ddm.throughput_fps, "batch {}", p.batch);
-            assert!(p.no_ddm.throughput_fps <= p.ddm.throughput_fps);
-            assert!(p.ddm.throughput_fps <= p.unlimited.throughput_fps * 1.05);
-            assert!(p.gpu_tops_per_watt < p.ddm.tops_per_watt);
+        let pts = fig6_sweep(&engine(), &net, &SMALL).unwrap();
+        for &b in &SMALL {
+            let gpu = find(&pts, Design::Gpu, b).unwrap();
+            let no_ddm = find(&pts, Design::CompactNoDdm, b).unwrap();
+            let ddm = find(&pts, Design::CompactDdm, b).unwrap();
+            let unlim = find(&pts, Design::Unlimited, b).unwrap();
+            assert!(gpu.throughput_fps < ddm.throughput_fps, "batch {b}");
+            assert!(no_ddm.throughput_fps <= ddm.throughput_fps);
+            assert!(ddm.throughput_fps <= unlim.throughput_fps * 1.05);
+            assert!(gpu.tops_per_watt < ddm.tops_per_watt);
         }
     }
+
+    // Plan-cache accounting for the fig6 grid is asserted against the
+    // public API in tests/engine_cache.rs.
 
     #[test]
     fn fig7_fractions_monotone_nondecreasing() {
         let net = resnet::resnet34(100);
-        let pts = fig7_sweep(&net, &presets::lpddr5(), &SMALL);
+        let pts = fig7_sweep(&engine(), &net, &SMALL).unwrap();
         for w in pts.windows(2) {
             assert!(w[1].compact_fraction >= w[0].compact_fraction - 0.02);
         }

@@ -5,17 +5,22 @@
 //!
 //! This extends the paper's fixed-geometry evaluation into the
 //! co-exploration its reference [15] (He et al., ICCAD'22) performs.
+//! Chip variants are simulated through the [`Engine`] (arbitrary configs
+//! via [`Engine::run_config`]) and fanned out with
+//! [`crate::sim::engine::parallel_map`].
 
 use crate::cfg::chip::ChipConfig;
-use crate::cfg::dram::DramConfig;
 use crate::cfg::presets;
 use crate::nn::Network;
 use crate::pim::{adc, area};
-use crate::sim::System;
+use crate::sim::engine::{parallel_map, Engine};
+use crate::sim::PartitionStrategy;
 
-/// One design point.
+/// One hardware design-space point (distinct from the per-figure
+/// [`crate::sim::engine::DesignPoint`], which varies the *system* design
+/// on a fixed chip).
 #[derive(Debug, Clone)]
-pub struct DesignPoint {
+pub struct HwDesignPoint {
     pub label: String,
     pub subarrays_per_tile: u32,
     pub num_tiles: u32,
@@ -45,36 +50,42 @@ fn variant(spt: u32, area_budget_mm2: f64, adc_bits: u32) -> ChipConfig {
     cfg
 }
 
-/// Sweep the design space for one network/batch.
-pub fn design_sweep(net: &Network, dram: &DramConfig, batch: u32) -> Vec<DesignPoint> {
-    let mut points = Vec::new();
+/// Sweep the design space for one network/batch, variants in parallel.
+pub fn design_sweep(engine: &Engine, net: &Network, batch: u32) -> Vec<HwDesignPoint> {
+    let mut variants = Vec::new();
     for &spt in &[2u32, 4, 8, 16] {
         for &budget in &[41.5f64, 60.0, 80.0] {
             for &adc_bits in &[7u32, 9] {
-                let cfg = variant(spt, budget, adc_bits);
-                let Ok(r) = System::new(cfg.clone(), dram.clone()).try_run(net, batch) else {
-                    continue;
-                };
-                points.push(DesignPoint {
-                    label: cfg.name.clone(),
-                    subarrays_per_tile: spt,
-                    num_tiles: cfg.num_tiles,
-                    adc_bits,
-                    area_mm2: r.area_mm2,
-                    throughput_fps: r.throughput_fps,
-                    tops_per_watt: r.tops_per_watt,
-                    gops_per_mm2: r.gops_per_mm2,
-                    pareto: false,
-                });
+                variants.push((variant(spt, budget, adc_bits), spt, adc_bits));
             }
         }
     }
+    let mut points: Vec<HwDesignPoint> =
+        parallel_map(&variants, |(cfg, spt, adc_bits)| {
+            let r = engine
+                .run_config(cfg, net, batch, true, PartitionStrategy::Greedy)
+                .ok()?;
+            Some(HwDesignPoint {
+                label: cfg.name.clone(),
+                subarrays_per_tile: *spt,
+                num_tiles: cfg.num_tiles,
+                adc_bits: *adc_bits,
+                area_mm2: r.area_mm2,
+                throughput_fps: r.throughput_fps,
+                tops_per_watt: r.tops_per_watt,
+                gops_per_mm2: r.gops_per_mm2,
+                pareto: false,
+            })
+        })
+        .into_iter()
+        .flatten()
+        .collect();
     mark_pareto(&mut points);
     points
 }
 
 /// Mark non-dominated points: maximize FPS and TOPS/W, minimize area.
-pub fn mark_pareto(points: &mut [DesignPoint]) {
+pub fn mark_pareto(points: &mut [HwDesignPoint]) {
     for i in 0..points.len() {
         let dominated = (0..points.len()).any(|j| {
             j != i
@@ -94,9 +105,13 @@ mod tests {
     use super::*;
     use crate::nn::resnet;
 
+    fn engine() -> Engine {
+        Engine::compact(presets::lpddr5())
+    }
+
     #[test]
     fn sweep_produces_valid_points() {
-        let pts = design_sweep(&resnet::resnet18(100), &presets::lpddr5(), 32);
+        let pts = design_sweep(&engine(), &resnet::resnet18(100), 32);
         assert!(pts.len() >= 12, "{}", pts.len());
         for p in &pts {
             assert!(p.area_mm2 > 0.0 && p.throughput_fps > 0.0 && p.tops_per_watt > 0.0);
@@ -125,7 +140,7 @@ mod tests {
     fn pareto_marking_handles_degenerate_sets() {
         let mut pts = vec![];
         mark_pareto(&mut pts); // empty ok
-        let mut one = design_sweep(&resnet::resnet18(100), &presets::lpddr5(), 4);
+        let mut one = design_sweep(&engine(), &resnet::resnet18(100), 4);
         one.truncate(1);
         mark_pareto(&mut one);
         assert!(one[0].pareto);

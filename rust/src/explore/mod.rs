@@ -1,12 +1,19 @@
 //! Exploration drivers: the parameter sweeps behind the paper's figures
-//! (batch-size sweeps for Figs. 3/6/7, NN-size sweep for Fig. 8).
+//! (batch-size sweeps for Figs. 3/6/7, NN-size sweep for Fig. 8, chip
+//! design-space sweep), all running through the shared
+//! [`crate::sim::engine::Engine`] so each design's plan and DDM decision
+//! is computed once per network and sweep points fan out in parallel.
 
 pub mod batch_opt;
 pub mod batch_sweep;
 pub mod design_sweep;
 pub mod nn_sweep;
 
-pub use batch_sweep::{fig3_sweep, fig6_sweep, fig7_sweep, Fig3Point, Fig6Point, Fig7Point, BATCHES};
+pub use crate::sim::engine::{find, find_net, Design, DesignPoint, Engine};
+
 pub use batch_opt::{max_batch_for_latency, min_batch_for_throughput, BatchPoint};
-pub use design_sweep::{design_sweep, DesignPoint};
-pub use nn_sweep::{fig8_sweep, max_deployable, Fig8Point, Floor, EXPLORE_BATCH};
+pub use batch_sweep::{
+    fig3_sweep, fig6_sweep, fig7_sweep, Fig3Point, Fig7Point, BATCHES, FIG3_BURST_BYTES,
+};
+pub use design_sweep::{design_sweep, mark_pareto, HwDesignPoint};
+pub use nn_sweep::{ddm_row, fig8_sweep, max_deployable, Floor, EXPLORE_BATCH};

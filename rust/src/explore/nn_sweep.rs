@@ -2,44 +2,28 @@
 //! chip and find the largest network that still meets the performance
 //! floor (paper: energy efficiency > 8 TOPS/W and throughput > 3000 FPS →
 //! deploy NNs smaller than ResNet-101).
+//!
+//! Runs through the shared [`Engine`]: the three designs of each network
+//! fan out in parallel and the per-network plans land in the plan cache,
+//! so follow-up sweeps (other batches, the `explore` floor search) reuse
+//! them.
 
-use crate::baselines::unlimited_chip;
-use crate::cfg::dram::DramConfig;
-use crate::cfg::presets;
+use anyhow::Result;
+
 use crate::nn::resnet;
-use crate::sim::{System, SystemReport};
-
-/// One Fig. 8 row: the three designs on one network.
-#[derive(Debug, Clone)]
-pub struct Fig8Point {
-    pub network: String,
-    pub weights: u64,
-    pub no_ddm: SystemReport,
-    pub ddm: SystemReport,
-    pub unlimited: SystemReport,
-}
+use crate::sim::engine::{find_net, Design, DesignPoint, Engine};
 
 /// Reference batch used for the exploration.
 pub const EXPLORE_BATCH: u32 = 256;
 
-/// Sweep the paper's ResNet family on the compact chip.
-pub fn fig8_sweep(dram: &DramConfig, batch: u32) -> Vec<Fig8Point> {
-    let compact = presets::compact_rram_41mm2();
-    resnet::paper_family(100)
-        .into_iter()
-        .map(|net| {
-            let unlim_cfg = unlimited_chip(&compact, &net);
-            Fig8Point {
-                weights: net.total_weights(),
-                no_ddm: System::new(compact.clone(), dram.clone())
-                    .with_ddm(false)
-                    .run(&net, batch),
-                ddm: System::new(compact.clone(), dram.clone()).run(&net, batch),
-                unlimited: System::new(unlim_cfg, dram.clone()).run(&net, batch),
-                network: net.name,
-            }
-        })
-        .collect()
+/// Sweep the paper's ResNet family on the compact chip. Returns the flat
+/// grid of (network × {no-DDM, DDM, unlimited}) rows at one batch size.
+pub fn fig8_sweep(engine: &Engine, batch: u32) -> Result<Vec<DesignPoint>> {
+    let mut points = Vec::new();
+    for net in resnet::paper_family(100) {
+        points.extend(engine.sweep(&net, &Design::FIG8, &[batch])?);
+    }
+    Ok(points)
 }
 
 /// Performance floor for the deployment recommendation.
@@ -50,13 +34,20 @@ pub struct Floor {
 }
 
 /// The largest network (by weights) whose compact+DDM point meets `floor`.
-pub fn max_deployable<'a>(points: &'a [Fig8Point], floor: Floor) -> Option<&'a Fig8Point> {
+pub fn max_deployable(points: &[DesignPoint], floor: Floor) -> Option<&DesignPoint> {
     points
         .iter()
         .filter(|p| {
-            p.ddm.tops_per_watt > floor.min_tops_per_watt && p.ddm.throughput_fps > floor.min_fps
+            p.design == Design::CompactDdm
+                && p.tops_per_watt > floor.min_tops_per_watt
+                && p.throughput_fps > floor.min_fps
         })
         .max_by_key(|p| p.weights)
+}
+
+/// The DDM row for one network of a [`fig8_sweep`] result.
+pub fn ddm_row<'a>(points: &'a [DesignPoint], network: &str) -> Option<&'a DesignPoint> {
+    find_net(points, Design::CompactDdm, network)
 }
 
 #[cfg(test)]
@@ -64,8 +55,14 @@ mod tests {
     use super::*;
     use crate::cfg::presets;
 
-    fn sweep() -> Vec<Fig8Point> {
-        fig8_sweep(&presets::lpddr5(), 64)
+    fn sweep() -> Vec<DesignPoint> {
+        fig8_sweep(&Engine::compact(presets::lpddr5()), 64).unwrap()
+    }
+
+    fn ddm_points(pts: &[DesignPoint]) -> Vec<&DesignPoint> {
+        pts.iter()
+            .filter(|p| p.design == Design::CompactDdm)
+            .collect()
     }
 
     #[test]
@@ -75,16 +72,18 @@ mod tests {
         // few %), so assert the trend: no step regresses upward by >15%
         // and the family's endpoints differ by >2×.
         let pts = sweep();
-        for w in pts.windows(2) {
+        let ddm = ddm_points(&pts);
+        assert_eq!(ddm.len(), 5, "one DDM row per family member");
+        for w in ddm.windows(2) {
             assert!(
-                w[1].ddm.throughput_fps < w[0].ddm.throughput_fps * 1.15,
+                w[1].throughput_fps < w[0].throughput_fps * 1.15,
                 "{} vs {}",
                 w[0].network,
                 w[1].network
             );
         }
-        let first = pts.first().unwrap().ddm.throughput_fps;
-        let last = pts.last().unwrap().ddm.throughput_fps;
+        let first = ddm.first().unwrap().throughput_fps;
+        let last = ddm.last().unwrap().throughput_fps;
         assert!(last < first / 2.0, "endpoints {first} vs {last}");
     }
 
@@ -92,15 +91,16 @@ mod tests {
     fn efficiency_stays_in_regime() {
         // Paper: energy efficiency fluctuates slightly but stays >8 TOPS/W.
         let pts = sweep();
-        for p in &pts {
+        let ddm = ddm_points(&pts);
+        for p in &ddm {
             assert!(
-                p.ddm.tops_per_watt > 2.0,
+                p.tops_per_watt > 2.0,
                 "{}: {} TOPS/W",
                 p.network,
-                p.ddm.tops_per_watt
+                p.tops_per_watt
             );
         }
-        let effs: Vec<f64> = pts.iter().map(|p| p.ddm.tops_per_watt).collect();
+        let effs: Vec<f64> = ddm.iter().map(|p| p.tops_per_watt).collect();
         let min = effs.iter().copied().fold(f64::INFINITY, f64::min);
         let max = effs.iter().copied().fold(0.0, f64::max);
         assert!(max / min < 4.0, "efficiency swing too wide: {effs:?}");
@@ -128,6 +128,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(all.network, "resnet152");
+        assert_eq!(all.design, Design::CompactDdm);
     }
 
     #[test]
@@ -135,8 +136,8 @@ mod tests {
         // With a floor between the family's extremes the answer must be a
         // strict subset boundary (the paper lands between R50 and R101).
         let pts = sweep();
-        let mid_fps =
-            (pts.last().unwrap().ddm.throughput_fps + pts[0].ddm.throughput_fps) / 2.0;
+        let ddm = ddm_points(&pts);
+        let mid_fps = (ddm.last().unwrap().throughput_fps + ddm[0].throughput_fps) / 2.0;
         let pick = max_deployable(
             &pts,
             Floor {
@@ -146,5 +147,12 @@ mod tests {
         )
         .unwrap();
         assert_ne!(pick.network, "resnet152");
+    }
+
+    #[test]
+    fn ddm_row_lookup_finds_networks() {
+        let pts = sweep();
+        assert!(ddm_row(&pts, "resnet50").is_some());
+        assert!(ddm_row(&pts, "resnet9999").is_none());
     }
 }

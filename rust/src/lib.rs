@@ -20,19 +20,29 @@
 //! * [`ddm`] — Algorithm 1, the Dynamic Duplication Method, plus its
 //!   roofline inference-time predictor.
 //! * [`baselines`] — the area-unlimited chip and the RTX 4090 comparison
-//!   model.
-//! * [`sim`] — the top-level `System` that composes chip + DRAM + pipeline
-//!   and emits a [`sim::SystemReport`].
-//! * [`explore`] — batch-size and NN-size sweeps regenerating Figs. 3/6/7/8.
-//! * [`runtime`] / [`coordinator`] — the serving path: a PJRT executor for
-//!   AOT-compiled XLA artifacts and a threaded request router / dynamic
-//!   batcher, with Python never on the request path.
+//!   model, unified with the compact variants under
+//!   [`sim::engine::Design`].
+//! * [`sim`] — the top-level simulator: [`sim::System`] for one-shot runs
+//!   and [`sim::engine::Engine`] — the single entry point every sweep uses
+//!   — which memoizes the batch-invariant planning work (validated chip
+//!   model, partition plan, DDM decision) per (chip, network, strategy,
+//!   ddm) and fans sweep points out across threads, emitting uniform
+//!   [`sim::engine::DesignPoint`] rows.
+//! * [`explore`] — engine-backed sweeps regenerating Figs. 3/6/7/8, the
+//!   batch auto-tuner, and the chip design-space Pareto sweep.
+//! * [`runtime`] / [`coordinator`] *(feature `runtime`, on by default)* —
+//!   the serving path: a PJRT executor for AOT-compiled XLA artifacts and
+//!   a threaded request router / dynamic batcher, with Python never on the
+//!   request path. Disable the feature (`--no-default-features`) to build
+//!   the full simulation stack where the `xla` chain is unavailable.
 //!
 //! Substrate modules ([`cli`], [`cfg`], [`bench_harness`], [`testing`],
 //! [`util`]) are written from scratch because the offline crate registry
 //! only carries the `xla` dependency chain.
 //!
 //! ## Quickstart
+//!
+//! One-shot simulation:
 //!
 //! ```no_run
 //! use pimflow::cfg::presets;
@@ -44,11 +54,27 @@
 //! let report = System::new(chip, dram).with_ddm(true).run(&net, 64);
 //! println!("{:.1} FPS, {:.2} TOPS/W", report.throughput_fps, report.tops_per_watt);
 //! ```
+//!
+//! Sweeping the design space through the engine (plans cached, points
+//! fanned out in parallel):
+//!
+//! ```no_run
+//! use pimflow::cfg::presets;
+//! use pimflow::sim::{Design, Engine};
+//!
+//! let engine = Engine::compact(presets::lpddr5());
+//! let net = pimflow::nn::resnet::resnet34(100);
+//! let points = engine.sweep(&net, &Design::FIG6, &[1, 64, 1024]).unwrap();
+//! for p in &points {
+//!     println!("{:<10} b={:<5} {:.0} FPS", p.design.label(), p.batch, p.throughput_fps);
+//! }
+//! ```
 
 pub mod baselines;
 pub mod bench_harness;
 pub mod cfg;
 pub mod cli;
+#[cfg(feature = "runtime")]
 pub mod coordinator;
 pub mod ddm;
 pub mod dram;
@@ -60,6 +86,7 @@ pub mod partition;
 pub mod pim;
 pub mod pipeline;
 pub mod report;
+#[cfg(feature = "runtime")]
 pub mod runtime;
 pub mod sim;
 pub mod testing;

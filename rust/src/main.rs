@@ -3,8 +3,9 @@
 //! Subcommands map one-to-one onto the paper's experiments:
 //! `run` (one simulation point), `fig1/fig3/fig4/fig6/fig7/fig8`
 //! (regenerate each figure), `explore` (max-NN search with a floor),
-//! `serve` (the L3 serving path over AOT artifacts), `plan` (inspect a
-//! partition + DDM decision).
+//! `serve` (the L3 serving path over AOT artifacts; `runtime` feature),
+//! `plan` (inspect a partition + DDM decision). Every simulation command
+//! goes through the shared `sim::engine::Engine`.
 
 use std::path::Path;
 
@@ -12,20 +13,24 @@ use anyhow::Result;
 
 use pimflow::cfg::{presets, Config, DramKind, PipelineCase};
 use pimflow::cli::{App, Command, Invocation, Opt, Parsed};
+#[cfg(feature = "runtime")]
 use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
 use pimflow::explore;
 use pimflow::nn::resnet;
 use pimflow::report::figures;
 use pimflow::report::Table;
-use pimflow::sim::System;
-use pimflow::util::{logger, Rng};
+use pimflow::sim::{Design, Engine, PartitionStrategy};
+use pimflow::util::logger;
+#[cfg(feature = "runtime")]
+use pimflow::util::Rng;
 
 fn app() -> App {
     let net_opt = || Opt::value("network", Some("resnet34"), "network (resnet18/34/50/101/152, tiny)");
     let batch_opt = || Opt::value("batch", Some("64"), "batch size n");
     let dram_opt = || Opt::value("dram", Some("lpddr5"), "dram kind (lpddr3/4/5)");
     let csv_flag = || Opt::flag("csv", "also write results/<fig>.csv");
-    App {
+    #[allow(unused_mut)]
+    let mut app = App {
         name: "pimflow",
         about: "system-performance optimization & exploration for compact PIM chips",
         commands: vec![
@@ -64,7 +69,7 @@ fn app() -> App {
             },
             Command {
                 name: "fig6",
-                about: "Fig 6: throughput & energy efficiency vs batch (4 designs)",
+                about: "Fig 6: throughput & energy efficiency vs batch (5 designs)",
                 opts: vec![net_opt(), dram_opt(), csv_flag()],
             },
             Command {
@@ -106,20 +111,22 @@ fn app() -> App {
                     Opt::value("out", Some("results/trace.csv"), "output path"),
                 ],
             },
-            Command {
-                name: "serve",
-                about: "serve the AOT tiny-CNN over the batching coordinator",
-                opts: vec![
-                    Opt::value("requests", Some("64"), "number of synthetic requests"),
-                    Opt::value("workers", Some("1"), "worker threads"),
-                    Opt::value("max-batch", Some("16"), "dynamic batcher max batch"),
-                    Opt::value("max-wait-ms", Some("5"), "dynamic batcher linger"),
-                    Opt::value("artifacts", None, "artifacts dir (default ./artifacts)"),
-                    Opt::value("rate", Some("0"), "Poisson arrival rate (req/s, 0=burst)"),
-                ],
-            },
         ],
-    }
+    };
+    #[cfg(feature = "runtime")]
+    app.commands.push(Command {
+        name: "serve",
+        about: "serve the AOT tiny-CNN over the batching coordinator",
+        opts: vec![
+            Opt::value("requests", Some("64"), "number of synthetic requests"),
+            Opt::value("workers", Some("1"), "worker threads"),
+            Opt::value("max-batch", Some("16"), "dynamic batcher max batch"),
+            Opt::value("max-wait-ms", Some("5"), "dynamic batcher linger"),
+            Opt::value("artifacts", None, "artifacts dir (default ./artifacts)"),
+            Opt::value("rate", Some("0"), "Poisson arrival rate (req/s, 0=burst)"),
+        ],
+    });
+    app
 }
 
 fn dram_of(p: &Parsed) -> Result<pimflow::cfg::DramConfig> {
@@ -146,15 +153,12 @@ fn cmd_run(p: &Parsed) -> Result<()> {
     let dram = dram_of(p)?;
     let ddm = !p.flag("no-ddm");
     let strategy = if p.flag("search") {
-        pimflow::sim::PartitionStrategy::Search
+        PartitionStrategy::Search
     } else {
-        pimflow::sim::PartitionStrategy::Greedy
+        PartitionStrategy::Greedy
     };
-    let report = System::new(cfg.chip.clone(), dram)
-        .with_ddm(ddm)
-        .with_case(case)
-        .with_strategy(strategy)
-        .try_run(&net, batch)?;
+    let engine = Engine::new(cfg.chip.clone(), dram).with_case(case);
+    let report = engine.run_config(&cfg.chip, &net, batch, ddm, strategy)?;
 
     let mut t = Table::new(
         format!("{} on {} (batch {batch}, ddm={ddm})", net.name, report.chip_name),
@@ -237,7 +241,8 @@ fn cmd_fig1(p: &Parsed) -> Result<()> {
 
 fn cmd_fig3(p: &Parsed) -> Result<()> {
     let net = resnet::by_name(p.get_or("network", "resnet18"), 100)?;
-    let pts = explore::fig3_sweep(&net, &dram_of(p)?, &explore::BATCHES);
+    let engine = Engine::compact(dram_of(p)?);
+    let pts = explore::fig3_sweep(&engine, &net, &explore::BATCHES)?;
     let (t, csv) = figures::fig3_table(&pts);
     print!("{}", t.render());
     if p.flag("csv") {
@@ -275,11 +280,12 @@ fn cmd_fig4(p: &Parsed) -> Result<()> {
 
 fn cmd_fig6(p: &Parsed) -> Result<()> {
     let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
-    let pts = explore::fig6_sweep(&net, &dram_of(p)?, &explore::BATCHES);
-    let (thr, eff, csv) = figures::fig6_tables(&pts);
+    let engine = Engine::compact(dram_of(p)?);
+    let pts = explore::fig6_sweep(&engine, &net, &explore::BATCHES)?;
+    let (thr, eff, csv) = figures::fig6_tables(&pts)?;
     print!("{}", thr.render());
     print!("{}", eff.render());
-    print!("{}", figures::headline_factors(&pts).render());
+    print!("{}", figures::headline_factors(&pts)?.render());
     if p.flag("csv") {
         println!("wrote {}", figures::write_csv(&csv, "fig6_throughput.csv")?.display());
     }
@@ -288,7 +294,8 @@ fn cmd_fig6(p: &Parsed) -> Result<()> {
 
 fn cmd_fig7(p: &Parsed) -> Result<()> {
     let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
-    let pts = explore::fig7_sweep(&net, &dram_of(p)?, &explore::BATCHES);
+    let engine = Engine::compact(dram_of(p)?);
+    let pts = explore::fig7_sweep(&engine, &net, &explore::BATCHES)?;
     let (t, csv) = figures::fig7_table(&pts);
     print!("{}", t.render());
     if p.flag("csv") {
@@ -299,8 +306,9 @@ fn cmd_fig7(p: &Parsed) -> Result<()> {
 
 fn cmd_fig8(p: &Parsed) -> Result<()> {
     let batch = p.get_u32("batch")?.unwrap_or(explore::EXPLORE_BATCH);
-    let pts = explore::fig8_sweep(&dram_of(p)?, batch);
-    let (t, csv) = figures::fig8_table(&pts);
+    let engine = Engine::compact(dram_of(p)?);
+    let pts = explore::fig8_sweep(&engine, batch)?;
+    let (t, csv) = figures::fig8_table(&pts)?;
     print!("{}", t.render());
     if p.flag("csv") {
         println!("wrote {}", figures::write_csv(&csv, "fig8_max_nn.csv")?.display());
@@ -314,8 +322,9 @@ fn cmd_explore(p: &Parsed) -> Result<()> {
         min_fps: p.get_f64("min-fps")?.unwrap_or(3000.0),
         min_tops_per_watt: p.get_f64("min-tops-per-watt")?.unwrap_or(8.0),
     };
-    let pts = explore::fig8_sweep(&dram_of(p)?, batch);
-    let (t, _) = figures::fig8_table(&pts);
+    let engine = Engine::compact(dram_of(p)?);
+    let pts = explore::fig8_sweep(&engine, batch)?;
+    let (t, _) = figures::fig8_table(&pts)?;
     print!("{}", t.render());
     match explore::max_deployable(&pts, floor) {
         Some(best) => println!(
@@ -333,6 +342,7 @@ fn cmd_explore(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "runtime")]
 fn cmd_serve(p: &Parsed) -> Result<()> {
     let n = p.get_u32("requests")?.unwrap_or(64) as usize;
     let workers = p.get_u32("workers")?.unwrap_or(1) as usize;
@@ -403,7 +413,8 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
 fn cmd_design(p: &Parsed) -> Result<()> {
     let net = resnet::by_name(p.get_or("network", "resnet18"), 100)?;
     let batch = p.get_u32("batch")?.unwrap_or(32);
-    let pts = pimflow::explore::design_sweep(&net, &dram_of(p)?, batch);
+    let engine = Engine::compact(dram_of(p)?);
+    let pts = pimflow::explore::design_sweep(&engine, &net, batch);
     let mut t = Table::new(
         format!("design-space sweep: {} @ batch {batch}", net.name),
         vec!["design", "tiles", "area mm²", "FPS", "TOPS/W", "GOPS/mm²", "pareto"],
@@ -427,7 +438,7 @@ fn cmd_trace(p: &Parsed) -> Result<()> {
     let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
     let batch = p.get_u32("batch")?.unwrap_or(64);
     let dram = dram_of(p)?;
-    let report = System::new(presets::compact_rram_41mm2(), dram.clone()).try_run(&net, batch)?;
+    let report = Engine::compact(dram.clone()).system_report(Design::CompactDdm, &net, batch)?;
     let out = std::path::PathBuf::from(p.get_or("out", "results/trace.csv"));
     pimflow::dram::export::write_paper_format(report.trace(), &out)?;
     let a = pimflow::dram::export::analyze(report.trace(), &dram);
@@ -467,6 +478,7 @@ fn dispatch(p: Parsed) -> Result<()> {
         "explore" => cmd_explore(&p),
         "design" => cmd_design(&p),
         "trace" => cmd_trace(&p),
+        #[cfg(feature = "runtime")]
         "serve" => cmd_serve(&p),
         other => anyhow::bail!("unhandled command {other}"),
     }

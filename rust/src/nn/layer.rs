@@ -5,7 +5,7 @@
 //! and are modeled as zero-weight layers that still move activation bytes.
 
 /// Kind of layer plus its shape parameters.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum LayerKind {
     /// 2-D convolution, square kernels, NHWC shapes.
     Conv {
@@ -24,7 +24,7 @@ pub enum LayerKind {
 }
 
 /// One layer instance with resolved input spatial size.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Layer {
     pub name: String,
     pub kind: LayerKind,

@@ -78,6 +78,11 @@ pub fn simulate(
 ) -> Result<PipelineReport> {
     anyhow::ensure!(n >= 1, "batch must be >= 1");
     anyhow::ensure!(
+        !plan.parts.is_empty(),
+        "partition plan for `{}` has no parts",
+        plan.network
+    );
+    anyhow::ensure!(
         ddm.dup_per_part.len() == plan.parts.len(),
         "ddm result does not match plan"
     );
@@ -307,6 +312,28 @@ mod tests {
         .unwrap();
         assert_eq!(r.trace.bytes_by_payload(TxPayload::Intermediate), 0);
         assert_eq!(r.case3_overlaps, 0);
+    }
+
+    #[test]
+    fn empty_plan_is_an_error_not_an_underflow() {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let net = resnet::resnet18(100);
+        let plan = crate::partition::PartitionPlan {
+            parts: vec![],
+            network: net.name.clone(),
+        };
+        let dd = ddm::DdmResult::disabled(&plan);
+        let err = simulate(
+            &net,
+            &plan,
+            &dd,
+            &chip,
+            &presets::lpddr5(),
+            4,
+            PipelineCase::Auto,
+        );
+        assert!(err.is_err(), "zero-part plan must not panic");
+        assert!(err.unwrap_err().to_string().contains("no parts"));
     }
 
     #[test]

@@ -1,18 +1,52 @@
 //! Figure/table emitters: turn sweep results into the paper's rows
 //! (printed tables + CSV files under `results/`).
+//!
+//! Figs. 6 and 8 consume the engine's uniform
+//! [`DesignPoint`](crate::sim::engine::DesignPoint) grid directly; Figs. 3
+//! and 7 consume the slim derived rows `explore` builds from the same grid.
 
 use std::path::Path;
 
 use crate::baselines::unlimited_chip;
-
-
 use crate::cfg::presets;
-use crate::explore::{Fig3Point, Fig6Point, Fig7Point, Fig8Point};
+use crate::explore::{Fig3Point, Fig7Point};
 use crate::nn::resnet;
 use crate::pim::area;
+use crate::sim::engine::{find, find_net, Design, DesignPoint};
 use crate::util::csv::Csv;
 
 use super::table::Table;
+
+/// Unique batch values of a sweep grid, in first-appearance order.
+fn batch_axis(points: &[DesignPoint]) -> Vec<u32> {
+    let mut axis = Vec::new();
+    for p in points {
+        if !axis.contains(&p.batch) {
+            axis.push(p.batch);
+        }
+    }
+    axis
+}
+
+/// Unique network names of a sweep grid, in first-appearance order.
+fn network_axis(points: &[DesignPoint]) -> Vec<String> {
+    let mut axis: Vec<String> = Vec::new();
+    for p in points {
+        if !axis.iter().any(|n| n == &p.network) {
+            axis.push(p.network.clone());
+        }
+    }
+    axis
+}
+
+fn point<'a>(
+    points: &'a [DesignPoint],
+    design: Design,
+    batch: u32,
+) -> anyhow::Result<&'a DesignPoint> {
+    find(points, design, batch)
+        .ok_or_else(|| anyhow::anyhow!("sweep missing {design:?} at batch {batch}"))
+}
 
 /// Fig. 1: chip area required to store all weights, SRAM vs RRAM.
 pub fn fig1_table() -> (Table, Csv) {
@@ -67,8 +101,10 @@ pub fn fig3_table(points: &[Fig3Point]) -> (Table, Csv) {
     (t, csv)
 }
 
-/// Fig. 6: throughput + energy efficiency under different batch sizes.
-pub fn fig6_tables(points: &[Fig6Point]) -> (Table, Table, Csv) {
+/// Fig. 6: throughput + energy efficiency under different batch sizes,
+/// from the engine's five-design sweep grid. Errors if the grid lacks
+/// any of the five designs at a swept batch.
+pub fn fig6_tables(points: &[DesignPoint]) -> anyhow::Result<(Table, Table, Csv)> {
     let mut thr = Table::new(
         "Fig 6a: throughput (FPS) vs batch",
         vec!["batch", "gpu", "no_ddm", "ddm", "ddm+search", "unlimited"],
@@ -90,105 +126,111 @@ pub fn fig6_tables(points: &[Fig6Point]) -> (Table, Table, Csv) {
         "ddm_search_tpw",
         "unlimited_tpw",
     ]);
-    for p in points {
+    for b in batch_axis(points) {
+        let gpu = point(points, Design::Gpu, b)?;
+        let no_ddm = point(points, Design::CompactNoDdm, b)?;
+        let ddm = point(points, Design::CompactDdm, b)?;
+        let search = point(points, Design::CompactSearch, b)?;
+        let unlim = point(points, Design::Unlimited, b)?;
         thr.row(vec![
-            p.batch.to_string(),
-            format!("{:.0}", p.gpu_fps),
-            format!("{:.0}", p.no_ddm.throughput_fps),
-            format!("{:.0}", p.ddm.throughput_fps),
-            format!("{:.0}", p.ddm_search.throughput_fps),
-            format!("{:.0}", p.unlimited.throughput_fps),
+            b.to_string(),
+            format!("{:.0}", gpu.throughput_fps),
+            format!("{:.0}", no_ddm.throughput_fps),
+            format!("{:.0}", ddm.throughput_fps),
+            format!("{:.0}", search.throughput_fps),
+            format!("{:.0}", unlim.throughput_fps),
         ]);
         eff.row(vec![
-            p.batch.to_string(),
-            format!("{:.4}", p.gpu_tops_per_watt),
-            format!("{:.2}", p.no_ddm.tops_per_watt),
-            format!("{:.2}", p.ddm.tops_per_watt),
-            format!("{:.2}", p.ddm_search.tops_per_watt),
-            format!("{:.2}", p.unlimited.tops_per_watt),
+            b.to_string(),
+            format!("{:.4}", gpu.tops_per_watt),
+            format!("{:.2}", no_ddm.tops_per_watt),
+            format!("{:.2}", ddm.tops_per_watt),
+            format!("{:.2}", search.tops_per_watt),
+            format!("{:.2}", unlim.tops_per_watt),
         ]);
         csv.row(vec![
-            p.batch.to_string(),
-            format!("{:.2}", p.gpu_fps),
-            format!("{:.2}", p.no_ddm.throughput_fps),
-            format!("{:.2}", p.ddm.throughput_fps),
-            format!("{:.2}", p.ddm_search.throughput_fps),
-            format!("{:.2}", p.unlimited.throughput_fps),
-            format!("{:.5}", p.gpu_tops_per_watt),
-            format!("{:.3}", p.no_ddm.tops_per_watt),
-            format!("{:.3}", p.ddm.tops_per_watt),
-            format!("{:.3}", p.ddm_search.tops_per_watt),
-            format!("{:.3}", p.unlimited.tops_per_watt),
+            b.to_string(),
+            format!("{:.2}", gpu.throughput_fps),
+            format!("{:.2}", no_ddm.throughput_fps),
+            format!("{:.2}", ddm.throughput_fps),
+            format!("{:.2}", search.throughput_fps),
+            format!("{:.2}", unlim.throughput_fps),
+            format!("{:.5}", gpu.tops_per_watt),
+            format!("{:.3}", no_ddm.tops_per_watt),
+            format!("{:.3}", ddm.tops_per_watt),
+            format!("{:.3}", search.tops_per_watt),
+            format!("{:.3}", unlim.tops_per_watt),
         ]);
     }
-    (thr, eff, csv)
+    Ok((thr, eff, csv))
 }
 
 /// §III-B headline factors derived from a Fig. 6 sweep (at the largest batch).
-pub fn headline_factors(points: &[Fig6Point]) -> Table {
-    let p = points.last().expect("non-empty sweep");
+pub fn headline_factors(points: &[DesignPoint]) -> anyhow::Result<Table> {
+    let b = *batch_axis(points)
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("empty fig6 sweep"))?;
+    let gpu = point(points, Design::Gpu, b)?;
+    let no_ddm = point(points, Design::CompactNoDdm, b)?;
+    let ddm = point(points, Design::CompactDdm, b)?;
+    let search = point(points, Design::CompactSearch, b)?;
+    let unlim = point(points, Design::Unlimited, b)?;
     let mut t = Table::new(
-        format!("Headline factors (batch {})", p.batch),
+        format!("Headline factors (batch {b})"),
         vec!["metric", "measured", "paper"],
     );
     t.row(vec![
         "DDM vs no-DDM throughput".into(),
-        format!("{:.2}x", p.ddm.throughput_fps / p.no_ddm.throughput_fps),
+        format!("{:.2}x", ddm.throughput_fps / no_ddm.throughput_fps),
         "2.35x".into(),
     ]);
     t.row(vec![
         "DDM vs no-DDM energy eff".into(),
         format!(
             "{:+.1}%",
-            (p.ddm.tops_per_watt / p.no_ddm.tops_per_watt - 1.0) * 100.0
+            (ddm.tops_per_watt / no_ddm.tops_per_watt - 1.0) * 100.0
         ),
         "+0.5%".into(),
     ]);
     t.row(vec![
         "compact/unlimited throughput".into(),
-        format!(
-            "{:.1}%",
-            100.0 * p.ddm.throughput_fps / p.unlimited.throughput_fps
-        ),
+        format!("{:.1}%", 100.0 * ddm.throughput_fps / unlim.throughput_fps),
         "56.5%".into(),
     ]);
     t.row(vec![
         "compact/unlimited energy eff".into(),
-        format!(
-            "{:.1}%",
-            100.0 * p.ddm.tops_per_watt / p.unlimited.tops_per_watt
-        ),
+        format!("{:.1}%", 100.0 * ddm.tops_per_watt / unlim.tops_per_watt),
         "58.6%".into(),
     ]);
     t.row(vec![
         "area efficiency ratio".into(),
-        format!("{:.2}x", p.ddm.gops_per_mm2 / p.unlimited.gops_per_mm2),
+        format!("{:.2}x", ddm.gops_per_mm2 / unlim.gops_per_mm2),
         "1.3x".into(),
     ]);
     t.row(vec![
         "DDM+search vs no-DDM throughput".into(),
-        format!("{:.2}x", p.ddm_search.throughput_fps / p.no_ddm.throughput_fps),
+        format!("{:.2}x", search.throughput_fps / no_ddm.throughput_fps),
         "2.35x".into(),
     ]);
     t.row(vec![
         "DDM+search/unlimited throughput".into(),
         format!(
             "{:.1}%",
-            100.0 * p.ddm_search.throughput_fps / p.unlimited.throughput_fps
+            100.0 * search.throughput_fps / unlim.throughput_fps
         ),
         "56.5%".into(),
     ]);
     t.row(vec![
         "vs GPU throughput".into(),
-        format!("{:.2}x", p.ddm.throughput_fps / p.gpu_fps),
+        format!("{:.2}x", ddm.throughput_fps / gpu.throughput_fps),
         "4.56x".into(),
     ]);
     t.row(vec![
         "vs GPU energy eff".into(),
-        format!("{:.0}x", p.ddm.tops_per_watt / p.gpu_tops_per_watt),
+        format!("{:.0}x", ddm.tops_per_watt / gpu.tops_per_watt),
         "157x".into(),
     ]);
-    t
+    Ok(t)
 }
 
 /// Fig. 7: computation-energy proportion vs batch.
@@ -213,8 +255,9 @@ pub fn fig7_table(points: &[Fig7Point]) -> (Table, Csv) {
     (t, csv)
 }
 
-/// Fig. 8: NN-size exploration.
-pub fn fig8_table(points: &[Fig8Point]) -> (Table, Csv) {
+/// Fig. 8: NN-size exploration, from the engine's per-network sweep grid.
+/// Errors if the grid lacks one of the three designs for a swept network.
+pub fn fig8_table(points: &[DesignPoint]) -> anyhow::Result<(Table, Csv)> {
     let mut t = Table::new(
         "Fig 8: max NN size exploration (compact 41.5mm² chip)",
         vec![
@@ -236,27 +279,34 @@ pub fn fig8_table(points: &[Fig8Point]) -> (Table, Csv) {
         "ddm_tpw",
         "unlimited_tpw",
     ]);
-    for p in points {
+    for name in network_axis(points) {
+        let row = |d: Design| {
+            find_net(points, d, &name)
+                .ok_or_else(|| anyhow::anyhow!("sweep missing {d:?} for {name}"))
+        };
+        let no_ddm = row(Design::CompactNoDdm)?;
+        let ddm = row(Design::CompactDdm)?;
+        let unlim = row(Design::Unlimited)?;
         t.row(vec![
-            p.network.clone(),
-            format!("{:.1}", p.weights as f64 / 1e6),
-            format!("{:.0}", p.no_ddm.throughput_fps),
-            format!("{:.0}", p.ddm.throughput_fps),
-            format!("{:.0}", p.unlimited.throughput_fps),
-            format!("{:.2}", p.ddm.tops_per_watt),
+            name.clone(),
+            format!("{:.1}", ddm.weights as f64 / 1e6),
+            format!("{:.0}", no_ddm.throughput_fps),
+            format!("{:.0}", ddm.throughput_fps),
+            format!("{:.0}", unlim.throughput_fps),
+            format!("{:.2}", ddm.tops_per_watt),
         ]);
         csv.row(vec![
-            p.network.clone(),
-            p.weights.to_string(),
-            format!("{:.2}", p.no_ddm.throughput_fps),
-            format!("{:.2}", p.ddm.throughput_fps),
-            format!("{:.2}", p.unlimited.throughput_fps),
-            format!("{:.3}", p.no_ddm.tops_per_watt),
-            format!("{:.3}", p.ddm.tops_per_watt),
-            format!("{:.3}", p.unlimited.tops_per_watt),
+            name.clone(),
+            ddm.weights.to_string(),
+            format!("{:.2}", no_ddm.throughput_fps),
+            format!("{:.2}", ddm.throughput_fps),
+            format!("{:.2}", unlim.throughput_fps),
+            format!("{:.3}", no_ddm.tops_per_watt),
+            format!("{:.3}", ddm.tops_per_watt),
+            format!("{:.3}", unlim.tops_per_watt),
         ]);
     }
-    (t, csv)
+    Ok((t, csv))
 }
 
 /// Fig. 1 helper (used by the CLI): write a CSV under `results/`.
@@ -296,12 +346,45 @@ mod tests {
     #[test]
     fn headline_table_renders() {
         use crate::cfg::presets;
-        use crate::explore::fig6_sweep;
+        use crate::explore::{fig6_sweep, Engine};
         let net = crate::nn::resnet::resnet34(100);
-        let pts = fig6_sweep(&net, &presets::lpddr5(), &[64]);
-        let t = headline_factors(&pts);
+        let engine = Engine::compact(presets::lpddr5());
+        let pts = fig6_sweep(&engine, &net, &[64]).unwrap();
+        let t = headline_factors(&pts).unwrap();
         let s = t.render();
         assert!(s.contains("2.35x"));
         assert!(s.contains("DDM vs no-DDM"));
+    }
+
+    #[test]
+    fn fig6_and_fig8_tables_render_from_engine_grid() {
+        use crate::cfg::presets;
+        use crate::explore::{fig6_sweep, fig8_sweep, Engine};
+        let engine = Engine::compact(presets::lpddr5());
+        let net = crate::nn::resnet::resnet18(100);
+        let (thr, eff, csv) =
+            fig6_tables(&fig6_sweep(&engine, &net, &[1, 16]).unwrap()).unwrap();
+        assert!(thr.render().contains("16"));
+        assert!(eff.render().contains("unlimited"));
+        assert_eq!(csv.num_rows(), 2);
+        let (t8, csv8) = fig8_table(&fig8_sweep(&engine, 16).unwrap()).unwrap();
+        assert!(t8.render().contains("resnet152"));
+        assert_eq!(csv8.num_rows(), 5);
+    }
+
+    #[test]
+    fn partial_grids_error_instead_of_panicking() {
+        use crate::cfg::presets;
+        use crate::explore::Engine;
+        let engine = Engine::compact(presets::lpddr5());
+        let net = crate::nn::resnet::resnet18(100);
+        // A fig8-shaped grid lacks Gpu/CompactSearch: fig6 emitters must
+        // return an error, not panic.
+        let pts = engine.sweep(&net, &Design::FIG8, &[16]).unwrap();
+        assert!(fig6_tables(&pts).is_err());
+        assert!(headline_factors(&pts).is_err());
+        assert!(headline_factors(&[]).is_err());
+        let (t8, _) = fig8_table(&pts).unwrap();
+        assert!(t8.render().contains("resnet18"));
     }
 }

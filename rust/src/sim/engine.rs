@@ -1,0 +1,543 @@
+//! The sweep engine: design-space abstraction, cached planning, and
+//! parallel sweeps.
+//!
+//! The paper's entire evaluation is a grid of (design × network × batch)
+//! operating points. Of the work each point needs, only the pipeline
+//! simulation depends on the batch size — chip validation, partitioning,
+//! and the DDM duplication decision are batch-invariant. [`Engine`]
+//! memoizes that invariant triple ([`ChipModel`], [`PartitionPlan`],
+//! [`DdmResult`]) keyed by (chip config, network, strategy, ddm), so a
+//! batch sweep computes each design's plan exactly once, and fans the
+//! remaining per-point work out across threads with [`parallel_map`].
+//!
+//! [`Design`] names the paper's operating points — the three compact-chip
+//! variants, the area-unlimited baseline, and the GPU comparison model —
+//! so sweeps iterate a `&[Design]` and return uniform [`DesignPoint`] rows
+//! instead of per-figure bespoke structs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::baselines::{unlimited_chip, Rtx4090};
+use crate::cfg::chip::ChipConfig;
+use crate::cfg::dram::DramConfig;
+use crate::cfg::presets;
+use crate::cfg::sim::PipelineCase;
+use crate::ddm::{self, DdmResult};
+use crate::nn::Network;
+use crate::partition::{partition, search_partition, PartitionPlan};
+use crate::pim::ChipModel;
+
+use super::{compose_report, PartitionStrategy, SystemReport};
+
+/// One of the paper's evaluated designs (Figs. 3/6/7/8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Design {
+    /// RTX 4090 comparison model (analytic; no pipeline simulation).
+    Gpu,
+    /// Compact chip, greedy §II-C partition, DDM disabled.
+    CompactNoDdm,
+    /// Compact chip, greedy §II-C partition, DDM enabled (the headline).
+    CompactDdm,
+    /// Compact chip, Fig. 2 DP boundary search, DDM enabled.
+    CompactSearch,
+    /// Area-unlimited baseline sized for the network under test.
+    Unlimited,
+}
+
+impl Design {
+    /// Every design, GPU first (the axes order the figures print).
+    pub const ALL: [Design; 5] = [
+        Design::Gpu,
+        Design::CompactNoDdm,
+        Design::CompactDdm,
+        Design::CompactSearch,
+        Design::Unlimited,
+    ];
+
+    /// The Fig. 6 axis: all five designs.
+    pub const FIG6: [Design; 5] = Design::ALL;
+
+    /// The Fig. 8 axis: the three simulated designs the NN-size sweep plots.
+    pub const FIG8: [Design; 3] = [
+        Design::CompactNoDdm,
+        Design::CompactDdm,
+        Design::Unlimited,
+    ];
+
+    /// Short column label used by tables and CSV headers.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Design::Gpu => "gpu",
+            Design::CompactNoDdm => "no_ddm",
+            Design::CompactDdm => "ddm",
+            Design::CompactSearch => "ddm_search",
+            Design::Unlimited => "unlimited",
+        }
+    }
+}
+
+/// One simulated sweep point: the uniform row every figure consumes.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub design: Design,
+    pub network: String,
+    pub weights: u64,
+    pub batch: u32,
+    pub throughput_fps: f64,
+    pub tops_per_watt: f64,
+    /// 0 for the analytic GPU baseline (no area model).
+    pub gops_per_mm2: f64,
+    /// 0 for the analytic GPU baseline.
+    pub area_mm2: f64,
+    /// 0 for the analytic GPU baseline.
+    pub compute_fraction: f64,
+    /// 0 for the analytic GPU baseline.
+    pub num_parts: usize,
+    /// Full simulator report; `None` for the analytic GPU baseline.
+    pub report: Option<SystemReport>,
+}
+
+impl DesignPoint {
+    /// The full simulator report. Panics for the GPU baseline, which is
+    /// analytic and has none.
+    pub fn system(&self) -> &SystemReport {
+        self.report
+            .as_ref()
+            .expect("GPU baseline has no SystemReport")
+    }
+}
+
+/// Find the point for (design, batch) in a sweep result.
+pub fn find(points: &[DesignPoint], design: Design, batch: u32) -> Option<&DesignPoint> {
+    points
+        .iter()
+        .find(|p| p.design == design && p.batch == batch)
+}
+
+/// Find the point for (design, network) in a network sweep result.
+pub fn find_net<'a>(
+    points: &'a [DesignPoint],
+    design: Design,
+    network: &str,
+) -> Option<&'a DesignPoint> {
+    points
+        .iter()
+        .find(|p| p.design == design && p.network == network)
+}
+
+/// Cache hit/miss counters for the plan cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Batch-invariant plan ingredients for one (chip, network, strategy, ddm).
+struct PlanEntry {
+    chip: ChipModel,
+    plan: PartitionPlan,
+    ddm: DdmResult,
+}
+
+/// Exact identity of one plan-cache entry. The network side carries the
+/// full layer structure (not just name + weight count), so structurally
+/// different networks can never share a cached plan; the chip side is the
+/// config's Debug rendering, which covers every field exactly.
+///
+/// Exactness over a fingerprint is deliberate: a hash collision would
+/// silently return the wrong plan, while building this key costs one
+/// layer-list clone + one config format per cache access — noise next to
+/// the pipeline simulation each access precedes.
+#[derive(PartialEq, Eq, Hash)]
+struct PlanKey {
+    chip: String,
+    net_name: String,
+    input_hw: u32,
+    input_ch: u32,
+    layers: Vec<crate::nn::Layer>,
+    strategy: PartitionStrategy,
+    ddm: bool,
+}
+
+impl PlanKey {
+    fn new(cfg: &ChipConfig, net: &Network, strategy: PartitionStrategy, ddm: bool) -> Self {
+        PlanKey {
+            chip: format!("{cfg:?}"),
+            net_name: net.name.clone(),
+            input_hw: net.input_hw,
+            input_ch: net.input_ch,
+            layers: net.layers.clone(),
+            strategy,
+            ddm,
+        }
+    }
+}
+
+/// The single entry point for all simulation: a compact base chip + DRAM
+/// config, a plan cache, and sweep fan-out. Shareable across threads
+/// (`&Engine` is all a worker needs).
+pub struct Engine {
+    base: ChipConfig,
+    dram: DramConfig,
+    case: PipelineCase,
+    cache: Mutex<HashMap<PlanKey, Arc<PlanEntry>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Engine {
+    /// Engine over an arbitrary compact base chip.
+    pub fn new(base: ChipConfig, dram: DramConfig) -> Self {
+        Engine {
+            base,
+            dram,
+            case: PipelineCase::Auto,
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Engine over the paper's 41.5 mm² compact RRAM chip.
+    pub fn compact(dram: DramConfig) -> Self {
+        Engine::new(presets::compact_rram_41mm2(), dram)
+    }
+
+    /// Override the pipeline case (default: auto case-2/3 selection).
+    pub fn with_case(mut self, case: PipelineCase) -> Self {
+        self.case = case;
+        self
+    }
+
+    pub fn base_chip(&self) -> &ChipConfig {
+        &self.base
+    }
+
+    pub fn dram(&self) -> &DramConfig {
+        &self.dram
+    }
+
+    /// Plan-cache counters so far (hits = plan reuses across batch points).
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of memoized plan entries.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Drop every memoized plan (counters keep running). The cache is
+    /// otherwise unbounded — a long-lived engine fed a stream of distinct
+    /// chip configs (e.g. repeated design-space sweeps) should clear it
+    /// between campaigns.
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Map a design onto concrete simulator inputs. GPU has none.
+    fn resolve(&self, design: Design, net: &Network) -> (ChipConfig, bool, PartitionStrategy) {
+        match design {
+            Design::CompactDdm => (self.base.clone(), true, PartitionStrategy::Greedy),
+            Design::CompactNoDdm => (self.base.clone(), false, PartitionStrategy::Greedy),
+            Design::CompactSearch => (self.base.clone(), true, PartitionStrategy::Search),
+            Design::Unlimited => (unlimited_chip(&self.base, net), true, PartitionStrategy::Greedy),
+            Design::Gpu => unreachable!("GPU baseline is analytic"),
+        }
+    }
+
+    /// Fetch-or-compute the batch-invariant plan ingredients. Planning
+    /// happens *outside* the cache lock, so distinct keys plan
+    /// concurrently under a parallel sweep. A concurrent first touch of
+    /// the same key may plan twice (both counted as misses; first insert
+    /// wins, results are deterministic and identical) — [`Engine::sweep`]
+    /// warms each design once up front, so grid sweeps plan exactly once.
+    fn entry(
+        &self,
+        cfg: &ChipConfig,
+        net: &Network,
+        strategy: PartitionStrategy,
+        ddm_on: bool,
+    ) -> Result<Arc<PlanEntry>> {
+        let key = PlanKey::new(cfg, net, strategy, ddm_on);
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(e));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let chip = ChipModel::new(cfg.clone())?;
+        let greedy = partition(net, &chip)?;
+        let plan = match strategy {
+            PartitionStrategy::Greedy => greedy,
+            PartitionStrategy::Search => search_partition(&greedy, &chip)?.plan,
+        };
+        let dd = if ddm_on {
+            ddm::run(&plan, &chip)
+        } else {
+            DdmResult::disabled(&plan)
+        };
+        let entry = Arc::new(PlanEntry {
+            chip,
+            plan,
+            ddm: dd,
+        });
+        let mut cache = self.cache.lock().unwrap();
+        let winner = cache.entry(key).or_insert(entry);
+        Ok(Arc::clone(winner))
+    }
+
+    /// Pre-plan a design for a network (one cache miss; later runs hit).
+    pub fn warm(&self, design: Design, net: &Network) -> Result<()> {
+        if design == Design::Gpu {
+            return Ok(());
+        }
+        let (cfg, ddm_on, strategy) = self.resolve(design, net);
+        self.entry(&cfg, net, strategy, ddm_on).map(|_| ())
+    }
+
+    /// Simulate an arbitrary chip config through the cache (used by the
+    /// hardware design-space sweep, which varies the chip itself).
+    pub fn run_config(
+        &self,
+        cfg: &ChipConfig,
+        net: &Network,
+        batch: u32,
+        ddm_on: bool,
+        strategy: PartitionStrategy,
+    ) -> Result<SystemReport> {
+        let e = self.entry(cfg, net, strategy, ddm_on)?;
+        compose_report(net, &e.chip, &e.plan, &e.ddm, &self.dram, batch, self.case)
+    }
+
+    /// Full simulator report for a (simulated) design.
+    pub fn system_report(
+        &self,
+        design: Design,
+        net: &Network,
+        batch: u32,
+    ) -> Result<SystemReport> {
+        anyhow::ensure!(
+            design != Design::Gpu,
+            "GPU baseline has no SystemReport; use Engine::run"
+        );
+        let (cfg, ddm_on, strategy) = self.resolve(design, net);
+        self.run_config(&cfg, net, batch, ddm_on, strategy)
+    }
+
+    /// Evaluate one sweep point.
+    pub fn run(&self, design: Design, net: &Network, batch: u32) -> Result<DesignPoint> {
+        if design == Design::Gpu {
+            let gpu = Rtx4090;
+            return Ok(DesignPoint {
+                design,
+                network: net.name.clone(),
+                weights: net.total_weights(),
+                batch,
+                throughput_fps: gpu.throughput_fps(net, batch),
+                tops_per_watt: gpu.tops_per_watt(net, batch),
+                gops_per_mm2: 0.0,
+                area_mm2: 0.0,
+                compute_fraction: 0.0,
+                num_parts: 0,
+                report: None,
+            });
+        }
+        let r = self.system_report(design, net, batch)?;
+        Ok(DesignPoint {
+            design,
+            network: r.network.clone(),
+            weights: net.total_weights(),
+            batch,
+            throughput_fps: r.throughput_fps,
+            tops_per_watt: r.tops_per_watt,
+            gops_per_mm2: r.gops_per_mm2,
+            area_mm2: r.area_mm2,
+            compute_fraction: r.compute_fraction,
+            num_parts: r.num_parts,
+            report: Some(r),
+        })
+    }
+
+    /// Sweep the (design × batch) grid for one network, in parallel.
+    ///
+    /// Plans are warmed first, themselves in parallel across designs —
+    /// exactly one cache miss per simulated design — then every grid
+    /// point fans out over worker threads and hits the cache. Results
+    /// come back in (design-major, batch-minor) grid order regardless of
+    /// which worker finished first.
+    pub fn sweep(
+        &self,
+        net: &Network,
+        designs: &[Design],
+        batches: &[u32],
+    ) -> Result<Vec<DesignPoint>> {
+        parallel_map(designs, |&d| self.warm(d, net))
+            .into_iter()
+            .collect::<Result<Vec<()>>>()?;
+        let mut jobs = Vec::with_capacity(designs.len() * batches.len());
+        for &d in designs {
+            for &b in batches {
+                jobs.push((d, b));
+            }
+        }
+        parallel_map(&jobs, |&(d, b)| self.run(d, net, b))
+            .into_iter()
+            .collect()
+    }
+}
+
+/// Order-preserving parallel map over a slice using scoped threads and an
+/// atomic work queue. Falls back to a serial map for tiny inputs or
+/// single-core hosts. Deterministic: output index i is always `f(&items[i])`.
+pub fn parallel_map<I, T, F>(items: &[I], f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    let n = items.len();
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n);
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::resnet;
+
+    fn engine() -> Engine {
+        Engine::compact(presets::lpddr5())
+    }
+
+    // The bit-identical-to-System and plan-reuse-across-batches invariants
+    // are asserted once, against the public API, in tests/engine_cache.rs.
+
+    #[test]
+    fn sweep_grid_is_ordered_and_complete() {
+        let net = resnet::resnet18(100);
+        let pts = engine()
+            .sweep(&net, &Design::FIG6, &[1, 16])
+            .unwrap();
+        assert_eq!(pts.len(), Design::FIG6.len() * 2);
+        let mut i = 0;
+        for d in Design::FIG6 {
+            for b in [1u32, 16] {
+                assert_eq!(pts[i].design, d);
+                assert_eq!(pts[i].batch, b);
+                i += 1;
+            }
+        }
+        // GPU rows are analytic, everything else carries a report
+        for p in &pts {
+            assert_eq!(p.report.is_none(), p.design == Design::Gpu);
+            assert!(p.throughput_fps > 0.0);
+        }
+    }
+
+    #[test]
+    fn structurally_different_networks_never_share_a_plan() {
+        // Same name, same total weight count, different layer structure:
+        // the cache key must keep them apart.
+        use crate::nn::{Layer, Network};
+        let mut a = Network::new("same", 1, 1);
+        a.push(Layer::fc("fc1", 512, 512));
+        a.push(Layer::fc("fc2", 512, 512));
+        let mut b = Network::new("same", 1, 1);
+        b.push(Layer::fc("fc", 512, 1024));
+        assert_eq!(a.total_weights(), b.total_weights());
+
+        let eng = engine();
+        let ra = eng.system_report(Design::CompactDdm, &a, 4).unwrap();
+        let rb = eng.system_report(Design::CompactDdm, &b, 4).unwrap();
+        assert_eq!(
+            eng.cache_stats().misses,
+            2,
+            "two structures -> two cache entries"
+        );
+        // and the cached result for b matches a fresh engine's
+        let fresh = engine().system_report(Design::CompactDdm, &b, 4).unwrap();
+        assert_eq!(rb.throughput_fps.to_bits(), fresh.throughput_fps.to_bits());
+        assert!(ra.throughput_fps != rb.throughput_fps || ra.num_parts != rb.num_parts);
+    }
+
+    #[test]
+    fn gpu_design_matches_baseline_model() {
+        let net = resnet::resnet34(100);
+        let p = engine().run(Design::Gpu, &net, 256).unwrap();
+        assert_eq!(
+            p.throughput_fps.to_bits(),
+            Rtx4090.throughput_fps(&net, 256).to_bits()
+        );
+        assert!(p.report.is_none());
+        assert!(engine().system_report(Design::Gpu, &net, 1).is_err());
+    }
+
+    #[test]
+    fn distinct_designs_do_not_share_cache_entries() {
+        let net = resnet::resnet34(100);
+        let eng = engine();
+        let ddm = eng.run(Design::CompactDdm, &net, 64).unwrap();
+        let no = eng.run(Design::CompactNoDdm, &net, 64).unwrap();
+        assert_eq!(eng.cache_stats().misses, 2);
+        assert_eq!(eng.cache_len(), 2);
+        assert!(ddm.throughput_fps > no.throughput_fps);
+        // clearing drops the entries; the next run re-plans
+        eng.clear_cache();
+        assert_eq!(eng.cache_len(), 0);
+        let again = eng.run(Design::CompactDdm, &net, 64).unwrap();
+        assert_eq!(eng.cache_stats().misses, 3);
+        assert_eq!(
+            again.throughput_fps.to_bits(),
+            ddm.throughput_fps.to_bits(),
+            "re-planned result is deterministic"
+        );
+    }
+
+    #[test]
+    fn invalid_base_chip_is_an_error_not_a_panic() {
+        let mut cfg = presets::compact_rram_41mm2();
+        cfg.num_tiles = 0;
+        let eng = Engine::new(cfg, presets::lpddr5());
+        assert!(eng
+            .run(Design::CompactDdm, &resnet::resnet18(100), 4)
+            .is_err());
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(&items, |&x| x * x);
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+        assert_eq!(parallel_map::<u64, u64, _>(&[], |&x| x), Vec::<u64>::new());
+    }
+}

@@ -1,6 +1,19 @@
 //! Top-level system simulator: compose chip + DRAM + partition + DDM +
 //! pipeline into one call and emit a [`SystemReport`] with the paper's
 //! metrics.
+//!
+//! Two entry points share the same report-assembly path:
+//!
+//! * [`System`] — a one-shot configured simulator (chip + DRAM + options)
+//!   that recomputes the partition and DDM decision on every call.
+//! * [`engine::Engine`] — the sweep-oriented front end that memoizes the
+//!   batch-invariant work (validated [`ChipModel`], [`PartitionPlan`],
+//!   [`DdmResult`]) per (chip, network, strategy, ddm) and fans sweep
+//!   points out across threads. All of [`crate::explore`] runs through it.
+
+pub mod engine;
+
+pub use engine::{find, find_net, Design, DesignPoint, Engine};
 
 use crate::cfg::chip::ChipConfig;
 use crate::cfg::dram::DramConfig;
@@ -38,7 +51,7 @@ impl SystemReport {
 }
 
 /// How part boundaries are chosen.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PartitionStrategy {
     /// The paper's §II-C greedy packing (default; what the figures use).
     Greedy,
@@ -88,11 +101,15 @@ impl System {
     /// Partition `net` for this chip (exposed for inspection/tests).
     pub fn plan(&self, net: &Network) -> anyhow::Result<PartitionPlan> {
         let chip = ChipModel::new(self.chip.clone())?;
-        let greedy = partition(net, &chip)?;
+        self.plan_on(net, &chip)
+    }
+
+    fn plan_on(&self, net: &Network, chip: &ChipModel) -> anyhow::Result<PartitionPlan> {
+        let greedy = partition(net, chip)?;
         Ok(match self.strategy {
             PartitionStrategy::Greedy => greedy,
             PartitionStrategy::Search => {
-                crate::partition::search_partition(&greedy, &chip)?.plan
+                crate::partition::search_partition(&greedy, chip)?.plan
             }
         })
     }
@@ -100,40 +117,53 @@ impl System {
     /// Fallible run.
     pub fn try_run(&self, net: &Network, batch: u32) -> anyhow::Result<SystemReport> {
         let chip = ChipModel::new(self.chip.clone())?;
-        let plan = self.plan(net)?;
+        let plan = self.plan_on(net, &chip)?;
         let dd: DdmResult = if self.ddm {
             ddm::run(&plan, &chip)
         } else {
             DdmResult::disabled(&plan)
         };
-        let pipe = simulate(net, &plan, &dd, &chip, &self.dram, batch, self.case)?;
-        let makespan_s = pipe.makespan_ns * 1e-9;
-        let area = chip.area_mm2();
-        let total_e = pipe.energy.total_j();
-        Ok(SystemReport {
-            network: net.name.clone(),
-            chip_name: chip.cfg.name.clone(),
-            batch,
-            num_parts: plan.num_parts(),
-            throughput_fps: metrics::fps(batch, makespan_s),
-            per_ifm_ns: pipe.per_ifm_ns,
-            tops_per_watt: metrics::tops_per_watt(net, batch, total_e),
-            gops_per_mm2: metrics::gops_per_mm2(
-                net,
-                metrics::fps(batch, makespan_s),
-                area,
-            ),
-            area_mm2: area,
-            compute_fraction: pipe.energy.compute_fraction(),
-            energy: pipe.energy,
-            pipeline: pipe,
-        })
+        compose_report(net, &chip, &plan, &dd, &self.dram, batch, self.case)
     }
 
     /// Run, panicking on configuration errors (presets are pre-validated).
     pub fn run(&self, net: &Network, batch: u32) -> SystemReport {
         self.try_run(net, batch).expect("system simulation failed")
     }
+}
+
+/// The batch-dependent tail of a simulation: run the pipeline over
+/// pre-computed plan ingredients and assemble a [`SystemReport`].
+///
+/// Both [`System::try_run`] and the memoizing [`engine::Engine`] call this,
+/// so cached and uncached runs are bit-identical by construction.
+pub(crate) fn compose_report(
+    net: &Network,
+    chip: &ChipModel,
+    plan: &PartitionPlan,
+    dd: &DdmResult,
+    dram: &DramConfig,
+    batch: u32,
+    case: PipelineCase,
+) -> anyhow::Result<SystemReport> {
+    let pipe = simulate(net, plan, dd, chip, dram, batch, case)?;
+    let makespan_s = pipe.makespan_ns * 1e-9;
+    let area = chip.area_mm2();
+    let total_e = pipe.energy.total_j();
+    Ok(SystemReport {
+        network: net.name.clone(),
+        chip_name: chip.cfg.name.clone(),
+        batch,
+        num_parts: plan.num_parts(),
+        throughput_fps: metrics::fps(batch, makespan_s),
+        per_ifm_ns: pipe.per_ifm_ns,
+        tops_per_watt: metrics::tops_per_watt(net, batch, total_e),
+        gops_per_mm2: metrics::gops_per_mm2(net, metrics::fps(batch, makespan_s), area),
+        area_mm2: area,
+        compute_fraction: pipe.energy.compute_fraction(),
+        energy: pipe.energy,
+        pipeline: pipe,
+    })
 }
 
 #[cfg(test)]

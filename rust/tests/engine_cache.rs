@@ -1,0 +1,113 @@
+//! Engine-layer integration: the plan cache must be invisible in the
+//! numbers (bit-identical to uncached runs) and visible in the work
+//! (one plan/DDM computation per (design, network), counted by the
+//! hit/miss counters), including under the parallel sweep runner.
+
+use pimflow::cfg::presets;
+use pimflow::explore::{self, BATCHES};
+use pimflow::nn::resnet;
+use pimflow::sim::{find, Design, Engine, System};
+
+fn engine() -> Engine {
+    Engine::compact(presets::lpddr5())
+}
+
+#[test]
+fn cached_and_uncached_reports_are_bit_identical() {
+    let net = resnet::resnet34(100);
+    let eng = engine();
+    // Warm the cache, then run the same point again plus an uncached System.
+    let first = eng.system_report(Design::CompactDdm, &net, 256).unwrap();
+    let cached = eng.system_report(Design::CompactDdm, &net, 256).unwrap();
+    let uncached = System::new(presets::compact_rram_41mm2(), presets::lpddr5())
+        .try_run(&net, 256)
+        .unwrap();
+    assert!(eng.cache_stats().hits >= 1, "second run must hit the cache");
+    for other in [&cached, &uncached] {
+        assert_eq!(first.throughput_fps.to_bits(), other.throughput_fps.to_bits());
+        assert_eq!(first.per_ifm_ns.to_bits(), other.per_ifm_ns.to_bits());
+        assert_eq!(first.tops_per_watt.to_bits(), other.tops_per_watt.to_bits());
+        assert_eq!(first.gops_per_mm2.to_bits(), other.gops_per_mm2.to_bits());
+        assert_eq!(first.area_mm2.to_bits(), other.area_mm2.to_bits());
+        assert_eq!(
+            first.compute_fraction.to_bits(),
+            other.compute_fraction.to_bits()
+        );
+        assert_eq!(first.num_parts, other.num_parts);
+        assert_eq!(
+            first.energy.total_j().to_bits(),
+            other.energy.total_j().to_bits()
+        );
+        assert_eq!(
+            first.pipeline.makespan_ns.to_bits(),
+            other.pipeline.makespan_ns.to_bits()
+        );
+    }
+}
+
+#[test]
+fn fig6_sweep_plans_once_per_design_per_network() {
+    let net = resnet::resnet34(100);
+    let eng = engine();
+    let pts = explore::fig6_sweep(&eng, &net, &BATCHES).unwrap();
+    assert_eq!(pts.len(), Design::FIG6.len() * BATCHES.len());
+    let stats = eng.cache_stats();
+    // GPU is analytic; the four simulated designs plan exactly once each.
+    assert_eq!(stats.misses, 4, "{stats:?}");
+    assert_eq!(stats.hits, 4 * BATCHES.len() as u64, "{stats:?}");
+
+    // A second sweep over the same grid is all hits.
+    let _ = explore::fig6_sweep(&eng, &net, &BATCHES).unwrap();
+    let stats2 = eng.cache_stats();
+    assert_eq!(stats2.misses, 4, "no re-planning on the second sweep");
+    assert!(stats2.hits > stats.hits);
+}
+
+#[test]
+fn fig8_sweep_plans_once_per_design_per_network() {
+    let eng = engine();
+    let pts = explore::fig8_sweep(&eng, 64).unwrap();
+    let family = resnet::paper_family(100).len();
+    assert_eq!(pts.len(), Design::FIG8.len() * family);
+    let stats = eng.cache_stats();
+    assert_eq!(
+        stats.misses,
+        (Design::FIG8.len() * family) as u64,
+        "one plan per (design, network): {stats:?}"
+    );
+    // A different batch on the same engine reuses every plan.
+    let _ = explore::fig8_sweep(&eng, 16).unwrap();
+    assert_eq!(eng.cache_stats().misses, stats.misses);
+}
+
+#[test]
+fn parallel_sweep_equals_sequential_runs_bitwise() {
+    let net = resnet::resnet18(100);
+    let eng = engine();
+    let pts = eng.sweep(&net, &Design::FIG6, &[1, 16, 256]).unwrap();
+    let fresh = engine();
+    for p in &pts {
+        let serial = fresh.run(p.design, &net, p.batch).unwrap();
+        assert_eq!(
+            p.throughput_fps.to_bits(),
+            serial.throughput_fps.to_bits(),
+            "{:?} batch {}",
+            p.design,
+            p.batch
+        );
+        assert_eq!(p.tops_per_watt.to_bits(), serial.tops_per_watt.to_bits());
+    }
+    // Grid order: design-major, batch-minor.
+    assert_eq!(find(&pts, Design::Gpu, 1).unwrap().batch, pts[0].batch);
+    assert_eq!(pts[0].design, Design::Gpu);
+}
+
+#[test]
+fn engine_distinguishes_dram_generations() {
+    let net = resnet::resnet18(100);
+    let e5 = Engine::compact(presets::lpddr5());
+    let e3 = Engine::compact(presets::dram(pimflow::cfg::DramKind::Lpddr3));
+    let r5 = e5.system_report(Design::CompactDdm, &net, 64).unwrap();
+    let r3 = e3.system_report(Design::CompactDdm, &net, 64).unwrap();
+    assert!(r3.energy.dram_j > r5.energy.dram_j);
+}

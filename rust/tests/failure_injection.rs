@@ -1,78 +1,82 @@
 //! Failure injection: corrupted artifacts, degenerate networks, hostile
 //! configs — everything must fail loudly and cleanly, never hang or UB.
 
-use std::path::PathBuf;
-
 use pimflow::cfg::presets;
-use pimflow::nn::{Layer, LayerKind, Network};
+use pimflow::nn::{Layer, Network};
 use pimflow::partition::partition;
 use pimflow::pim::ChipModel;
-use pimflow::runtime::{ExecutorPool, Manifest};
 use pimflow::sim::System;
 
-fn tmpdir(name: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("pimflow_fail_{name}"));
-    let _ = std::fs::remove_dir_all(&dir);
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
-}
+// ---------- artifact-layer failures (runtime feature only) ----------
 
-// ---------- artifact-layer failures ----------
+#[cfg(feature = "runtime")]
+mod artifact_failures {
+    use std::path::PathBuf;
 
-#[test]
-fn missing_manifest_is_a_clean_error() {
-    let dir = tmpdir("nomanifest");
-    let err = Manifest::load(&dir).unwrap_err().to_string();
-    assert!(err.contains("manifest"), "{err}");
-}
+    use pimflow::runtime::{ExecutorPool, Manifest};
 
-#[test]
-fn corrupted_manifest_json_is_rejected() {
-    let dir = tmpdir("badjson");
-    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
-    assert!(Manifest::load(&dir).is_err());
-}
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pimflow_fail_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
 
-#[test]
-fn manifest_missing_fields_is_rejected() {
-    let dir = tmpdir("nofields");
-    std::fs::write(dir.join("manifest.json"), r#"{"version": 2}"#).unwrap();
-    assert!(Manifest::load(&dir).is_err());
-    std::fs::write(
-        dir.join("manifest.json"),
-        r#"{"version": 2, "entries": {"x": {"inputs": [], "outputs": []}}}"#,
-    )
-    .unwrap();
-    assert!(Manifest::load(&dir).is_err()); // no file field
-}
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        let dir = tmpdir("nomanifest");
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("manifest"), "{err}");
+    }
 
-#[test]
-fn truncated_hlo_text_fails_at_compile() {
-    let dir = tmpdir("badhlo");
-    std::fs::write(
-        dir.join("manifest.json"),
-        r#"{"version": 2, "entries": {"tiny_cnn_b1": {
+    #[test]
+    fn corrupted_manifest_json_is_rejected() {
+        let dir = tmpdir("badjson");
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn manifest_missing_fields_is_rejected() {
+        let dir = tmpdir("nofields");
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 2}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 2, "entries": {"x": {"inputs": [], "outputs": []}}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err()); // no file field
+    }
+
+    #[test]
+    fn truncated_hlo_text_fails_at_compile() {
+        let dir = tmpdir("badhlo");
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 2, "entries": {"tiny_cnn_b1": {
             "file": "t.hlo.txt",
             "inputs": [{"shape": [1,32,32,3], "dtype": "i32"}],
             "outputs": [{"shape": [1,100], "dtype": "i32"}]}}}"#,
-    )
-    .unwrap();
-    std::fs::write(dir.join("t.hlo.txt"), "HloModule truncated_garbage {").unwrap();
-    assert!(ExecutorPool::load(&dir).is_err());
-}
+        )
+        .unwrap();
+        std::fs::write(dir.join("t.hlo.txt"), "HloModule truncated_garbage {").unwrap();
+        assert!(ExecutorPool::load(&dir).is_err());
+    }
 
-#[test]
-fn hlo_file_absent_fails_at_load() {
-    let dir = tmpdir("nofile");
-    std::fs::write(
-        dir.join("manifest.json"),
-        r#"{"version": 2, "entries": {"tiny_cnn_b1": {
+    #[test]
+    fn hlo_file_absent_fails_at_load() {
+        let dir = tmpdir("nofile");
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 2, "entries": {"tiny_cnn_b1": {
             "file": "missing.hlo.txt",
             "inputs": [{"shape": [1,32,32,3], "dtype": "i32"}],
             "outputs": [{"shape": [1,100], "dtype": "i32"}]}}}"#,
-    )
-    .unwrap();
-    assert!(ExecutorPool::load(&dir).is_err());
+        )
+        .unwrap();
+        assert!(ExecutorPool::load(&dir).is_err());
+    }
 }
 
 // ---------- simulator-layer failures & degenerate inputs ----------

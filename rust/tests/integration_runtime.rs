@@ -1,5 +1,7 @@
 //! Runtime + coordinator integration over the real AOT artifacts.
-//! These tests skip gracefully when `make artifacts` has not run.
+//! These tests skip gracefully when `make artifacts` has not run, and the
+//! whole file is compiled only with the `runtime` feature (the xla chain).
+#![cfg(feature = "runtime")]
 
 use std::path::PathBuf;
 use std::time::Duration;
