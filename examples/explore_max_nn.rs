@@ -1,30 +1,37 @@
-//! Fig. 8 exploration: which is the largest ResNet this 41.5 mm² compact
-//! chip can host while holding a performance floor?
+//! Fig. 8 exploration over the model zoo: which is the largest network —
+//! ResNet, VGG, or MobileNet — this 41.5 mm² compact chip can host while
+//! holding a performance floor?
 //!
 //! Run: `cargo run --release --example explore_max_nn`
 
 use pimflow::cfg::presets;
-use pimflow::explore::{fig8_sweep, find_net, max_deployable, Design, Engine, Floor};
-use pimflow::nn::resnet;
+use pimflow::explore::{max_deployable, zoo_sweep, Design, Engine, Floor};
+use pimflow::sim::find_net;
 
 fn main() -> anyhow::Result<()> {
     let batch = 256;
     let engine = Engine::compact(presets::lpddr5());
-    let pts = fig8_sweep(&engine, batch)?;
+    let pts = zoo_sweep(&engine, batch)?;
 
     println!("NN-size exploration @ batch {batch} (compact 41.5 mm², LPDDR5)\n");
     println!(
-        "{:<10} {:>10} {:>12} {:>12} {:>12} {:>10}",
+        "{:<12} {:>10} {:>12} {:>12} {:>12} {:>10}",
         "network", "weights", "no-DDM FPS", "DDM FPS", "unlim FPS", "TOPS/W"
     );
-    for net in resnet::paper_family(100) {
-        let row = |d: Design| find_net(&pts, d, &net.name).expect("swept");
+    let mut names: Vec<&str> = Vec::new();
+    for p in &pts {
+        if !names.contains(&p.network.as_str()) {
+            names.push(&p.network);
+        }
+    }
+    for name in &names {
+        let row = |d: Design| find_net(&pts, d, name).expect("swept");
         let no_ddm = row(Design::CompactNoDdm);
         let ddm = row(Design::CompactDdm);
         let unlim = row(Design::Unlimited);
         println!(
-            "{:<10} {:>9.1}M {:>12.0} {:>12.0} {:>12.0} {:>10.2}",
-            net.name,
+            "{:<12} {:>9.1}M {:>12.0} {:>12.0} {:>12.0} {:>10.2}",
+            name,
             ddm.weights as f64 / 1e6,
             no_ddm.throughput_fps,
             ddm.throughput_fps,
@@ -33,7 +40,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Sweep a family of floors like the paper's purple-oval analysis.
+    // Sweep a family of floors like the paper's purple-oval analysis —
+    // with the zoo on the axis the recommendation can land on a different
+    // *family*, not just a different ResNet depth.
     println!("\nfloor sweep (efficiency floor fixed at 4 TOPS/W):");
     for min_fps in [1000.0, 2000.0, 3000.0, 5000.0, 8000.0] {
         let floor = Floor {
@@ -41,7 +50,11 @@ fn main() -> anyhow::Result<()> {
             min_tops_per_watt: 4.0,
         };
         match max_deployable(&pts, floor) {
-            Some(best) => println!("  >{min_fps:>5.0} FPS -> up to {}", best.network),
+            Some(best) => println!(
+                "  >{min_fps:>5.0} FPS -> up to {} ({:.1}M weights)",
+                best.network,
+                best.weights as f64 / 1e6
+            ),
             None => println!("  >{min_fps:>5.0} FPS -> nothing fits"),
         }
     }

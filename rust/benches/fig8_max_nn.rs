@@ -1,10 +1,13 @@
 //! Bench: regenerate Fig. 8 (max NN size exploration) through the shared
-//! engine and time one row.
+//! engine — the paper's ResNet axis and the zoo axis — and time one row
+//! of each family.
 
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
-use pimflow::explore::{ddm_row, fig8_sweep, max_deployable, Design, Engine, Floor};
-use pimflow::nn::resnet;
+use pimflow::explore::{
+    ddm_row, fig8_sweep, max_deployable, paper_networks, zoo_sweep, Design, Engine, Floor,
+};
+use pimflow::nn::zoo;
 
 use pimflow::report::figures;
 
@@ -12,16 +15,30 @@ fn main() {
     let engine = Engine::compact(presets::lpddr5());
 
     let mut b = Bench::from_env();
-    let net = resnet::resnet50(100);
+    let net = zoo::by_name("resnet50", 100).unwrap();
+    let vgg = zoo::by_name("vgg16", 100).unwrap();
+    let mobile = zoo::by_name("mobilenetv1", 100).unwrap();
     b.case("fig8_row_resnet50", || {
         engine.run(Design::CompactDdm, &net, 64).unwrap()
     });
+    b.case("fig8_row_vgg16", || {
+        engine.run(Design::CompactDdm, &vgg, 64).unwrap()
+    });
+    b.case("fig8_row_mobilenetv1", || {
+        engine.run(Design::CompactDdm, &mobile, 64).unwrap()
+    });
     b.report();
 
-    let pts = fig8_sweep(&engine, 256).unwrap();
+    let pts = fig8_sweep(&engine, &paper_networks(), 256).unwrap();
     let (table, csv) = figures::fig8_table(&pts).unwrap();
     print!("{}", table.render());
     let _ = figures::write_csv(&csv, "fig8_max_nn.csv");
+
+    // The zoo axis: same engine, same cache, three families on one table.
+    let zoo_pts = zoo_sweep(&engine, 256).unwrap();
+    let (zoo_table, zoo_csv) = figures::fig8_table(&zoo_pts).unwrap();
+    print!("{}", zoo_table.render());
+    let _ = figures::write_csv(&zoo_csv, "fig8_zoo.csv");
 
     // The paper's recommendation logic: pick a floor between the family
     // extremes and report the largest deployable network.
@@ -31,7 +48,7 @@ fn main() {
         min_fps: (first.throughput_fps + last.throughput_fps) / 2.0,
         min_tops_per_watt: 4.0,
     };
-    match max_deployable(&pts, floor) {
+    match max_deployable(&zoo_pts, floor) {
         Some(best) => println!(
             "max deployable under floor (>{:.0} FPS, >4 TOPS/W): {} ({:.1}M)",
             floor.min_fps,

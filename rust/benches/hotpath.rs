@@ -9,8 +9,8 @@ use pimflow::cfg::presets;
 use pimflow::cfg::PipelineCase;
 use pimflow::ddm;
 use pimflow::explore::{fig6_sweep, BATCHES};
-use pimflow::nn::resnet;
-use pimflow::partition::partition;
+use pimflow::nn::{resnet, zoo};
+use pimflow::partition::{partition, search_partition_with};
 use pimflow::pim::ChipModel;
 use pimflow::pipeline::simulate;
 use pimflow::sim::{Design, Engine, System};
@@ -20,15 +20,30 @@ fn main() {
     let dram = presets::lpddr5();
     let r34 = resnet::resnet34(100);
     let r152 = resnet::resnet152(100);
+    let vgg19 = zoo::vgg19(100);
 
     let plan34 = partition(&r34, &chip).unwrap();
     let dd34 = ddm::run(&plan34, &chip);
+    let plan_vgg = partition(&vgg19, &chip).unwrap();
 
     let mut b = Bench::from_env();
     b.case("resnet_build_152", || resnet::resnet152(100));
+    b.case("zoo_build_all", zoo::all);
     b.case("partition_r34", || partition(&r34, &chip).unwrap());
     b.case("partition_r152", || partition(&r152, &chip).unwrap());
+    b.case("partition_vgg19", || partition(&vgg19, &chip).unwrap());
     b.case("ddm_r34", || ddm::run(&plan34, &chip));
+    // The per-boundary memo target: identical outcome, strictly fewer
+    // DDM evaluations (tests/search_memo.rs pins both).
+    b.case("search_r34_memo", || {
+        search_partition_with(&plan34, &chip, true).unwrap()
+    });
+    b.case("search_r34_unmemoized", || {
+        search_partition_with(&plan34, &chip, false).unwrap()
+    });
+    b.case("search_vgg19_memo", || {
+        search_partition_with(&plan_vgg, &chip, true).unwrap()
+    });
     b.case("pipeline_sim_r34_b64", || {
         simulate(&r34, &plan34, &dd34, &chip, &dram, 64, PipelineCase::Auto).unwrap()
     });

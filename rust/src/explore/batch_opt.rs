@@ -54,6 +54,36 @@ pub fn min_batch_for_throughput(
     }
 }
 
+/// One row of a multi-network batch-tuning sweep.
+#[derive(Debug, Clone)]
+pub struct TunedNetwork {
+    pub network: String,
+    pub weights: u64,
+    pub point: BatchPoint,
+}
+
+/// Tune the smallest batch reaching `frac` of asymptotic throughput for
+/// every network in `nets` (the zoo's network axis applied to the batch
+/// auto-tuner). Rows come back in input order; each network's probe
+/// ladder reuses one cached plan.
+pub fn tune_networks(
+    engine: &Engine,
+    design: Design,
+    nets: &[Network],
+    frac: f64,
+    max_batch: u32,
+) -> Result<Vec<TunedNetwork>> {
+    nets.iter()
+        .map(|net| {
+            Ok(TunedNetwork {
+                network: net.name.clone(),
+                weights: net.total_weights(),
+                point: min_batch_for_throughput(engine, design, net, frac, max_batch)?,
+            })
+        })
+        .collect()
+}
+
 /// Largest power-of-two batch whose full-batch latency stays under
 /// `slo_s`; None if even batch 1 misses it.
 pub fn max_batch_for_latency(
@@ -105,6 +135,21 @@ mod tests {
         }
         // the whole probe ladder shares one plan
         assert_eq!(eng.cache_stats().misses, 1);
+    }
+
+    #[test]
+    fn tune_networks_covers_the_axis_and_shares_plans() {
+        let nets = [
+            crate::nn::zoo::by_name("mobilenetv1", 100).unwrap(),
+            resnet::resnet18(100),
+        ];
+        let eng = engine();
+        let rows = tune_networks(&eng, Design::CompactDdm, &nets, 0.5, 64).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].network, "mobilenetv1");
+        assert!(rows.iter().all(|r| r.point.throughput_fps > 0.0));
+        // one plan per network, however many batch probes each needed
+        assert_eq!(eng.cache_stats().misses, 2);
     }
 
     #[test]

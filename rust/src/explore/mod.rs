@@ -11,9 +11,13 @@ pub mod nn_sweep;
 
 pub use crate::sim::engine::{find, find_net, Design, DesignPoint, Engine};
 
-pub use batch_opt::{max_batch_for_latency, min_batch_for_throughput, BatchPoint};
+pub use batch_opt::{
+    max_batch_for_latency, min_batch_for_throughput, tune_networks, BatchPoint, TunedNetwork,
+};
 pub use batch_sweep::{
     fig3_sweep, fig6_sweep, fig7_sweep, Fig3Point, Fig7Point, BATCHES, FIG3_BURST_BYTES,
 };
 pub use design_sweep::{design_sweep, mark_pareto, HwDesignPoint};
-pub use nn_sweep::{ddm_row, fig8_sweep, max_deployable, Floor, EXPLORE_BATCH};
+pub use nn_sweep::{
+    ddm_row, fig8_sweep, max_deployable, paper_networks, zoo_sweep, Floor, EXPLORE_BATCH,
+};

@@ -1,7 +1,12 @@
-//! NN-size exploration (Fig. 8): deploy each ResNet on the fixed compact
-//! chip and find the largest network that still meets the performance
-//! floor (paper: energy efficiency > 8 TOPS/W and throughput > 3000 FPS →
-//! deploy NNs smaller than ResNet-101).
+//! NN-size exploration (Fig. 8): deploy each network of a family on the
+//! fixed compact chip and find the largest one that still meets the
+//! performance floor (paper: energy efficiency > 8 TOPS/W and throughput
+//! > 3000 FPS → deploy NNs smaller than ResNet-101).
+//!
+//! The network axis is data: [`fig8_sweep`] takes any list of networks —
+//! the paper's ResNet family ([`paper_networks`]), the whole model zoo
+//! ([`zoo_sweep`]), or an arbitrary selection resolved through
+//! [`crate::nn::zoo::by_name`].
 //!
 //! Runs through the shared [`Engine`]: the three designs of each network
 //! fan out in parallel and the per-network plans land in the plan cache,
@@ -10,20 +15,32 @@
 
 use anyhow::Result;
 
-use crate::nn::resnet;
+use crate::nn::{resnet, zoo, Network};
 use crate::sim::engine::{find_net, Design, DesignPoint, Engine};
 
 /// Reference batch used for the exploration.
 pub const EXPLORE_BATCH: u32 = 256;
 
-/// Sweep the paper's ResNet family on the compact chip. Returns the flat
-/// grid of (network × {no-DDM, DDM, unlimited}) rows at one batch size.
-pub fn fig8_sweep(engine: &Engine, batch: u32) -> Result<Vec<DesignPoint>> {
+/// The paper's Fig. 8 x-axis: the ResNet family, smallest to largest.
+pub fn paper_networks() -> Vec<Network> {
+    resnet::paper_family(100)
+}
+
+/// Sweep `nets` on the compact chip. Returns the flat grid of
+/// (network × {no-DDM, DDM, unlimited}) rows at one batch size, in the
+/// given network order.
+pub fn fig8_sweep(engine: &Engine, nets: &[Network], batch: u32) -> Result<Vec<DesignPoint>> {
     let mut points = Vec::new();
-    for net in resnet::paper_family(100) {
-        points.extend(engine.sweep(&net, &Design::FIG8, &[batch])?);
+    for net in nets {
+        points.extend(engine.sweep(net, &Design::FIG8, &[batch])?);
     }
     Ok(points)
+}
+
+/// [`fig8_sweep`] over the whole model zoo (ResNets + VGGs + MobileNet),
+/// sorted by weight count so the rows read as a size axis.
+pub fn zoo_sweep(engine: &Engine, batch: u32) -> Result<Vec<DesignPoint>> {
+    fig8_sweep(engine, &zoo::all_sorted(), batch)
 }
 
 /// Performance floor for the deployment recommendation.
@@ -56,7 +73,7 @@ mod tests {
     use crate::cfg::presets;
 
     fn sweep() -> Vec<DesignPoint> {
-        fig8_sweep(&Engine::compact(presets::lpddr5()), 64).unwrap()
+        fig8_sweep(&Engine::compact(presets::lpddr5()), &paper_networks(), 64).unwrap()
     }
 
     fn ddm_points(pts: &[DesignPoint]) -> Vec<&DesignPoint> {

@@ -11,8 +11,11 @@
 //!   → chip) with 32 nm area/latency/energy accounting for RRAM and SRAM.
 //! * [`dram`] — DRAMPower-style off-chip LPDDR3/4/5 energy + timing model
 //!   with a cycle-stamped transaction trace.
-//! * [`nn`] — layer-graph IR and ResNet-18/34/50/101/152 builders
-//!   (CIFAR-100, 8-bit quantized).
+//! * [`nn`] — layer-graph IR (dense + depthwise convolutions, FC, pooling)
+//!   and the model zoo: ResNet-18/34/50/101/152, VGG-11/13/16/19, and
+//!   MobileNetV1 builders (CIFAR-100, 8-bit quantized) behind the
+//!   string-keyed [`nn::zoo`] registry every sweep and CLI command
+//!   resolves networks through.
 //! * [`partition`] / [`mapping`] — the paper's §II-C partition criteria and
 //!   tile allocation with layer duplication.
 //! * [`pipeline`] — the compact-chip pipeline method (Fig. 4 cases 1–3) as a

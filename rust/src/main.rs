@@ -3,9 +3,12 @@
 //! Subcommands map one-to-one onto the paper's experiments:
 //! `run` (one simulation point), `fig1/fig3/fig4/fig6/fig7/fig8`
 //! (regenerate each figure), `explore` (max-NN search with a floor),
+//! `zoo` (list the model registry), `tune` (per-network batch auto-tune),
 //! `serve` (the L3 serving path over AOT artifacts; `runtime` feature),
 //! `plan` (inspect a partition + DDM decision). Every simulation command
-//! goes through the shared `sim::engine::Engine`.
+//! goes through the shared `sim::engine::Engine`; every `--network` /
+//! `--networks` option resolves through `nn::zoo`, so each figure
+//! reproduces for any zoo network.
 
 use std::path::Path;
 
@@ -16,7 +19,7 @@ use pimflow::cli::{App, Command, Invocation, Opt, Parsed};
 #[cfg(feature = "runtime")]
 use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
 use pimflow::explore;
-use pimflow::nn::resnet;
+use pimflow::nn::{zoo, Network};
 use pimflow::report::figures;
 use pimflow::report::Table;
 use pimflow::sim::{Design, Engine, PartitionStrategy};
@@ -25,7 +28,20 @@ use pimflow::util::logger;
 use pimflow::util::Rng;
 
 fn app() -> App {
-    let net_opt = || Opt::value("network", Some("resnet34"), "network (resnet18/34/50/101/152, tiny)");
+    let net_opt = || {
+        Opt::value(
+            "network",
+            Some("resnet34"),
+            "network (resnet18/34/50/101/152, vgg11/13/16/19, mobilenetv1, tiny)",
+        )
+    };
+    let nets_opt = || {
+        Opt::value(
+            "networks",
+            Some("paper"),
+            "network axis: `paper` (ResNet family), `zoo`, or a comma list of zoo names",
+        )
+    };
     let batch_opt = || Opt::value("batch", Some("64"), "batch size n");
     let dram_opt = || Opt::value("dram", Some("lpddr5"), "dram kind (lpddr3/4/5)");
     let csv_flag = || Opt::flag("csv", "also write results/<fig>.csv");
@@ -60,7 +76,11 @@ fn app() -> App {
             Command {
                 name: "fig3",
                 about: "Fig 3: DRAM transactions vs batch, compact vs unlimited",
-                opts: vec![Opt::value("network", Some("resnet18"), "network"), dram_opt(), csv_flag()],
+                opts: vec![
+                    Opt::value("network", Some("resnet18"), "network"),
+                    dram_opt(),
+                    csv_flag(),
+                ],
             },
             Command {
                 name: "fig4",
@@ -79,8 +99,8 @@ fn app() -> App {
             },
             Command {
                 name: "fig8",
-                about: "Fig 8: max-NN-size exploration across the ResNet family",
-                opts: vec![batch_opt(), dram_opt(), csv_flag()],
+                about: "Fig 8: max-NN-size exploration across a network family",
+                opts: vec![nets_opt(), batch_opt(), dram_opt(), csv_flag()],
             },
             Command {
                 name: "explore",
@@ -88,7 +108,23 @@ fn app() -> App {
                 opts: vec![
                     Opt::value("min-fps", Some("3000"), "throughput floor (FPS)"),
                     Opt::value("min-tops-per-watt", Some("8"), "efficiency floor"),
+                    nets_opt(),
                     batch_opt(),
+                    dram_opt(),
+                ],
+            },
+            Command {
+                name: "zoo",
+                about: "list the model zoo (name, parameters, crossbar layers)",
+                opts: vec![csv_flag()],
+            },
+            Command {
+                name: "tune",
+                about: "smallest batch reaching a throughput fraction, per network",
+                opts: vec![
+                    nets_opt(),
+                    Opt::value("frac", Some("0.8"), "fraction of asymptotic throughput"),
+                    Opt::value("max-batch", Some("1024"), "probe ceiling"),
                     dram_opt(),
                 ],
             },
@@ -129,6 +165,19 @@ fn app() -> App {
     app
 }
 
+/// Resolve the `--networks` axis: `paper` (ResNet family), `zoo` (whole
+/// registry, sorted by weights), or a comma list of zoo names.
+fn networks_of(p: &Parsed) -> Result<Vec<Network>> {
+    Ok(match p.get_or("networks", "paper") {
+        "paper" => explore::paper_networks(),
+        "zoo" => zoo::all_sorted(),
+        list => list
+            .split(',')
+            .map(|n| zoo::by_name(n.trim(), 100))
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
 fn dram_of(p: &Parsed) -> Result<pimflow::cfg::DramConfig> {
     Ok(match p.get_or("dram", "lpddr5") {
         "lpddr3" => presets::dram(DramKind::Lpddr3),
@@ -143,7 +192,7 @@ fn cmd_run(p: &Parsed) -> Result<()> {
     if let Some(path) = p.get("config") {
         cfg = Config::from_file(Path::new(path))?;
     }
-    let net = resnet::by_name(p.get_or("network", &cfg.sim.network.clone()), 100)?;
+    let net = zoo::by_name(p.get_or("network", &cfg.sim.network.clone()), 100)?;
     let batch = p.get_u32("batch")?.unwrap_or(cfg.sim.batch);
     let case = match p.get_or("case", "auto") {
         "case2" => PipelineCase::Case2,
@@ -190,7 +239,7 @@ fn cmd_run(p: &Parsed) -> Result<()> {
 }
 
 fn cmd_plan(p: &Parsed) -> Result<()> {
-    let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
+    let net = zoo::by_name(p.get_or("network", "resnet34"), 100)?;
     let chip = pimflow::pim::ChipModel::new(presets::compact_rram_41mm2())?;
     let plan = pimflow::partition::partition(&net, &chip)?;
     let dd = pimflow::ddm::run(&plan, &chip);
@@ -240,7 +289,7 @@ fn cmd_fig1(p: &Parsed) -> Result<()> {
 }
 
 fn cmd_fig3(p: &Parsed) -> Result<()> {
-    let net = resnet::by_name(p.get_or("network", "resnet18"), 100)?;
+    let net = zoo::by_name(p.get_or("network", "resnet18"), 100)?;
     let engine = Engine::compact(dram_of(p)?);
     let pts = explore::fig3_sweep(&engine, &net, &explore::BATCHES)?;
     let (t, csv) = figures::fig3_table(&pts);
@@ -279,7 +328,7 @@ fn cmd_fig4(p: &Parsed) -> Result<()> {
 }
 
 fn cmd_fig6(p: &Parsed) -> Result<()> {
-    let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
+    let net = zoo::by_name(p.get_or("network", "resnet34"), 100)?;
     let engine = Engine::compact(dram_of(p)?);
     let pts = explore::fig6_sweep(&engine, &net, &explore::BATCHES)?;
     let (thr, eff, csv) = figures::fig6_tables(&pts)?;
@@ -293,7 +342,7 @@ fn cmd_fig6(p: &Parsed) -> Result<()> {
 }
 
 fn cmd_fig7(p: &Parsed) -> Result<()> {
-    let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
+    let net = zoo::by_name(p.get_or("network", "resnet34"), 100)?;
     let engine = Engine::compact(dram_of(p)?);
     let pts = explore::fig7_sweep(&engine, &net, &explore::BATCHES)?;
     let (t, csv) = figures::fig7_table(&pts);
@@ -307,7 +356,7 @@ fn cmd_fig7(p: &Parsed) -> Result<()> {
 fn cmd_fig8(p: &Parsed) -> Result<()> {
     let batch = p.get_u32("batch")?.unwrap_or(explore::EXPLORE_BATCH);
     let engine = Engine::compact(dram_of(p)?);
-    let pts = explore::fig8_sweep(&engine, batch)?;
+    let pts = explore::fig8_sweep(&engine, &networks_of(p)?, batch)?;
     let (t, csv) = figures::fig8_table(&pts)?;
     print!("{}", t.render());
     if p.flag("csv") {
@@ -323,7 +372,7 @@ fn cmd_explore(p: &Parsed) -> Result<()> {
         min_tops_per_watt: p.get_f64("min-tops-per-watt")?.unwrap_or(8.0),
     };
     let engine = Engine::compact(dram_of(p)?);
-    let pts = explore::fig8_sweep(&engine, batch)?;
+    let pts = explore::fig8_sweep(&engine, &networks_of(p)?, batch)?;
     let (t, _) = figures::fig8_table(&pts)?;
     print!("{}", t.render());
     match explore::max_deployable(&pts, floor) {
@@ -410,8 +459,45 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+fn cmd_zoo(p: &Parsed) -> Result<()> {
+    let (t, csv) = figures::zoo_table();
+    print!("{}", t.render());
+    if p.flag("csv") {
+        println!("wrote {}", figures::write_csv(&csv, "zoo.csv")?.display());
+    }
+    Ok(())
+}
+
+fn cmd_tune(p: &Parsed) -> Result<()> {
+    let frac = p.get_f64("frac")?.unwrap_or(0.8);
+    let max_batch = p.get_u32("max-batch")?.unwrap_or(1024);
+    let engine = Engine::compact(dram_of(p)?);
+    let rows = explore::tune_networks(
+        &engine,
+        Design::CompactDdm,
+        &networks_of(p)?,
+        frac,
+        max_batch,
+    )?;
+    let mut t = Table::new(
+        format!("smallest batch reaching {:.0}% of asymptotic FPS", 100.0 * frac),
+        vec!["network", "weights(M)", "batch", "FPS", "batch latency"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.network.clone(),
+            format!("{:.1}", r.weights as f64 / 1e6),
+            r.point.batch.to_string(),
+            format!("{:.0}", r.point.throughput_fps),
+            pimflow::util::units::fmt_time(r.point.batch_latency_s),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
 fn cmd_design(p: &Parsed) -> Result<()> {
-    let net = resnet::by_name(p.get_or("network", "resnet18"), 100)?;
+    let net = zoo::by_name(p.get_or("network", "resnet18"), 100)?;
     let batch = p.get_u32("batch")?.unwrap_or(32);
     let engine = Engine::compact(dram_of(p)?);
     let pts = pimflow::explore::design_sweep(&engine, &net, batch);
@@ -435,7 +521,7 @@ fn cmd_design(p: &Parsed) -> Result<()> {
 }
 
 fn cmd_trace(p: &Parsed) -> Result<()> {
-    let net = resnet::by_name(p.get_or("network", "resnet34"), 100)?;
+    let net = zoo::by_name(p.get_or("network", "resnet34"), 100)?;
     let batch = p.get_u32("batch")?.unwrap_or(64);
     let dram = dram_of(p)?;
     let report = Engine::compact(dram.clone()).system_report(Design::CompactDdm, &net, batch)?;
@@ -476,6 +562,8 @@ fn dispatch(p: Parsed) -> Result<()> {
         "fig7" => cmd_fig7(&p),
         "fig8" => cmd_fig8(&p),
         "explore" => cmd_explore(&p),
+        "zoo" => cmd_zoo(&p),
+        "tune" => cmd_tune(&p),
         "design" => cmd_design(&p),
         "trace" => cmd_trace(&p),
         #[cfg(feature = "runtime")]

@@ -79,13 +79,147 @@ impl Network {
             anyhow::bail!("network `{}` has no layers", self.name);
         }
         for l in &self.layers {
-            if let LayerKind::Conv { kernel, stride, .. } = &l.kind {
-                if *kernel == 0 || *stride == 0 || l.in_hw == 0 {
-                    anyhow::bail!("layer `{}` has zero dimensions", l.name);
+            match &l.kind {
+                LayerKind::Conv { kernel, stride, .. }
+                | LayerKind::DepthwiseConv { kernel, stride, .. } => {
+                    if *kernel == 0 || *stride == 0 || l.in_hw == 0 {
+                        anyhow::bail!("layer `{}` has zero dimensions", l.name);
+                    }
                 }
+                LayerKind::MaxPool { kernel, stride } => {
+                    if *kernel == 0 || *stride == 0 || l.in_hw == 0 {
+                        anyhow::bail!("layer `{}` has zero dimensions", l.name);
+                    }
+                    // pad-less window: out_hw() computes in_hw - kernel
+                    if *kernel > l.in_hw {
+                        anyhow::bail!(
+                            "pool `{}` kernel {} exceeds its {}-px input",
+                            l.name,
+                            kernel,
+                            l.in_hw
+                        );
+                    }
+                }
+                _ => {}
             }
             if l.is_crossbar() && l.weights() == 0 {
                 anyhow::bail!("crossbar layer `{}` has no weights", l.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Verify the layer list is a consistent shape chain: every layer's
+    /// input spatial size / channel count follows from its predecessor.
+    ///
+    /// Residual side branches follow the builders' convention: a conv
+    /// whose input matches an earlier main-path state of the current
+    /// residual block (rather than the running state) is a skip/downsample
+    /// branch, and must produce the main path's current shape so the
+    /// following `Add` can join the two. `Add` closes the block.
+    pub fn shape_chain(&self) -> anyhow::Result<()> {
+        let (mut hw, mut ch) = (self.input_hw, self.input_ch);
+        // main-path states seen since the last residual join
+        let mut block: Vec<(u32, u32)> = vec![(hw, ch)];
+        for l in &self.layers {
+            match &l.kind {
+                LayerKind::Conv { in_ch, .. } => {
+                    if l.in_hw == hw && *in_ch == ch {
+                        hw = l.out_hw();
+                        ch = l.out_ch();
+                        block.push((hw, ch));
+                    } else if block.contains(&(l.in_hw, *in_ch)) {
+                        anyhow::ensure!(
+                            l.out_hw() == hw && l.out_ch() == ch,
+                            "branch `{}` produces {}x{}x{}, main path is {}x{}x{}",
+                            l.name,
+                            l.out_hw(),
+                            l.out_hw(),
+                            l.out_ch(),
+                            hw,
+                            hw,
+                            ch
+                        );
+                    } else {
+                        anyhow::bail!(
+                            "conv `{}` expects {}x{}x{}, which matches neither the \
+                             main path ({}x{}x{}) nor any earlier state of this block",
+                            l.name,
+                            l.in_hw,
+                            l.in_hw,
+                            in_ch,
+                            hw,
+                            hw,
+                            ch
+                        );
+                    }
+                }
+                LayerKind::DepthwiseConv { ch: c, .. } => {
+                    anyhow::ensure!(
+                        l.in_hw == hw && *c == ch,
+                        "depthwise `{}` expects {}x{}x{}, chain is {}x{}x{}",
+                        l.name,
+                        l.in_hw,
+                        l.in_hw,
+                        c,
+                        hw,
+                        hw,
+                        ch
+                    );
+                    hw = l.out_hw();
+                    block.push((hw, ch));
+                }
+                LayerKind::MaxPool { .. } => {
+                    anyhow::ensure!(
+                        l.in_hw == hw,
+                        "pool `{}` at {}, chain is {}",
+                        l.name,
+                        l.in_hw,
+                        hw
+                    );
+                    hw = l.out_hw();
+                    block.push((hw, ch));
+                }
+                LayerKind::GlobalAvgPool => {
+                    anyhow::ensure!(
+                        l.in_hw == hw,
+                        "gap `{}` at {}, chain is {}",
+                        l.name,
+                        l.in_hw,
+                        hw
+                    );
+                    hw = 1;
+                    block.push((hw, ch));
+                }
+                LayerKind::Add => {
+                    anyhow::ensure!(
+                        l.in_hw == hw,
+                        "add `{}` at {}, chain is {}",
+                        l.name,
+                        l.in_hw,
+                        hw
+                    );
+                    block.clear();
+                    block.push((hw, ch));
+                }
+                LayerKind::Fc {
+                    in_features,
+                    out_features,
+                } => {
+                    anyhow::ensure!(
+                        *in_features as u64 == hw as u64 * hw as u64 * ch as u64,
+                        "fc `{}` expects {} features, chain provides {}x{}x{} = {}",
+                        l.name,
+                        in_features,
+                        hw,
+                        hw,
+                        ch,
+                        hw as u64 * hw as u64 * ch as u64
+                    );
+                    hw = 1;
+                    ch = *out_features;
+                    block.push((hw, ch));
+                }
             }
         }
         Ok(())
@@ -118,6 +252,40 @@ mod tests {
         assert_eq!(n.input_bytes(), 8 * 8 * 3);
         assert_eq!(n.output_bytes(), 10);
         n.validate().unwrap();
+    }
+
+    #[test]
+    fn oversized_pool_window_is_invalid_not_a_panic() {
+        let mut n = Network::new("bad_pool", 1, 3);
+        n.push(Layer::conv("c", 1, 3, 8, 1, 1, 0));
+        n.push(Layer::max_pool("p", 1, 2, 2)); // 2-px window on a 1-px map
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn shape_chain_accepts_consistent_and_rejects_broken() {
+        let mut ok = Network::new("ok", 8, 3);
+        ok.push(Layer::conv("c1", 8, 3, 8, 3, 1, 1));
+        ok.push(Layer::max_pool("p", 8, 2, 2));
+        ok.push(Layer::depthwise("dw", 4, 8, 3, 1, 1));
+        ok.push(Layer::conv("pw", 4, 8, 16, 1, 1, 0));
+        ok.push(Layer {
+            name: "gap".into(),
+            kind: LayerKind::GlobalAvgPool,
+            in_hw: 4,
+        });
+        ok.push(Layer::fc("fc", 16, 10));
+        ok.shape_chain().unwrap();
+
+        let mut bad_ch = Network::new("bad", 8, 3);
+        bad_ch.push(Layer::conv("c1", 8, 3, 8, 3, 1, 1));
+        bad_ch.push(Layer::conv("c2", 8, 16, 8, 3, 1, 1)); // 16 != 8
+        assert!(bad_ch.shape_chain().is_err());
+
+        let mut bad_fc = Network::new("bad_fc", 8, 3);
+        bad_fc.push(Layer::conv("c1", 8, 3, 8, 3, 1, 1));
+        bad_fc.push(Layer::fc("fc", 99, 10)); // 99 != 8*8*8
+        assert!(bad_fc.shape_chain().is_err());
     }
 
     #[test]

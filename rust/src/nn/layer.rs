@@ -1,8 +1,9 @@
 //! Layer IR: the shapes the mapper/scheduler need, nothing more.
 //!
-//! Only CONV and FC layers occupy crossbar storage (the paper maps those
-//! onto subarrays); pooling / residual adds run on the chip's digital units
-//! and are modeled as zero-weight layers that still move activation bytes.
+//! Only CONV (dense or depthwise) and FC layers occupy crossbar storage
+//! (the paper maps those onto subarrays); pooling / residual adds run on
+//! the chip's digital units and are modeled as zero-weight layers that
+//! still move activation bytes.
 
 /// Kind of layer plus its shape parameters.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -15,8 +16,20 @@ pub enum LayerKind {
         stride: u32,
         pad: u32,
     },
+    /// Depthwise 2-D convolution (channel multiplier 1): each of the `ch`
+    /// channels owns one `kernel×kernel` filter. Crossbar-mapped as a
+    /// `k² × ch` matrix (one column per channel), so storage equals the
+    /// `k²·ch` weight count exactly.
+    DepthwiseConv {
+        ch: u32,
+        kernel: u32,
+        stride: u32,
+        pad: u32,
+    },
     /// Fully connected.
     Fc { in_features: u32, out_features: u32 },
+    /// Max pool (digital unit; no weights).
+    MaxPool { kernel: u32, stride: u32 },
     /// Global average pool (digital unit; no weights).
     GlobalAvgPool,
     /// Residual add join (digital unit; no weights).
@@ -55,6 +68,34 @@ impl Layer {
         }
     }
 
+    pub fn depthwise(
+        name: impl Into<String>,
+        in_hw: u32,
+        ch: u32,
+        kernel: u32,
+        stride: u32,
+        pad: u32,
+    ) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::DepthwiseConv {
+                ch,
+                kernel,
+                stride,
+                pad,
+            },
+            in_hw,
+        }
+    }
+
+    pub fn max_pool(name: impl Into<String>, in_hw: u32, kernel: u32, stride: u32) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::MaxPool { kernel, stride },
+            in_hw,
+        }
+    }
+
     pub fn fc(name: impl Into<String>, in_features: u32, out_features: u32) -> Self {
         Layer {
             name: name.into(),
@@ -74,7 +115,14 @@ impl Layer {
                 stride,
                 pad,
                 ..
+            }
+            | LayerKind::DepthwiseConv {
+                kernel,
+                stride,
+                pad,
+                ..
             } => (self.in_hw + 2 * pad - kernel) / stride + 1,
+            LayerKind::MaxPool { kernel, stride } => (self.in_hw - kernel) / stride + 1,
             LayerKind::Fc { .. } => 1,
             LayerKind::GlobalAvgPool => 1,
             LayerKind::Add => self.in_hw,
@@ -90,7 +138,9 @@ impl Layer {
     pub fn out_ch(&self) -> u32 {
         match &self.kind {
             LayerKind::Conv { out_ch, .. } => *out_ch,
+            LayerKind::DepthwiseConv { ch, .. } => *ch,
             LayerKind::Fc { out_features, .. } => *out_features,
+            LayerKind::MaxPool { .. } => 0, // channel count preserved; caller tracks
             LayerKind::GlobalAvgPool => 0, // channel count preserved; caller tracks
             LayerKind::Add => 0,
         }
@@ -105,6 +155,9 @@ impl Layer {
                 kernel,
                 ..
             } => *kernel as u64 * *kernel as u64 * *in_ch as u64 * *out_ch as u64,
+            LayerKind::DepthwiseConv { ch, kernel, .. } => {
+                *kernel as u64 * *kernel as u64 * *ch as u64
+            }
             LayerKind::Fc {
                 in_features,
                 out_features,
@@ -116,7 +169,9 @@ impl Layer {
     /// Multiply-accumulate count for one IFM.
     pub fn macs(&self) -> u64 {
         match &self.kind {
-            LayerKind::Conv { .. } => self.out_pixels() * self.crossbar_k() as u64 * self.out_ch() as u64,
+            LayerKind::Conv { .. } | LayerKind::DepthwiseConv { .. } => {
+                self.out_pixels() * self.crossbar_k() as u64 * self.out_ch() as u64
+            }
             LayerKind::Fc { .. } => self.weights(),
             _ => 0,
         }
@@ -126,6 +181,7 @@ impl Layer {
     pub fn crossbar_k(&self) -> u32 {
         match &self.kind {
             LayerKind::Conv { in_ch, kernel, .. } => kernel * kernel * in_ch,
+            LayerKind::DepthwiseConv { kernel, .. } => kernel * kernel,
             LayerKind::Fc { in_features, .. } => *in_features,
             _ => 0,
         }
@@ -135,6 +191,7 @@ impl Layer {
     pub fn crossbar_n(&self) -> u32 {
         match &self.kind {
             LayerKind::Conv { out_ch, .. } => *out_ch,
+            LayerKind::DepthwiseConv { ch, .. } => *ch,
             LayerKind::Fc { out_features, .. } => *out_features,
             _ => 0,
         }
@@ -142,7 +199,10 @@ impl Layer {
 
     /// True when this layer occupies crossbar storage.
     pub fn is_crossbar(&self) -> bool {
-        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+        matches!(
+            self.kind,
+            LayerKind::Conv { .. } | LayerKind::DepthwiseConv { .. } | LayerKind::Fc { .. }
+        )
     }
 
     pub fn is_fc(&self) -> bool {
@@ -153,7 +213,9 @@ impl Layer {
     pub fn ofm_bytes(&self) -> u64 {
         match &self.kind {
             LayerKind::Conv { out_ch, .. } => self.out_pixels() * *out_ch as u64,
+            LayerKind::DepthwiseConv { ch, .. } => self.out_pixels() * *ch as u64,
             LayerKind::Fc { out_features, .. } => *out_features as u64,
+            LayerKind::MaxPool { .. } => 0, // in-place reduction; folded into next layer
             LayerKind::GlobalAvgPool => 0, // negligible (C bytes); folded into next layer
             LayerKind::Add => 0,
         }
@@ -164,6 +226,9 @@ impl Layer {
         match &self.kind {
             LayerKind::Conv { in_ch, .. } => {
                 self.in_hw as u64 * self.in_hw as u64 * *in_ch as u64
+            }
+            LayerKind::DepthwiseConv { ch, .. } => {
+                self.in_hw as u64 * self.in_hw as u64 * *ch as u64
             }
             LayerKind::Fc { in_features, .. } => *in_features as u64,
             _ => 0,
@@ -203,6 +268,35 @@ mod tests {
         assert_eq!(l.macs(), 51_200);
         assert_eq!(l.out_pixels(), 1);
         assert!(l.is_fc() && l.is_crossbar());
+    }
+
+    #[test]
+    fn depthwise_shapes() {
+        let l = Layer::depthwise("dw", 16, 128, 3, 1, 1);
+        assert_eq!(l.out_hw(), 16);
+        assert_eq!(l.weights(), 3 * 3 * 128);
+        // the k²×ch crossbar matrix stores exactly the weight count
+        assert_eq!(
+            l.crossbar_k() as u64 * l.crossbar_n() as u64,
+            l.weights()
+        );
+        assert_eq!(l.macs(), 256 * 9 * 128);
+        assert_eq!(l.out_ch(), 128);
+        assert_eq!(l.ofm_bytes(), 256 * 128);
+        assert_eq!(l.ifm_bytes(), 16 * 16 * 128);
+        assert!(l.is_crossbar() && !l.is_fc());
+        // stride-2 halves the map like a regular conv
+        let s = Layer::depthwise("dws", 16, 128, 3, 2, 1);
+        assert_eq!(s.out_hw(), 8);
+    }
+
+    #[test]
+    fn max_pool_halves_and_is_digital() {
+        let p = Layer::max_pool("pool", 32, 2, 2);
+        assert_eq!(p.out_hw(), 16);
+        assert_eq!(p.weights(), 0);
+        assert_eq!(p.macs(), 0);
+        assert!(!p.is_crossbar());
     }
 
     #[test]

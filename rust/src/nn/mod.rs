@@ -1,10 +1,12 @@
-//! Neural-network IR: layers, the network graph, and the paper's ResNet
-//! family (plus the tiny CNN served by the AOT artifacts).
+//! Neural-network IR: layers, the network graph, the paper's ResNet
+//! family (plus the tiny CNN served by the AOT artifacts), and the
+//! [`zoo`] registry adding VGG-11/13/16/19 and MobileNetV1 workloads.
 
 pub mod graph;
 pub mod layer;
 pub mod quant;
 pub mod resnet;
+pub mod zoo;
 
 pub use graph::Network;
 pub use layer::{Layer, LayerKind};

@@ -1,0 +1,261 @@
+//! The model zoo: every workload the simulator can deploy, behind one
+//! string-keyed registry.
+//!
+//! The paper evaluates the compact-PIM trade-off only on ResNets, but the
+//! conclusion — how much NN you can afford on one-third of the chip area —
+//! depends on the layer-shape mix. VGG stacks are a few very wide dense
+//! convs (stressing channel splitting and per-part weight reloads);
+//! MobileNet's depthwise-separable blocks are many small layers
+//! (stressing DDM duplication and the DP boundary search). The zoo puts
+//! VGG-11/13/16/19 and a MobileNetV1-style network on the same `Design`
+//! axis as the ResNet family, CIFAR-sized like the rest of the pipeline.
+//!
+//! Networks are data, not call sites: sweeps iterate [`all`] or resolve
+//! [`by_name`], so every figure reproduces for every zoo network.
+
+use super::graph::Network;
+use super::layer::Layer;
+use super::resnet;
+
+/// A network builder: CIFAR-sized input, parameterized over the head.
+pub type Builder = fn(u32) -> Network;
+
+/// The registry: name → builder, smallest family member first. `tiny` is
+/// the AOT-serving artifact model; the rest are the evaluation zoo.
+pub const REGISTRY: &[(&str, Builder)] = &[
+    ("tiny", resnet::tiny),
+    ("resnet18", resnet::resnet18),
+    ("resnet34", resnet::resnet34),
+    ("resnet50", resnet::resnet50),
+    ("resnet101", resnet::resnet101),
+    ("resnet152", resnet::resnet152),
+    ("vgg11", vgg11),
+    ("vgg13", vgg13),
+    ("vgg16", vgg16),
+    ("vgg19", vgg19),
+    ("mobilenetv1", mobilenet_v1),
+];
+
+/// Registry names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|(n, _)| *n).collect()
+}
+
+/// Look up any zoo network by name (CLI / config entry point).
+pub fn by_name(name: &str, num_classes: u32) -> anyhow::Result<Network> {
+    REGISTRY
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, build)| build(num_classes))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown network `{name}` (known: {})",
+                names().join("/")
+            )
+        })
+}
+
+/// The evaluation zoo with the paper's CIFAR-100 heads: the ResNet family,
+/// the VGG family, and MobileNetV1 (everything except the serving-artifact
+/// `tiny`), in registry order.
+pub fn all() -> Vec<Network> {
+    all_with(100)
+}
+
+/// [`all`] with an arbitrary head width.
+pub fn all_with(num_classes: u32) -> Vec<Network> {
+    REGISTRY
+        .iter()
+        .filter(|(n, _)| *n != "tiny")
+        .map(|(_, build)| build(num_classes))
+        .collect()
+}
+
+/// [`all`] sorted by weight count — the canonical NN-size axis shared by
+/// `explore::zoo_sweep` and the CLI's `--networks zoo`.
+pub fn all_sorted() -> Vec<Network> {
+    let mut nets = all();
+    nets.sort_by_key(Network::total_weights);
+    nets
+}
+
+// ---------------------------------------------------------------------------
+// VGG (Simonyan & Zisserman), CIFAR adaptation: 3×3 stride-1 pad-1 convs,
+// five 2×2 max-pool stages (32→16→8→4→2→1), single `num_classes` head on
+// the 1×1×512 feature map (the standard CIFAR-VGG classifier).
+// ---------------------------------------------------------------------------
+
+/// Stage plan: conv output channels, `0` = 2×2 max pool.
+const VGG11_CFG: &[u32] = &[64, 0, 128, 0, 256, 256, 0, 512, 512, 0, 512, 512, 0];
+const VGG13_CFG: &[u32] = &[64, 64, 0, 128, 128, 0, 256, 256, 0, 512, 512, 0, 512, 512, 0];
+const VGG16_CFG: &[u32] = &[
+    64, 64, 0, 128, 128, 0, 256, 256, 256, 0, 512, 512, 512, 0, 512, 512, 512, 0,
+];
+const VGG19_CFG: &[u32] = &[
+    64, 64, 0, 128, 128, 0, 256, 256, 256, 256, 0, 512, 512, 512, 512, 0, 512, 512, 512, 512, 0,
+];
+
+fn vgg(name: &str, cfg: &[u32], num_classes: u32) -> Network {
+    let mut net = Network::new(name, 32, 3);
+    let mut hw = 32u32;
+    let mut ch = 3u32;
+    let mut conv = 0u32;
+    let mut pool = 0u32;
+    for &v in cfg {
+        if v == 0 {
+            net.push(Layer::max_pool(format!("pool{pool}"), hw, 2, 2));
+            pool += 1;
+            hw /= 2;
+        } else {
+            net.push(Layer::conv(format!("conv{conv}"), hw, ch, v, 3, 1, 1));
+            conv += 1;
+            ch = v;
+        }
+    }
+    net.push(Layer::fc("fc", hw * hw * ch, num_classes));
+    net
+}
+
+pub fn vgg11(num_classes: u32) -> Network {
+    vgg("vgg11", VGG11_CFG, num_classes)
+}
+
+pub fn vgg13(num_classes: u32) -> Network {
+    vgg("vgg13", VGG13_CFG, num_classes)
+}
+
+pub fn vgg16(num_classes: u32) -> Network {
+    vgg("vgg16", VGG16_CFG, num_classes)
+}
+
+pub fn vgg19(num_classes: u32) -> Network {
+    vgg("vgg19", VGG19_CFG, num_classes)
+}
+
+// ---------------------------------------------------------------------------
+// MobileNetV1 (Howard et al.), CIFAR adaptation: 3×3 stride-1 stem to 32
+// channels, then 13 depthwise-separable blocks with the standard channel
+// schedule (strides at the 128/256/512/1024 transitions: 32→16→8→4→2),
+// global average pool, `num_classes` head.
+// ---------------------------------------------------------------------------
+
+/// Block plan: (pointwise output channels, depthwise stride).
+const MOBILENET_CFG: &[(u32, u32)] = &[
+    (64, 1),
+    (128, 2),
+    (128, 1),
+    (256, 2),
+    (256, 1),
+    (512, 2),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (1024, 2),
+    (1024, 1),
+];
+
+pub fn mobilenet_v1(num_classes: u32) -> Network {
+    let mut net = Network::new("mobilenetv1", 32, 3);
+    net.push(Layer::conv("stem", 32, 3, 32, 3, 1, 1));
+    let mut hw = 32u32;
+    let mut ch = 32u32;
+    for (b, &(out_ch, stride)) in MOBILENET_CFG.iter().enumerate() {
+        net.push(Layer::depthwise(format!("b{b}dw"), hw, ch, 3, stride, 1));
+        if stride == 2 {
+            hw /= 2;
+        }
+        net.push(Layer::conv(format!("b{b}pw"), hw, ch, out_ch, 1, 1, 0));
+        ch = out_ch;
+    }
+    net.push(Layer {
+        name: "gap".into(),
+        kind: super::layer::LayerKind::GlobalAvgPool,
+        in_hw: hw,
+    });
+    net.push(Layer::fc("fc", ch, num_classes));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_name() {
+        for (name, _) in REGISTRY {
+            let net = by_name(name, 100).unwrap();
+            assert_eq!(net.name, *name);
+            net.validate().unwrap();
+        }
+        assert!(by_name("vgg", 100).is_err());
+    }
+
+    #[test]
+    fn all_covers_three_families() {
+        let nets = all();
+        assert!(nets.len() >= 6, "zoo too small: {}", nets.len());
+        let count = |prefix: &str| nets.iter().filter(|n| n.name.starts_with(prefix)).count();
+        assert!(count("resnet") >= 3);
+        assert!(count("vgg") >= 2);
+        assert!(count("mobilenet") >= 1);
+        // the serving-artifact model is resolvable but not in the zoo
+        assert!(nets.iter().all(|n| n.name != "tiny"));
+        assert!(by_name("tiny", 100).is_ok());
+    }
+
+    #[test]
+    fn every_zoo_network_chains_and_validates() {
+        for net in all() {
+            net.validate().unwrap();
+            net.shape_chain()
+                .unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        }
+    }
+
+    #[test]
+    fn vgg_layer_counts_and_head() {
+        let cases = [
+            (vgg11(100), 8),
+            (vgg13(100), 10),
+            (vgg16(100), 13),
+            (vgg19(100), 16),
+        ];
+        for (net, convs) in cases {
+            assert_eq!(net.crossbar_layers().len(), convs + 1, "{}", net.name);
+            // after five pools the head sees a 1×1×512 map
+            let fc = *net.crossbar_layers().last().unwrap();
+            assert_eq!(fc.crossbar_k(), 512, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn mobilenet_is_depthwise_separable() {
+        use crate::nn::LayerKind;
+        let net = mobilenet_v1(100);
+        // stem + 13 (dw + pw) + fc
+        assert_eq!(net.crossbar_layers().len(), 1 + 13 * 2 + 1);
+        let dw: Vec<&Layer> = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::DepthwiseConv { .. }))
+            .collect();
+        assert_eq!(dw.len(), 13);
+        // depthwise layers hold a tiny fraction of the weights
+        let dw_weights: u64 = dw.iter().map(|l| l.weights()).sum();
+        assert!((dw_weights as f64) < 0.02 * net.total_weights() as f64);
+    }
+
+    #[test]
+    fn families_order_by_design_point() {
+        // VGG19 ≈ ResNet-34 in weights but far fewer, wider layers;
+        // MobileNet is the small-model extreme.
+        let v19 = vgg19(100);
+        let r34 = resnet::resnet34(100);
+        let mb = mobilenet_v1(100);
+        assert!((v19.total_weights() as f64 / r34.total_weights() as f64 - 1.0).abs() < 0.1);
+        assert!(v19.crossbar_layers().len() < r34.crossbar_layers().len() / 2);
+        assert!(mb.total_weights() < v19.total_weights() / 5);
+    }
+}

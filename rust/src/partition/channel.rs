@@ -43,6 +43,9 @@ fn with_out_ch(layer: &Layer, out_ch: u32) -> Layer {
     let mut l = layer.clone();
     match &mut l.kind {
         LayerKind::Conv { out_ch: oc, .. } => *oc = out_ch,
+        // A depthwise slice keeps a subset of channels: both the input and
+        // output sides shrink together (channels are independent columns).
+        LayerKind::DepthwiseConv { ch, .. } => *ch = out_ch,
         LayerKind::Fc { out_features, .. } => *out_features = out_ch,
         _ => unreachable!("only crossbar layers are split"),
     }
@@ -53,6 +56,9 @@ fn with_in_ch(layer: &Layer, in_ch: u32) -> Layer {
     let mut l = layer.clone();
     match &mut l.kind {
         LayerKind::Conv { in_ch: ic, .. } => *ic = in_ch,
+        // Depthwise K = k² is channel-independent, so output splitting
+        // always suffices and this arm only keeps the helper total.
+        LayerKind::DepthwiseConv { ch, .. } => *ch = in_ch,
         LayerKind::Fc { in_features, .. } => *in_features = in_ch,
         _ => unreachable!("only crossbar layers are split"),
     }
@@ -93,6 +99,7 @@ fn in_channel_split(layer: &Layer, chip: &ChipModel, max_tiles: u32) -> Vec<Laye
     // output splitting within each input slice if still needed.
     let in_ch0 = match &layer.kind {
         LayerKind::Conv { in_ch, .. } => *in_ch,
+        LayerKind::DepthwiseConv { ch, .. } => *ch,
         LayerKind::Fc { in_features, .. } => *in_features,
         _ => unreachable!(),
     };
@@ -194,6 +201,24 @@ mod tests {
             })
             .sum();
         assert!(in_total >= 4096);
+    }
+
+    #[test]
+    fn oversized_depthwise_splits_channels_without_partial_sums() {
+        let c = chip();
+        let l = Layer::depthwise("dw", 4, 4096, 3, 1, 1);
+        let s = split_to_fit(&l, &c, 2);
+        assert!(s.len() > 1);
+        // channel slices cover all channels exactly and conserve weights
+        let ch_total: u32 = s.iter().map(|x| x.layer.crossbar_n()).sum();
+        assert_eq!(ch_total, 4096);
+        let w_total: u64 = s.iter().map(|x| x.layer.weights()).sum();
+        assert_eq!(w_total, l.weights());
+        for x in &s {
+            assert!(c.layer_tiles(&x.layer) <= 2);
+            // depthwise channels are independent: never an input split
+            assert!(!x.in_split);
+        }
     }
 
     #[test]

@@ -11,4 +11,4 @@ pub mod layerwise;
 pub mod search;
 
 pub use layerwise::{partition, MapUnit, Part, PartitionPlan};
-pub use search::{search_partition, SearchOutcome};
+pub use search::{search_partition, search_partition_with, SearchOutcome, SearchStats};

@@ -10,8 +10,12 @@
 //! part's interval is evaluated *after* running Algorithm 1 on it.
 //!
 //! Complexity: O(U²) part-candidate evaluations, each running the DDM on
-//! up to U units (U = number of map units, ≤ ~120 for ResNet-152), plus
-//! memoization of candidate costs.
+//! up to U units (U = number of map units, ≤ ~160 for ResNet-152). Every
+//! candidate cost is memoized per boundary pair `(i, j)` so no span is
+//! ever evaluated through the DDM twice — the DP and the greedy-objective
+//! comparison share one cost cache ([`SearchStats`] counts the work).
+
+use std::collections::HashMap;
 
 use super::layerwise::{Part, PartitionPlan};
 use crate::ddm::algorithm::ddm_part;
@@ -49,6 +53,53 @@ fn part_cost_ns(units: &[super::MapUnit], chip: &ChipModel) -> Option<f64> {
     Some(itp::part_interval_ns(chip, &part.units, &dups) + switch_cost_ns(units, chip))
 }
 
+/// Work counters for one boundary search: how many candidate spans went
+/// through the full Algorithm-1 + ITP evaluation vs. hit the memo.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Spans evaluated through `part_cost_ns` (each runs the DDM).
+    pub ddm_evals: u64,
+    /// Spans answered from the per-boundary memo instead.
+    pub memo_hits: u64,
+}
+
+/// Per-boundary cost cache over one flattened unit list: span `[i, j)` of
+/// `units` maps to its (deterministic) DDM-evaluated cost exactly once.
+/// With `memo: None` every lookup re-evaluates — the pre-memoization
+/// behaviour, kept for the regression test and the hot-path bench.
+struct CostMemo<'a> {
+    units: &'a [super::MapUnit],
+    chip: &'a ChipModel,
+    memo: Option<HashMap<(usize, usize), Option<f64>>>,
+    stats: SearchStats,
+}
+
+impl<'a> CostMemo<'a> {
+    fn new(units: &'a [super::MapUnit], chip: &'a ChipModel, memoize: bool) -> Self {
+        CostMemo {
+            units,
+            chip,
+            memo: memoize.then(HashMap::new),
+            stats: SearchStats::default(),
+        }
+    }
+
+    fn cost(&mut self, i: usize, j: usize) -> Option<f64> {
+        if let Some(m) = &self.memo {
+            if let Some(&c) = m.get(&(i, j)) {
+                self.stats.memo_hits += 1;
+                return c;
+            }
+        }
+        self.stats.ddm_evals += 1;
+        let c = part_cost_ns(&self.units[i..j], self.chip);
+        if let Some(m) = &mut self.memo {
+            m.insert((i, j), c);
+        }
+        c
+    }
+}
+
 /// Result of the boundary search.
 #[derive(Debug, Clone)]
 pub struct SearchOutcome {
@@ -57,14 +108,28 @@ pub struct SearchOutcome {
     pub cost_ns: f64,
     /// Cost of the greedy plan under the same objective (for reporting).
     pub greedy_cost_ns: f64,
+    /// DDM-evaluation work counters (memo effectiveness).
+    pub stats: SearchStats,
 }
 
 /// DP boundary search over the unit sequence of `greedy` (unit expansion —
 /// including channel splits — is reused from the greedy pass, so both
-/// plans map the identical unit list).
+/// plans map the identical unit list). Candidate costs are memoized per
+/// boundary pair.
 pub fn search_partition(
     greedy: &PartitionPlan,
     chip: &ChipModel,
+) -> anyhow::Result<SearchOutcome> {
+    search_partition_with(greedy, chip, true)
+}
+
+/// [`search_partition`] with the per-boundary memo toggleable. The
+/// outcome (plan, costs) is identical either way — only [`SearchStats`]
+/// moves — which `tests/search_memo.rs` pins.
+pub fn search_partition_with(
+    greedy: &PartitionPlan,
+    chip: &ChipModel,
+    memoize: bool,
 ) -> anyhow::Result<SearchOutcome> {
     let units: Vec<super::MapUnit> = greedy
         .parts
@@ -73,6 +138,7 @@ pub fn search_partition(
         .collect();
     let u = units.len();
     anyhow::ensure!(u > 0, "empty plan");
+    let mut costs = CostMemo::new(&units, chip, memoize);
 
     // cost[j] = minimal Σ T_p covering units[0..j); parent[j] = start of
     // the last part in the optimum.
@@ -83,7 +149,7 @@ pub fn search_partition(
         // Candidate last parts [i, j). Tile budget bounds the span, so the
         // inner loop breaks as soon as a candidate overflows.
         for i in (0..j).rev() {
-            let Some(c) = part_cost_ns(&units[i..j], chip) else {
+            let Some(c) = costs.cost(i, j) else {
                 break; // units[i..j) no longer fits; shorter i only worse
             };
             let total = cost[i] + c;
@@ -117,12 +183,18 @@ pub fn search_partition(
         })
         .collect();
 
-    // Greedy objective for comparison.
-    let greedy_cost: f64 = greedy
-        .parts
-        .iter()
-        .filter_map(|p| part_cost_ns(&p.units, chip))
-        .sum();
+    // Greedy objective for comparison. Greedy part p spans
+    // units[off .. off + len), so each lookup hits the DP's memo —
+    // pre-memoization these were fresh DDM evaluations.
+    let mut greedy_cost = 0.0;
+    let mut off = 0usize;
+    for p in &greedy.parts {
+        let end = off + p.units.len();
+        if let Some(c) = costs.cost(off, end) {
+            greedy_cost += c;
+        }
+        off = end;
+    }
 
     Ok(SearchOutcome {
         plan: PartitionPlan {
@@ -131,6 +203,7 @@ pub fn search_partition(
         },
         cost_ns: cost[u],
         greedy_cost_ns: greedy_cost,
+        stats: costs.stats,
     })
 }
 
@@ -144,13 +217,13 @@ mod tests {
 
     fn setup(net: &str) -> (ChipModel, PartitionPlan) {
         let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
-        let plan = partition(&resnet::by_name(net, 100).unwrap(), &chip).unwrap();
+        let plan = partition(&crate::nn::zoo::by_name(net, 100).unwrap(), &chip).unwrap();
         (chip, plan)
     }
 
     #[test]
     fn search_never_worse_than_greedy() {
-        for net in ["resnet18", "resnet34", "resnet50"] {
+        for net in ["resnet18", "resnet34", "resnet50", "vgg16", "mobilenetv1"] {
             let (chip, greedy) = setup(net);
             let out = search_partition(&greedy, &chip).unwrap();
             assert!(
@@ -199,6 +272,17 @@ mod tests {
             .flat_map(|p| p.units.iter().map(|u| u.layer.name.as_str()))
             .collect();
         assert_eq!(greedy_order, search_order);
+    }
+
+    #[test]
+    fn memo_never_runs_a_span_twice() {
+        let (chip, greedy) = setup("vgg16");
+        let out = search_partition(&greedy, &chip).unwrap();
+        // the greedy-objective pass rides the DP's memo
+        assert!(out.stats.memo_hits >= greedy.num_parts() as u64);
+        let unmemo = search_partition_with(&greedy, &chip, false).unwrap();
+        assert_eq!(unmemo.stats.memo_hits, 0);
+        assert!(out.stats.ddm_evals < unmemo.stats.ddm_evals);
     }
 
     #[test]

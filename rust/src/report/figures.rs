@@ -309,6 +309,35 @@ pub fn fig8_table(points: &[DesignPoint]) -> anyhow::Result<(Table, Csv)> {
     Ok((t, csv))
 }
 
+/// Model-zoo summary: one row per registered network (name, parameters,
+/// crossbar-mapped layers, MACs) — the CLI `zoo` command and the README
+/// quickstart table.
+pub fn zoo_table() -> (Table, Csv) {
+    let mut t = Table::new(
+        "Model zoo (CIFAR-sized, 100-class heads)",
+        vec!["network", "weights(M)", "crossbar layers", "MACs(M)"],
+    );
+    let mut csv = Csv::new(vec!["network", "weights", "crossbar_layers", "macs"]);
+    for net in crate::nn::zoo::all() {
+        let w = net.total_weights();
+        let l = net.crossbar_layers().len();
+        let m = net.total_macs();
+        t.row(vec![
+            net.name.clone(),
+            format!("{:.2}", w as f64 / 1e6),
+            l.to_string(),
+            format!("{:.0}", m as f64 / 1e6),
+        ]);
+        csv.row(vec![
+            net.name.clone(),
+            w.to_string(),
+            l.to_string(),
+            m.to_string(),
+        ]);
+    }
+    (t, csv)
+}
+
 /// Fig. 1 helper (used by the CLI): write a CSV under `results/`.
 pub fn write_csv(csv: &Csv, name: &str) -> std::io::Result<std::path::PathBuf> {
     let path = Path::new("results").join(name);
@@ -367,9 +396,21 @@ mod tests {
         assert!(thr.render().contains("16"));
         assert!(eff.render().contains("unlimited"));
         assert_eq!(csv.num_rows(), 2);
-        let (t8, csv8) = fig8_table(&fig8_sweep(&engine, 16).unwrap()).unwrap();
+        let (t8, csv8) =
+            fig8_table(&fig8_sweep(&engine, &crate::explore::paper_networks(), 16).unwrap())
+                .unwrap();
         assert!(t8.render().contains("resnet152"));
         assert_eq!(csv8.num_rows(), 5);
+    }
+
+    #[test]
+    fn zoo_table_lists_all_three_families() {
+        let (t, csv) = zoo_table();
+        let s = t.render();
+        for name in ["resnet50", "vgg16", "mobilenetv1"] {
+            assert!(s.contains(name), "missing {name}");
+        }
+        assert_eq!(csv.num_rows(), crate::nn::zoo::all().len());
     }
 
     #[test]

@@ -66,17 +66,17 @@ fn fig6_sweep_plans_once_per_design_per_network() {
 #[test]
 fn fig8_sweep_plans_once_per_design_per_network() {
     let eng = engine();
-    let pts = explore::fig8_sweep(&eng, 64).unwrap();
-    let family = resnet::paper_family(100).len();
-    assert_eq!(pts.len(), Design::FIG8.len() * family);
+    let family = resnet::paper_family(100);
+    let pts = explore::fig8_sweep(&eng, &family, 64).unwrap();
+    assert_eq!(pts.len(), Design::FIG8.len() * family.len());
     let stats = eng.cache_stats();
     assert_eq!(
         stats.misses,
-        (Design::FIG8.len() * family) as u64,
+        (Design::FIG8.len() * family.len()) as u64,
         "one plan per (design, network): {stats:?}"
     );
     // A different batch on the same engine reuses every plan.
-    let _ = explore::fig8_sweep(&eng, 16).unwrap();
+    let _ = explore::fig8_sweep(&eng, &family, 16).unwrap();
     assert_eq!(eng.cache_stats().misses, stats.misses);
 }
 

@@ -6,7 +6,7 @@ use pimflow::cfg::chip::{CellTech, ChipConfig};
 use pimflow::cfg::{presets, PipelineCase};
 use pimflow::ddm;
 use pimflow::mapping::{duplication, map_part};
-use pimflow::nn::{resnet, Layer};
+use pimflow::nn::Layer;
 use pimflow::partition::partition;
 use pimflow::pim::ChipModel;
 use pimflow::pipeline::simulate;
@@ -27,8 +27,16 @@ fn random_chip(r: &mut Rng) -> ChipConfig {
 }
 
 fn random_net(r: &mut Rng) -> pimflow::nn::Network {
-    let nets = ["resnet18", "resnet34", "resnet50", "tiny"];
-    resnet::by_name(nets[r.index(nets.len())], 100).unwrap()
+    let nets = [
+        "resnet18",
+        "resnet34",
+        "resnet50",
+        "tiny",
+        "vgg11",
+        "vgg16",
+        "mobilenetv1",
+    ];
+    pimflow::nn::zoo::by_name(nets[r.index(nets.len())], 100).unwrap()
 }
 
 #[test]

@@ -1,0 +1,71 @@
+//! Regression net over the boundary-search memoization: the per-boundary
+//! cost memo must change the *work*, never the *outcome*. Pre/post-memo
+//! runs are compared bitwise; the DDM evaluation count must strictly
+//! drop, with the exact accounting pinned.
+
+use pimflow::cfg::presets;
+use pimflow::nn::zoo;
+use pimflow::partition::{partition, search_partition, search_partition_with};
+use pimflow::pim::ChipModel;
+
+const NETS: [&str; 4] = ["resnet18", "resnet34", "vgg16", "mobilenetv1"];
+
+#[test]
+fn memoized_outcome_is_bitwise_identical() {
+    let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+    for name in NETS {
+        let net = zoo::by_name(name, 100).unwrap();
+        let greedy = partition(&net, &chip).unwrap();
+        let memo = search_partition_with(&greedy, &chip, true).unwrap();
+        let plain = search_partition_with(&greedy, &chip, false).unwrap();
+
+        assert_eq!(
+            memo.cost_ns.to_bits(),
+            plain.cost_ns.to_bits(),
+            "{name}: search cost moved"
+        );
+        assert_eq!(
+            memo.greedy_cost_ns.to_bits(),
+            plain.greedy_cost_ns.to_bits(),
+            "{name}: greedy objective moved"
+        );
+        let bounds = |o: &pimflow::partition::SearchOutcome| -> Vec<Vec<String>> {
+            o.plan
+                .parts
+                .iter()
+                .map(|p| p.units.iter().map(|u| u.layer.name.clone()).collect())
+                .collect()
+        };
+        assert_eq!(bounds(&memo), bounds(&plain), "{name}: boundaries moved");
+
+        // the default entry point is the memoized path
+        let default = search_partition(&greedy, &chip).unwrap();
+        assert_eq!(default.cost_ns.to_bits(), memo.cost_ns.to_bits());
+        assert_eq!(default.stats, memo.stats);
+    }
+}
+
+#[test]
+fn memo_strictly_reduces_ddm_evaluations() {
+    let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+    for name in NETS {
+        let net = zoo::by_name(name, 100).unwrap();
+        let greedy = partition(&net, &chip).unwrap();
+        let memo = search_partition_with(&greedy, &chip, true).unwrap();
+        let plain = search_partition_with(&greedy, &chip, false).unwrap();
+
+        assert!(
+            memo.stats.ddm_evals < plain.stats.ddm_evals,
+            "{name}: memo did not reduce work ({:?} vs {:?})",
+            memo.stats,
+            plain.stats
+        );
+        // Exact accounting: the DP evaluates each span once either way;
+        // the greedy-objective pass re-evaluates its P spans only when
+        // the memo is off, and hits the memo P times when it is on.
+        let p = greedy.num_parts() as u64;
+        assert_eq!(plain.stats.ddm_evals, memo.stats.ddm_evals + p, "{name}");
+        assert_eq!(memo.stats.memo_hits, p, "{name}");
+        assert_eq!(plain.stats.memo_hits, 0, "{name}");
+    }
+}

@@ -1,0 +1,123 @@
+//! Golden-value pins for every zoo builder: exact parameter counts
+//! (computed independently from the architecture tables) and crossbar
+//! layer counts, so builder refactors can't silently drift — plus the
+//! paper's reported ResNet sizes (Fig. 1 / Fig. 8).
+
+use pimflow::nn::zoo;
+
+/// (name, exact weights at a 100-class head, crossbar-mapped layers).
+const GOLDEN: &[(&str, u64, usize)] = &[
+    ("tiny", 83_120, 9),
+    ("resnet18", 11_210_432, 21),
+    ("resnet34", 21_311_168, 37),
+    ("resnet50", 23_652_032, 54),
+    ("resnet101", 42_591_936, 105),
+    ("resnet152", 58_189_504, 156),
+    ("vgg11", 9_268_928, 9),
+    ("vgg13", 9_453_248, 11),
+    ("vgg16", 14_761_664, 14),
+    ("vgg19", 20_070_080, 17),
+    ("mobilenetv1", 3_287_488, 28),
+];
+
+#[test]
+fn exact_parameter_counts_are_pinned() {
+    for &(name, weights, layers) in GOLDEN {
+        let net = zoo::by_name(name, 100).unwrap();
+        assert_eq!(
+            net.total_weights(),
+            weights,
+            "{name}: weight count drifted"
+        );
+        assert_eq!(
+            net.crossbar_layers().len(),
+            layers,
+            "{name}: crossbar layer count drifted"
+        );
+    }
+}
+
+#[test]
+fn golden_table_covers_the_whole_registry() {
+    let golden: Vec<&str> = GOLDEN.iter().map(|(n, _, _)| *n).collect();
+    for name in zoo::names() {
+        assert!(golden.contains(&name), "no golden row for `{name}`");
+    }
+    assert_eq!(golden.len(), zoo::names().len());
+}
+
+#[test]
+fn resnet_counts_match_paper_reported_sizes() {
+    // Fig. 8 / Fig. 1: ResNet-50 ≈ 23.7 M, ResNet-101 ≈ 42.6 M,
+    // ResNet-152 ≈ 58.2 M parameters.
+    for (name, paper) in [
+        ("resnet50", 23.7e6),
+        ("resnet101", 42.6e6),
+        ("resnet152", 58.2e6),
+    ] {
+        let w = zoo::by_name(name, 100).unwrap().total_weights() as f64;
+        assert!(
+            (w - paper).abs() / paper < 0.01,
+            "{name}: {w:.4e} vs paper {paper:.4e}"
+        );
+    }
+}
+
+#[test]
+fn vgg_and_mobilenet_match_architecture_closed_forms() {
+    // VGG16 conv stack (CIFAR): Σ k²·cin·cout over the 13-conv config,
+    // plus the 512→100 head.
+    let convs: [(u64, u64); 13] = [
+        (3, 64),
+        (64, 64),
+        (64, 128),
+        (128, 128),
+        (128, 256),
+        (256, 256),
+        (256, 256),
+        (256, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+    ];
+    let vgg16: u64 = convs.iter().map(|&(i, o)| 9 * i * o).sum::<u64>() + 512 * 100;
+    assert_eq!(zoo::vgg16(100).total_weights(), vgg16);
+
+    // MobileNetV1: 3×3×3×32 stem, 13 blocks of 9·cin (depthwise) +
+    // cin·cout (pointwise), 1024→100 head.
+    let blocks: [(u64, u64); 13] = [
+        (32, 64),
+        (64, 128),
+        (128, 128),
+        (128, 256),
+        (256, 256),
+        (256, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+        (512, 512),
+        (512, 1024),
+        (1024, 1024),
+    ];
+    let mobilenet: u64 = 9 * 3 * 32
+        + blocks.iter().map(|&(i, o)| 9 * i + i * o).sum::<u64>()
+        + 1024 * 100;
+    assert_eq!(zoo::mobilenet_v1(100).total_weights(), mobilenet);
+}
+
+#[test]
+fn head_width_only_moves_the_fc_layer() {
+    for name in zoo::names() {
+        let a = zoo::by_name(name, 100).unwrap();
+        let b = zoo::by_name(name, 10).unwrap();
+        let fc_in = a.crossbar_layers().last().unwrap().crossbar_k() as u64;
+        assert_eq!(
+            a.total_weights() - b.total_weights(),
+            fc_in * 90,
+            "{name}: head width leaked beyond the fc layer"
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Zoo × engine integration: every registered network must simulate
+//! end-to-end on every `Design` variant (the three compact designs plus
+//! the area-unlimited and GPU baselines) with finite, nonzero numbers —
+//! and the engine's plan cache must account a multi-network sweep
+//! exactly.
+
+use pimflow::cfg::presets;
+use pimflow::explore::zoo_sweep;
+use pimflow::nn::zoo;
+use pimflow::sim::{Design, Engine};
+
+const BATCHES: [u32; 2] = [1, 64];
+
+#[test]
+fn every_zoo_network_runs_on_every_design() {
+    let eng = Engine::compact(presets::lpddr5());
+    let nets = zoo::all();
+    let simulated = (Design::ALL.len() - 1) as u64; // GPU is analytic
+    for (i, net) in nets.iter().enumerate() {
+        let pts = eng.sweep(net, &Design::ALL, &BATCHES).unwrap();
+        assert_eq!(pts.len(), Design::ALL.len() * BATCHES.len());
+        for p in &pts {
+            assert_eq!(p.network, net.name);
+            assert!(
+                p.throughput_fps.is_finite() && p.throughput_fps > 0.0,
+                "{} {:?} b{}: fps {}",
+                net.name,
+                p.design,
+                p.batch,
+                p.throughput_fps
+            );
+            assert!(
+                p.tops_per_watt.is_finite() && p.tops_per_watt > 0.0,
+                "{} {:?} b{}: {} TOPS/W",
+                net.name,
+                p.design,
+                p.batch,
+                p.tops_per_watt
+            );
+            assert_eq!(p.report.is_none(), p.design == Design::Gpu);
+            if let Some(r) = &p.report {
+                assert!(r.num_parts >= 1);
+                assert!(r.energy.total_j() > 0.0);
+            }
+        }
+        // Cache accounting stays exact across the multi-network sweep:
+        // each simulated design plans once per network (the warm pass),
+        // then every grid point hits.
+        let n = (i + 1) as u64;
+        let stats = eng.cache_stats();
+        assert_eq!(stats.misses, simulated * n, "misses after {n} networks");
+        assert_eq!(
+            stats.hits,
+            simulated * BATCHES.len() as u64 * n,
+            "hits after {n} networks"
+        );
+    }
+    assert_eq!(eng.cache_len(), zoo::all().len() * simulated as usize);
+}
+
+#[test]
+fn zoo_sweep_is_a_weight_sorted_size_axis() {
+    let eng = Engine::compact(presets::lpddr5());
+    let pts = zoo_sweep(&eng, 16).unwrap();
+    assert_eq!(pts.len(), zoo::all().len() * Design::FIG8.len());
+    // network-major order, non-decreasing weights along the axis
+    let mut last = 0u64;
+    let mut seen = Vec::new();
+    for p in &pts {
+        if seen.last() != Some(&p.network) {
+            seen.push(p.network.clone());
+            assert!(p.weights >= last, "{} out of order", p.network);
+            last = p.weights;
+        }
+    }
+    assert_eq!(seen.len(), zoo::all().len(), "every network swept once");
+    // the derived Fig. 8 table renders for the zoo grid too
+    let (table, csv) = pimflow::report::figures::fig8_table(&pts).unwrap();
+    let rendered = table.render();
+    for name in ["mobilenetv1", "vgg16", "resnet152"] {
+        assert!(rendered.contains(name));
+    }
+    assert_eq!(csv.num_rows(), zoo::all().len());
+}
+
+#[test]
+fn depthwise_layers_participate_in_ddm_duplication() {
+    // MobileNet's depthwise units are legal duplication targets (unlike
+    // FC): on the compact chip at least one depthwise unit must end up
+    // duplicated, since they are tiny and often the O²-bottleneck.
+    use pimflow::ddm;
+    use pimflow::nn::LayerKind;
+    use pimflow::partition::partition;
+    use pimflow::pim::ChipModel;
+
+    let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+    let net = zoo::mobilenet_v1(100);
+    let plan = partition(&net, &chip).unwrap();
+    let dd = ddm::run(&plan, &chip);
+    let mut dup_depthwise = 0u32;
+    for (part, dups) in plan.parts.iter().zip(&dd.dup_per_part) {
+        for (u, &d) in part.units.iter().zip(dups) {
+            if matches!(u.layer.kind, LayerKind::DepthwiseConv { .. }) && d > 1 {
+                dup_depthwise += 1;
+            }
+            assert!(d <= chip.max_dup(&u.layer));
+        }
+    }
+    assert!(
+        dup_depthwise > 0,
+        "no depthwise unit was duplicated on the compact chip"
+    );
+}

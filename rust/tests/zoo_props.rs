@@ -1,0 +1,162 @@
+//! Property tests over every zoo network builder (via the in-tree
+//! `testing` substrate): shape chaining, weight accounting, and
+//! mappability must hold for any registry network at any head width.
+
+use pimflow::cfg::presets;
+use pimflow::nn::{zoo, LayerKind, Network};
+use pimflow::pim::ChipModel;
+use pimflow::prop_assert;
+use pimflow::testing::{check_with, default_cases, fnv1a};
+use pimflow::util::Rng;
+
+/// Any registry network with a random head width.
+fn random_zoo_net(r: &mut Rng) -> Network {
+    let names = zoo::names();
+    let name = names[r.index(names.len())];
+    let classes = r.range_u64(2, 1000) as u32;
+    zoo::by_name(name, classes).unwrap()
+}
+
+fn check(name: &str, prop: impl FnMut(&Network) -> Result<(), String>) {
+    check_with(fnv1a(name.as_bytes()), default_cases(), random_zoo_net, prop);
+}
+
+#[test]
+fn prop_layer_shapes_chain_consistently() {
+    // Each layer's in_hw / channel count follows from its predecessor
+    // (residual downsample branches follow from their block input).
+    check("zoo_shape_chain", |net| {
+        net.validate().map_err(|e| e.to_string())?;
+        net.shape_chain().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_total_weights_match_chain_recount() {
+    // Recount weights from the *chain state*: every weight formula is
+    // re-derived from the predecessor-supplied channel count, not from
+    // the layer's own declared input fields — a builder that mislabels
+    // in_ch breaks this even where declared-shape accounting stays
+    // self-consistent.
+    check("zoo_weight_recount", |net| {
+        let mut ch = net.input_ch as u64;
+        let mut hw = net.input_hw as u64;
+        // main-path (hw, ch) states seen since the last residual join —
+        // a skip/downsample branch must tap one of these
+        let mut block: Vec<(u64, u64)> = vec![(hw, ch)];
+        let mut recount = 0u64;
+        for l in &net.layers {
+            match &l.kind {
+                LayerKind::Conv {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    ..
+                } => {
+                    let k = *kernel as u64;
+                    let declared = (l.in_hw as u64, *in_ch as u64);
+                    if declared == (hw, ch) {
+                        recount += k * k * ch * *out_ch as u64;
+                        ch = *out_ch as u64;
+                        hw = l.out_hw() as u64;
+                        block.push((hw, ch));
+                    } else {
+                        // residual branch off an earlier state of this block
+                        prop_assert!(
+                            block.contains(&declared),
+                            "{}: conv `{}` input {declared:?} matches no block state",
+                            net.name,
+                            l.name
+                        );
+                        recount += k * k * declared.1 * *out_ch as u64;
+                    }
+                }
+                LayerKind::DepthwiseConv { ch: c, kernel, .. } => {
+                    prop_assert!(
+                        *c as u64 == ch,
+                        "{}: depthwise `{}` on {c} channels, chain has {ch}",
+                        net.name,
+                        l.name
+                    );
+                    recount += *kernel as u64 * *kernel as u64 * ch;
+                    hw = l.out_hw() as u64;
+                    block.push((hw, ch));
+                }
+                LayerKind::Fc {
+                    in_features,
+                    out_features,
+                } => {
+                    prop_assert!(
+                        *in_features as u64 == hw * hw * ch,
+                        "{}: fc `{}` expects {in_features}, chain provides {}",
+                        net.name,
+                        l.name,
+                        hw * hw * ch
+                    );
+                    recount += *in_features as u64 * *out_features as u64;
+                    ch = *out_features as u64;
+                    hw = 1;
+                    block.push((hw, ch));
+                }
+                LayerKind::MaxPool { .. } => {
+                    hw = l.out_hw() as u64;
+                    block.push((hw, ch));
+                }
+                LayerKind::GlobalAvgPool => {
+                    hw = 1;
+                    block.push((hw, ch));
+                }
+                LayerKind::Add => {
+                    block.clear();
+                    block.push((hw, ch));
+                }
+            }
+        }
+        prop_assert!(
+            recount == net.total_weights(),
+            "{}: recount {recount} != total_weights {}",
+            net.name,
+            net.total_weights()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_crossbar_layer_maps_to_at_least_one_tile() {
+    let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+    check("zoo_mappable", |net| {
+        for l in net.crossbar_layers() {
+            let tiles = chip.layer_tiles(l);
+            let subarrays = chip.layer_subarrays(l);
+            prop_assert!(
+                tiles >= 1 && subarrays >= 1,
+                "{}: `{}` maps to {tiles} tiles / {subarrays} subarrays",
+                net.name,
+                l.name
+            );
+            // the k²·C unrolled matrix never stores fewer cells than the
+            // weights it holds
+            prop_assert!(
+                l.crossbar_k() as u64 * l.crossbar_n() as u64 >= l.weights(),
+                "{}: `{}` crossbar smaller than its weights",
+                net.name,
+                l.name
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_macs_and_bytes_are_positive_for_crossbar_layers() {
+    check("zoo_macs_positive", |net| {
+        for l in net.crossbar_layers() {
+            prop_assert!(l.weights() > 0, "{}: `{}` weightless", net.name, l.name);
+            prop_assert!(l.macs() >= l.weights(), "{}: `{}` macs < weights", net.name, l.name);
+        }
+        prop_assert!(net.total_macs() > net.total_weights(), "{}", net.name);
+        prop_assert!(net.input_bytes() > 0 && net.output_bytes() > 0, "{}", net.name);
+        Ok(())
+    });
+}
