@@ -7,8 +7,9 @@
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
 use pimflow::cfg::PipelineCase;
+use pimflow::coordinator::{Arrival, SimServeConfig};
 use pimflow::ddm;
-use pimflow::explore::{fig6_sweep, BATCHES};
+use pimflow::explore::{fig6_sweep, mixed_trace, replay, BATCHES};
 use pimflow::nn::{resnet, zoo};
 use pimflow::partition::{partition, search_partition_with};
 use pimflow::pim::ChipModel;
@@ -111,4 +112,45 @@ fn main() {
         "full fig6 sweep: {:.3} s (target < 2 s)",
         t0.elapsed().as_secs_f64()
     );
+
+    // Serving-trace acceptance pin: replaying N requests over K networks
+    // through the simulated coordinator performs exactly K plan
+    // computations — batching, admission quotes, and the slo sweep of
+    // batch caps all reuse the engine's per-network cached plan.
+    let serve_engine = Engine::compact(dram.clone());
+    let (nets, trace) = mixed_trace(
+        &["mobilenetv1", "vgg11", "resnet18"],
+        300,
+        Arrival::Poisson(2000.0),
+        7,
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let report = replay(
+        &serve_engine,
+        &nets,
+        &trace,
+        SimServeConfig {
+            slo_s: 0.05,
+            max_batch: 16,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        },
+    )
+    .unwrap();
+    println!(
+        "trace replay: {} requests over {} networks in {:.3} s ({} batches, {} reloads, {:.1}% SLO attainment)",
+        report.offered(),
+        nets.len(),
+        t0.elapsed().as_secs_f64(),
+        report.batches(),
+        report.reloads(),
+        100.0 * report.slo_attainment()
+    );
+    assert_eq!(
+        report.plans_computed,
+        nets.len() as u64,
+        "replay must plan each distinct network exactly once"
+    );
+    assert_eq!(serve_engine.cache_stats().misses, nets.len() as u64);
 }

@@ -1,6 +1,11 @@
 //! Dynamic batcher: group queued requests into batches bounded by a max
 //! size and a max linger time — the serving-side analogue of the paper's
 //! batched pipelining (throughput grows with batch; latency caps it).
+//!
+//! Feature-free by design: the gather logic is generic over the queued
+//! item and is unit-tested in the default (no-`runtime`) CI lane; the
+//! simulated coordinator mirrors its max-batch/max-wait semantics in
+//! virtual time (`sim_serve`).
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -101,6 +106,37 @@ mod tests {
         assert_eq!(b.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(15));
         drop(tx);
+    }
+
+    #[test]
+    fn default_policy_is_sane() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.max_batch, 16);
+        assert_eq!(p.max_wait, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn gather_preserves_arrival_order_across_batches() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..7 {
+            tx.send(req(i)).unwrap();
+        }
+        drop(tx);
+        let policy = BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_millis(1),
+        };
+        let mut seen = Vec::new();
+        loop {
+            match gather(&rx, policy) {
+                Gather::Batch(b) => {
+                    assert!(b.len() <= 3);
+                    seen.extend(b);
+                }
+                Gather::Closed => break,
+            }
+        }
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
     }
 
     #[test]

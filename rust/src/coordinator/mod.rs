@@ -1,18 +1,32 @@
 //! Serving coordinator (L3 request path): request types, dynamic
-//! [`batcher`], [`worker`] pool, and the [`server::Server`] façade.
+//! [`batcher`], arrival processes ([`loadgen`]), and two execution
+//! backends —
 //!
-//! Request flow: `Server::submit` → queue → `gather` (max-batch /
-//! max-wait policy) → smallest fitting AOT artifact variant → PJRT
-//! execute → per-request reply channels. All Rust; Python was only used
-//! at build time to author and lower the model.
+//! * the real path *(feature `runtime`)*: [`server::Server`] → queue →
+//!   `gather` (max-batch / max-wait policy) → smallest fitting AOT
+//!   artifact variant → PJRT execute → per-request reply channels; and
+//! * the simulated path ([`sim_serve`], always available): an
+//!   Engine-backed admission controller and virtual-time worker that
+//!   charge pipeline makespans instead of PJRT executions, so the full
+//!   request path — batching policy, arrival statistics, admission,
+//!   SLO accounting — is exercised in the default (no-xla) CI lane.
 
 pub mod batcher;
 pub mod loadgen;
 pub mod request;
+#[cfg(feature = "runtime")]
 pub mod server;
+pub mod sim_serve;
+#[cfg(feature = "runtime")]
 pub mod worker;
 
 pub use batcher::BatchPolicy;
+pub use loadgen::Arrival;
+#[cfg(feature = "runtime")]
+pub use loadgen::{run_load, LoadReport};
 pub use request::{InferRequest, InferResponse, RequestId, IMAGE_ELEMENTS};
-pub use loadgen::{run_load, Arrival, LoadReport};
+#[cfg(feature = "runtime")]
 pub use server::{Server, ServerConfig, StatsSnapshot};
+pub use sim_serve::{
+    Completion, NetStats, SimRequest, SimServeConfig, SimServeReport, SimServer, Verdict,
+};

@@ -1,0 +1,747 @@
+//! Engine-backed simulated serving: admission control + a virtual-time
+//! worker that charges pipeline makespans instead of PJRT executions.
+//!
+//! The paper's throughput/energy wins hinge on weight reuse across batched
+//! requests (§II-C): every batch pays the compact chip's per-part weight
+//! reloads once, so serving throughput depends on how well the coordinator
+//! coalesces same-network requests and how often the scheduled network
+//! switches. This module prices those decisions from the long-lived,
+//! `Sync`-shared [`Engine`]'s cached plans — the admission controller
+//! quotes each request an exact-or-pessimistic completion time and only
+//! accepts it when the quote fits the SLO, so **an accepted request never
+//! misses the SLO by construction** (asserted in `tests/serve_props.rs`).
+//!
+//! Model, in one page:
+//!
+//! * Time is virtual (seconds from trace start). Requests arrive in
+//!   non-decreasing arrival order; nothing sleeps.
+//! * One simulated worker executes batches FIFO. A batch of `k` requests
+//!   for network `net` costs the engine's pipeline makespan for
+//!   `(design, net, k)` — the same number `explore::batch_opt` prices —
+//!   plus a weight-reload penalty (streaming `net.weight_bytes()` over the
+//!   DRAM channel) whenever the scheduled network differs from the one
+//!   currently loaded.
+//! * At most one batch is *open* at a time. A request for the open batch's
+//!   network joins it (a **coalesce**) when the grown batch still meets
+//!   the SLO for the batch's *earliest* member — the binding one. Any
+//!   other admissible request closes the open batch and opens a fresh one.
+//!   Rejections leave the scheduler state completely untouched.
+//! * The open batch closes the moment it fills to the per-network batch
+//!   cap, when an accepted request needs a fresh batch, or when its
+//!   linger deadline (`first_arrival + max_wait_s`) passes. Quotes
+//!   assume the worst feasible close time (the deadline — or the arrival
+//!   itself when the request fills the batch), so a batch can only
+//!   finish at or before what was quoted.
+//! * The per-network batch cap is `batch_opt`-tuned: the largest batch
+//!   whose full-batch latency fits the SLO (capped by `max_batch`). A
+//!   network where even batch 1 misses the SLO has cap 0 — every request
+//!   for it is rejected up front.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::explore::batch_opt::max_batch_for_latency;
+use crate::nn::Network;
+use crate::sim::engine::{Design, Engine};
+
+/// One simulated inference request: `net` indexes the network slice the
+/// [`SimServer`] was built over; `arrival_s` is virtual seconds from
+/// trace start. Traces must be offered in non-decreasing arrival order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimRequest {
+    pub id: u64,
+    pub net: usize,
+    pub arrival_s: f64,
+}
+
+/// Admission outcome for one offered request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Opened a fresh batch (its first member).
+    Accepted,
+    /// Joined the already-open batch for its network.
+    Coalesced,
+    /// Quoted completion missed the SLO; scheduler state unchanged.
+    Rejected,
+}
+
+/// Simulated-serving configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimServeConfig {
+    /// Which design prices the batches (default: the paper's headline).
+    pub design: Design,
+    /// Latency budget per request, seconds from arrival to completion.
+    pub slo_s: f64,
+    /// Global batch ceiling (per-network caps are tuned below it).
+    pub max_batch: u32,
+    /// Batch linger: how long the first request of a batch may wait for
+    /// coalescing before the batch closes.
+    pub max_wait_s: f64,
+    /// When false, every request is accepted (no SLO gate) — the
+    /// baseline that shows what admission control buys.
+    pub admission: bool,
+}
+
+impl Default for SimServeConfig {
+    fn default() -> Self {
+        SimServeConfig {
+            design: Design::CompactDdm,
+            slo_s: 0.05,
+            max_batch: 64,
+            max_wait_s: 0.002,
+            admission: true,
+        }
+    }
+}
+
+/// One completed request (every accepted request completes).
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub id: u64,
+    pub net: usize,
+    pub arrival_s: f64,
+    pub completion_s: f64,
+}
+
+impl Completion {
+    pub fn latency_s(&self) -> f64 {
+        self.completion_s - self.arrival_s
+    }
+}
+
+/// Per-network serving counters.
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    pub network: String,
+    pub offered: u64,
+    pub accepted: u64,
+    /// Accepted requests that joined an existing open batch
+    /// (`accepted - coalesced == batches`, each batch's opener is not a
+    /// coalesce).
+    pub coalesced: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub batches: u64,
+    /// Batches that had to stream this network's weights because a
+    /// different network (or none) was loaded when they executed.
+    pub reloads: u64,
+    /// Completions within the SLO (== `completed` under admission).
+    pub within_slo: u64,
+    /// Sum of completion latencies, seconds.
+    pub latency_sum_s: f64,
+}
+
+impl NetStats {
+    /// Mean requests per executed batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of *offered* requests that completed within the SLO —
+    /// rejections count against attainment.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.within_slo as f64 / self.offered as f64
+        }
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_sum_s / self.completed as f64
+        }
+    }
+}
+
+/// End-of-trace report: per-network rows plus trace-wide aggregates.
+#[derive(Debug, Clone)]
+pub struct SimServeReport {
+    pub per_net: Vec<NetStats>,
+    /// Virtual makespan: when the worker went idle after the last batch.
+    pub span_s: f64,
+    /// Engine plan computations this replay caused (cache misses while it
+    /// ran). A fresh engine pays exactly one per distinct network; a warm
+    /// one pays zero — the cross-trace cache reuse the ROADMAP targets.
+    pub plans_computed: u64,
+    pub completions: Vec<Completion>,
+}
+
+impl SimServeReport {
+    fn total<F: Fn(&NetStats) -> u64>(&self, f: F) -> u64 {
+        self.per_net.iter().map(f).sum()
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.total(|n| n.offered)
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.total(|n| n.accepted)
+    }
+
+    pub fn coalesced(&self) -> u64 {
+        self.total(|n| n.coalesced)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.total(|n| n.rejected)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.total(|n| n.completed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.total(|n| n.batches)
+    }
+
+    pub fn reloads(&self) -> u64 {
+        self.total(|n| n.reloads)
+    }
+
+    /// Trace-wide SLO attainment over *offered* requests.
+    pub fn slo_attainment(&self) -> f64 {
+        let offered = self.offered();
+        if offered == 0 {
+            0.0
+        } else {
+            self.total(|n| n.within_slo) as f64 / offered as f64
+        }
+    }
+
+    /// Completed requests per virtual second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.span_s <= 0.0 {
+            0.0
+        } else {
+            self.completed() as f64 / self.span_s
+        }
+    }
+}
+
+struct OpenBatch {
+    net: usize,
+    first_arrival_s: f64,
+    /// Worst-case close time: `first_arrival_s + max_wait_s`. Quotes use
+    /// it; an earlier close (full batch / fresh batch) only helps.
+    deadline_s: f64,
+    members: Vec<(u64, f64)>,
+}
+
+/// The simulated serving coordinator. Borrows a shared [`Engine`]; all
+/// pricing flows through its plan cache, so a server over K networks costs
+/// K plan computations however long the trace is (pinned in
+/// `benches/hotpath.rs` and `tests/serve_sim.rs`).
+pub struct SimServer<'e> {
+    engine: &'e Engine,
+    nets: Vec<Network>,
+    cfg: SimServeConfig,
+    /// Per-network batch cap: largest batch whose full-batch latency fits
+    /// the SLO, 0 if even batch 1 misses it (`batch_opt`-tuned).
+    caps: Vec<u32>,
+    /// Per-network weight-reload penalty, seconds.
+    switch_s: Vec<f64>,
+    makespans: HashMap<(usize, u32), f64>,
+    busy_until_s: f64,
+    loaded: Option<usize>,
+    open: Option<OpenBatch>,
+    last_arrival_s: f64,
+    stats: Vec<NetStats>,
+    completions: Vec<Completion>,
+    misses_at_start: u64,
+}
+
+impl<'e> SimServer<'e> {
+    /// Build a server over `nets`. Tunes per-network batch caps through
+    /// the engine (warming its plan cache: one plan per distinct network)
+    /// and prices weight reloads as streaming each network's weights over
+    /// the engine's DRAM channel.
+    pub fn new(engine: &'e Engine, nets: &[Network], cfg: SimServeConfig) -> Result<Self> {
+        anyhow::ensure!(!nets.is_empty(), "sim_serve needs at least one network");
+        anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(cfg.slo_s > 0.0, "slo must be positive");
+        anyhow::ensure!(cfg.max_wait_s >= 0.0, "max_wait must be non-negative");
+        let misses_at_start = engine.cache_stats().misses;
+        let mut caps = Vec::with_capacity(nets.len());
+        for net in nets {
+            let cap = if cfg.admission {
+                max_batch_for_latency(engine, cfg.design, net, cfg.slo_s, cfg.max_batch)?
+                    .map(|p| p.batch)
+                    .unwrap_or(0)
+            } else {
+                engine.warm(cfg.design, net)?;
+                cfg.max_batch
+            };
+            caps.push(cap);
+        }
+        let switch_s = nets
+            .iter()
+            .map(|n| engine.dram().transfer_ns(n.weight_bytes()) * 1e-9)
+            .collect();
+        let stats = nets
+            .iter()
+            .map(|n| NetStats {
+                network: n.name.clone(),
+                ..NetStats::default()
+            })
+            .collect();
+        Ok(SimServer {
+            engine,
+            nets: nets.to_vec(),
+            cfg,
+            caps,
+            switch_s,
+            makespans: HashMap::new(),
+            busy_until_s: 0.0,
+            loaded: None,
+            open: None,
+            last_arrival_s: 0.0,
+            stats,
+            completions: Vec::new(),
+            misses_at_start,
+        })
+    }
+
+    /// The tuned per-network batch caps (index-aligned with the networks
+    /// the server was built over).
+    pub fn caps(&self) -> &[u32] {
+        &self.caps
+    }
+
+    /// Full-batch pipeline makespan for `k` requests of network `net`,
+    /// memoized locally; the engine supplies the cached plan.
+    fn makespan_s(&mut self, net: usize, k: u32) -> Result<f64> {
+        if let Some(&m) = self.makespans.get(&(net, k)) {
+            return Ok(m);
+        }
+        let r = self
+            .engine
+            .system_report(self.cfg.design, &self.nets[net], k)?;
+        let m = r.pipeline.makespan_ns * 1e-9;
+        self.makespans.insert((net, k), m);
+        Ok(m)
+    }
+
+    /// Completion time if a batch of `k` requests for `net` becomes ready
+    /// at `ready_s`: the worker must drain (`busy_until_s`), reload
+    /// weights if a different network is loaded, then run the pipeline.
+    /// With at most one open batch, nothing can execute between now and
+    /// that batch, so `busy_until_s` and `loaded` are exact at quote time.
+    fn exec_completion_s(&mut self, net: usize, k: u32, ready_s: f64) -> Result<f64> {
+        let start = self.busy_until_s.max(ready_s);
+        let switch = if self.loaded == Some(net) {
+            0.0
+        } else {
+            self.switch_s[net]
+        };
+        Ok(start + switch + self.makespan_s(net, k)?)
+    }
+
+    /// Close a batch: execute it on the virtual worker at
+    /// `max(busy_until, ready)`, charging a weight reload on a network
+    /// switch, and record every member's completion.
+    fn flush(&mut self, batch: OpenBatch, ready_s: f64) -> Result<()> {
+        let k = batch.members.len() as u32;
+        let done = self.exec_completion_s(batch.net, k, ready_s)?;
+        let s = &mut self.stats[batch.net];
+        s.batches += 1;
+        if self.loaded != Some(batch.net) {
+            s.reloads += 1;
+        }
+        for &(id, arrival_s) in &batch.members {
+            let c = Completion {
+                id,
+                net: batch.net,
+                arrival_s,
+                completion_s: done,
+            };
+            s.completed += 1;
+            s.latency_sum_s += c.latency_s();
+            if c.latency_s() <= self.cfg.slo_s {
+                s.within_slo += 1;
+            }
+            self.completions.push(c);
+        }
+        self.busy_until_s = done;
+        self.loaded = Some(batch.net);
+        Ok(())
+    }
+
+    /// Flush the open batch if its linger deadline has passed by `now_s`.
+    fn flush_due(&mut self, now_s: f64) -> Result<()> {
+        let due = matches!(&self.open, Some(b) if now_s >= b.deadline_s);
+        if due {
+            let b = self.open.take().expect("due batch exists");
+            let ready = b.deadline_s;
+            self.flush(b, ready)?;
+        }
+        Ok(())
+    }
+
+    /// Offer one request. Arrival times must be non-decreasing.
+    pub fn offer(&mut self, req: SimRequest) -> Result<Verdict> {
+        anyhow::ensure!(
+            req.net < self.nets.len(),
+            "request {} names network index {} but the server has {}",
+            req.id,
+            req.net,
+            self.nets.len()
+        );
+        anyhow::ensure!(
+            req.arrival_s >= self.last_arrival_s,
+            "trace not sorted: request {} arrives at {} after {}",
+            req.id,
+            req.arrival_s,
+            self.last_arrival_s
+        );
+        self.last_arrival_s = req.arrival_s;
+        self.flush_due(req.arrival_s)?;
+        self.stats[req.net].offered += 1;
+
+        let t = req.arrival_s;
+        let cap = self.caps[req.net];
+        if cap == 0 {
+            // Even batch 1 misses the SLO for this network.
+            self.stats[req.net].rejected += 1;
+            return Ok(Verdict::Rejected);
+        }
+
+        // Try to coalesce into the open batch. The grown batch's makespan
+        // applies to every member; the earliest arrival is the binding
+        // SLO check (later members wait strictly less).
+        let join = match &self.open {
+            Some(b) if b.net == req.net && (b.members.len() as u32) < cap => {
+                Some((b.members.len() as u32, b.deadline_s, b.first_arrival_s))
+            }
+            _ => None,
+        };
+        if let Some((len, deadline_s, first_arrival_s)) = join {
+            // A join that fills the batch to its cap closes it right now
+            // (ready = t); otherwise it may linger to its deadline.
+            let fills = len + 1 >= cap;
+            let ready = if fills { t } else { deadline_s };
+            let quote = self.exec_completion_s(req.net, len + 1, ready)?;
+            if !self.cfg.admission || quote - first_arrival_s <= self.cfg.slo_s {
+                let b = self.open.as_mut().expect("join checked the open batch");
+                b.members.push((req.id, t));
+                let s = &mut self.stats[req.net];
+                s.accepted += 1;
+                s.coalesced += 1;
+                if fills {
+                    let b = self.open.take().expect("full batch is open");
+                    self.flush(b, t)?;
+                }
+                return Ok(Verdict::Coalesced);
+            }
+            // Joining would break the SLO for the batch's first member;
+            // fall through and quote a fresh batch instead.
+        }
+
+        // Fresh batch: the open batch (if any) would close now, execute
+        // first, and this request would open the next one. Quote that
+        // pessimistically (linger until its own deadline) and only mutate
+        // state when the request is actually admitted — rejections must
+        // leave the scheduler untouched.
+        if self.cfg.admission {
+            let prior = self.open.as_ref().map(|b| (b.net, b.members.len() as u32));
+            let (loaded_then, busy_then) = match prior {
+                Some((net, k)) => (Some(net), self.exec_completion_s(net, k, t)?),
+                None => (self.loaded, self.busy_until_s),
+            };
+            let switch = if loaded_then == Some(req.net) {
+                0.0
+            } else {
+                self.switch_s[req.net]
+            };
+            // cap 1 means the fresh batch is full on arrival and closes
+            // immediately — no linger pessimism in the quote.
+            let ready = if cap == 1 { t } else { t + self.cfg.max_wait_s };
+            let quote = busy_then.max(ready) + switch + self.makespan_s(req.net, 1)?;
+            if quote - t > self.cfg.slo_s {
+                self.stats[req.net].rejected += 1;
+                return Ok(Verdict::Rejected);
+            }
+        }
+
+        if let Some(b) = self.open.take() {
+            self.flush(b, t)?;
+        }
+        self.open = Some(OpenBatch {
+            net: req.net,
+            first_arrival_s: t,
+            deadline_s: t + self.cfg.max_wait_s,
+            members: vec![(req.id, t)],
+        });
+        self.stats[req.net].accepted += 1;
+        if cap == 1 {
+            let b = self.open.take().expect("batch opened above");
+            self.flush(b, t)?;
+        }
+        Ok(Verdict::Accepted)
+    }
+
+    /// End of trace: close the open batch (at its linger deadline, as
+    /// quoted) and return the report.
+    pub fn finish(mut self) -> Result<SimServeReport> {
+        if let Some(b) = self.open.take() {
+            let ready = b.deadline_s;
+            self.flush(b, ready)?;
+        }
+        Ok(SimServeReport {
+            per_net: self.stats,
+            span_s: self.busy_until_s,
+            plans_computed: self.engine.cache_stats().misses - self.misses_at_start,
+            completions: self.completions,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::zoo;
+
+    fn engine() -> Engine {
+        Engine::compact(presets::lpddr5())
+    }
+
+    fn reqs(pattern: &[(usize, f64)]) -> Vec<SimRequest> {
+        pattern
+            .iter()
+            .enumerate()
+            .map(|(i, &(net, arrival_s))| SimRequest {
+                id: i as u64,
+                net,
+                arrival_s,
+            })
+            .collect()
+    }
+
+    fn run(server: &mut SimServer, trace: &[SimRequest]) -> Vec<Verdict> {
+        trace.iter().map(|r| server.offer(*r).unwrap()).collect()
+    }
+
+    #[test]
+    fn generous_slo_accepts_and_coalesces_a_burst() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        let trace = reqs(&[(0, 0.0), (0, 0.0), (0, 0.0), (0, 0.0), (0, 0.0), (0, 0.0)]);
+        let verdicts = run(&mut sv, &trace);
+        // batch cap 4: opener, 3 coalesces, then a fresh batch of 2
+        assert_eq!(verdicts[0], Verdict::Accepted);
+        assert_eq!(verdicts[1], Verdict::Coalesced);
+        assert_eq!(verdicts[4], Verdict::Accepted);
+        assert_eq!(verdicts[5], Verdict::Coalesced);
+        let r = sv.finish().unwrap();
+        assert_eq!(r.accepted(), 6);
+        assert_eq!(r.rejected(), 0);
+        assert_eq!(r.batches(), 2);
+        assert_eq!(r.coalesced(), r.accepted() - r.batches());
+        // one network, batches back to back: exactly one weight reload
+        assert_eq!(r.reloads(), 1);
+        assert_eq!(r.completed(), 6);
+        assert_eq!(r.slo_attainment(), 1.0);
+        assert!(r.span_s > 0.0);
+    }
+
+    #[test]
+    fn full_batches_execute_immediately_not_at_their_linger_deadline() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 2,
+            max_wait_s: 10.0, // pathological linger: must not be waited out
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        let trace = reqs(&[(0, 0.0), (0, 0.0)]);
+        run(&mut sv, &trace);
+        let r = sv.finish().unwrap();
+        assert_eq!(r.completed(), 2);
+        assert_eq!(r.batches(), 1);
+        assert!(
+            r.span_s < 10.0,
+            "full batch lingered to its deadline: span {}",
+            r.span_s
+        );
+    }
+
+    #[test]
+    fn impossible_slo_rejects_everything_without_state() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e-12,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        assert_eq!(sv.caps(), &[0]);
+        let trace = reqs(&[(0, 0.0), (0, 0.1), (0, 0.2)]);
+        for v in run(&mut sv, &trace) {
+            assert_eq!(v, Verdict::Rejected);
+        }
+        let r = sv.finish().unwrap();
+        assert_eq!(r.offered(), 3);
+        assert_eq!(r.rejected(), 3);
+        assert_eq!(r.completed(), 0);
+        assert_eq!(r.reloads(), 0);
+        assert_eq!(r.span_s, 0.0);
+        assert_eq!(r.slo_attainment(), 0.0);
+    }
+
+    #[test]
+    fn network_switch_charges_a_reload_and_same_net_does_not() {
+        let eng = engine();
+        let nets = [
+            zoo::by_name("mobilenetv1", 100).unwrap(),
+            zoo::by_name("vgg11", 100).unwrap(),
+        ];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        // A A B A: batches of 1, reloads on first A, first B, then A again
+        let trace = reqs(&[(0, 0.0), (0, 0.0), (1, 0.0), (0, 0.0)]);
+        run(&mut sv, &trace);
+        let r = sv.finish().unwrap();
+        assert_eq!(r.batches(), 4);
+        assert_eq!(r.reloads(), 3);
+        assert_eq!(r.per_net[0].reloads, 2);
+        assert_eq!(r.per_net[1].reloads, 1);
+    }
+
+    #[test]
+    fn accepted_requests_meet_the_slo_they_were_quoted() {
+        let eng = engine();
+        let nets = [
+            zoo::by_name("mobilenetv1", 100).unwrap(),
+            zoo::by_name("resnet18", 100).unwrap(),
+        ];
+        let cfg = SimServeConfig {
+            slo_s: 0.5,
+            max_batch: 8,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        let trace = reqs(&[
+            (0, 0.00),
+            (1, 0.00),
+            (0, 0.01),
+            (0, 0.01),
+            (1, 0.02),
+            (0, 0.03),
+        ]);
+        run(&mut sv, &trace);
+        let r = sv.finish().unwrap();
+        assert_eq!(r.completed(), r.accepted());
+        for c in &r.completions {
+            assert!(
+                c.latency_s() <= cfg.slo_s + 1e-9,
+                "request {} latency {} > slo",
+                c.id,
+                c.latency_s()
+            );
+        }
+        assert_eq!(
+            r.slo_attainment(),
+            r.accepted() as f64 / r.offered() as f64
+        );
+    }
+
+    #[test]
+    fn accept_all_mode_serves_everything_and_may_miss_slo() {
+        let eng = engine();
+        let nets = [zoo::by_name("resnet18", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e-6, // far below a single makespan
+            max_batch: 4,
+            max_wait_s: 0.0,
+            admission: false,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        let trace = reqs(&[(0, 0.0), (0, 0.0), (0, 0.0)]);
+        run(&mut sv, &trace);
+        let r = sv.finish().unwrap();
+        assert_eq!(r.accepted(), 3);
+        assert_eq!(r.rejected(), 0);
+        assert_eq!(r.completed(), 3);
+        assert_eq!(r.slo_attainment(), 0.0, "nothing fits a 1µs SLO");
+    }
+
+    #[test]
+    fn unsorted_traces_and_bad_indexes_are_errors() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let mut sv = SimServer::new(&eng, &nets, SimServeConfig::default()).unwrap();
+        sv.offer(SimRequest {
+            id: 0,
+            net: 0,
+            arrival_s: 1.0,
+        })
+        .unwrap();
+        assert!(sv
+            .offer(SimRequest {
+                id: 1,
+                net: 0,
+                arrival_s: 0.5
+            })
+            .is_err());
+        assert!(sv
+            .offer(SimRequest {
+                id: 2,
+                net: 7,
+                arrival_s: 2.0
+            })
+            .is_err());
+        assert!(SimServer::new(&eng, &[], SimServeConfig::default()).is_err());
+    }
+
+    #[test]
+    fn one_plan_per_network_however_long_the_trace() {
+        let eng = engine();
+        let nets = [
+            zoo::by_name("mobilenetv1", 100).unwrap(),
+            zoo::by_name("vgg11", 100).unwrap(),
+        ];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 2,
+            max_wait_s: 0.0,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        let trace: Vec<SimRequest> = (0..40)
+            .map(|i| SimRequest {
+                id: i,
+                net: (i % 2) as usize,
+                arrival_s: 0.0,
+            })
+            .collect();
+        run(&mut sv, &trace);
+        let r = sv.finish().unwrap();
+        assert_eq!(r.plans_computed, 2, "one plan per distinct network");
+        assert_eq!(eng.cache_stats().misses, 2);
+    }
+}

@@ -34,8 +34,14 @@ fn eval(engine: &Engine, design: Design, net: &Network, batch: u32) -> Result<Ba
     })
 }
 
-/// Smallest power-of-two batch whose throughput reaches `frac` of the
-/// throughput at `max_batch`.
+/// Smallest batch on the probe ladder (powers of two clamped to
+/// `max_batch`) whose throughput reaches `frac` of the throughput at
+/// `max_batch`. Always terminates: the ladder ends at `max_batch`, whose
+/// point is returned as the asymptote whenever no smaller batch reaches
+/// the target — including `frac >= 1.0` (nothing strictly beats the
+/// asymptote) and `max_batch == 1` (the ladder is a single rung). The
+/// returned batch never exceeds `max_batch`, even when it is not a power
+/// of two.
 pub fn min_batch_for_throughput(
     engine: &Engine,
     design: Design,
@@ -43,6 +49,7 @@ pub fn min_batch_for_throughput(
     frac: f64,
     max_batch: u32,
 ) -> Result<BatchPoint> {
+    anyhow::ensure!(max_batch >= 1, "max_batch must be >= 1");
     let asymptote = eval(engine, design, net, max_batch)?.throughput_fps;
     let mut b = 1u32;
     loop {
@@ -50,7 +57,7 @@ pub fn min_batch_for_throughput(
         if p.throughput_fps >= frac * asymptote || b >= max_batch {
             return Ok(p);
         }
-        b *= 2;
+        b = b.saturating_mul(2).min(max_batch);
     }
 }
 
@@ -84,8 +91,11 @@ pub fn tune_networks(
         .collect()
 }
 
-/// Largest power-of-two batch whose full-batch latency stays under
-/// `slo_s`; None if even batch 1 misses it.
+/// Largest power-of-two batch (≤ `max_batch`) whose full-batch latency
+/// stays under `slo_s`; `None` if even batch 1 misses it (or
+/// `max_batch == 0`). The ladder stops at the first violation — sound
+/// because full-batch latency is monotone in batch size (asserted by
+/// `latency_monotone_in_batch` below).
 pub fn max_batch_for_latency(
     engine: &Engine,
     design: Design,
@@ -150,6 +160,34 @@ mod tests {
         assert!(rows.iter().all(|r| r.point.throughput_fps > 0.0));
         // one plan per network, however many batch probes each needed
         assert_eq!(eng.cache_stats().misses, 2);
+    }
+
+    #[test]
+    fn saturating_frac_and_unit_cap_terminate_at_the_asymptote() {
+        let net = resnet::resnet18(100);
+        let eng = engine();
+        // frac >= 1.0: no batch strictly beats the asymptote, so the
+        // ladder must run off its end and return the max_batch point.
+        let p = min_batch_for_throughput(&eng, Design::CompactDdm, &net, 1.5, 16).unwrap();
+        assert_eq!(p.batch, 16);
+        let asym = eval(&eng, Design::CompactDdm, &net, 16).unwrap();
+        assert_eq!(p.throughput_fps.to_bits(), asym.throughput_fps.to_bits());
+        // max_batch == 1: the ladder is one rung.
+        let p1 = min_batch_for_throughput(&eng, Design::CompactDdm, &net, 1.5, 1).unwrap();
+        assert_eq!(p1.batch, 1);
+        // both together
+        let p11 = min_batch_for_throughput(&eng, Design::CompactDdm, &net, 2.0, 1).unwrap();
+        assert_eq!(p11.batch, 1);
+        assert!(min_batch_for_throughput(&eng, Design::CompactDdm, &net, 0.5, 0).is_err());
+    }
+
+    #[test]
+    fn probe_ladder_never_exceeds_a_non_power_of_two_cap() {
+        let net = resnet::resnet18(100);
+        let eng = engine();
+        // cap 3: the ladder is 1, 2, 3 — never 4.
+        let p = min_batch_for_throughput(&eng, Design::CompactDdm, &net, 10.0, 3).unwrap();
+        assert_eq!(p.batch, 3, "clamped to the cap, not the next power of two");
     }
 
     #[test]

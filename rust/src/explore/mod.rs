@@ -1,13 +1,15 @@
 //! Exploration drivers: the parameter sweeps behind the paper's figures
 //! (batch-size sweeps for Figs. 3/6/7, NN-size sweep for Fig. 8, chip
-//! design-space sweep), all running through the shared
-//! [`crate::sim::engine::Engine`] so each design's plan and DDM decision
-//! is computed once per network and sweep points fan out in parallel.
+//! design-space sweep) plus the mixed-network serving [`trace`] replay,
+//! all running through the shared [`crate::sim::engine::Engine`] so each
+//! design's plan and DDM decision is computed once per network and sweep
+//! points fan out in parallel.
 
 pub mod batch_opt;
 pub mod batch_sweep;
 pub mod design_sweep;
 pub mod nn_sweep;
+pub mod trace;
 
 pub use crate::sim::engine::{find, find_net, Design, DesignPoint, Engine};
 
@@ -21,3 +23,4 @@ pub use design_sweep::{design_sweep, mark_pareto, HwDesignPoint};
 pub use nn_sweep::{
     ddm_row, fig8_sweep, max_deployable, paper_networks, zoo_sweep, Floor, EXPLORE_BATCH,
 };
+pub use trace::{gen_trace, mixed_trace, replay, slo_sweep};

@@ -1,0 +1,154 @@
+//! Mixed-network serving traces: deterministic generation and replay
+//! through the Engine-backed admission controller.
+//!
+//! This is the workload the one-shot figures cannot express: a stream of
+//! requests naming *different* zoo networks, where throughput depends on
+//! how the coordinator coalesces same-network batches and how often the
+//! scheduled network switches (each switch re-streams the network's
+//! weights — the §II-C reuse the paper's batching buys evaporates when
+//! traffic interleaves). Traces are generated from a seed and the
+//! [`Arrival`] processes the real load generator uses, so every replay is
+//! reproducible bit-for-bit, and replaying K distinct networks costs the
+//! shared engine exactly K plan computations however long the trace is.
+
+use anyhow::Result;
+
+use crate::coordinator::loadgen::Arrival;
+use crate::coordinator::sim_serve::{SimRequest, SimServeConfig, SimServeReport, SimServer};
+use crate::nn::{zoo, Network};
+use crate::sim::engine::Engine;
+use crate::util::Rng;
+
+/// Deterministically generate `n` requests spread uniformly over
+/// `num_networks` networks under `arrival`, sorted by arrival time (the
+/// processes emit non-decreasing times by construction). Same seed, same
+/// trace — bit-for-bit.
+pub fn gen_trace(num_networks: usize, n: usize, arrival: Arrival, seed: u64) -> Vec<SimRequest> {
+    assert!(num_networks > 0, "gen_trace needs at least one network");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n as u64)
+        .map(|id| {
+            t += arrival.delay_s(&mut rng);
+            SimRequest {
+                id,
+                net: rng.index(num_networks),
+                arrival_s: t,
+            }
+        })
+        .collect()
+}
+
+/// Resolve zoo names and generate a mixed trace over them: the
+/// convenience entry the CLI and benches use.
+pub fn mixed_trace(
+    names: &[&str],
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+) -> Result<(Vec<Network>, Vec<SimRequest>)> {
+    let nets = names
+        .iter()
+        .map(|name| zoo::by_name(name, 100))
+        .collect::<Result<Vec<_>>>()?;
+    let trace = gen_trace(nets.len(), n, arrival, seed);
+    Ok((nets, trace))
+}
+
+/// Replay a trace through a fresh [`SimServer`] over `engine` and return
+/// the end-of-trace report. The engine outlives the replay, so a second
+/// replay (same or different trace over the same networks) pays zero
+/// additional plan computations.
+pub fn replay(
+    engine: &Engine,
+    nets: &[Network],
+    trace: &[SimRequest],
+    cfg: SimServeConfig,
+) -> Result<SimServeReport> {
+    let mut server = SimServer::new(engine, nets, cfg)?;
+    for req in trace {
+        server.offer(*req)?;
+    }
+    server.finish()
+}
+
+/// Replay the same trace under each SLO in `slos_s` (engine shared, so
+/// planning is paid once for the whole sweep). Rows come back in input
+/// order as `(slo_s, report)`.
+pub fn slo_sweep(
+    engine: &Engine,
+    nets: &[Network],
+    trace: &[SimRequest],
+    base: SimServeConfig,
+    slos_s: &[f64],
+) -> Result<Vec<(f64, SimServeReport)>> {
+    slos_s
+        .iter()
+        .map(|&slo_s| {
+            let cfg = SimServeConfig { slo_s, ..base };
+            Ok((slo_s, replay(engine, nets, trace, cfg)?))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+
+    #[test]
+    fn traces_are_deterministic_and_sorted() {
+        let a = gen_trace(3, 50, Arrival::Poisson(1000.0), 7);
+        let b = gen_trace(3, 50, Arrival::Poisson(1000.0), 7);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.net, y.net);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        assert!(a.iter().all(|r| r.net < 3));
+        // a different seed gives a different trace
+        let c = gen_trace(3, 50, Arrival::Poisson(1000.0), 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| {
+            x.net != y.net || x.arrival_s.to_bits() != y.arrival_s.to_bits()
+        }));
+    }
+
+    #[test]
+    fn burst_traces_arrive_at_time_zero() {
+        let t = gen_trace(2, 10, Arrival::Burst, 1);
+        assert!(t.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn mixed_trace_resolves_zoo_names() {
+        let (nets, trace) = mixed_trace(&["mobilenetv1", "vgg11"], 8, Arrival::Burst, 3).unwrap();
+        assert_eq!(nets.len(), 2);
+        assert_eq!(nets[0].name, "mobilenetv1");
+        assert_eq!(trace.len(), 8);
+        assert!(mixed_trace(&["nope"], 8, Arrival::Burst, 3).is_err());
+    }
+
+    #[test]
+    fn slo_sweep_shares_one_engine_plan_per_network() {
+        let engine = Engine::compact(presets::lpddr5());
+        let (nets, trace) = mixed_trace(&["mobilenetv1", "vgg11"], 24, Arrival::Burst, 11).unwrap();
+        let base = SimServeConfig {
+            max_batch: 8,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        };
+        let rows = slo_sweep(&engine, &nets, &trace, base, &[1e6, 0.05, 1e-12]).unwrap();
+        assert_eq!(rows.len(), 3);
+        // generous SLO accepts the whole burst; impossible SLO none of it
+        assert_eq!(rows[0].1.accepted(), 24);
+        assert_eq!(rows[2].1.accepted(), 0);
+        // the engine planned each network exactly once across the sweep
+        assert_eq!(engine.cache_stats().misses, 2);
+        assert_eq!(rows[0].1.plans_computed, 2);
+        assert_eq!(rows[1].1.plans_computed, 0, "later replays reuse plans");
+    }
+}

@@ -32,12 +32,19 @@
 //!   ddm) and fans sweep points out across threads, emitting uniform
 //!   [`sim::engine::DesignPoint`] rows.
 //! * [`explore`] — engine-backed sweeps regenerating Figs. 3/6/7/8, the
-//!   batch auto-tuner, and the chip design-space Pareto sweep.
-//! * [`runtime`] / [`coordinator`] *(feature `runtime`, on by default)* —
-//!   the serving path: a PJRT executor for AOT-compiled XLA artifacts and
-//!   a threaded request router / dynamic batcher, with Python never on the
-//!   request path. Disable the feature (`--no-default-features`) to build
-//!   the full simulation stack where the `xla` chain is unavailable.
+//!   batch auto-tuner, the chip design-space Pareto sweep, and the
+//!   mixed-network serving traces ([`explore::trace`]).
+//! * [`coordinator`] — the serving layer: request types, the dynamic
+//!   batcher, arrival processes, and [`coordinator::sim_serve`] — an
+//!   Engine-backed admission controller + virtual-time worker that prices
+//!   every request from cached plans, so the request path runs (and is
+//!   tested) without any accelerator present.
+//! * [`runtime`] + the coordinator's [`coordinator::server`] *(feature
+//!   `runtime`, on by default)* — the real serving path: a PJRT executor
+//!   for AOT-compiled XLA artifacts and a threaded request router, with
+//!   Python never on the request path. Disable the feature
+//!   (`--no-default-features`) to build everything else where the `xla`
+//!   chain is unavailable.
 //!
 //! Substrate modules ([`cli`], [`cfg`], [`bench_harness`], [`testing`],
 //! [`util`]) are written from scratch because the offline crate registry
@@ -77,7 +84,6 @@ pub mod baselines;
 pub mod bench_harness;
 pub mod cfg;
 pub mod cli;
-#[cfg(feature = "runtime")]
 pub mod coordinator;
 pub mod ddm;
 pub mod dram;

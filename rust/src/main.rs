@@ -4,7 +4,9 @@
 //! `run` (one simulation point), `fig1/fig3/fig4/fig6/fig7/fig8`
 //! (regenerate each figure), `explore` (max-NN search with a floor),
 //! `zoo` (list the model registry), `tune` (per-network batch auto-tune),
-//! `serve` (the L3 serving path over AOT artifacts; `runtime` feature),
+//! `serve-sim` (mixed-network trace replay through the Engine-backed
+//! admission controller — no accelerator needed), `serve` (the L3 serving
+//! path over AOT artifacts; `runtime` feature),
 //! `plan` (inspect a partition + DDM decision). Every simulation command
 //! goes through the shared `sim::engine::Engine`; every `--network` /
 //! `--networks` option resolves through `nn::zoo`, so each figure
@@ -16,6 +18,7 @@ use anyhow::Result;
 
 use pimflow::cfg::{presets, Config, DramKind, PipelineCase};
 use pimflow::cli::{App, Command, Invocation, Opt, Parsed};
+use pimflow::coordinator::{Arrival, SimServeConfig};
 #[cfg(feature = "runtime")]
 use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
 use pimflow::explore;
@@ -135,6 +138,30 @@ fn app() -> App {
                     Opt::value("network", Some("resnet18"), "network"),
                     batch_opt(),
                     dram_opt(),
+                ],
+            },
+            Command {
+                name: "serve-sim",
+                about: "replay a mixed-network request trace through the simulated coordinator",
+                opts: vec![
+                    Opt::value(
+                        "networks",
+                        Some("mobilenetv1,resnet18,vgg11"),
+                        "network mix: `paper`, `zoo`, or a comma list of zoo names",
+                    ),
+                    Opt::value("requests", Some("256"), "trace length"),
+                    Opt::value(
+                        "trace",
+                        Some("poisson:2000"),
+                        "arrival process (burst, uniform:<rate>, poisson:<rate>)",
+                    ),
+                    Opt::value("slo", Some("50"), "latency SLO per request, ms"),
+                    Opt::value("max-batch", Some("64"), "batch ceiling (per-network caps tune below it)"),
+                    Opt::value("max-wait-ms", Some("2"), "batch linger before it closes"),
+                    Opt::value("seed", Some("42"), "trace seed (same seed, same trace)"),
+                    Opt::flag("no-admission", "accept everything (shows what admission buys)"),
+                    dram_opt(),
+                    csv_flag(),
                 ],
             },
             Command {
@@ -459,6 +486,37 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve_sim(p: &Parsed) -> Result<()> {
+    let nets = networks_of(p)?;
+    let n = p.get_u32("requests")?.unwrap_or(256) as usize;
+    let arrival = Arrival::parse(p.get_or("trace", "poisson:2000"))?;
+    let seed = p.get_u64("seed")?.unwrap_or(42);
+    let cfg = SimServeConfig {
+        slo_s: p.get_f64("slo")?.unwrap_or(50.0) * 1e-3,
+        max_batch: p.get_u32("max-batch")?.unwrap_or(64),
+        max_wait_s: p.get_f64("max-wait-ms")?.unwrap_or(2.0) * 1e-3,
+        admission: !p.flag("no-admission"),
+        ..SimServeConfig::default()
+    };
+    let engine = Engine::compact(dram_of(p)?);
+    let trace = explore::gen_trace(nets.len(), n, arrival, seed);
+    let report = explore::replay(&engine, &nets, &trace, cfg)?;
+    let (t, csv) = figures::trace_table(&report);
+    print!("{}", t.render());
+    println!(
+        "span {:.3} s, SLO attainment {:.1}%, {} weight reloads over {} batches, {} engine plans",
+        report.span_s,
+        100.0 * report.slo_attainment(),
+        report.reloads(),
+        report.batches(),
+        report.plans_computed
+    );
+    if p.flag("csv") {
+        println!("wrote {}", figures::write_csv(&csv, "serve_sim.csv")?.display());
+    }
+    Ok(())
+}
+
 fn cmd_zoo(p: &Parsed) -> Result<()> {
     let (t, csv) = figures::zoo_table();
     print!("{}", t.render());
@@ -563,6 +621,7 @@ fn dispatch(p: Parsed) -> Result<()> {
         "fig8" => cmd_fig8(&p),
         "explore" => cmd_explore(&p),
         "zoo" => cmd_zoo(&p),
+        "serve-sim" => cmd_serve_sim(&p),
         "tune" => cmd_tune(&p),
         "design" => cmd_design(&p),
         "trace" => cmd_trace(&p),

@@ -338,6 +338,115 @@ pub fn zoo_table() -> (Table, Csv) {
     (t, csv)
 }
 
+/// Serving-trace replay table: one row per network plus a totals row —
+/// the mixed-network analogue of the Fig. 6 throughput tables, with the
+/// admission/coalescing/weight-reload counters the one-shot sweeps
+/// cannot express.
+pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) {
+    let mut t = Table::new(
+        format!(
+            "serve-sim trace replay ({} requests, {:.1} req/s served, {} plans)",
+            report.offered(),
+            report.throughput_rps(),
+            report.plans_computed
+        ),
+        vec![
+            "network", "offered", "accept", "coalesce", "reject", "batches", "mean b", "reloads",
+            "slo att", "mean lat",
+        ],
+    );
+    let mut csv = Csv::new(vec![
+        "network",
+        "offered",
+        "accepted",
+        "coalesced",
+        "rejected",
+        "batches",
+        "mean_batch",
+        "reloads",
+        "slo_attainment",
+        "mean_latency_s",
+    ]);
+    let mut row = |name: &str,
+                   offered: u64,
+                   accepted: u64,
+                   coalesced: u64,
+                   rejected: u64,
+                   batches: u64,
+                   mean_batch: f64,
+                   reloads: u64,
+                   att: f64,
+                   lat_s: f64| {
+        t.row(vec![
+            name.to_string(),
+            offered.to_string(),
+            accepted.to_string(),
+            coalesced.to_string(),
+            rejected.to_string(),
+            batches.to_string(),
+            format!("{mean_batch:.2}"),
+            reloads.to_string(),
+            format!("{:.1}%", 100.0 * att),
+            format!("{:.2} ms", lat_s * 1e3),
+        ]);
+        csv.row(vec![
+            name.to_string(),
+            offered.to_string(),
+            accepted.to_string(),
+            coalesced.to_string(),
+            rejected.to_string(),
+            batches.to_string(),
+            format!("{mean_batch:.4}"),
+            reloads.to_string(),
+            format!("{att:.4}"),
+            format!("{lat_s:.6}"),
+        ]);
+    };
+    for n in &report.per_net {
+        row(
+            &n.network,
+            n.offered,
+            n.accepted,
+            n.coalesced,
+            n.rejected,
+            n.batches,
+            n.mean_batch(),
+            n.reloads,
+            n.slo_attainment(),
+            n.mean_latency_s(),
+        );
+    }
+    let completed = report.completed();
+    let mean_batch = if report.batches() == 0 {
+        0.0
+    } else {
+        completed as f64 / report.batches() as f64
+    };
+    let mean_lat = if completed == 0 {
+        0.0
+    } else {
+        report
+            .per_net
+            .iter()
+            .map(|n| n.latency_sum_s)
+            .sum::<f64>()
+            / completed as f64
+    };
+    row(
+        "TOTAL",
+        report.offered(),
+        report.accepted(),
+        report.coalesced(),
+        report.rejected(),
+        report.batches(),
+        mean_batch,
+        report.reloads(),
+        report.slo_attainment(),
+        mean_lat,
+    );
+    (t, csv)
+}
+
 /// Fig. 1 helper (used by the CLI): write a CSV under `results/`.
 pub fn write_csv(csv: &Csv, name: &str) -> std::io::Result<std::path::PathBuf> {
     let path = Path::new("results").join(name);
@@ -411,6 +520,27 @@ mod tests {
             assert!(s.contains(name), "missing {name}");
         }
         assert_eq!(csv.num_rows(), crate::nn::zoo::all().len());
+    }
+
+    #[test]
+    fn trace_table_has_per_network_rows_and_totals() {
+        use crate::coordinator::{Arrival, SimServeConfig};
+        use crate::explore::trace::{mixed_trace, replay};
+        let engine = crate::explore::Engine::compact(presets::lpddr5());
+        let (nets, trace) = mixed_trace(&["mobilenetv1", "vgg11"], 16, Arrival::Burst, 5).unwrap();
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        };
+        let report = replay(&engine, &nets, &trace, cfg).unwrap();
+        let (t, csv) = trace_table(&report);
+        let s = t.render();
+        assert!(s.contains("mobilenetv1"));
+        assert!(s.contains("vgg11"));
+        assert!(s.contains("TOTAL"));
+        assert_eq!(csv.num_rows(), nets.len() + 1);
     }
 
     #[test]

@@ -234,6 +234,31 @@ impl Engine {
         self.cache.lock().unwrap().len()
     }
 
+    /// Cross-network cache accounting for long-lived engines: the distinct
+    /// network names with at least one memoized plan, sorted. A serving
+    /// coordinator replaying mixed-network traces should see exactly its
+    /// network set here, each planned once (`plans_for` == entry count per
+    /// name; > 1 only when the same name is planned under several designs
+    /// or chip configs).
+    pub fn planned_networks(&self) -> Vec<String> {
+        let cache = self.cache.lock().unwrap();
+        let mut names: Vec<String> = cache.keys().map(|k| k.net_name.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Number of memoized plan entries for one network name (across all
+    /// designs/strategies/chips it was planned under).
+    pub fn plans_for(&self, net_name: &str) -> usize {
+        self.cache
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.net_name == net_name)
+            .count()
+    }
+
     /// Drop every memoized plan (counters keep running). The cache is
     /// otherwise unbounded — a long-lived engine fed a stream of distinct
     /// chip configs (e.g. repeated design-space sweeps) should clear it
@@ -521,6 +546,25 @@ mod tests {
             ddm.throughput_fps.to_bits(),
             "re-planned result is deterministic"
         );
+    }
+
+    #[test]
+    fn cross_network_accounting_names_each_planned_network_once() {
+        let eng = engine();
+        assert!(eng.planned_networks().is_empty());
+        let r18 = resnet::resnet18(100);
+        let r34 = resnet::resnet34(100);
+        eng.run(Design::CompactDdm, &r18, 1).unwrap();
+        eng.run(Design::CompactDdm, &r18, 64).unwrap();
+        eng.run(Design::CompactDdm, &r34, 1).unwrap();
+        assert_eq!(eng.planned_networks(), vec!["resnet18", "resnet34"]);
+        assert_eq!(eng.plans_for("resnet18"), 1, "batch probes share one plan");
+        assert_eq!(eng.plans_for("resnet34"), 1);
+        assert_eq!(eng.plans_for("vgg16"), 0);
+        // a second design adds a second entry under the same name
+        eng.run(Design::CompactNoDdm, &r18, 1).unwrap();
+        assert_eq!(eng.plans_for("resnet18"), 2);
+        assert_eq!(eng.planned_networks().len(), 2);
     }
 
     #[test]

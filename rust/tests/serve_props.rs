@@ -1,0 +1,275 @@
+//! Property net over the simulated serving path (respects
+//! `PIMFLOW_PROP_CASES`): randomized mixed-network traces through the
+//! admission controller, checking the invariants the design promises —
+//!
+//! * admission never violates the SLO bound it quotes: every accepted
+//!   request completes within the SLO, exactly (the quote is an upper
+//!   bound on the realized completion by construction);
+//! * conservation: per-network completed ≤ offered, accepted + rejected
+//!   == offered, batches == accepted − coalesced, reloads ≤ batches;
+//! * throughput is monotone non-increasing as the SLO tightens, at the
+//!   operating-point level (the `batch_opt`-tuned batch cap can only
+//!   shrink) and at the trace level for homogeneous burst traffic
+//!   (identical per-request cost, so a looser SLO can always replicate a
+//!   tighter SLO's schedule).
+//!
+//! One engine is shared across every random case: however many traces the
+//! net replays, the three pool networks are planned at most once each.
+
+use pimflow::cfg::presets;
+use pimflow::coordinator::{Arrival, SimServeConfig};
+use pimflow::explore::batch_opt::max_batch_for_latency;
+use pimflow::explore::trace::{gen_trace, replay};
+use pimflow::nn::{zoo, Network};
+use pimflow::prop_assert;
+use pimflow::sim::{Design, Engine};
+use pimflow::testing::check;
+use pimflow::util::Rng;
+
+fn pool() -> Vec<Network> {
+    ["mobilenetv1", "vgg11", "resnet18"]
+        .iter()
+        .map(|n| zoo::by_name(n, 100).unwrap())
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    num_nets: usize,
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+    slo_s: f64,
+    max_batch: u32,
+    max_wait_s: f64,
+    admission: bool,
+}
+
+fn gen_case(rng: &mut Rng, admission: bool) -> Case {
+    let arrival = match rng.index(3) {
+        0 => Arrival::Burst,
+        1 => Arrival::Uniform(rng.range_f64(100.0, 5000.0)),
+        _ => Arrival::Poisson(rng.range_f64(100.0, 5000.0)),
+    };
+    Case {
+        num_nets: 1 + rng.index(3),
+        n: 1 + rng.index(32),
+        arrival,
+        seed: rng.next_u64(),
+        // log-uniform over [100 µs, ~3 s]: spans reject-all to accept-all
+        slo_s: 10f64.powf(rng.range_f64(-4.0, 0.5)),
+        max_batch: 1 + rng.index(8) as u32,
+        max_wait_s: rng.range_f64(0.0, 0.002),
+        admission,
+    }
+}
+
+fn run_case(engine: &Engine, nets: &[Network], c: &Case) -> pimflow::coordinator::SimServeReport {
+    let trace = gen_trace(c.num_nets, c.n, c.arrival, c.seed);
+    let cfg = SimServeConfig {
+        slo_s: c.slo_s,
+        max_batch: c.max_batch,
+        max_wait_s: c.max_wait_s,
+        admission: c.admission,
+        ..SimServeConfig::default()
+    };
+    replay(engine, &nets[..c.num_nets], &trace, cfg).expect("replay failed")
+}
+
+#[test]
+fn admission_never_violates_the_slo_it_quotes() {
+    let engine = Engine::compact(presets::lpddr5());
+    let nets = pool();
+    check(
+        "serve/slo-quotes-honored",
+        |rng| gen_case(rng, true),
+        |c| {
+            let r = run_case(&engine, &nets, c);
+            prop_assert!(
+                r.completed() == r.accepted(),
+                "accepted {} but completed {}",
+                r.accepted(),
+                r.completed()
+            );
+            for done in &r.completions {
+                prop_assert!(
+                    done.latency_s() <= c.slo_s,
+                    "request {} latency {} exceeds quoted SLO {}",
+                    done.id,
+                    done.latency_s(),
+                    c.slo_s
+                );
+            }
+            // `within_slo` agrees with the raw completions, exactly.
+            let within: u64 = r.per_net.iter().map(|n| n.within_slo).sum();
+            prop_assert!(
+                within == r.completed(),
+                "within_slo {within} != completed {}",
+                r.completed()
+            );
+            Ok(())
+        },
+    );
+    // However many random traces ran, the pool planned at most once each.
+    assert!(
+        engine.cache_stats().misses <= nets.len() as u64,
+        "cross-case plan reuse broke: {:?}",
+        engine.cache_stats()
+    );
+}
+
+#[test]
+fn serving_counters_are_conserved_per_network() {
+    let engine = Engine::compact(presets::lpddr5());
+    let nets = pool();
+    check(
+        "serve/conservation",
+        |rng| {
+            let admission = rng.chance(0.7);
+            gen_case(rng, admission)
+        },
+        |c| {
+            let r = run_case(&engine, &nets, c);
+            prop_assert!(
+                r.offered() == c.n as u64,
+                "offered {} != trace length {}",
+                r.offered(),
+                c.n
+            );
+            prop_assert!(
+                r.accepted() + r.rejected() == r.offered(),
+                "accept {} + reject {} != offered {}",
+                r.accepted(),
+                r.rejected(),
+                r.offered()
+            );
+            prop_assert!(
+                r.batches() == r.accepted() - r.coalesced(),
+                "every batch has exactly one non-coalesced opener"
+            );
+            prop_assert!(r.reloads() <= r.batches(), "more reloads than batches");
+            for n in &r.per_net {
+                prop_assert!(
+                    n.completed <= n.offered,
+                    "{}: completed {} > offered {}",
+                    n.network,
+                    n.completed,
+                    n.offered
+                );
+                prop_assert!(
+                    n.accepted + n.rejected == n.offered,
+                    "{}: verdicts don't partition offers",
+                    n.network
+                );
+                prop_assert!(n.coalesced <= n.accepted, "{}: coalesce accounting", n.network);
+            }
+            if !c.admission {
+                prop_assert!(
+                    r.accepted() == r.offered(),
+                    "accept-all mode rejected something"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tuned_batch_cap_is_monotone_in_the_slo() {
+    // The operating point the admission controller runs at: the largest
+    // batch whose full-batch latency fits the SLO. Tightening the SLO can
+    // only shrink the feasible ladder prefix, so the cap is monotone
+    // non-increasing — the throughput side of the serving trade-off.
+    let engine = Engine::compact(presets::lpddr5());
+    let nets = pool();
+    check(
+        "serve/cap-monotone",
+        |rng| {
+            let mut slos = [
+                10f64.powf(rng.range_f64(-4.0, 0.5)),
+                10f64.powf(rng.range_f64(-4.0, 0.5)),
+                10f64.powf(rng.range_f64(-4.0, 0.5)),
+            ];
+            slos.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            (rng.index(3), slos, 1 + rng.index(16) as u32)
+        },
+        |&(net_idx, slos, max_batch)| {
+            let net = &nets[net_idx];
+            let caps: Vec<u32> = slos
+                .iter()
+                .map(|&slo| {
+                    max_batch_for_latency(&engine, Design::CompactDdm, net, slo, max_batch)
+                        .expect("tuning failed")
+                        .map(|p| p.batch)
+                        .unwrap_or(0)
+                })
+                .collect();
+            for w in caps.windows(2) {
+                prop_assert!(
+                    w[0] >= w[1],
+                    "tighter SLO grew the batch cap: {caps:?} for slos {slos:?}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn homogeneous_burst_throughput_is_monotone_in_the_slo() {
+    // Trace-level monotonicity, on the workload where it is provable:
+    // one network, burst arrivals (identical per-request cost, fixed
+    // offered window). A looser SLO can always admit at least the
+    // schedule the tighter SLO ran, so accepted counts — throughput over
+    // the fixed trace — are monotone non-increasing as the SLO tightens.
+    let engine = Engine::compact(presets::lpddr5());
+    let nets = pool();
+    check(
+        "serve/burst-throughput-monotone",
+        |rng| {
+            let mut slos = [
+                10f64.powf(rng.range_f64(-4.0, 0.5)),
+                10f64.powf(rng.range_f64(-4.0, 0.5)),
+                10f64.powf(rng.range_f64(-4.0, 0.5)),
+                f64::INFINITY,
+            ];
+            slos.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            (
+                rng.index(3),
+                1 + rng.index(24),
+                rng.next_u64(),
+                slos,
+                1 + rng.index(8) as u32,
+                rng.range_f64(0.0, 0.002),
+            )
+        },
+        |&(net_idx, n, seed, slos, max_batch, max_wait_s)| {
+            let trace = gen_trace(1, n, Arrival::Burst, seed);
+            let accepted: Vec<u64> = slos
+                .iter()
+                .map(|&slo_s| {
+                    let cfg = SimServeConfig {
+                        slo_s,
+                        max_batch,
+                        max_wait_s,
+                        ..SimServeConfig::default()
+                    };
+                    replay(&engine, &nets[net_idx..net_idx + 1], &trace, cfg)
+                        .expect("replay failed")
+                        .accepted()
+                })
+                .collect();
+            prop_assert!(
+                accepted[0] == n as u64,
+                "infinite SLO must accept the whole burst, got {accepted:?}"
+            );
+            for w in accepted.windows(2) {
+                prop_assert!(
+                    w[0] >= w[1],
+                    "tighter SLO accepted more: {accepted:?} for slos {slos:?}"
+                );
+            }
+            Ok(())
+        },
+    );
+}

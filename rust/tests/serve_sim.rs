@@ -1,0 +1,190 @@
+//! Deterministic mixed-network trace replay over the request path — the
+//! tier-1 net for the simulated serving coordinator. Everything here runs
+//! without the `runtime` feature: the whole request path (trace → admission
+//! → batching → virtual execution → SLO accounting) is priced from the
+//! shared engine's cached plans.
+//!
+//! The anchor trace is ≥3 zoo networks × ≥200 requests, seeded, so counts
+//! are exact across replays; the engine plans each distinct network exactly
+//! once for the *whole* trace (and zero times for any later trace over the
+//! same networks).
+
+use pimflow::cfg::presets;
+use pimflow::coordinator::{Arrival, SimServeConfig};
+use pimflow::explore::trace::{gen_trace, mixed_trace, replay, slo_sweep};
+use pimflow::sim::Engine;
+
+const NETWORKS: [&str; 3] = ["mobilenetv1", "vgg11", "resnet18"];
+const REQUESTS: usize = 240;
+const SEED: u64 = 2026;
+
+fn engine() -> Engine {
+    Engine::compact(presets::lpddr5())
+}
+
+fn cfg(slo_s: f64) -> SimServeConfig {
+    SimServeConfig {
+        slo_s,
+        max_batch: 16,
+        max_wait_s: 0.001,
+        ..SimServeConfig::default()
+    }
+}
+
+#[test]
+fn generous_slo_pins_exact_counts_and_one_plan_per_network() {
+    let eng = engine();
+    let (nets, trace) = mixed_trace(&NETWORKS, REQUESTS, Arrival::Poisson(2000.0), SEED).unwrap();
+    assert_eq!(trace.len(), REQUESTS);
+    let r = replay(&eng, &nets, &trace, cfg(1e6)).unwrap();
+
+    // Pinned counts: nothing can miss a 10^6-second SLO.
+    assert_eq!(r.offered(), REQUESTS as u64);
+    assert_eq!(r.accepted(), REQUESTS as u64);
+    assert_eq!(r.rejected(), 0);
+    assert_eq!(r.completed(), REQUESTS as u64);
+    assert_eq!(r.slo_attainment(), 1.0);
+    // Every batch's opener is a non-coalesced accept.
+    assert_eq!(r.batches(), r.accepted() - r.coalesced());
+    assert!(r.batches() >= 1);
+    assert!(r.reloads() >= 1 && r.reloads() <= r.batches());
+    assert!(r.span_s > 0.0);
+
+    // Engine cache accounting: each distinct network planned exactly once
+    // across the whole trace, visible both in the report and the engine.
+    assert_eq!(r.plans_computed, NETWORKS.len() as u64);
+    assert_eq!(eng.cache_stats().misses, NETWORKS.len() as u64);
+    let mut expected: Vec<String> = NETWORKS.iter().map(|s| s.to_string()).collect();
+    expected.sort();
+    assert_eq!(eng.planned_networks(), expected);
+    for name in NETWORKS {
+        assert_eq!(eng.plans_for(name), 1, "{name} planned more than once");
+    }
+
+    // A second replay over the warm engine pays zero plans and reproduces
+    // every counter exactly.
+    let again = replay(&eng, &nets, &trace, cfg(1e6)).unwrap();
+    assert_eq!(again.plans_computed, 0, "warm engine re-plans nothing");
+    assert_eq!(eng.cache_stats().misses, NETWORKS.len() as u64);
+    assert_eq!(again.accepted(), r.accepted());
+    assert_eq!(again.coalesced(), r.coalesced());
+    assert_eq!(again.batches(), r.batches());
+    assert_eq!(again.reloads(), r.reloads());
+    assert_eq!(again.span_s.to_bits(), r.span_s.to_bits());
+}
+
+#[test]
+fn impossible_slo_rejects_the_entire_trace() {
+    let eng = engine();
+    let (nets, trace) = mixed_trace(&NETWORKS, REQUESTS, Arrival::Poisson(2000.0), SEED).unwrap();
+    let r = replay(&eng, &nets, &trace, cfg(1e-12)).unwrap();
+    assert_eq!(r.offered(), REQUESTS as u64);
+    assert_eq!(r.accepted(), 0);
+    assert_eq!(r.rejected(), REQUESTS as u64);
+    assert_eq!(r.completed(), 0);
+    assert_eq!(r.batches(), 0);
+    assert_eq!(r.reloads(), 0);
+    assert_eq!(r.span_s, 0.0);
+    assert_eq!(r.slo_attainment(), 0.0);
+    // Tuning still planned each network once (to learn nothing fits).
+    assert_eq!(r.plans_computed, NETWORKS.len() as u64);
+}
+
+#[test]
+fn mid_slo_replay_is_deterministic_and_self_consistent() {
+    let slo_s = 0.05;
+    let (nets, trace) = mixed_trace(&NETWORKS, REQUESTS, Arrival::Poisson(2000.0), SEED).unwrap();
+
+    let e1 = engine();
+    let r1 = replay(&e1, &nets, &trace, cfg(slo_s)).unwrap();
+    let e2 = engine();
+    let r2 = replay(&e2, &nets, &trace, cfg(slo_s)).unwrap();
+
+    // Bit-for-bit reproducible across independent engines.
+    assert_eq!(r1.accepted(), r2.accepted());
+    assert_eq!(r1.coalesced(), r2.coalesced());
+    assert_eq!(r1.rejected(), r2.rejected());
+    assert_eq!(r1.reloads(), r2.reloads());
+    assert_eq!(r1.span_s.to_bits(), r2.span_s.to_bits());
+    assert_eq!(r1.completions.len(), r2.completions.len());
+    for (a, b) in r1.completions.iter().zip(&r2.completions) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.completion_s.to_bits(), b.completion_s.to_bits());
+    }
+
+    // Self-consistency: totals add up, per-network rows sum to totals,
+    // and every accepted request completed within the SLO it was quoted.
+    assert_eq!(r1.accepted() + r1.rejected(), r1.offered());
+    assert_eq!(r1.completed(), r1.accepted());
+    assert_eq!(r1.batches(), r1.accepted() - r1.coalesced());
+    let per_net_offered: u64 = r1.per_net.iter().map(|n| n.offered).sum();
+    assert_eq!(per_net_offered, REQUESTS as u64);
+    for n in &r1.per_net {
+        assert!(n.completed <= n.offered);
+        assert_eq!(n.accepted + n.rejected, n.offered);
+        assert_eq!(n.within_slo, n.completed, "admission quotes are honored");
+    }
+    for c in &r1.completions {
+        assert!(
+            c.latency_s() <= slo_s + 1e-9,
+            "request {} latency {}s exceeds the {}s SLO",
+            c.id,
+            c.latency_s(),
+            slo_s
+        );
+    }
+    assert_eq!(r1.plans_computed, NETWORKS.len() as u64);
+}
+
+#[test]
+fn slo_endpoints_bracket_every_mid_slo() {
+    let eng = engine();
+    let (nets, trace) = mixed_trace(&NETWORKS, 60, Arrival::Burst, 9).unwrap();
+    let rows = slo_sweep(&eng, &nets, &trace, cfg(1.0), &[1e6, 0.1, 0.01, 1e-12]).unwrap();
+    let accepted: Vec<u64> = rows.iter().map(|(_, r)| r.accepted()).collect();
+    assert_eq!(accepted[0], 60, "infinite SLO accepts the whole burst");
+    assert_eq!(accepted[3], 0, "impossible SLO accepts nothing");
+    for &a in &accepted[1..3] {
+        assert!(a <= 60);
+    }
+    // The whole four-way sweep shared one engine: still one plan per net.
+    assert_eq!(eng.cache_stats().misses, NETWORKS.len() as u64);
+}
+
+#[test]
+fn single_network_trace_reloads_weights_exactly_once() {
+    let eng = engine();
+    let (nets, trace) = mixed_trace(&["mobilenetv1"], 40, Arrival::Burst, 3).unwrap();
+    let r = replay(&eng, &nets, &trace, cfg(1e6)).unwrap();
+    assert_eq!(r.accepted(), 40);
+    assert!(r.batches() >= 1);
+    assert_eq!(
+        r.reloads(),
+        1,
+        "homogeneous traffic loads weights once and reuses them"
+    );
+}
+
+#[test]
+fn trace_generation_pins_the_network_mix() {
+    // The trace itself (arrivals and network choices) is a pure function
+    // of the seed — pin its shape, independent of any engine.
+    let t = gen_trace(NETWORKS.len(), REQUESTS, Arrival::Poisson(2000.0), SEED);
+    assert_eq!(t.len(), REQUESTS);
+    let mut per_net = [0usize; 3];
+    for r in &t {
+        per_net[r.net] += 1;
+    }
+    // Every network appears (uniform mix over 240 draws).
+    assert!(per_net.iter().all(|&c| c > 0), "{per_net:?}");
+    assert_eq!(per_net.iter().sum::<usize>(), REQUESTS);
+    // Arrivals are sorted and strictly beyond time zero for Poisson.
+    assert!(t.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    assert!(t[0].arrival_s > 0.0);
+    // Same seed, same trace; different seed, different trace.
+    let t2 = gen_trace(NETWORKS.len(), REQUESTS, Arrival::Poisson(2000.0), SEED);
+    assert!(t
+        .iter()
+        .zip(&t2)
+        .all(|(a, b)| a.net == b.net && a.arrival_s.to_bits() == b.arrival_s.to_bits()));
+}
