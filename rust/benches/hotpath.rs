@@ -7,7 +7,7 @@
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
 use pimflow::cfg::PipelineCase;
-use pimflow::coordinator::{Arrival, SimServeConfig};
+use pimflow::coordinator::{Arrival, Placement, SimServeConfig};
 use pimflow::ddm;
 use pimflow::explore::{fig6_sweep, mixed_trace, replay, BATCHES};
 use pimflow::nn::{resnet, zoo};
@@ -153,4 +153,43 @@ fn main() {
         "replay must plan each distinct network exactly once"
     );
     assert_eq!(serve_engine.cache_stats().misses, nets.len() as u64);
+
+    // Fleet acceptance pin: growing the fleet and switching placement
+    // policies reuses the same K cached plans (zero new plan work on the
+    // warm engine), and network-affinity placement strictly cuts weight
+    // reloads against round-robin once the fleet has multiple workers.
+    // Generous SLO: every cell serves the whole trace, so the reload
+    // comparison isolates placement from admission differences.
+    let fleet_cfg = |workers, placement| SimServeConfig {
+        slo_s: 1e6,
+        max_batch: 16,
+        max_wait_s: 0.001,
+        workers,
+        placement,
+        ..SimServeConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let rr = replay(&serve_engine, &nets, &trace, fleet_cfg(4, Placement::RoundRobin)).unwrap();
+    let aff = replay(
+        &serve_engine,
+        &nets,
+        &trace,
+        fleet_cfg(4, Placement::NetworkAffinity),
+    )
+    .unwrap();
+    println!(
+        "fleet replay (4 workers): round-robin {} reloads vs affinity {} in {:.3} s",
+        rr.reloads(),
+        aff.reloads(),
+        t0.elapsed().as_secs_f64()
+    );
+    assert_eq!(rr.plans_computed, 0, "warm engine re-plans nothing for a fleet");
+    assert_eq!(aff.plans_computed, 0);
+    assert_eq!(serve_engine.cache_stats().misses, nets.len() as u64);
+    assert!(
+        aff.reloads() < rr.reloads(),
+        "affinity must beat round-robin reloads at 4 workers: {} vs {}",
+        aff.reloads(),
+        rr.reloads()
+    );
 }

@@ -6,17 +6,20 @@
 //!   `gather` (max-batch / max-wait policy) → smallest fitting AOT
 //!   artifact variant → PJRT execute → per-request reply channels; and
 //! * the simulated path ([`sim_serve`], always available): an
-//!   Engine-backed admission controller and virtual-time worker that
-//!   charge pipeline makespans instead of PJRT executions, so the full
-//!   request path — batching policy, arrival statistics, admission,
-//!   SLO accounting — is exercised in the default (no-xla) CI lane.
+//!   Engine-backed admission controller over a fleet of virtual-time
+//!   workers ([`vworker`]) with pluggable [`placement`] policies, charging
+//!   pipeline makespans instead of PJRT executions — so the full request
+//!   path (batching policy, arrival statistics, admission, placement, SLO
+//!   accounting) is exercised in the default (no-xla) CI lane.
 
 pub mod batcher;
 pub mod loadgen;
+pub mod placement;
 pub mod request;
 #[cfg(feature = "runtime")]
 pub mod server;
 pub mod sim_serve;
+pub mod vworker;
 #[cfg(feature = "runtime")]
 pub mod worker;
 
@@ -24,9 +27,11 @@ pub use batcher::BatchPolicy;
 pub use loadgen::Arrival;
 #[cfg(feature = "runtime")]
 pub use loadgen::{run_load, LoadReport};
+pub use placement::Placement;
 pub use request::{InferRequest, InferResponse, RequestId, IMAGE_ELEMENTS};
 #[cfg(feature = "runtime")]
 pub use server::{Server, ServerConfig, StatsSnapshot};
 pub use sim_serve::{
     Completion, NetStats, SimRequest, SimServeConfig, SimServeReport, SimServer, Verdict,
 };
+pub use vworker::{VWorker, WorkerStats};

@@ -1,0 +1,181 @@
+//! Placement policies for the simulated worker fleet.
+//!
+//! Once a service runs more than one worker, reload-avoidance stops being
+//! a batching problem and becomes a *placement* problem: which worker's
+//! loaded network a request should ride. The policy picks exactly one
+//! worker per offered request; admission (coalesce-or-fresh quoting) then
+//! runs on that worker alone, so quotes stay per-worker upper bounds and
+//! the accepted-never-misses-SLO invariant is untouched by the policy.
+//!
+//! * [`Placement::RoundRobin`] — cycle a cursor over the fleet. The
+//!   locality-blind strawman: same-network traffic fragments across
+//!   workers and pays a weight reload almost every batch.
+//! * [`Placement::LeastLoaded`] — the worker that drains first
+//!   (`busy_until`, then fewest open-batch members, then lowest id).
+//!   Balances queueing delay, ignores which weights are resident.
+//! * [`Placement::NetworkAffinity`] — prefer workers already holding the
+//!   request's weights (resident, or loading via their open batch),
+//!   least-loaded among those; fall back to least-loaded overall. Turns
+//!   the fleet into an LRU-like weight cache: reloads only happen when a
+//!   network is resident nowhere.
+//!
+//! With one worker every policy degenerates to "worker 0", which is what
+//! pins the fleet refactor bitwise against the single-worker replay
+//! (`tests/serve_sim.rs`).
+
+use super::vworker::VWorker;
+
+/// Worker-selection policy consulted on every admit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Cycle over workers in id order, one step per offered request.
+    RoundRobin,
+    /// Earliest-draining worker (ties: fewer open members, lower id).
+    LeastLoaded,
+    /// Worker already holding the request's weights, else least-loaded.
+    NetworkAffinity,
+}
+
+impl Placement {
+    /// Every policy, in sweep order.
+    pub const ALL: [Placement; 3] = [
+        Placement::RoundRobin,
+        Placement::LeastLoaded,
+        Placement::NetworkAffinity,
+    ];
+
+    /// Stable label for tables/CSV (also the canonical parse spelling).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Placement::RoundRobin => "round-robin",
+            Placement::LeastLoaded => "least-loaded",
+            Placement::NetworkAffinity => "affinity",
+        }
+    }
+
+    /// Parse a CLI spec (canonical labels plus short aliases).
+    pub fn parse(spec: &str) -> anyhow::Result<Placement> {
+        match spec {
+            "round-robin" | "rr" => Ok(Placement::RoundRobin),
+            "least-loaded" | "ll" => Ok(Placement::LeastLoaded),
+            "affinity" | "network-affinity" => Ok(Placement::NetworkAffinity),
+            other => anyhow::bail!(
+                "unknown placement `{other}` (expected round-robin, least-loaded, affinity)"
+            ),
+        }
+    }
+
+    /// Pick the worker a request for `net` rides. `cursor` is the
+    /// server's round-robin position (advanced by the caller once per
+    /// consultation, whatever the policy). Deterministic: ties always
+    /// break toward the lowest worker id.
+    pub fn choose(&self, workers: &[VWorker], net: usize, cursor: usize) -> usize {
+        debug_assert!(!workers.is_empty());
+        match self {
+            Placement::RoundRobin => cursor % workers.len(),
+            Placement::LeastLoaded => {
+                least_loaded(workers, 0..workers.len()).expect("fleet is non-empty")
+            }
+            Placement::NetworkAffinity => {
+                least_loaded(workers, (0..workers.len()).filter(|&i| workers[i].holds(net)))
+                    .unwrap_or_else(|| {
+                        least_loaded(workers, 0..workers.len()).expect("fleet is non-empty")
+                    })
+            }
+        }
+    }
+}
+
+/// Least-loaded among `ids`: earliest `busy_until_s`, then fewest open
+/// members, then lowest id. `None` when `ids` is empty.
+fn least_loaded<I: Iterator<Item = usize>>(workers: &[VWorker], ids: I) -> Option<usize> {
+    ids.min_by(|&a, &b| {
+        let (wa, wb) = (&workers[a], &workers[b]);
+        wa.busy_until_s
+            .total_cmp(&wb.busy_until_s)
+            .then(wa.open_members().cmp(&wb.open_members()))
+            .then(a.cmp(&b))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::vworker::OpenBatch;
+
+    fn fleet(n: usize) -> Vec<VWorker> {
+        (0..n).map(VWorker::new).collect()
+    }
+
+    #[test]
+    fn labels_round_trip_through_parse() {
+        for p in Placement::ALL {
+            assert_eq!(Placement::parse(p.label()).unwrap(), p);
+        }
+        assert_eq!(Placement::parse("rr").unwrap(), Placement::RoundRobin);
+        assert_eq!(Placement::parse("ll").unwrap(), Placement::LeastLoaded);
+        assert_eq!(
+            Placement::parse("network-affinity").unwrap(),
+            Placement::NetworkAffinity
+        );
+        assert!(Placement::parse("random").is_err());
+        assert!(Placement::parse("").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_with_the_cursor() {
+        let w = fleet(3);
+        let picks: Vec<usize> = (0..6)
+            .map(|c| Placement::RoundRobin.choose(&w, 0, c))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_earliest_drain_then_fewest_open_then_id() {
+        let mut w = fleet(3);
+        w[0].busy_until_s = 2.0;
+        w[1].busy_until_s = 1.0;
+        w[2].busy_until_s = 1.0;
+        // 1 and 2 tie on busy; 2 has an open member, so 1 wins.
+        w[2].open = Some(OpenBatch {
+            net: 0,
+            first_arrival_s: 0.0,
+            deadline_s: 0.001,
+            members: vec![(0, 0.0)],
+        });
+        assert_eq!(Placement::LeastLoaded.choose(&w, 0, 99), 1);
+        // Full tie breaks to the lowest id.
+        let idle = fleet(4);
+        assert_eq!(Placement::LeastLoaded.choose(&idle, 0, 99), 0);
+    }
+
+    #[test]
+    fn affinity_routes_to_the_holding_worker_despite_load() {
+        let mut w = fleet(3);
+        w[2].loaded = Some(5);
+        w[2].busy_until_s = 10.0; // busiest, but holds the weights
+        assert_eq!(Placement::NetworkAffinity.choose(&w, 5, 0), 2);
+        // No holder: fall back to least-loaded (all idle → id 0).
+        assert_eq!(Placement::NetworkAffinity.choose(&w, 6, 0), 0);
+        // Two holders: least-loaded among them.
+        w[1].loaded = Some(5);
+        assert_eq!(
+            Placement::NetworkAffinity.choose(&w, 5, 0),
+            1,
+            "worker 1 holds net 5 and drains before worker 2"
+        );
+    }
+
+    #[test]
+    fn one_worker_makes_every_policy_identical() {
+        let mut w = fleet(1);
+        w[0].busy_until_s = 7.0;
+        w[0].loaded = Some(1);
+        for p in Placement::ALL {
+            for cursor in 0..4 {
+                assert_eq!(p.choose(&w, 0, cursor), 0);
+            }
+        }
+    }
+}

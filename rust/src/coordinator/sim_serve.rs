@@ -1,41 +1,53 @@
-//! Engine-backed simulated serving: admission control + a virtual-time
-//! worker that charges pipeline makespans instead of PJRT executions.
+//! Engine-backed simulated serving: admission control + a fleet of
+//! virtual-time workers that charge pipeline makespans instead of PJRT
+//! executions.
 //!
 //! The paper's throughput/energy wins hinge on weight reuse across batched
 //! requests (§II-C): every batch pays the compact chip's per-part weight
 //! reloads once, so serving throughput depends on how well the coordinator
-//! coalesces same-network requests and how often the scheduled network
-//! switches. This module prices those decisions from the long-lived,
-//! `Sync`-shared [`Engine`]'s cached plans — the admission controller
-//! quotes each request an exact-or-pessimistic completion time and only
-//! accepts it when the quote fits the SLO, so **an accepted request never
-//! misses the SLO by construction** (asserted in `tests/serve_props.rs`).
+//! coalesces same-network requests and how often each worker's scheduled
+//! network switches. This module prices those decisions from the
+//! long-lived, `Sync`-shared [`Engine`]'s cached plans — the admission
+//! controller quotes each request an exact-or-pessimistic completion time
+//! and only accepts it when the quote fits the SLO, so **an accepted
+//! request never misses the SLO by construction** (asserted in
+//! `tests/serve_props.rs`).
 //!
 //! Model, in one page:
 //!
 //! * Time is virtual (seconds from trace start). Requests arrive in
 //!   non-decreasing arrival order; nothing sleeps.
-//! * One simulated worker executes batches FIFO. A batch of `k` requests
-//!   for network `net` costs the engine's pipeline makespan for
-//!   `(design, net, k)` — the same number `explore::batch_opt` prices —
-//!   plus a weight-reload penalty (streaming `net.weight_bytes()` over the
-//!   DRAM channel) whenever the scheduled network differs from the one
-//!   currently loaded.
-//! * At most one batch is *open* at a time. A request for the open batch's
-//!   network joins it (a **coalesce**) when the grown batch still meets
-//!   the SLO for the batch's *earliest* member — the binding one. Any
-//!   other admissible request closes the open batch and opens a fresh one.
+//! * The fleet is `cfg.workers` independent [`VWorker`]s. Each worker
+//!   executes its own batches FIFO, keeps its own loaded network and its
+//!   own open batch. A batch of `k` requests for network `net` costs the
+//!   engine's pipeline makespan for `(design, net, k)` — the same number
+//!   `explore::batch_opt` prices — plus a weight-reload penalty
+//!   (streaming `net.weight_bytes()` over the DRAM channel) whenever the
+//!   *executing worker's* loaded network differs from the batch's.
+//! * On every admit a [`Placement`] policy picks exactly one worker; the
+//!   single-worker admission logic then runs against that worker's state
+//!   alone. Routing to a worker already holding the request's weights
+//!   (`NetworkAffinity`) is what turns reload-avoidance into a placement
+//!   problem once `workers > 1`.
+//! * Each worker has at most one *open* batch. A request placed on a
+//!   worker whose open batch matches its network joins it (a
+//!   **coalesce**) when the grown batch still meets the SLO for the
+//!   batch's *earliest* member — the binding one. Any other admissible
+//!   request closes that worker's open batch and opens a fresh one there.
 //!   Rejections leave the scheduler state completely untouched.
-//! * The open batch closes the moment it fills to the per-network batch
-//!   cap, when an accepted request needs a fresh batch, or when its
-//!   linger deadline (`first_arrival + max_wait_s`) passes. Quotes
-//!   assume the worst feasible close time (the deadline — or the arrival
-//!   itself when the request fills the batch), so a batch can only
-//!   finish at or before what was quoted.
+//! * An open batch closes the moment it fills to the per-network batch
+//!   cap, when an accepted request opens a fresh batch on its worker, or
+//!   when its linger deadline (`first_arrival + max_wait_s`) passes.
+//!   Quotes assume the worst feasible close time (the deadline — or the
+//!   arrival itself when the request fills the batch), so a batch can
+//!   only finish at or before what was quoted. The quote argument is
+//!   per-worker: between a quote and the quoted batch, only that worker's
+//!   own open batch can execute on it, so `busy_until` and `loaded` are
+//!   exact at quote time — exactly the single-worker invariant, per slot.
 //! * The per-network batch cap is `batch_opt`-tuned: the largest batch
 //!   whose full-batch latency fits the SLO (capped by `max_batch`). A
 //!   network where even batch 1 misses the SLO has cap 0 — every request
-//!   for it is rejected up front.
+//!   for it is rejected up front, before placement is consulted.
 
 use std::collections::HashMap;
 
@@ -44,6 +56,9 @@ use anyhow::Result;
 use crate::explore::batch_opt::max_batch_for_latency;
 use crate::nn::Network;
 use crate::sim::engine::{Design, Engine};
+
+use super::placement::Placement;
+use super::vworker::{OpenBatch, VWorker, WorkerStats};
 
 /// One simulated inference request: `net` indexes the network slice the
 /// [`SimServer`] was built over; `arrival_s` is virtual seconds from
@@ -60,7 +75,7 @@ pub struct SimRequest {
 pub enum Verdict {
     /// Opened a fresh batch (its first member).
     Accepted,
-    /// Joined the already-open batch for its network.
+    /// Joined the already-open batch for its network on the placed worker.
     Coalesced,
     /// Quoted completion missed the SLO; scheduler state unchanged.
     Rejected,
@@ -81,6 +96,11 @@ pub struct SimServeConfig {
     /// When false, every request is accepted (no SLO gate) — the
     /// baseline that shows what admission control buys.
     pub admission: bool,
+    /// Virtual workers in the fleet (default 1 — the pre-fleet model).
+    pub workers: usize,
+    /// Which worker each admitted request rides (default round-robin;
+    /// irrelevant at `workers = 1`, where every policy picks worker 0).
+    pub placement: Placement,
 }
 
 impl Default for SimServeConfig {
@@ -91,6 +111,8 @@ impl Default for SimServeConfig {
             max_batch: 64,
             max_wait_s: 0.002,
             admission: true,
+            workers: 1,
+            placement: Placement::RoundRobin,
         }
     }
 }
@@ -100,6 +122,8 @@ impl Default for SimServeConfig {
 pub struct Completion {
     pub id: u64,
     pub net: usize,
+    /// Worker that executed the request's batch.
+    pub worker: usize,
     pub arrival_s: f64,
     pub completion_s: f64,
 }
@@ -123,8 +147,8 @@ pub struct NetStats {
     pub rejected: u64,
     pub completed: u64,
     pub batches: u64,
-    /// Batches that had to stream this network's weights because a
-    /// different network (or none) was loaded when they executed.
+    /// Batches that had to stream this network's weights because the
+    /// executing worker held a different network (or none).
     pub reloads: u64,
     /// Completions within the SLO (== `completed` under admission).
     pub within_slo: u64,
@@ -161,15 +185,19 @@ impl NetStats {
     }
 }
 
-/// End-of-trace report: per-network rows plus trace-wide aggregates.
+/// End-of-trace report: per-network rows, per-worker rows, and trace-wide
+/// aggregates.
 #[derive(Debug, Clone)]
 pub struct SimServeReport {
     pub per_net: Vec<NetStats>,
-    /// Virtual makespan: when the worker went idle after the last batch.
+    /// Per-worker counters, index-aligned with worker ids.
+    pub per_worker: Vec<WorkerStats>,
+    /// Virtual fleet makespan: when the *last* worker went idle.
     pub span_s: f64,
     /// Engine plan computations this replay caused (cache misses while it
-    /// ran). A fresh engine pays exactly one per distinct network; a warm
-    /// one pays zero — the cross-trace cache reuse the ROADMAP targets.
+    /// ran). A fresh engine pays exactly one per distinct network —
+    /// independent of worker count and placement policy — and a warm one
+    /// pays zero: the cross-trace cache reuse the ROADMAP targets.
     pub plans_computed: u64,
     pub completions: Vec<Completion>,
 }
@@ -207,6 +235,22 @@ impl SimServeReport {
         self.total(|n| n.reloads)
     }
 
+    /// Fleet size the replay ran with.
+    pub fn workers(&self) -> usize {
+        self.per_worker.len()
+    }
+
+    /// Mean worker utilization: total busy seconds over `workers × span`.
+    /// 1.0 means every worker computed for the whole virtual span.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.span_s <= 0.0 || self.per_worker.is_empty() {
+            0.0
+        } else {
+            self.per_worker.iter().map(|w| w.busy_s).sum::<f64>()
+                / (self.span_s * self.per_worker.len() as f64)
+        }
+    }
+
     /// Trace-wide SLO attainment over *offered* requests.
     pub fn slo_attainment(&self) -> f64 {
         let offered = self.offered();
@@ -227,32 +271,26 @@ impl SimServeReport {
     }
 }
 
-struct OpenBatch {
-    net: usize,
-    first_arrival_s: f64,
-    /// Worst-case close time: `first_arrival_s + max_wait_s`. Quotes use
-    /// it; an earlier close (full batch / fresh batch) only helps.
-    deadline_s: f64,
-    members: Vec<(u64, f64)>,
-}
-
 /// The simulated serving coordinator. Borrows a shared [`Engine`]; all
 /// pricing flows through its plan cache, so a server over K networks costs
-/// K plan computations however long the trace is (pinned in
-/// `benches/hotpath.rs` and `tests/serve_sim.rs`).
+/// K plan computations — for any fleet size — however long the trace is
+/// (pinned in `benches/hotpath.rs` and `tests/serve_sim.rs`).
 pub struct SimServer<'e> {
     engine: &'e Engine,
     nets: Vec<Network>,
     cfg: SimServeConfig,
     /// Per-network batch cap: largest batch whose full-batch latency fits
-    /// the SLO, 0 if even batch 1 misses it (`batch_opt`-tuned).
+    /// the SLO, 0 if even batch 1 misses it (`batch_opt`-tuned). Caps are
+    /// per worker: each worker's batches are bounded independently, so
+    /// quotes stay upper bounds per slot.
     caps: Vec<u32>,
     /// Per-network weight-reload penalty, seconds.
     switch_s: Vec<f64>,
+    /// Fleet-shared makespan memo (the engine's plan cache sits below it).
     makespans: HashMap<(usize, u32), f64>,
-    busy_until_s: f64,
-    loaded: Option<usize>,
-    open: Option<OpenBatch>,
+    workers: Vec<VWorker>,
+    /// Round-robin position, advanced once per placement consultation.
+    rr_cursor: usize,
     last_arrival_s: f64,
     stats: Vec<NetStats>,
     completions: Vec<Completion>,
@@ -261,14 +299,15 @@ pub struct SimServer<'e> {
 
 impl<'e> SimServer<'e> {
     /// Build a server over `nets`. Tunes per-network batch caps through
-    /// the engine (warming its plan cache: one plan per distinct network)
-    /// and prices weight reloads as streaming each network's weights over
-    /// the engine's DRAM channel.
+    /// the engine (warming its plan cache: one plan per distinct network,
+    /// shared by every worker) and prices weight reloads as streaming each
+    /// network's weights over the engine's DRAM channel.
     pub fn new(engine: &'e Engine, nets: &[Network], cfg: SimServeConfig) -> Result<Self> {
         anyhow::ensure!(!nets.is_empty(), "sim_serve needs at least one network");
         anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
         anyhow::ensure!(cfg.slo_s > 0.0, "slo must be positive");
         anyhow::ensure!(cfg.max_wait_s >= 0.0, "max_wait must be non-negative");
+        anyhow::ensure!(cfg.workers >= 1, "the fleet needs at least one worker");
         let misses_at_start = engine.cache_stats().misses;
         let mut caps = Vec::with_capacity(nets.len());
         for net in nets {
@@ -300,9 +339,8 @@ impl<'e> SimServer<'e> {
             caps,
             switch_s,
             makespans: HashMap::new(),
-            busy_until_s: 0.0,
-            loaded: None,
-            open: None,
+            workers: (0..cfg.workers).map(VWorker::new).collect(),
+            rr_cursor: 0,
             last_arrival_s: 0.0,
             stats,
             completions: Vec::new(),
@@ -317,7 +355,8 @@ impl<'e> SimServer<'e> {
     }
 
     /// Full-batch pipeline makespan for `k` requests of network `net`,
-    /// memoized locally; the engine supplies the cached plan.
+    /// memoized locally and shared by the whole fleet; the engine supplies
+    /// the cached plan.
     fn makespan_s(&mut self, net: usize, k: u32) -> Result<f64> {
         if let Some(&m) = self.makespans.get(&(net, k)) {
             return Ok(m);
@@ -330,36 +369,54 @@ impl<'e> SimServer<'e> {
         Ok(m)
     }
 
-    /// Completion time if a batch of `k` requests for `net` becomes ready
-    /// at `ready_s`: the worker must drain (`busy_until_s`), reload
-    /// weights if a different network is loaded, then run the pipeline.
-    /// With at most one open batch, nothing can execute between now and
-    /// that batch, so `busy_until_s` and `loaded` are exact at quote time.
-    fn exec_completion_s(&mut self, net: usize, k: u32, ready_s: f64) -> Result<f64> {
-        let start = self.busy_until_s.max(ready_s);
-        let switch = if self.loaded == Some(net) {
-            0.0
-        } else {
-            self.switch_s[net]
-        };
-        Ok(start + switch + self.makespan_s(net, k)?)
+    /// Price a batch of `k` requests for `net` becoming ready at
+    /// `ready_s` on worker `w`: that worker must drain (`busy_until_s`),
+    /// reload weights if it holds a different network, then run the
+    /// pipeline. Returns `(start, reloaded, completion)` — the single
+    /// source of truth both quoting and execution use, so the realized
+    /// accounting can never diverge from the quoted completion. With at
+    /// most one open batch per worker, nothing else can execute on `w`
+    /// between now and that batch, so its `busy_until_s` and `loaded`
+    /// are exact at quote time.
+    fn price(&mut self, w: usize, net: usize, k: u32, ready_s: f64) -> Result<(f64, bool, f64)> {
+        let makespan = self.makespan_s(net, k)?;
+        let wk = &self.workers[w];
+        let start = wk.busy_until_s.max(ready_s);
+        let reloaded = wk.loaded != Some(net);
+        let switch = if reloaded { self.switch_s[net] } else { 0.0 };
+        Ok((start, reloaded, start + switch + makespan))
     }
 
-    /// Close a batch: execute it on the virtual worker at
-    /// `max(busy_until, ready)`, charging a weight reload on a network
-    /// switch, and record every member's completion.
-    fn flush(&mut self, batch: OpenBatch, ready_s: f64) -> Result<()> {
+    /// Quoted completion time alone (see [`Self::price`]).
+    fn exec_completion_s(&mut self, w: usize, net: usize, k: u32, ready_s: f64) -> Result<f64> {
+        Ok(self.price(w, net, k, ready_s)?.2)
+    }
+
+    /// Close a batch on worker `w`: execute it at `max(busy_until,
+    /// ready)`, charging a weight reload on a network switch, and record
+    /// every member's completion.
+    fn flush(&mut self, w: usize, batch: OpenBatch, ready_s: f64) -> Result<()> {
         let k = batch.members.len() as u32;
-        let done = self.exec_completion_s(batch.net, k, ready_s)?;
+        let (start, reloaded, done) = self.price(w, batch.net, k, ready_s)?;
+        let wk = &mut self.workers[w];
+        wk.batches += 1;
+        wk.completed += batch.members.len() as u64;
+        if reloaded {
+            wk.reloads += 1;
+        }
+        wk.busy_s += done - start;
+        wk.busy_until_s = done;
+        wk.loaded = Some(batch.net);
         let s = &mut self.stats[batch.net];
         s.batches += 1;
-        if self.loaded != Some(batch.net) {
+        if reloaded {
             s.reloads += 1;
         }
         for &(id, arrival_s) in &batch.members {
             let c = Completion {
                 id,
                 net: batch.net,
+                worker: w,
                 arrival_s,
                 completion_s: done,
             };
@@ -370,18 +427,19 @@ impl<'e> SimServer<'e> {
             }
             self.completions.push(c);
         }
-        self.busy_until_s = done;
-        self.loaded = Some(batch.net);
         Ok(())
     }
 
-    /// Flush the open batch if its linger deadline has passed by `now_s`.
+    /// Flush every worker's open batch whose linger deadline has passed
+    /// by `now_s` (worker-id order, for determinism).
     fn flush_due(&mut self, now_s: f64) -> Result<()> {
-        let due = matches!(&self.open, Some(b) if now_s >= b.deadline_s);
-        if due {
-            let b = self.open.take().expect("due batch exists");
-            let ready = b.deadline_s;
-            self.flush(b, ready)?;
+        for w in 0..self.workers.len() {
+            let due = matches!(&self.workers[w].open, Some(b) if now_s >= b.deadline_s);
+            if due {
+                let b = self.workers[w].open.take().expect("due batch exists");
+                let ready = b.deadline_s;
+                self.flush(w, b, ready)?;
+            }
         }
         Ok(())
     }
@@ -414,10 +472,20 @@ impl<'e> SimServer<'e> {
             return Ok(Verdict::Rejected);
         }
 
-        // Try to coalesce into the open batch. The grown batch's makespan
-        // applies to every member; the earliest arrival is the binding
-        // SLO check (later members wait strictly less).
-        let join = match &self.open {
+        // Placement: exactly one worker per offered request. The cursor
+        // advances per consultation whatever the policy, so round-robin
+        // cycles over offers (including quote-rejections, whose state is
+        // otherwise untouched).
+        let w = self
+            .cfg
+            .placement
+            .choose(&self.workers, req.net, self.rr_cursor);
+        self.rr_cursor = (self.rr_cursor + 1) % self.workers.len();
+
+        // Try to coalesce into the placed worker's open batch. The grown
+        // batch's makespan applies to every member; the earliest arrival
+        // is the binding SLO check (later members wait strictly less).
+        let join = match &self.workers[w].open {
             Some(b) if b.net == req.net && (b.members.len() as u32) < cap => {
                 Some((b.members.len() as u32, b.deadline_s, b.first_arrival_s))
             }
@@ -428,16 +496,19 @@ impl<'e> SimServer<'e> {
             // (ready = t); otherwise it may linger to its deadline.
             let fills = len + 1 >= cap;
             let ready = if fills { t } else { deadline_s };
-            let quote = self.exec_completion_s(req.net, len + 1, ready)?;
+            let quote = self.exec_completion_s(w, req.net, len + 1, ready)?;
             if !self.cfg.admission || quote - first_arrival_s <= self.cfg.slo_s {
-                let b = self.open.as_mut().expect("join checked the open batch");
+                let b = self.workers[w]
+                    .open
+                    .as_mut()
+                    .expect("join checked the open batch");
                 b.members.push((req.id, t));
                 let s = &mut self.stats[req.net];
                 s.accepted += 1;
                 s.coalesced += 1;
                 if fills {
-                    let b = self.open.take().expect("full batch is open");
-                    self.flush(b, t)?;
+                    let b = self.workers[w].open.take().expect("full batch is open");
+                    self.flush(w, b, t)?;
                 }
                 return Ok(Verdict::Coalesced);
             }
@@ -445,16 +516,19 @@ impl<'e> SimServer<'e> {
             // fall through and quote a fresh batch instead.
         }
 
-        // Fresh batch: the open batch (if any) would close now, execute
-        // first, and this request would open the next one. Quote that
-        // pessimistically (linger until its own deadline) and only mutate
-        // state when the request is actually admitted — rejections must
-        // leave the scheduler untouched.
+        // Fresh batch on worker `w`: its open batch (if any) would close
+        // now, execute first, and this request would open the next one.
+        // Quote that pessimistically (linger until its own deadline) and
+        // only mutate state when the request is actually admitted —
+        // rejections must leave the scheduler untouched.
         if self.cfg.admission {
-            let prior = self.open.as_ref().map(|b| (b.net, b.members.len() as u32));
+            let prior = self.workers[w]
+                .open
+                .as_ref()
+                .map(|b| (b.net, b.members.len() as u32));
             let (loaded_then, busy_then) = match prior {
-                Some((net, k)) => (Some(net), self.exec_completion_s(net, k, t)?),
-                None => (self.loaded, self.busy_until_s),
+                Some((net, k)) => (Some(net), self.exec_completion_s(w, net, k, t)?),
+                None => (self.workers[w].loaded, self.workers[w].busy_until_s),
             };
             let switch = if loaded_then == Some(req.net) {
                 0.0
@@ -471,10 +545,10 @@ impl<'e> SimServer<'e> {
             }
         }
 
-        if let Some(b) = self.open.take() {
-            self.flush(b, t)?;
+        if let Some(b) = self.workers[w].open.take() {
+            self.flush(w, b, t)?;
         }
-        self.open = Some(OpenBatch {
+        self.workers[w].open = Some(OpenBatch {
             net: req.net,
             first_arrival_s: t,
             deadline_s: t + self.cfg.max_wait_s,
@@ -482,22 +556,30 @@ impl<'e> SimServer<'e> {
         });
         self.stats[req.net].accepted += 1;
         if cap == 1 {
-            let b = self.open.take().expect("batch opened above");
-            self.flush(b, t)?;
+            let b = self.workers[w].open.take().expect("batch opened above");
+            self.flush(w, b, t)?;
         }
         Ok(Verdict::Accepted)
     }
 
-    /// End of trace: close the open batch (at its linger deadline, as
-    /// quoted) and return the report.
+    /// End of trace: close every worker's open batch (at its linger
+    /// deadline, as quoted; worker-id order) and return the report.
     pub fn finish(mut self) -> Result<SimServeReport> {
-        if let Some(b) = self.open.take() {
-            let ready = b.deadline_s;
-            self.flush(b, ready)?;
+        for w in 0..self.workers.len() {
+            if let Some(b) = self.workers[w].open.take() {
+                let ready = b.deadline_s;
+                self.flush(w, b, ready)?;
+            }
         }
+        let span_s = self
+            .workers
+            .iter()
+            .map(|w| w.busy_until_s)
+            .fold(0.0, f64::max);
         Ok(SimServeReport {
             per_net: self.stats,
-            span_s: self.busy_until_s,
+            per_worker: self.workers.iter().map(VWorker::stats).collect(),
+            span_s,
             plans_computed: self.engine.cache_stats().misses - self.misses_at_start,
             completions: self.completions,
         })
@@ -716,6 +798,11 @@ mod tests {
             })
             .is_err());
         assert!(SimServer::new(&eng, &[], SimServeConfig::default()).is_err());
+        let zero_workers = SimServeConfig {
+            workers: 0,
+            ..SimServeConfig::default()
+        };
+        assert!(SimServer::new(&eng, &nets, zero_workers).is_err());
     }
 
     #[test]
@@ -743,5 +830,121 @@ mod tests {
         let r = sv.finish().unwrap();
         assert_eq!(r.plans_computed, 2, "one plan per distinct network");
         assert_eq!(eng.cache_stats().misses, 2);
+    }
+
+    #[test]
+    fn round_robin_fragments_a_homogeneous_burst_across_the_fleet() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            workers: 2,
+            placement: Placement::RoundRobin,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        run(&mut sv, &reqs(&[(0, 0.0), (0, 0.0), (0, 0.0), (0, 0.0)]));
+        let r = sv.finish().unwrap();
+        assert_eq!(r.workers(), 2);
+        assert_eq!(r.batches(), 4);
+        // Both workers streamed the weights once: one reload per worker.
+        assert_eq!(r.reloads(), 2);
+        assert_eq!(r.per_worker[0].batches, 2);
+        assert_eq!(r.per_worker[1].batches, 2);
+        assert_eq!(r.per_worker[0].reloads, 1);
+        assert_eq!(r.per_worker[1].reloads, 1);
+        let completed: u64 = r.per_worker.iter().map(|w| w.completed).sum();
+        assert_eq!(completed, r.completed());
+    }
+
+    #[test]
+    fn affinity_keeps_a_homogeneous_burst_on_one_hot_worker() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            workers: 3,
+            placement: Placement::NetworkAffinity,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        run(&mut sv, &reqs(&[(0, 0.0), (0, 0.0), (0, 0.0), (0, 0.0)]));
+        let r = sv.finish().unwrap();
+        assert_eq!(r.batches(), 4);
+        assert_eq!(r.reloads(), 1, "the fleet loads the weights exactly once");
+        assert_eq!(r.per_worker[0].batches, 4, "everything rides the hot worker");
+        assert_eq!(r.per_worker[1].batches, 0);
+        assert_eq!(r.per_worker[2].batches, 0);
+    }
+
+    #[test]
+    fn least_loaded_balances_batches_and_busy_time() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            workers: 2,
+            placement: Placement::LeastLoaded,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        run(&mut sv, &reqs(&[(0, 0.0), (0, 0.0), (0, 0.0), (0, 0.0)]));
+        let r = sv.finish().unwrap();
+        assert_eq!(r.per_worker[0].batches, 2);
+        assert_eq!(r.per_worker[1].batches, 2);
+        for w in &r.per_worker {
+            assert!(w.busy_s > 0.0);
+            assert!(w.busy_s <= r.span_s + 1e-12);
+            assert!(w.utilization(r.span_s) > 0.0);
+        }
+        // Two workers halve the span of four serial batch-1 executions:
+        // the fleet finishes strictly earlier than one worker would.
+        let solo_cfg = SimServeConfig {
+            workers: 1,
+            ..cfg
+        };
+        let eng2 = engine();
+        let mut solo = SimServer::new(&eng2, &nets, solo_cfg).unwrap();
+        run(&mut solo, &reqs(&[(0, 0.0), (0, 0.0), (0, 0.0), (0, 0.0)]));
+        let rs = solo.finish().unwrap();
+        assert!(
+            r.span_s < rs.span_s,
+            "fleet span {} not below solo span {}",
+            r.span_s,
+            rs.span_s
+        );
+    }
+
+    #[test]
+    fn every_policy_is_bitwise_identical_at_one_worker() {
+        let nets = [
+            zoo::by_name("mobilenetv1", 100).unwrap(),
+            zoo::by_name("vgg11", 100).unwrap(),
+        ];
+        let trace = reqs(&[(0, 0.0), (1, 0.0), (0, 0.001), (1, 0.002), (0, 0.002)]);
+        let mut spans = Vec::new();
+        for placement in Placement::ALL {
+            let eng = engine();
+            let cfg = SimServeConfig {
+                slo_s: 1e6,
+                max_batch: 4,
+                max_wait_s: 0.001,
+                workers: 1,
+                placement,
+                ..SimServeConfig::default()
+            };
+            let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+            run(&mut sv, &trace);
+            let r = sv.finish().unwrap();
+            spans.push((r.span_s.to_bits(), r.batches(), r.reloads(), r.coalesced()));
+        }
+        assert_eq!(spans[0], spans[1]);
+        assert_eq!(spans[0], spans[2]);
     }
 }

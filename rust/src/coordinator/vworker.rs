@@ -1,0 +1,156 @@
+//! Virtual-worker state for the simulated serving fleet.
+//!
+//! A [`VWorker`] is one simulated execution slot: it remembers when it
+//! drains (`busy_until_s`), which network's weights it currently holds
+//! (`loaded`), its single open batch, and its own reload/utilization
+//! accounting. The fleet-level scheduler ([`SimServer`]) owns the pricing
+//! (cached-plan makespans, reload penalties) and consults a
+//! [`Placement`] policy to pick which worker a request rides; the worker
+//! itself is pure state, so the accepted-never-misses-SLO argument stays
+//! per-worker: only this worker's own open batch can execute on it
+//! between a quote and the quoted batch, exactly as in the single-worker
+//! model.
+//!
+//! [`SimServer`]: crate::coordinator::sim_serve::SimServer
+//! [`Placement`]: crate::coordinator::placement::Placement
+
+/// One not-yet-executed batch on a worker. At most one per worker.
+#[derive(Debug, Clone)]
+pub struct OpenBatch {
+    /// Network index (into the server's network slice).
+    pub net: usize,
+    /// Arrival of the batch's first member — the binding SLO check.
+    pub first_arrival_s: f64,
+    /// Worst-case close time: `first_arrival_s + max_wait_s`. Quotes use
+    /// it; an earlier close (full batch / fresh opener) only helps.
+    pub deadline_s: f64,
+    /// `(request id, arrival_s)` per member.
+    pub members: Vec<(u64, f64)>,
+}
+
+/// End-of-trace counters for one worker (reported next to the per-network
+/// rows; `utilization` is busy time over the *fleet* span).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub id: usize,
+    pub batches: u64,
+    pub completed: u64,
+    /// Batches that had to stream weights because a different network (or
+    /// none) was loaded on this worker when they executed.
+    pub reloads: u64,
+    /// Seconds spent executing (reload + pipeline), excluding idle gaps.
+    pub busy_s: f64,
+    /// When this worker went idle after its last batch.
+    pub idle_at_s: f64,
+}
+
+impl WorkerStats {
+    /// Busy fraction of the fleet's virtual span.
+    pub fn utilization(&self, fleet_span_s: f64) -> f64 {
+        if fleet_span_s <= 0.0 {
+            0.0
+        } else {
+            self.busy_s / fleet_span_s
+        }
+    }
+}
+
+/// One virtual worker: FIFO over its own batches, one open batch at a
+/// time, weights stay loaded until a different network executes.
+#[derive(Debug)]
+pub struct VWorker {
+    pub id: usize,
+    /// When the worker drains everything already executed on it.
+    pub busy_until_s: f64,
+    /// Network whose weights are resident (None before the first batch).
+    pub loaded: Option<usize>,
+    /// The worker's single open (not yet executed) batch.
+    pub open: Option<OpenBatch>,
+    pub batches: u64,
+    pub completed: u64,
+    pub reloads: u64,
+    pub busy_s: f64,
+}
+
+impl VWorker {
+    pub fn new(id: usize) -> Self {
+        VWorker {
+            id,
+            busy_until_s: 0.0,
+            loaded: None,
+            open: None,
+            batches: 0,
+            completed: 0,
+            reloads: 0,
+            busy_s: 0.0,
+        }
+    }
+
+    /// Members in the open batch (0 when none is open).
+    pub fn open_members(&self) -> usize {
+        self.open.as_ref().map_or(0, |b| b.members.len())
+    }
+
+    /// Whether routing a request for `net` here avoids a weight reload:
+    /// the weights are resident, or the open batch (which will load them)
+    /// is for the same network.
+    pub fn holds(&self, net: usize) -> bool {
+        self.loaded == Some(net) || self.open.as_ref().is_some_and(|b| b.net == net)
+    }
+
+    /// Snapshot the end-of-trace counters.
+    pub fn stats(&self) -> WorkerStats {
+        WorkerStats {
+            id: self.id,
+            batches: self.batches,
+            completed: self.completed,
+            reloads: self.reloads,
+            busy_s: self.busy_s,
+            idle_at_s: self.busy_until_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_workers_are_idle_and_hold_nothing() {
+        let w = VWorker::new(3);
+        assert_eq!(w.id, 3);
+        assert_eq!(w.busy_until_s, 0.0);
+        assert_eq!(w.open_members(), 0);
+        assert!(!w.holds(0));
+        let s = w.stats();
+        assert_eq!((s.batches, s.reloads, s.completed), (0, 0, 0));
+        assert_eq!(s.utilization(1.0), 0.0);
+    }
+
+    #[test]
+    fn holds_covers_loaded_weights_and_the_open_batch() {
+        let mut w = VWorker::new(0);
+        w.loaded = Some(2);
+        assert!(w.holds(2));
+        assert!(!w.holds(1));
+        w.open = Some(OpenBatch {
+            net: 1,
+            first_arrival_s: 0.0,
+            deadline_s: 0.001,
+            members: vec![(7, 0.0)],
+        });
+        assert!(w.holds(1), "the open batch will load net 1's weights");
+        assert!(w.holds(2), "net 2 is still resident until a flush");
+        assert_eq!(w.open_members(), 1);
+    }
+
+    #[test]
+    fn utilization_is_busy_over_fleet_span() {
+        let s = WorkerStats {
+            busy_s: 0.25,
+            ..WorkerStats::default()
+        };
+        assert_eq!(s.utilization(1.0), 0.25);
+        assert_eq!(s.utilization(0.0), 0.0);
+    }
+}

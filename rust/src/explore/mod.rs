@@ -23,4 +23,7 @@ pub use design_sweep::{design_sweep, mark_pareto, HwDesignPoint};
 pub use nn_sweep::{
     ddm_row, fig8_sweep, max_deployable, paper_networks, zoo_sweep, Floor, EXPLORE_BATCH,
 };
-pub use trace::{gen_trace, mixed_trace, replay, slo_sweep};
+pub use trace::{
+    gen_trace, gen_trace_mix, mixed_trace, mixed_trace_mix, placement_sweep, replay, slo_sweep,
+    PlacementPoint, DEFAULT_NUM_CLASSES,
+};

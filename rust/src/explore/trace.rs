@@ -1,64 +1,140 @@
 //! Mixed-network serving traces: deterministic generation and replay
-//! through the Engine-backed admission controller.
+//! through the Engine-backed admission controller and worker fleet.
 //!
 //! This is the workload the one-shot figures cannot express: a stream of
 //! requests naming *different* zoo networks, where throughput depends on
-//! how the coordinator coalesces same-network batches and how often the
-//! scheduled network switches (each switch re-streams the network's
-//! weights — the §II-C reuse the paper's batching buys evaporates when
-//! traffic interleaves). Traces are generated from a seed and the
-//! [`Arrival`] processes the real load generator uses, so every replay is
-//! reproducible bit-for-bit, and replaying K distinct networks costs the
-//! shared engine exactly K plan computations however long the trace is.
+//! how the coordinator coalesces same-network batches and how often each
+//! worker's scheduled network switches (each switch re-streams the
+//! network's weights — the §II-C reuse the paper's batching buys
+//! evaporates when traffic interleaves). Traces are generated from a seed
+//! and the [`Arrival`] processes the real load generator uses — with an
+//! optional non-uniform network mix — so every replay is reproducible
+//! bit-for-bit, and replaying K distinct networks costs the shared engine
+//! exactly K plan computations however long the trace is and however many
+//! workers replay it ([`placement_sweep`]).
 
 use anyhow::Result;
 
 use crate::coordinator::loadgen::Arrival;
+use crate::coordinator::placement::Placement;
 use crate::coordinator::sim_serve::{SimRequest, SimServeConfig, SimServeReport, SimServer};
 use crate::nn::{zoo, Network};
 use crate::sim::engine::Engine;
 use crate::util::Rng;
 
+/// Classifier-head size the convenience wrappers resolve zoo names with
+/// (CIFAR-100, the paper's workload).
+pub const DEFAULT_NUM_CLASSES: u32 = 100;
+
 /// Deterministically generate `n` requests spread uniformly over
 /// `num_networks` networks under `arrival`, sorted by arrival time (the
 /// processes emit non-decreasing times by construction). Same seed, same
-/// trace — bit-for-bit.
+/// trace — bit-for-bit. Uniform shorthand for [`gen_trace_mix`]; the
+/// uniform path draws the network index directly (`Rng::index`), so
+/// pre-mix traces reproduce unchanged.
 pub fn gen_trace(num_networks: usize, n: usize, arrival: Arrival, seed: u64) -> Vec<SimRequest> {
+    gen_trace_mix(num_networks, None, n, arrival, seed)
+}
+
+/// [`gen_trace`] with an optional non-uniform network mix: `weights[i]`
+/// is the relative arrival weight of network `i` (they need not sum to 1;
+/// zero-weight networks never appear). `None` is the uniform default and
+/// reproduces [`gen_trace`] bit-for-bit.
+pub fn gen_trace_mix(
+    num_networks: usize,
+    weights: Option<&[f64]>,
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+) -> Vec<SimRequest> {
     assert!(num_networks > 0, "gen_trace needs at least one network");
+    let cum = weights.map(|w| {
+        assert_eq!(
+            w.len(),
+            num_networks,
+            "mix weights must cover every network: {} weights for {num_networks} networks",
+            w.len()
+        );
+        assert!(
+            w.iter().all(|&x| x.is_finite() && x >= 0.0),
+            "mix weights must be finite and non-negative: {w:?}"
+        );
+        let total: f64 = w.iter().sum();
+        assert!(total > 0.0, "mix weights must not all be zero");
+        let mut acc = 0.0;
+        let mut cum: Vec<f64> = w
+            .iter()
+            .map(|&x| {
+                acc += x / total;
+                acc
+            })
+            .collect();
+        // The last positive-weight bucket absorbs all rounding slack, so
+        // zero-weight networks are unreachable even when the cumulative
+        // sum lands below 1.0.
+        let last_positive = w
+            .iter()
+            .rposition(|&x| x > 0.0)
+            .expect("a positive weight exists: total > 0");
+        cum[last_positive] = f64::INFINITY;
+        cum
+    });
     let mut rng = Rng::new(seed);
     let mut t = 0.0f64;
     (0..n as u64)
         .map(|id| {
             t += arrival.delay_s(&mut rng);
-            SimRequest {
-                id,
-                net: rng.index(num_networks),
-                arrival_s: t,
-            }
+            let net = match &cum {
+                None => rng.index(num_networks),
+                Some(cum) => {
+                    let u = rng.f64();
+                    // First bucket whose cumulative edge exceeds the draw
+                    // (the last positive bucket's edge is +inf, so the
+                    // search always lands on a positive-weight network).
+                    cum.iter()
+                        .position(|&edge| u < edge)
+                        .expect("cumulative edges end at +inf")
+                }
+            };
+            SimRequest { id, net, arrival_s: t }
         })
         .collect()
 }
 
-/// Resolve zoo names and generate a mixed trace over them: the
-/// convenience entry the CLI and benches use.
+/// Resolve zoo names (CIFAR-100 heads) and generate a uniform mixed trace
+/// over them: the convenience entry the CLI and benches use.
 pub fn mixed_trace(
     names: &[&str],
     n: usize,
     arrival: Arrival,
     seed: u64,
 ) -> Result<(Vec<Network>, Vec<SimRequest>)> {
+    mixed_trace_mix(names, None, DEFAULT_NUM_CLASSES, n, arrival, seed)
+}
+
+/// [`mixed_trace`] with an explicit classifier-head size and an optional
+/// non-uniform arrival mix (`weights[i]` weighs `names[i]`; `None` is
+/// uniform).
+pub fn mixed_trace_mix(
+    names: &[&str],
+    weights: Option<&[f64]>,
+    num_classes: u32,
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+) -> Result<(Vec<Network>, Vec<SimRequest>)> {
     let nets = names
         .iter()
-        .map(|name| zoo::by_name(name, 100))
+        .map(|name| zoo::by_name(name, num_classes))
         .collect::<Result<Vec<_>>>()?;
-    let trace = gen_trace(nets.len(), n, arrival, seed);
+    let trace = gen_trace_mix(nets.len(), weights, n, arrival, seed);
     Ok((nets, trace))
 }
 
 /// Replay a trace through a fresh [`SimServer`] over `engine` and return
 /// the end-of-trace report. The engine outlives the replay, so a second
-/// replay (same or different trace over the same networks) pays zero
-/// additional plan computations.
+/// replay (same or different trace, fleet size, or placement policy over
+/// the same networks) pays zero additional plan computations.
 pub fn replay(
     engine: &Engine,
     nets: &[Network],
@@ -89,6 +165,46 @@ pub fn slo_sweep(
             Ok((slo_s, replay(engine, nets, trace, cfg)?))
         })
         .collect()
+}
+
+/// One cell of the placement grid: a full replay at `workers` × `placement`.
+#[derive(Debug, Clone)]
+pub struct PlacementPoint {
+    pub workers: usize,
+    pub placement: Placement,
+    pub report: SimServeReport,
+}
+
+/// Replay the same trace at every `worker_counts` × `policies` operating
+/// point (engine shared: the whole grid costs one plan per distinct
+/// network). This is the placement trade-off the single-worker model
+/// cannot express — weight reloads and throughput as the fleet grows,
+/// per policy. Rows come back in `worker_counts`-major, `policies`-minor
+/// order.
+pub fn placement_sweep(
+    engine: &Engine,
+    nets: &[Network],
+    trace: &[SimRequest],
+    base: SimServeConfig,
+    worker_counts: &[usize],
+    policies: &[Placement],
+) -> Result<Vec<PlacementPoint>> {
+    let mut rows = Vec::with_capacity(worker_counts.len() * policies.len());
+    for &workers in worker_counts {
+        for &placement in policies {
+            let cfg = SimServeConfig {
+                workers,
+                placement,
+                ..base
+            };
+            rows.push(PlacementPoint {
+                workers,
+                placement,
+                report: replay(engine, nets, trace, cfg)?,
+            });
+        }
+    }
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -124,12 +240,93 @@ mod tests {
     }
 
     #[test]
+    fn closed_loop_traces_are_deterministic_and_rate_capped() {
+        let arrival = Arrival::ClosedLoop {
+            clients: 16,
+            think_s: 0.008,
+        };
+        let a = gen_trace(2, 400, arrival, 13);
+        let b = gen_trace(2, 400, arrival, 13);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.net, y.net);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        // 16 clients / 8 ms think → 2000 req/s: 400 requests span ≈ 0.2 s.
+        let span = a.last().unwrap().arrival_s;
+        assert!((0.1..0.4).contains(&span), "span {span}");
+    }
+
+    #[test]
+    fn weighted_mix_is_deterministic_and_respects_the_weights() {
+        let w = [0.7, 0.3, 0.0];
+        let a = gen_trace_mix(3, Some(&w), 400, Arrival::Poisson(1000.0), 21);
+        let b = gen_trace_mix(3, Some(&w), 400, Arrival::Poisson(1000.0), 21);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.net, y.net);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+        let mut counts = [0usize; 3];
+        for r in &a {
+            counts[r.net] += 1;
+        }
+        assert_eq!(counts[2], 0, "zero-weight network must never appear");
+        assert_eq!(counts[0] + counts[1], 400);
+        // 70/30 split over 400 draws: net 0 clearly dominates.
+        assert!(
+            counts[0] > counts[1] + 40,
+            "70/30 mix not respected: {counts:?}"
+        );
+        // Arrivals are sorted regardless of the mix.
+        assert!(a.windows(2).all(|x| x[0].arrival_s <= x[1].arrival_s));
+    }
+
+    #[test]
+    fn uniform_mix_default_reproduces_gen_trace_bitwise() {
+        let plain = gen_trace(3, 64, Arrival::Poisson(1000.0), 5);
+        let via_mix = gen_trace_mix(3, None, 64, Arrival::Poisson(1000.0), 5);
+        for (x, y) in plain.iter().zip(&via_mix) {
+            assert_eq!(x.net, y.net);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mix weights must cover every network")]
+    fn short_weight_vectors_panic() {
+        gen_trace_mix(3, Some(&[1.0, 2.0]), 8, Arrival::Burst, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "mix weights must not all be zero")]
+    fn all_zero_weights_panic() {
+        gen_trace_mix(2, Some(&[0.0, 0.0]), 8, Arrival::Burst, 1);
+    }
+
+    #[test]
     fn mixed_trace_resolves_zoo_names() {
         let (nets, trace) = mixed_trace(&["mobilenetv1", "vgg11"], 8, Arrival::Burst, 3).unwrap();
         assert_eq!(nets.len(), 2);
         assert_eq!(nets[0].name, "mobilenetv1");
         assert_eq!(trace.len(), 8);
         assert!(mixed_trace(&["nope"], 8, Arrival::Burst, 3).is_err());
+    }
+
+    #[test]
+    fn mixed_trace_num_classes_defaults_to_cifar100_and_is_tunable() {
+        let (cifar100, _) = mixed_trace(&["vgg11"], 4, Arrival::Burst, 3).unwrap();
+        let (explicit, _) =
+            mixed_trace_mix(&["vgg11"], None, 100, 4, Arrival::Burst, 3).unwrap();
+        assert_eq!(
+            cifar100[0].total_weights(),
+            explicit[0].total_weights(),
+            "the convenience wrapper is the 100-class case"
+        );
+        let (cifar10, _) = mixed_trace_mix(&["vgg11"], None, 10, 4, Arrival::Burst, 3).unwrap();
+        assert!(
+            cifar10[0].total_weights() < cifar100[0].total_weights(),
+            "a smaller classifier head must shrink the network"
+        );
     }
 
     #[test]
@@ -150,5 +347,31 @@ mod tests {
         assert_eq!(engine.cache_stats().misses, 2);
         assert_eq!(rows[0].1.plans_computed, 2);
         assert_eq!(rows[1].1.plans_computed, 0, "later replays reuse plans");
+    }
+
+    #[test]
+    fn placement_sweep_covers_the_grid_on_one_plan_per_network() {
+        let engine = Engine::compact(presets::lpddr5());
+        let (nets, trace) =
+            mixed_trace(&["mobilenetv1", "vgg11"], 32, Arrival::Burst, 17).unwrap();
+        let base = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 8,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        };
+        let rows =
+            placement_sweep(&engine, &nets, &trace, base, &[1, 2], &Placement::ALL).unwrap();
+        assert_eq!(rows.len(), 2 * Placement::ALL.len());
+        for row in &rows {
+            assert_eq!(row.report.workers(), row.workers);
+            assert_eq!(row.report.accepted(), 32, "generous SLO accepts the burst");
+        }
+        // The whole grid shared one engine: one plan per network, total.
+        assert_eq!(engine.cache_stats().misses, nets.len() as u64);
+        // Grid order is workers-major, policy-minor.
+        assert_eq!(rows[0].workers, 1);
+        assert_eq!(rows[0].placement, Placement::RoundRobin);
+        assert_eq!(rows[Placement::ALL.len()].workers, 2);
     }
 }

@@ -36,9 +36,11 @@
 //!   mixed-network serving traces ([`explore::trace`]).
 //! * [`coordinator`] — the serving layer: request types, the dynamic
 //!   batcher, arrival processes, and [`coordinator::sim_serve`] — an
-//!   Engine-backed admission controller + virtual-time worker that prices
-//!   every request from cached plans, so the request path runs (and is
-//!   tested) without any accelerator present.
+//!   Engine-backed admission controller over a fleet of virtual-time
+//!   workers ([`coordinator::vworker`]) with pluggable
+//!   [`coordinator::placement`] policies, pricing every request from
+//!   cached plans, so the request path runs (and is tested) without any
+//!   accelerator present.
 //! * [`runtime`] + the coordinator's [`coordinator::server`] *(feature
 //!   `runtime`, on by default)* — the real serving path: a PJRT executor
 //!   for AOT-compiled XLA artifacts and a threaded request router, with

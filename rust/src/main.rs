@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use pimflow::cfg::{presets, Config, DramKind, PipelineCase};
 use pimflow::cli::{App, Command, Invocation, Opt, Parsed};
-use pimflow::coordinator::{Arrival, SimServeConfig};
+use pimflow::coordinator::{Arrival, Placement, SimServeConfig};
 #[cfg(feature = "runtime")]
 use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
 use pimflow::explore;
@@ -153,11 +153,27 @@ fn app() -> App {
                     Opt::value(
                         "trace",
                         Some("poisson:2000"),
-                        "arrival process (burst, uniform:<rate>, poisson:<rate>)",
+                        "arrival process (burst, uniform:<rate>, poisson:<rate>, closed:<clients>:<think_s>)",
+                    ),
+                    Opt::value(
+                        "mix",
+                        None,
+                        "per-network arrival weights, comma list matching --networks (default uniform)",
                     ),
                     Opt::value("slo", Some("50"), "latency SLO per request, ms"),
                     Opt::value("max-batch", Some("64"), "batch ceiling (per-network caps tune below it)"),
                     Opt::value("max-wait-ms", Some("2"), "batch linger before it closes"),
+                    Opt::value("workers", Some("1"), "virtual workers in the serving fleet"),
+                    Opt::value(
+                        "placement",
+                        Some("round-robin"),
+                        "worker placement policy (round-robin, least-loaded, affinity)",
+                    ),
+                    Opt::value(
+                        "sweep-workers",
+                        None,
+                        "comma list of worker counts: replay the placement grid (all policies) instead",
+                    ),
                     Opt::value("seed", Some("42"), "trace seed (same seed, same trace)"),
                     Opt::flag("no-admission", "accept everything (shows what admission buys)"),
                     dram_opt(),
@@ -491,18 +507,87 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
     let n = p.get_u32("requests")?.unwrap_or(256) as usize;
     let arrival = Arrival::parse(p.get_or("trace", "poisson:2000"))?;
     let seed = p.get_u64("seed")?.unwrap_or(42);
+    let mix: Option<Vec<f64>> = match p.get("mix") {
+        None => None,
+        Some(spec) => Some(
+            spec.split(',')
+                .map(|s| {
+                    s.trim().parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("--mix expects comma-separated numbers, got `{s}`")
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        ),
+    };
+    if let Some(m) = &mix {
+        anyhow::ensure!(
+            m.len() == nets.len(),
+            "--mix names {} weights but --networks resolves {} networks",
+            m.len(),
+            nets.len()
+        );
+        anyhow::ensure!(
+            m.iter().all(|&x| x.is_finite() && x >= 0.0),
+            "--mix weights must be finite and non-negative, got {m:?}"
+        );
+        anyhow::ensure!(
+            m.iter().sum::<f64>() > 0.0,
+            "--mix weights must not all be zero"
+        );
+    }
     let cfg = SimServeConfig {
         slo_s: p.get_f64("slo")?.unwrap_or(50.0) * 1e-3,
         max_batch: p.get_u32("max-batch")?.unwrap_or(64),
         max_wait_s: p.get_f64("max-wait-ms")?.unwrap_or(2.0) * 1e-3,
         admission: !p.flag("no-admission"),
+        workers: p.get_u32("workers")?.unwrap_or(1) as usize,
+        placement: Placement::parse(p.get_or("placement", "round-robin"))?,
         ..SimServeConfig::default()
     };
     let engine = Engine::compact(dram_of(p)?);
-    let trace = explore::gen_trace(nets.len(), n, arrival, seed);
+    let trace = explore::gen_trace_mix(nets.len(), mix.as_deref(), n, arrival, seed);
+
+    // The placement grid: same trace at every worker count × policy.
+    if let Some(list) = p.get("sweep-workers") {
+        let counts = list
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("--sweep-workers expects comma-separated counts, got `{s}`")
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let rows =
+            explore::placement_sweep(&engine, &nets, &trace, cfg, &counts, &Placement::ALL)?;
+        let (t, csv) = figures::placement_table(&rows);
+        print!("{}", t.render());
+        println!(
+            "{} replays over one engine: {} plans total (one per distinct network)",
+            rows.len(),
+            engine.cache_stats().misses
+        );
+        if p.flag("csv") {
+            println!(
+                "wrote {}",
+                figures::write_csv(&csv, "placement_sweep.csv")?.display()
+            );
+        }
+        return Ok(());
+    }
+
     let report = explore::replay(&engine, &nets, &trace, cfg)?;
     let (t, csv) = figures::trace_table(&report);
     print!("{}", t.render());
+    if cfg.workers > 1 {
+        let (wt, wcsv) = figures::worker_table(&report);
+        print!("{}", wt.render());
+        if p.flag("csv") {
+            println!(
+                "wrote {}",
+                figures::write_csv(&wcsv, "serve_sim_workers.csv")?.display()
+            );
+        }
+    }
     println!(
         "span {:.3} s, SLO attainment {:.1}%, {} weight reloads over {} batches, {} engine plans",
         report.span_s,

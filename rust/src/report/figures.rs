@@ -345,8 +345,9 @@ pub fn zoo_table() -> (Table, Csv) {
 pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) {
     let mut t = Table::new(
         format!(
-            "serve-sim trace replay ({} requests, {:.1} req/s served, {} plans)",
+            "serve-sim trace replay ({} requests, {} workers, {:.1} req/s served, {} plans)",
             report.offered(),
+            report.workers(),
             report.throughput_rps(),
             report.plans_computed
         ),
@@ -447,6 +448,102 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
     (t, csv)
 }
 
+/// Per-worker fleet table: one row per virtual worker (batches, served
+/// requests, weight reloads, busy time, utilization against the fleet
+/// span) — the placement-visibility companion to [`trace_table`]'s
+/// per-network rows.
+pub fn worker_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) {
+    let mut t = Table::new(
+        format!(
+            "worker fleet ({} workers, span {:.3} s, mean utilization {:.1}%)",
+            report.workers(),
+            report.span_s,
+            100.0 * report.mean_utilization()
+        ),
+        vec!["worker", "batches", "served", "reloads", "busy", "util"],
+    );
+    let mut csv = Csv::new(vec![
+        "worker",
+        "batches",
+        "served",
+        "reloads",
+        "busy_s",
+        "utilization",
+    ]);
+    for w in &report.per_worker {
+        let util = w.utilization(report.span_s);
+        t.row(vec![
+            w.id.to_string(),
+            w.batches.to_string(),
+            w.completed.to_string(),
+            w.reloads.to_string(),
+            format!("{:.3} s", w.busy_s),
+            format!("{:.1}%", 100.0 * util),
+        ]);
+        csv.row(vec![
+            w.id.to_string(),
+            w.batches.to_string(),
+            w.completed.to_string(),
+            w.reloads.to_string(),
+            format!("{:.6}", w.busy_s),
+            format!("{util:.4}"),
+        ]);
+    }
+    (t, csv)
+}
+
+/// Placement-sweep grid: one row per (worker count, policy) replay of the
+/// same trace — weight reloads and throughput as the fleet grows, the
+/// trade-off `NetworkAffinity` wins once `workers > 1`.
+pub fn placement_table(rows: &[crate::explore::PlacementPoint]) -> (Table, Csv) {
+    let mut t = Table::new(
+        "placement sweep: reloads & throughput vs workers x policy",
+        vec![
+            "workers", "placement", "accept", "reject", "batches", "reloads", "req/s", "slo att",
+            "util",
+        ],
+    );
+    let mut csv = Csv::new(vec![
+        "workers",
+        "placement",
+        "accepted",
+        "rejected",
+        "batches",
+        "reloads",
+        "throughput_rps",
+        "slo_attainment",
+        "mean_utilization",
+        "span_s",
+    ]);
+    for p in rows {
+        let r = &p.report;
+        t.row(vec![
+            p.workers.to_string(),
+            p.placement.label().to_string(),
+            r.accepted().to_string(),
+            r.rejected().to_string(),
+            r.batches().to_string(),
+            r.reloads().to_string(),
+            format!("{:.1}", r.throughput_rps()),
+            format!("{:.1}%", 100.0 * r.slo_attainment()),
+            format!("{:.1}%", 100.0 * r.mean_utilization()),
+        ]);
+        csv.row(vec![
+            p.workers.to_string(),
+            p.placement.label().to_string(),
+            r.accepted().to_string(),
+            r.rejected().to_string(),
+            r.batches().to_string(),
+            r.reloads().to_string(),
+            format!("{:.3}", r.throughput_rps()),
+            format!("{:.4}", r.slo_attainment()),
+            format!("{:.4}", r.mean_utilization()),
+            format!("{:.6}", r.span_s),
+        ]);
+    }
+    (t, csv)
+}
+
 /// Fig. 1 helper (used by the CLI): write a CSV under `results/`.
 pub fn write_csv(csv: &Csv, name: &str) -> std::io::Result<std::path::PathBuf> {
     let path = Path::new("results").join(name);
@@ -541,6 +638,50 @@ mod tests {
         assert!(s.contains("vgg11"));
         assert!(s.contains("TOTAL"));
         assert_eq!(csv.num_rows(), nets.len() + 1);
+    }
+
+    #[test]
+    fn worker_table_has_one_row_per_worker_with_utilization() {
+        use crate::coordinator::{Arrival, Placement, SimServeConfig};
+        use crate::explore::trace::{mixed_trace, replay};
+        let engine = crate::explore::Engine::compact(presets::lpddr5());
+        let (nets, trace) = mixed_trace(&["mobilenetv1", "vgg11"], 24, Arrival::Burst, 5).unwrap();
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            workers: 3,
+            placement: Placement::LeastLoaded,
+            ..SimServeConfig::default()
+        };
+        let report = replay(&engine, &nets, &trace, cfg).unwrap();
+        let (t, csv) = worker_table(&report);
+        let s = t.render();
+        assert!(s.contains("3 workers"));
+        assert!(s.contains("util"));
+        assert_eq!(csv.num_rows(), 3);
+    }
+
+    #[test]
+    fn placement_table_renders_the_grid() {
+        use crate::coordinator::{Arrival, Placement, SimServeConfig};
+        use crate::explore::trace::{mixed_trace, placement_sweep};
+        let engine = crate::explore::Engine::compact(presets::lpddr5());
+        let (nets, trace) = mixed_trace(&["mobilenetv1", "vgg11"], 24, Arrival::Burst, 5).unwrap();
+        let base = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        };
+        let rows =
+            placement_sweep(&engine, &nets, &trace, base, &[1, 2], &Placement::ALL).unwrap();
+        let (t, csv) = placement_table(&rows);
+        let s = t.render();
+        assert!(s.contains("round-robin"));
+        assert!(s.contains("least-loaded"));
+        assert!(s.contains("affinity"));
+        assert_eq!(csv.num_rows(), rows.len());
     }
 
     #[test]

@@ -1,23 +1,30 @@
 //! Property net over the simulated serving path (respects
 //! `PIMFLOW_PROP_CASES`): randomized mixed-network traces through the
-//! admission controller, checking the invariants the design promises —
+//! admission controller and worker fleet, checking the invariants the
+//! design promises —
 //!
 //! * admission never violates the SLO bound it quotes: every accepted
-//!   request completes within the SLO, exactly (the quote is an upper
-//!   bound on the realized completion by construction);
+//!   request completes within the SLO, exactly, for any fleet size and
+//!   placement policy (the quote is an upper bound on the realized
+//!   completion by construction, per worker);
 //! * conservation: per-network completed ≤ offered, accepted + rejected
-//!   == offered, batches == accepted − coalesced, reloads ≤ batches;
+//!   == offered, batches == accepted − coalesced, reloads ≤ batches, and
+//!   the per-worker rows sum to the fleet totals;
+//! * placement: on homogeneous traffic, `NetworkAffinity` never reloads
+//!   more than `RoundRobin` (affinity keeps one worker hot; round-robin
+//!   streams the same weights onto every worker it touches);
 //! * throughput is monotone non-increasing as the SLO tightens, at the
 //!   operating-point level (the `batch_opt`-tuned batch cap can only
 //!   shrink) and at the trace level for homogeneous burst traffic
 //!   (identical per-request cost, so a looser SLO can always replicate a
 //!   tighter SLO's schedule).
 //!
-//! One engine is shared across every random case: however many traces the
-//! net replays, the three pool networks are planned at most once each.
+//! One engine is shared across every random case: however many traces and
+//! fleet shapes the net replays, the three pool networks are planned at
+//! most once each.
 
 use pimflow::cfg::presets;
-use pimflow::coordinator::{Arrival, SimServeConfig};
+use pimflow::coordinator::{Arrival, Placement, SimServeConfig};
 use pimflow::explore::batch_opt::max_batch_for_latency;
 use pimflow::explore::trace::{gen_trace, replay};
 use pimflow::nn::{zoo, Network};
@@ -33,6 +40,10 @@ fn pool() -> Vec<Network> {
         .collect()
 }
 
+fn any_placement(rng: &mut Rng) -> Placement {
+    Placement::ALL[rng.index(Placement::ALL.len())]
+}
+
 #[derive(Debug, Clone)]
 struct Case {
     num_nets: usize,
@@ -43,12 +54,18 @@ struct Case {
     max_batch: u32,
     max_wait_s: f64,
     admission: bool,
+    workers: usize,
+    placement: Placement,
 }
 
 fn gen_case(rng: &mut Rng, admission: bool) -> Case {
-    let arrival = match rng.index(3) {
+    let arrival = match rng.index(4) {
         0 => Arrival::Burst,
         1 => Arrival::Uniform(rng.range_f64(100.0, 5000.0)),
+        2 => Arrival::ClosedLoop {
+            clients: 1 + rng.index(32) as u32,
+            think_s: rng.range_f64(0.001, 0.05),
+        },
         _ => Arrival::Poisson(rng.range_f64(100.0, 5000.0)),
     };
     Case {
@@ -61,6 +78,8 @@ fn gen_case(rng: &mut Rng, admission: bool) -> Case {
         max_batch: 1 + rng.index(8) as u32,
         max_wait_s: rng.range_f64(0.0, 0.002),
         admission,
+        workers: 1 + rng.index(4),
+        placement: any_placement(rng),
     }
 }
 
@@ -71,6 +90,8 @@ fn run_case(engine: &Engine, nets: &[Network], c: &Case) -> pimflow::coordinator
         max_batch: c.max_batch,
         max_wait_s: c.max_wait_s,
         admission: c.admission,
+        workers: c.workers,
+        placement: c.placement,
         ..SimServeConfig::default()
     };
     replay(engine, &nets[..c.num_nets], &trace, cfg).expect("replay failed")
@@ -94,10 +115,17 @@ fn admission_never_violates_the_slo_it_quotes() {
             for done in &r.completions {
                 prop_assert!(
                     done.latency_s() <= c.slo_s,
-                    "request {} latency {} exceeds quoted SLO {}",
+                    "request {} on worker {} latency {} exceeds quoted SLO {}",
                     done.id,
+                    done.worker,
                     done.latency_s(),
                     c.slo_s
+                );
+                prop_assert!(
+                    done.worker < c.workers,
+                    "completion names worker {} of a {}-worker fleet",
+                    done.worker,
+                    c.workers
                 );
             }
             // `within_slo` agrees with the raw completions, exactly.
@@ -119,7 +147,7 @@ fn admission_never_violates_the_slo_it_quotes() {
 }
 
 #[test]
-fn serving_counters_are_conserved_per_network() {
+fn serving_counters_are_conserved_per_network_and_per_worker() {
     let engine = Engine::compact(presets::lpddr5());
     let nets = pool();
     check(
@@ -163,12 +191,111 @@ fn serving_counters_are_conserved_per_network() {
                 );
                 prop_assert!(n.coalesced <= n.accepted, "{}: coalesce accounting", n.network);
             }
+            // The per-worker rows are a second partition of the same work.
+            prop_assert!(
+                r.per_worker.len() == c.workers,
+                "fleet reports {} workers, configured {}",
+                r.per_worker.len(),
+                c.workers
+            );
+            let w_batches: u64 = r.per_worker.iter().map(|w| w.batches).sum();
+            let w_completed: u64 = r.per_worker.iter().map(|w| w.completed).sum();
+            let w_reloads: u64 = r.per_worker.iter().map(|w| w.reloads).sum();
+            prop_assert!(
+                w_batches == r.batches(),
+                "worker batches {w_batches} != fleet batches {}",
+                r.batches()
+            );
+            prop_assert!(
+                w_completed == r.completed(),
+                "worker completions {w_completed} != fleet {}",
+                r.completed()
+            );
+            prop_assert!(
+                w_reloads == r.reloads(),
+                "worker reloads {w_reloads} != fleet {}",
+                r.reloads()
+            );
+            for w in &r.per_worker {
+                prop_assert!(
+                    w.busy_s <= r.span_s + 1e-9,
+                    "worker {} busy {} beyond the fleet span {}",
+                    w.id,
+                    w.busy_s,
+                    r.span_s
+                );
+                prop_assert!(
+                    w.idle_at_s <= r.span_s,
+                    "worker {} idles after the fleet span",
+                    w.id
+                );
+            }
             if !c.admission {
                 prop_assert!(
                     r.accepted() == r.offered(),
                     "accept-all mode rejected something"
                 );
             }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn affinity_never_reloads_more_than_round_robin_on_homogeneous_traces() {
+    // Homogeneous traffic is the clean placement comparison: there is one
+    // weight set, affinity keeps it on one hot worker (one reload, ever),
+    // while round-robin streams it onto every worker its cursor touches.
+    let engine = Engine::compact(presets::lpddr5());
+    let nets = pool();
+    check(
+        "serve/affinity-beats-rr-homogeneous",
+        |rng| {
+            let arrival = if rng.chance(0.5) {
+                Arrival::Burst
+            } else {
+                Arrival::Poisson(rng.range_f64(500.0, 5000.0))
+            };
+            (
+                rng.index(3),
+                1 + rng.index(24),
+                rng.next_u64(),
+                arrival,
+                1 + rng.index(4),
+                1 + rng.index(4) as u32,
+                rng.range_f64(0.0, 0.002),
+            )
+        },
+        |&(net_idx, n, seed, arrival, workers, max_batch, max_wait_s)| {
+            let trace = gen_trace(1, n, arrival, seed);
+            let run = |placement: Placement| {
+                let cfg = SimServeConfig {
+                    slo_s: 1e6,
+                    max_batch,
+                    max_wait_s,
+                    workers,
+                    placement,
+                    ..SimServeConfig::default()
+                };
+                replay(&engine, &nets[net_idx..net_idx + 1], &trace, cfg)
+                    .expect("replay failed")
+            };
+            let aff = run(Placement::NetworkAffinity);
+            let rr = run(Placement::RoundRobin);
+            prop_assert!(
+                aff.reloads() <= rr.reloads(),
+                "affinity reloads {} > round-robin {} ({workers} workers)",
+                aff.reloads(),
+                rr.reloads()
+            );
+            prop_assert!(
+                aff.reloads() == 1,
+                "homogeneous affinity must load the weights exactly once, got {}",
+                aff.reloads()
+            );
+            // Both policies serve the whole trace under the generous SLO.
+            prop_assert!(aff.completed() == n as u64, "affinity dropped requests");
+            prop_assert!(rr.completed() == n as u64, "round-robin dropped requests");
             Ok(())
         },
     );
@@ -219,9 +346,10 @@ fn tuned_batch_cap_is_monotone_in_the_slo() {
 fn homogeneous_burst_throughput_is_monotone_in_the_slo() {
     // Trace-level monotonicity, on the workload where it is provable:
     // one network, burst arrivals (identical per-request cost, fixed
-    // offered window). A looser SLO can always admit at least the
-    // schedule the tighter SLO ran, so accepted counts — throughput over
-    // the fixed trace — are monotone non-increasing as the SLO tightens.
+    // offered window), one worker. A looser SLO can always admit at least
+    // the schedule the tighter SLO ran, so accepted counts — throughput
+    // over the fixed trace — are monotone non-increasing as the SLO
+    // tightens.
     let engine = Engine::compact(presets::lpddr5());
     let nets = pool();
     check(

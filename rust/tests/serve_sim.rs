@@ -10,8 +10,8 @@
 //! same networks).
 
 use pimflow::cfg::presets;
-use pimflow::coordinator::{Arrival, SimServeConfig};
-use pimflow::explore::trace::{gen_trace, mixed_trace, replay, slo_sweep};
+use pimflow::coordinator::{Arrival, Placement, SimServeConfig};
+use pimflow::explore::trace::{gen_trace, mixed_trace, placement_sweep, replay, slo_sweep};
 use pimflow::sim::Engine;
 
 const NETWORKS: [&str; 3] = ["mobilenetv1", "vgg11", "resnet18"];
@@ -163,6 +163,126 @@ fn single_network_trace_reloads_weights_exactly_once() {
         1,
         "homogeneous traffic loads weights once and reuses them"
     );
+}
+
+#[test]
+fn one_worker_fleet_replays_bitwise_identical_to_the_pinned_single_worker_trace() {
+    // The fleet refactor's regression pin: `workers = 1` under every
+    // placement policy must reproduce the pre-refactor single-worker
+    // replay exactly — verdict counts, reloads, completion latencies, and
+    // the virtual span, bit for bit. The baseline is the default config
+    // (workers 1, round-robin), which is the pre-fleet code path.
+    let slo_s = 0.05;
+    let (nets, trace) = mixed_trace(&NETWORKS, REQUESTS, Arrival::Poisson(2000.0), SEED).unwrap();
+    let baseline = replay(&engine(), &nets, &trace, cfg(slo_s)).unwrap();
+    assert_eq!(baseline.workers(), 1, "default config is the 1-worker model");
+
+    for placement in Placement::ALL {
+        let fleet_cfg = SimServeConfig {
+            workers: 1,
+            placement,
+            ..cfg(slo_s)
+        };
+        let r = replay(&engine(), &nets, &trace, fleet_cfg).unwrap();
+        let label = placement.label();
+        assert_eq!(r.accepted(), baseline.accepted(), "{label}: accepted");
+        assert_eq!(r.coalesced(), baseline.coalesced(), "{label}: coalesced");
+        assert_eq!(r.rejected(), baseline.rejected(), "{label}: rejected");
+        assert_eq!(r.batches(), baseline.batches(), "{label}: batches");
+        assert_eq!(r.reloads(), baseline.reloads(), "{label}: reloads");
+        assert_eq!(
+            r.span_s.to_bits(),
+            baseline.span_s.to_bits(),
+            "{label}: span"
+        );
+        assert_eq!(r.completions.len(), baseline.completions.len());
+        for (a, b) in r.completions.iter().zip(&baseline.completions) {
+            assert_eq!(a.id, b.id, "{label}: completion order");
+            assert_eq!(a.worker, 0, "{label}: one worker serves everything");
+            assert_eq!(
+                a.completion_s.to_bits(),
+                b.completion_s.to_bits(),
+                "{label}: completion time of request {}",
+                a.id
+            );
+        }
+        // Per-worker accounting agrees with the fleet totals.
+        assert_eq!(r.per_worker.len(), 1);
+        assert_eq!(r.per_worker[0].batches, r.batches());
+        assert_eq!(r.per_worker[0].reloads, r.reloads());
+        assert_eq!(r.per_worker[0].completed, r.completed());
+    }
+}
+
+#[test]
+fn k_networks_cost_k_plans_for_any_fleet_size_and_policy() {
+    let (nets, trace) = mixed_trace(&NETWORKS, REQUESTS, Arrival::Poisson(2000.0), SEED).unwrap();
+    for workers in [1usize, 2, 3, 5] {
+        for placement in Placement::ALL {
+            let eng = engine();
+            let fleet_cfg = SimServeConfig {
+                workers,
+                placement,
+                ..cfg(1e6)
+            };
+            let r = replay(&eng, &nets, &trace, fleet_cfg).unwrap();
+            assert_eq!(
+                r.plans_computed,
+                NETWORKS.len() as u64,
+                "{workers} workers / {}: planning must stay per-network, not per-worker",
+                placement.label()
+            );
+            assert_eq!(eng.cache_stats().misses, NETWORKS.len() as u64);
+            assert_eq!(r.accepted(), REQUESTS as u64, "generous SLO accepts all");
+        }
+    }
+}
+
+#[test]
+fn placement_sweep_affinity_strictly_beats_round_robin_reloads_at_two_plus_workers() {
+    // The acceptance pin for the placement subsystem: on a pinned mixed
+    // trace, routing to the worker already holding the weights must
+    // strictly cut reloads against locality-blind round-robin once the
+    // fleet has ≥2 workers. One engine prices the whole grid.
+    let eng = engine();
+    let (nets, trace) = mixed_trace(&NETWORKS, REQUESTS, Arrival::Poisson(2000.0), SEED).unwrap();
+    let rows = placement_sweep(&eng, &nets, &trace, cfg(1e6), &[1, 2, 4], &Placement::ALL).unwrap();
+    assert_eq!(rows.len(), 9);
+    assert_eq!(eng.cache_stats().misses, NETWORKS.len() as u64);
+
+    let reloads = |workers: usize, placement: Placement| {
+        rows.iter()
+            .find(|r| r.workers == workers && r.placement == placement)
+            .map(|r| r.report.reloads())
+            .expect("grid covers the cell")
+    };
+    // At one worker every policy routes identically.
+    assert_eq!(
+        reloads(1, Placement::RoundRobin),
+        reloads(1, Placement::NetworkAffinity)
+    );
+    assert_eq!(
+        reloads(1, Placement::RoundRobin),
+        reloads(1, Placement::LeastLoaded)
+    );
+    // At 2 and 4 workers affinity must strictly win on reloads.
+    for workers in [2usize, 4] {
+        let rr = reloads(workers, Placement::RoundRobin);
+        let aff = reloads(workers, Placement::NetworkAffinity);
+        assert!(
+            aff < rr,
+            "{workers} workers: affinity reloads {aff} not strictly below round-robin {rr}"
+        );
+    }
+    // Every cell served the whole trace under the generous SLO.
+    for row in &rows {
+        assert_eq!(row.report.accepted(), REQUESTS as u64);
+        assert_eq!(row.report.completed(), REQUESTS as u64);
+        let per_worker_batches: u64 = row.report.per_worker.iter().map(|w| w.batches).sum();
+        assert_eq!(per_worker_batches, row.report.batches());
+        let per_worker_reloads: u64 = row.report.per_worker.iter().map(|w| w.reloads).sum();
+        assert_eq!(per_worker_reloads, row.report.reloads());
+    }
 }
 
 #[test]
