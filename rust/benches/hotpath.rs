@@ -7,7 +7,9 @@
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
 use pimflow::cfg::PipelineCase;
-use pimflow::coordinator::{Arrival, Placement, SimServeConfig};
+use pimflow::coordinator::{
+    AdaptiveConfig, Arrival, Placement, ReplicationPolicy, SimRequest, SimServeConfig,
+};
 use pimflow::ddm;
 use pimflow::explore::{fig6_sweep, mixed_trace, replay, BATCHES};
 use pimflow::nn::{resnet, zoo};
@@ -191,5 +193,73 @@ fn main() {
         "affinity must beat round-robin reloads at 4 workers: {} vs {}",
         aff.reloads(),
         rr.reloads()
+    );
+
+    // Replication acceptance pin: on the pinned skewed trace (one hot
+    // network every other request, three cold ones cycling behind it,
+    // arrivals spaced past every makespan) over a 3-worker affinity
+    // fleet, the adaptive replica controller strictly cuts blocking
+    // weight reloads against single-residency affinity at no goodput
+    // cost, and the whole comparison adds exactly one plan (the one new
+    // network) to the warm engine.
+    let skewed_nets: Vec<_> = ["mobilenetv1", "vgg11", "resnet18", "vgg13"]
+        .iter()
+        .map(|n| zoo::by_name(n, 100).unwrap())
+        .collect();
+    let skewed_trace: Vec<SimRequest> = (0..240)
+        .map(|j| SimRequest {
+            id: j as u64,
+            net: if j % 2 == 0 { 0 } else { 1 + (j / 2) % 3 },
+            arrival_s: j as f64 * 0.025,
+        })
+        .collect();
+    let repl_cfg = |replication: ReplicationPolicy| SimServeConfig {
+        slo_s: 1e6,
+        max_batch: 8,
+        max_wait_s: 0.001,
+        workers: 3,
+        placement: Placement::NetworkAffinity,
+        replication,
+        ..SimServeConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let single = replay(
+        &serve_engine,
+        &skewed_nets,
+        &skewed_trace,
+        repl_cfg(ReplicationPolicy::None),
+    )
+    .unwrap();
+    let replicated = replay(
+        &serve_engine,
+        &skewed_nets,
+        &skewed_trace,
+        repl_cfg(ReplicationPolicy::Adaptive(AdaptiveConfig::default())),
+    )
+    .unwrap();
+    println!(
+        "replication replay (3 workers, skewed): single-residency {} reloads vs adaptive {} \
+         (+{} pre-warms) in {:.3} s",
+        single.reloads(),
+        replicated.reloads(),
+        replicated.prewarms(),
+        t0.elapsed().as_secs_f64()
+    );
+    assert_eq!(
+        serve_engine.cache_stats().misses,
+        nets.len() as u64 + 1,
+        "only the one new network (vgg13) costs a plan; replication never re-plans"
+    );
+    assert!(
+        replicated.reloads() < single.reloads(),
+        "adaptive replication must strictly cut reloads on the skewed trace: {} vs {}",
+        replicated.reloads(),
+        single.reloads()
+    );
+    assert!(
+        replicated.goodput() >= single.goodput(),
+        "replication must not cost goodput: {} vs {}",
+        replicated.goodput(),
+        single.goodput()
     );
 }

@@ -2,19 +2,23 @@
 //! [`batcher`], arrival processes ([`loadgen`]), and two execution
 //! backends —
 //!
-//! * the real path *(feature `runtime`)*: [`server::Server`] → queue →
+//! * the real path *(feature `runtime`)*: `server::Server` → queue →
 //!   `gather` (max-batch / max-wait policy) → smallest fitting AOT
 //!   artifact variant → PJRT execute → per-request reply channels; and
 //! * the simulated path ([`sim_serve`], always available): an
 //!   Engine-backed admission controller over a fleet of virtual-time
-//!   workers ([`vworker`]) with pluggable [`placement`] policies, charging
+//!   workers ([`vworker`]) with pluggable [`placement`] policies and a
+//!   weight-replication subsystem ([`replica`]: per-network replica sets,
+//!   static pinning, and an adaptive pre-warm/drain controller), charging
 //!   pipeline makespans instead of PJRT executions — so the full request
-//!   path (batching policy, arrival statistics, admission, placement, SLO
-//!   accounting) is exercised in the default (no-xla) CI lane.
+//!   path (batching policy, arrival statistics, admission, placement,
+//!   replication, SLO accounting) is exercised in the default (no-xla)
+//!   CI lane.
 
 pub mod batcher;
 pub mod loadgen;
 pub mod placement;
+pub mod replica;
 pub mod request;
 #[cfg(feature = "runtime")]
 pub mod server;
@@ -28,6 +32,9 @@ pub use loadgen::Arrival;
 #[cfg(feature = "runtime")]
 pub use loadgen::{run_load, LoadReport};
 pub use placement::Placement;
+pub use replica::{
+    AdaptiveConfig, ReplicaSet, ReplicationPolicy, ResidencyCause, ResidencyChange, ResidencyEvent,
+};
 pub use request::{InferRequest, InferResponse, RequestId, IMAGE_ELEMENTS};
 #[cfg(feature = "runtime")]
 pub use server::{Server, ServerConfig, StatsSnapshot};

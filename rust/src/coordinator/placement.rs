@@ -13,16 +13,19 @@
 //! * [`Placement::LeastLoaded`] — the worker that drains first
 //!   (`busy_until`, then fewest open-batch members, then lowest id).
 //!   Balances queueing delay, ignores which weights are resident.
-//! * [`Placement::NetworkAffinity`] — prefer workers already holding the
-//!   request's weights (resident, or loading via their open batch),
-//!   least-loaded among those; fall back to least-loaded overall. Turns
-//!   the fleet into an LRU-like weight cache: reloads only happen when a
-//!   network is resident nowhere.
+//! * [`Placement::NetworkAffinity`] — prefer the least-loaded **member of
+//!   the request's replica set** (any worker holding its weights — kept
+//!   by [`ReplicaSet`], which the replication controller may have
+//!   pre-warmed onto several workers — or loading them via its open
+//!   batch); fall back to least-loaded overall. Turns the fleet into an
+//!   LRU-like weight cache whose hot lines replication can widen:
+//!   reloads only happen when a network is resident nowhere.
 //!
 //! With one worker every policy degenerates to "worker 0", which is what
 //! pins the fleet refactor bitwise against the single-worker replay
 //! (`tests/serve_sim.rs`).
 
+use super::replica::ReplicaSet;
 use super::vworker::VWorker;
 
 /// Worker-selection policy consulted on every admit.
@@ -30,9 +33,16 @@ use super::vworker::VWorker;
 pub enum Placement {
     /// Cycle over workers in id order, one step per offered request.
     RoundRobin,
-    /// Earliest-draining worker (ties: fewer open members, lower id).
+    /// Earliest-draining worker. The tie-break order is **load-bearing
+    /// for determinism** and must not change: strictly increasing
+    /// `(busy_until_s` by `total_cmp`, open-batch members, worker id`)` —
+    /// two workers never compare equal because ids are unique, so the
+    /// minimum (and therefore every replay) is unique. Pinned by
+    /// `least_loaded_tie_break_order_is_exact` below.
     LeastLoaded,
-    /// Worker already holding the request's weights, else least-loaded.
+    /// Least-loaded worker already holding the request's weights (its
+    /// replica-set members plus any worker whose open batch will load
+    /// them), else least-loaded overall.
     NetworkAffinity,
 }
 
@@ -65,30 +75,47 @@ impl Placement {
         }
     }
 
-    /// Pick the worker a request for `net` rides. `cursor` is the
+    /// Pick the worker a request for `net` rides. `replicas` is the
+    /// fleet's residency index (who holds which weights); `cursor` is the
     /// server's round-robin position (advanced by the caller once per
     /// consultation, whatever the policy). Deterministic: ties always
     /// break toward the lowest worker id.
-    pub fn choose(&self, workers: &[VWorker], net: usize, cursor: usize) -> usize {
+    pub fn choose(
+        &self,
+        workers: &[VWorker],
+        replicas: &ReplicaSet,
+        net: usize,
+        cursor: usize,
+    ) -> usize {
         debug_assert!(!workers.is_empty());
+        debug_assert_eq!(workers.len(), replicas.num_workers());
         match self {
             Placement::RoundRobin => cursor % workers.len(),
             Placement::LeastLoaded => {
                 least_loaded(workers, 0..workers.len()).expect("fleet is non-empty")
             }
-            Placement::NetworkAffinity => {
-                least_loaded(workers, (0..workers.len()).filter(|&i| workers[i].holds(net)))
-                    .unwrap_or_else(|| {
-                        least_loaded(workers, 0..workers.len()).expect("fleet is non-empty")
-                    })
-            }
+            Placement::NetworkAffinity => least_loaded(
+                workers,
+                (0..workers.len()).filter(|&i| {
+                    replicas.is_holder(i, net) || workers[i].open_net() == Some(net)
+                }),
+            )
+            .unwrap_or_else(|| {
+                least_loaded(workers, 0..workers.len()).expect("fleet is non-empty")
+            }),
         }
     }
 }
 
 /// Least-loaded among `ids`: earliest `busy_until_s`, then fewest open
-/// members, then lowest id. `None` when `ids` is empty.
-fn least_loaded<I: Iterator<Item = usize>>(workers: &[VWorker], ids: I) -> Option<usize> {
+/// members, then lowest id. `None` when `ids` is empty. Shared with the
+/// replication controller, which uses the same order to pick pre-warm
+/// victims — so controller choices mirror where the affinity fallback
+/// would have landed the work.
+pub(crate) fn least_loaded<I: Iterator<Item = usize>>(
+    workers: &[VWorker],
+    ids: I,
+) -> Option<usize> {
     ids.min_by(|&a, &b| {
         let (wa, wb) = (&workers[a], &workers[b]);
         wa.busy_until_s
@@ -105,6 +132,18 @@ mod tests {
 
     fn fleet(n: usize) -> Vec<VWorker> {
         (0..n).map(VWorker::new).collect()
+    }
+
+    /// Residency index mirroring each worker's `loaded` field, as the
+    /// serving simulator maintains it.
+    fn mirror(workers: &[VWorker], num_nets: usize) -> ReplicaSet {
+        let mut rs = ReplicaSet::new(num_nets, workers.len());
+        for w in workers {
+            if let Some(net) = w.loaded {
+                rs.on_load(w.id, net);
+            }
+        }
+        rs
     }
 
     #[test]
@@ -125,8 +164,9 @@ mod tests {
     #[test]
     fn round_robin_cycles_with_the_cursor() {
         let w = fleet(3);
+        let rs = mirror(&w, 1);
         let picks: Vec<usize> = (0..6)
-            .map(|c| Placement::RoundRobin.choose(&w, 0, c))
+            .map(|c| Placement::RoundRobin.choose(&w, &rs, 0, c))
             .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
@@ -144,10 +184,63 @@ mod tests {
             deadline_s: 0.001,
             members: vec![(0, 0.0)],
         });
-        assert_eq!(Placement::LeastLoaded.choose(&w, 0, 99), 1);
+        let rs = mirror(&w, 1);
+        assert_eq!(Placement::LeastLoaded.choose(&w, &rs, 0, 99), 1);
         // Full tie breaks to the lowest id.
         let idle = fleet(4);
-        assert_eq!(Placement::LeastLoaded.choose(&idle, 0, 99), 0);
+        let rs = mirror(&idle, 1);
+        assert_eq!(Placement::LeastLoaded.choose(&idle, &rs, 0, 99), 0);
+    }
+
+    #[test]
+    fn least_loaded_tie_break_order_is_exact() {
+        // The (busy_until, open members, id) order is load-bearing for
+        // determinism: each key only applies when every earlier key ties
+        // exactly, and the id makes the order total. Pin each stage.
+        let open = |members: usize| OpenBatch {
+            net: 0,
+            first_arrival_s: 0.0,
+            deadline_s: 0.001,
+            members: (0..members as u64).map(|i| (i, 0.0)).collect(),
+        };
+        // Stage 1: busy_until dominates open members and id.
+        let mut w = fleet(3);
+        w[0].busy_until_s = 5.0;
+        w[1].busy_until_s = 5.0;
+        w[2].busy_until_s = 4.0;
+        w[2].open = Some(open(3));
+        let rs = mirror(&w, 1);
+        assert_eq!(
+            Placement::LeastLoaded.choose(&w, &rs, 0, 0),
+            2,
+            "an earlier drain wins despite a fuller open batch and higher id"
+        );
+        // Stage 2: exact busy tie → fewest open members, despite id order.
+        let mut w = fleet(3);
+        for wk in &mut w {
+            wk.busy_until_s = 7.0;
+        }
+        w[0].open = Some(open(2));
+        w[1].open = Some(open(2));
+        w[2].open = Some(open(1));
+        let rs = mirror(&w, 1);
+        assert_eq!(Placement::LeastLoaded.choose(&w, &rs, 0, 0), 2);
+        // Stage 3: exact (busy, members) tie → lowest id, making the
+        // order total (no two workers ever compare equal).
+        let mut w = fleet(3);
+        for wk in &mut w {
+            wk.busy_until_s = 7.0;
+            wk.open = Some(open(2));
+        }
+        let rs = mirror(&w, 1);
+        assert_eq!(Placement::LeastLoaded.choose(&w, &rs, 0, 0), 0);
+        // total_cmp is exact: a strictly smaller busy_until always wins a
+        // members tie, however small the difference.
+        let mut w = fleet(2);
+        w[0].busy_until_s = 7.0;
+        w[1].busy_until_s = 7.0 - f64::EPSILON * 8.0;
+        let rs = mirror(&w, 1);
+        assert_eq!(Placement::LeastLoaded.choose(&w, &rs, 0, 0), 1);
     }
 
     #[test]
@@ -155,15 +248,50 @@ mod tests {
         let mut w = fleet(3);
         w[2].loaded = Some(5);
         w[2].busy_until_s = 10.0; // busiest, but holds the weights
-        assert_eq!(Placement::NetworkAffinity.choose(&w, 5, 0), 2);
+        let rs = mirror(&w, 8);
+        assert_eq!(Placement::NetworkAffinity.choose(&w, &rs, 5, 0), 2);
         // No holder: fall back to least-loaded (all idle → id 0).
-        assert_eq!(Placement::NetworkAffinity.choose(&w, 6, 0), 0);
+        assert_eq!(Placement::NetworkAffinity.choose(&w, &rs, 6, 0), 0);
         // Two holders: least-loaded among them.
         w[1].loaded = Some(5);
+        let rs = mirror(&w, 8);
         assert_eq!(
-            Placement::NetworkAffinity.choose(&w, 5, 0),
+            Placement::NetworkAffinity.choose(&w, &rs, 5, 0),
             1,
             "worker 1 holds net 5 and drains before worker 2"
+        );
+    }
+
+    #[test]
+    fn affinity_sees_replicas_the_controller_prewarmed() {
+        // A replica-set entry without a batch ever having run (a pre-warm)
+        // attracts placement exactly like batch-loaded weights.
+        let mut w = fleet(3);
+        w[1].busy_until_s = 0.5; // streaming the pre-warm
+        let mut rs = ReplicaSet::new(2, 3);
+        rs.on_load(1, 1);
+        w[1].loaded = Some(1);
+        assert_eq!(Placement::NetworkAffinity.choose(&w, &rs, 1, 0), 1);
+        // A second replica widens the lane: the least-loaded member wins.
+        rs.on_load(2, 1);
+        w[2].loaded = Some(1);
+        assert_eq!(Placement::NetworkAffinity.choose(&w, &rs, 1, 0), 2);
+    }
+
+    #[test]
+    fn affinity_counts_open_batches_as_holding() {
+        let mut w = fleet(2);
+        w[1].open = Some(OpenBatch {
+            net: 3,
+            first_arrival_s: 0.0,
+            deadline_s: 0.001,
+            members: vec![(0, 0.0)],
+        });
+        let rs = mirror(&w, 4);
+        assert_eq!(
+            Placement::NetworkAffinity.choose(&w, &rs, 3, 0),
+            1,
+            "an open batch will load net 3's weights"
         );
     }
 
@@ -172,9 +300,10 @@ mod tests {
         let mut w = fleet(1);
         w[0].busy_until_s = 7.0;
         w[0].loaded = Some(1);
+        let rs = mirror(&w, 2);
         for p in Placement::ALL {
             for cursor in 0..4 {
-                assert_eq!(p.choose(&w, 0, cursor), 0);
+                assert_eq!(p.choose(&w, &rs, 0, cursor), 0);
             }
         }
     }

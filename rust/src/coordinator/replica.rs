@@ -1,0 +1,810 @@
+//! Fleet-level weight replication: tracking which workers hold which
+//! network's weights ([`ReplicaSet`]) and deciding when to spend worker
+//! capacity widening a hot network's serving lane ([`ReplicationPolicy`]
+//! + [`ReplicaController`]).
+//!
+//! The paper's core lever is weight reuse: off-chip weight traffic
+//! dominates compact-PIM serving cost, and DDM already prices *intra-chip*
+//! duplication (spending idle tiles to widen a layer's lane). This module
+//! is the fleet-level analogue: a network resident on several workers has
+//! a wider serving lane — `NetworkAffinity` placement routes to the
+//! least-loaded member of its replica set — at the cost of the capacity
+//! those workers could have lent to other networks.
+//!
+//! Three policies:
+//!
+//! * [`ReplicationPolicy::None`] — residency changes only through batch
+//!   execution (a worker holds whatever it last ran). This is exactly the
+//!   pre-replication model and replays bitwise-identically to it under
+//!   every placement policy (pinned in `tests/replica_sim.rs`).
+//! * [`ReplicationPolicy::Static`] — pinned replica targets per network.
+//!   The controller pre-warms weights until each network holds its target
+//!   number of replicas, stealing only workers that are empty or hold a
+//!   *surplus* network (one above its own target); it never drains.
+//! * [`ReplicationPolicy::Adaptive`] — a controller that watches a
+//!   sliding window of per-network arrival times and realized reload
+//!   costs. When a network's windowed reload spend reaches the amortized
+//!   cost of one pre-warm (`headroom ×` its weight-streaming time), the
+//!   controller grows its replica target and pre-warms the weights onto
+//!   an idle worker — converting the *next* blocking reload into an
+//!   off-critical-path stream. Networks with no arrivals in the window
+//!   are drained, freeing their workers as pre-warm targets.
+//!
+//! Pre-warm pricing: streaming `net.weight_bytes()` over the DRAM channel
+//! — the same `switch_s` a blocking reload pays — charged to the chosen
+//! worker's `busy_until` (appended after whatever it already committed
+//! to). A pre-warm never touches a worker with an open batch, so every
+//! already-issued admission quote stays an upper bound and the
+//! accepted-never-misses-SLO invariant survives replication unchanged.
+//! Replication copies weights, never plans: the controller only ever uses
+//! the per-network `switch_s` computed at server build, so K networks
+//! still cost exactly K engine plans at any replica count (pinned in
+//! `tests/replica_sim.rs` and `benches/hotpath.rs`).
+
+use std::collections::VecDeque;
+
+use super::placement::least_loaded;
+use super::vworker::VWorker;
+
+/// Which workers currently hold each network's weights — the fleet-level
+/// residency index, maintained from worker load/evict events (batch
+/// executions, pre-warms, drains). Invariant: `holders` is the exact
+/// inverse of `resident`, with each holder list sorted by worker id
+/// (property-checked against the event fold in `tests/replica_props.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaSet {
+    /// `holders[net]` — sorted ids of workers whose resident network is `net`.
+    holders: Vec<Vec<usize>>,
+    /// `resident[worker]` — the network the worker holds, if any.
+    resident: Vec<Option<usize>>,
+}
+
+impl ReplicaSet {
+    /// Empty residency: no worker holds anything.
+    pub fn new(num_nets: usize, num_workers: usize) -> Self {
+        ReplicaSet {
+            holders: vec![Vec::new(); num_nets],
+            resident: vec![None; num_workers],
+        }
+    }
+
+    /// Worker `w` now holds `net` (evicting whatever it held before).
+    pub fn on_load(&mut self, w: usize, net: usize) {
+        if self.resident[w] == Some(net) {
+            return;
+        }
+        if let Some(old) = self.resident[w] {
+            self.holders[old].retain(|&x| x != w);
+        }
+        let pos = self.holders[net].partition_point(|&x| x < w);
+        self.holders[net].insert(pos, w);
+        self.resident[w] = Some(net);
+    }
+
+    /// Worker `w` dropped its resident weights (a drain).
+    pub fn on_evict(&mut self, w: usize) {
+        if let Some(old) = self.resident[w].take() {
+            self.holders[old].retain(|&x| x != w);
+        }
+    }
+
+    /// Sorted worker ids currently holding `net`'s weights.
+    pub fn holders(&self, net: usize) -> &[usize] {
+        &self.holders[net]
+    }
+
+    /// Replica count of `net`.
+    pub fn count(&self, net: usize) -> usize {
+        self.holders[net].len()
+    }
+
+    /// The network worker `w` holds, if any.
+    pub fn resident(&self, w: usize) -> Option<usize> {
+        self.resident[w]
+    }
+
+    /// Whether worker `w` holds `net`'s weights.
+    pub fn is_holder(&self, w: usize, net: usize) -> bool {
+        self.resident[w] == Some(net)
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn num_nets(&self) -> usize {
+        self.holders.len()
+    }
+
+    /// Final holder lists, per network (for reports).
+    pub fn snapshot(&self) -> Vec<Vec<usize>> {
+        self.holders.clone()
+    }
+
+    /// Rebuild residency purely from a load/evict event log — the
+    /// conservation check: a fold over the events must reproduce the
+    /// live set exactly.
+    pub fn fold(num_nets: usize, num_workers: usize, events: &[ResidencyEvent]) -> ReplicaSet {
+        let mut rs = ReplicaSet::new(num_nets, num_workers);
+        for ev in events {
+            match ev.change {
+                ResidencyChange::Load => rs.on_load(ev.worker, ev.net),
+                ResidencyChange::Evict => {
+                    debug_assert_eq!(rs.resident(ev.worker), Some(ev.net));
+                    rs.on_evict(ev.worker);
+                }
+            }
+        }
+        rs
+    }
+}
+
+/// Residency event direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResidencyChange {
+    /// `worker` became a holder of `net`.
+    Load,
+    /// `worker` stopped holding `net`.
+    Evict,
+}
+
+/// Why a residency event happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResidencyCause {
+    /// A batch executed on the worker (the load side charges the batch a
+    /// blocking weight reload).
+    Batch,
+    /// The replica controller streamed the weights ahead of demand.
+    Prewarm,
+    /// The replica controller dropped a cold network's weights.
+    Drain,
+}
+
+/// One residency change, as logged by the serving simulator. The full log
+/// folds back into the live [`ReplicaSet`] (`tests/replica_props.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidencyEvent {
+    /// Virtual time of the change, seconds.
+    pub t_s: f64,
+    pub worker: usize,
+    pub net: usize,
+    pub change: ResidencyChange,
+    pub cause: ResidencyCause,
+}
+
+/// Tuning knobs for [`ReplicationPolicy::Adaptive`].
+///
+/// Two thresholds separate the controller's two moves:
+///
+/// * **repair** — a network with *zero* replicas whose windowed reload
+///   spend covers `headroom ×` one pre-warm gets its residency restored
+///   (it paid for weights it then lost; re-streaming them on an idle
+///   worker is already amortized);
+/// * **growth** — a network that keeps paying reloads *despite holding a
+///   replica* (spend ≥ `growth_factor × headroom ×` one pre-warm) has
+///   its lane contested, and widens to one more worker.
+///
+/// The asymmetry keeps cold networks from squatting on multi-replica
+/// lanes: one reload funds at most one restored replica, while widening
+/// demands sustained pain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Sliding-window length, virtual seconds, over which per-network
+    /// arrivals and reload costs are watched.
+    pub window_s: f64,
+    /// Repair threshold: restore a lost residency once windowed reload
+    /// spend reaches `headroom ×` one pre-warm of the network's weights.
+    pub headroom: f64,
+    /// Growth threshold multiplier on top of `headroom` for adding a
+    /// replica to an already-resident network.
+    pub growth_factor: f64,
+    /// Replica-count ceiling per network (0 = the fleet size).
+    pub max_replicas: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            window_s: 0.25,
+            headroom: 1.0,
+            growth_factor: 3.0,
+            max_replicas: 0,
+        }
+    }
+}
+
+/// How the fleet spends worker capacity on weight residency.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReplicationPolicy {
+    /// No controller: residency changes only through batch execution —
+    /// the pre-replication model, bitwise-preserved.
+    None,
+    /// Pinned replica targets: `targets` maps zoo network names to
+    /// replica counts (the wildcard name `*` applies to every network;
+    /// explicit names override it). Best effort: the controller never
+    /// steals a worker from a network at or below its own target.
+    Static { targets: Vec<(String, usize)> },
+    /// Demand-driven targets from a sliding arrival/reload-cost window.
+    Adaptive(AdaptiveConfig),
+}
+
+impl ReplicationPolicy {
+    /// Stable label for tables/CSV.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReplicationPolicy::None => "none",
+            ReplicationPolicy::Static { .. } => "static",
+            ReplicationPolicy::Adaptive(_) => "adaptive",
+        }
+    }
+
+    /// Parse a CLI spec: `none`, `adaptive`, `adaptive:<window_ms>`,
+    /// `static:<count>` (every network), or
+    /// `static:<name>=<count>[,<name>=<count>...]`.
+    pub fn parse(spec: &str) -> anyhow::Result<ReplicationPolicy> {
+        match spec.split_once(':') {
+            None if spec == "none" => Ok(ReplicationPolicy::None),
+            None if spec == "adaptive" => {
+                Ok(ReplicationPolicy::Adaptive(AdaptiveConfig::default()))
+            }
+            Some(("adaptive", ms)) => {
+                let window_ms: f64 = ms
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad adaptive window `{ms}` (milliseconds)"))?;
+                anyhow::ensure!(
+                    window_ms.is_finite() && window_ms > 0.0,
+                    "adaptive window must be positive and finite, got {window_ms}"
+                );
+                Ok(ReplicationPolicy::Adaptive(AdaptiveConfig {
+                    window_s: window_ms * 1e-3,
+                    ..AdaptiveConfig::default()
+                }))
+            }
+            Some(("static", rest)) if !rest.is_empty() => {
+                if let Ok(count) = rest.parse::<usize>() {
+                    return Ok(ReplicationPolicy::Static {
+                        targets: vec![("*".to_string(), count)],
+                    });
+                }
+                let targets = rest
+                    .split(',')
+                    .map(|kv| {
+                        let (name, count) = kv.split_once('=').ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "static spec is static:<count> or static:<name>=<count>,..., got `{kv}`"
+                            )
+                        })?;
+                        let count: usize = count
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad replica count `{count}`"))?;
+                        Ok((name.trim().to_string(), count))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                Ok(ReplicationPolicy::Static { targets })
+            }
+            _ => anyhow::bail!(
+                "unknown replication spec `{spec}` (expected none, static:<spec>, adaptive)"
+            ),
+        }
+    }
+}
+
+/// A planned residency change the serving simulator should apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaAction {
+    /// Stream `net`'s weights onto `worker` (which must have no open
+    /// batch), charging the stream to its `busy_until`.
+    Prewarm { worker: usize, net: usize },
+    /// Drop `net`'s weights from `worker` (free: residency bookkeeping
+    /// only).
+    Drain { worker: usize, net: usize },
+}
+
+enum Mode {
+    Off,
+    /// Resolved per-network replica targets.
+    Static(Vec<usize>),
+    Adaptive(AdaptiveConfig),
+}
+
+/// The replication decision-maker. Owns the sliding windows and targets;
+/// reads fleet state (`&[VWorker]`, `&ReplicaSet`) and plans one
+/// [`ReplicaAction`] at a time — the simulator applies it and re-plans
+/// until the controller is satisfied, so every plan sees the residency
+/// its previous action produced. Everything is driven by virtual-time
+/// arrival events: same trace, same decisions, bit for bit.
+pub struct ReplicaController {
+    mode: Mode,
+    /// Per-network pre-warm cost, seconds (the reload `switch_s`).
+    prewarm_s: Vec<f64>,
+    /// Current replica targets (observability; `None` mode keeps zeros).
+    targets: Vec<usize>,
+    /// Whether each network has ever arrived (drains only apply to
+    /// networks that were live once).
+    seen: Vec<bool>,
+    /// Arrival times within the window, per network.
+    arrivals: Vec<VecDeque<f64>>,
+    /// `(time, cost_s)` of blocking reloads within the window, per network.
+    reloads: Vec<VecDeque<(f64, f64)>>,
+}
+
+impl ReplicaController {
+    /// Build a controller for `num_workers` workers over networks named
+    /// `names`, with `prewarm_s[net]` the cost of streaming each
+    /// network's weights. Static targets resolve against `names` (unknown
+    /// names are errors) and clamp to the fleet size.
+    pub fn new(
+        policy: &ReplicationPolicy,
+        names: &[&str],
+        prewarm_s: &[f64],
+        num_workers: usize,
+    ) -> anyhow::Result<Self> {
+        debug_assert_eq!(names.len(), prewarm_s.len());
+        let n = names.len();
+        let mode = match policy {
+            ReplicationPolicy::None => Mode::Off,
+            ReplicationPolicy::Static { targets } => {
+                let mut resolved = vec![0usize; n];
+                // Wildcard first, so explicit names override it.
+                for (name, count) in targets.iter().filter(|(name, _)| name == "*") {
+                    debug_assert_eq!(name, "*");
+                    resolved.iter_mut().for_each(|t| *t = *count);
+                }
+                for (name, count) in targets.iter().filter(|(name, _)| name != "*") {
+                    let idx = names.iter().position(|x| x == name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "static replication names unknown network `{name}` \
+                             (serving: {})",
+                            names.join(", ")
+                        )
+                    })?;
+                    resolved[idx] = *count;
+                }
+                resolved.iter_mut().for_each(|t| *t = (*t).min(num_workers));
+                Mode::Static(resolved)
+            }
+            ReplicationPolicy::Adaptive(cfg) => {
+                anyhow::ensure!(
+                    cfg.window_s.is_finite() && cfg.window_s > 0.0,
+                    "adaptive replication needs a positive, finite window, got {}",
+                    cfg.window_s
+                );
+                anyhow::ensure!(
+                    cfg.headroom.is_finite() && cfg.headroom > 0.0,
+                    "adaptive replication needs positive, finite headroom, got {}",
+                    cfg.headroom
+                );
+                anyhow::ensure!(
+                    cfg.growth_factor.is_finite() && cfg.growth_factor >= 1.0,
+                    "adaptive growth_factor must be finite and >= 1 \
+                     (growth can never be cheaper than repair), got {}",
+                    cfg.growth_factor
+                );
+                Mode::Adaptive(*cfg)
+            }
+        };
+        let targets = match &mode {
+            Mode::Static(t) => t.clone(),
+            _ => vec![0; n],
+        };
+        Ok(ReplicaController {
+            mode,
+            prewarm_s: prewarm_s.to_vec(),
+            targets,
+            seen: vec![false; n],
+            arrivals: vec![VecDeque::new(); n],
+            reloads: vec![VecDeque::new(); n],
+        })
+    }
+
+    /// `None`-policy controllers are inert: the simulator skips every
+    /// observation and planning call, keeping the pre-replication code
+    /// path untouched.
+    pub fn is_off(&self) -> bool {
+        matches!(self.mode, Mode::Off)
+    }
+
+    /// Current replica targets (zeros unless Static/grown-Adaptive).
+    pub fn targets(&self) -> &[usize] {
+        &self.targets
+    }
+
+    /// Record one arrival for `net` at virtual time `t`.
+    pub fn note_arrival(&mut self, net: usize, t: f64) {
+        self.seen[net] = true;
+        if let Mode::Adaptive(_) = self.mode {
+            self.arrivals[net].push_back(t);
+        }
+    }
+
+    /// Record a blocking weight reload `net` paid at `t` costing `cost_s`.
+    pub fn note_reload(&mut self, net: usize, t: f64, cost_s: f64) {
+        if let Mode::Adaptive(_) = self.mode {
+            self.reloads[net].push_back((t, cost_s));
+        }
+    }
+
+    /// A pre-warm for `net` was applied: its windowed reload spend is
+    /// consumed (each pre-warm must be funded by fresh reload pain, so a
+    /// single burst of reloads cannot trigger a storm of pre-warms).
+    pub fn prewarmed(&mut self, net: usize) {
+        self.reloads[net].clear();
+    }
+
+    fn prune(&mut self, now: f64, window_s: f64) {
+        let horizon = now - window_s;
+        for q in &mut self.arrivals {
+            while q.front().is_some_and(|&t| t < horizon) {
+                q.pop_front();
+            }
+        }
+        for q in &mut self.reloads {
+            while q.front().is_some_and(|&(t, _)| t < horizon) {
+                q.pop_front();
+            }
+        }
+    }
+
+    /// Plan the next residency change, if any. Deterministic: networks
+    /// are examined in index order; pre-warm victims are chosen by the
+    /// same `(busy_until, open members, id)` order placement uses, and a
+    /// drain (which is free) drops the lowest-id open-free holder. Only
+    /// workers with **no open batch** are ever touched, so issued
+    /// admission quotes stay upper bounds.
+    pub fn plan(
+        &mut self,
+        now: f64,
+        replicas: &ReplicaSet,
+        workers: &[VWorker],
+    ) -> Option<ReplicaAction> {
+        // Copy the adaptive knobs out so the arm below can update the
+        // windows and targets without fighting the borrow of `mode`; the
+        // static arm never mutates the controller, so it runs in place.
+        let cfg = match &self.mode {
+            Mode::Off => return None,
+            Mode::Static(targets) => return Self::plan_static(targets, replicas, workers),
+            Mode::Adaptive(cfg) => *cfg,
+        };
+        self.prune(now, cfg.window_s);
+        let cap = if cfg.max_replicas == 0 {
+            workers.len()
+        } else {
+            cfg.max_replicas.min(workers.len())
+        };
+        // Drain first: cold networks (live once, silent for a full
+        // window) give their workers back as pre-warm targets.
+        for net in 0..self.targets.len() {
+            if self.seen[net] && self.arrivals[net].is_empty() && replicas.count(net) > 0 {
+                self.targets[net] = 0;
+                if let Some(&w) = replicas
+                    .holders(net)
+                    .iter()
+                    .find(|&&w| workers[w].open.is_none())
+                {
+                    return Some(ReplicaAction::Drain { worker: w, net });
+                }
+            }
+        }
+        // Repair/grow: a homeless network whose windowed reload spend
+        // covers one pre-warm gets its residency restored; a resident
+        // one must show `growth_factor ×` that pain to widen its lane.
+        // The replica lands on the least-loaded open-free worker that is
+        // empty or holds a network no hotter (by windowed arrivals) than
+        // the one growing.
+        for net in 0..self.targets.len() {
+            let spend: f64 = self.reloads[net].iter().map(|&(_, c)| c).sum();
+            let count = replicas.count(net);
+            let need = if count == 0 {
+                cfg.headroom * self.prewarm_s[net]
+            } else {
+                cfg.growth_factor * cfg.headroom * self.prewarm_s[net]
+            };
+            if spend < need || count >= cap {
+                continue;
+            }
+            let hotness = self.arrivals[net].len();
+            let eligible = (0..workers.len()).filter(|&w| {
+                workers[w].open.is_none()
+                    && !replicas.is_holder(w, net)
+                    && match replicas.resident(w) {
+                        None => true,
+                        Some(y) => self.arrivals[y].len() <= hotness,
+                    }
+            });
+            if let Some(w) = least_loaded(workers, eligible) {
+                self.targets[net] = count + 1;
+                return Some(ReplicaAction::Prewarm { worker: w, net });
+            }
+        }
+        None
+    }
+
+    /// Static planning: pre-warm the first below-target network onto the
+    /// least-loaded worker that is empty or holds a network strictly
+    /// above its own target. Pure — no controller state involved.
+    fn plan_static(
+        targets: &[usize],
+        replicas: &ReplicaSet,
+        workers: &[VWorker],
+    ) -> Option<ReplicaAction> {
+        for (net, &target) in targets.iter().enumerate() {
+            if replicas.count(net) >= target {
+                continue;
+            }
+            let eligible = (0..workers.len()).filter(|&w| {
+                workers[w].open.is_none()
+                    && !replicas.is_holder(w, net)
+                    && match replicas.resident(w) {
+                        None => true,
+                        Some(y) => replicas.count(y) > targets[y],
+                    }
+            });
+            if let Some(w) = least_loaded(workers, eligible) {
+                return Some(ReplicaAction::Prewarm { worker: w, net });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::vworker::OpenBatch;
+
+    fn fleet(n: usize) -> Vec<VWorker> {
+        (0..n).map(VWorker::new).collect()
+    }
+
+    #[test]
+    fn replica_set_tracks_loads_and_evicts() {
+        let mut rs = ReplicaSet::new(3, 4);
+        assert_eq!(rs.count(0), 0);
+        rs.on_load(2, 0);
+        rs.on_load(1, 0);
+        assert_eq!(rs.holders(0), &[1, 2], "holders stay sorted by id");
+        assert!(rs.is_holder(2, 0));
+        assert_eq!(rs.resident(1), Some(0));
+        // Loading a different network on worker 2 evicts net 0 there.
+        rs.on_load(2, 1);
+        assert_eq!(rs.holders(0), &[1]);
+        assert_eq!(rs.holders(1), &[2]);
+        // Re-loading the same network is a no-op.
+        rs.on_load(2, 1);
+        assert_eq!(rs.holders(1), &[2]);
+        rs.on_evict(1);
+        assert_eq!(rs.count(0), 0);
+        assert_eq!(rs.resident(1), None);
+        // Evicting an empty worker is a no-op.
+        rs.on_evict(3);
+        assert_eq!(rs.resident(3), None);
+    }
+
+    #[test]
+    fn fold_reproduces_a_live_set() {
+        let events = [
+            (0, 1, ResidencyChange::Load),
+            (1, 1, ResidencyChange::Load),
+            (0, 1, ResidencyChange::Evict),
+            (0, 0, ResidencyChange::Load),
+            (2, 2, ResidencyChange::Load),
+        ]
+        .map(|(worker, net, change)| ResidencyEvent {
+            t_s: 0.0,
+            worker,
+            net,
+            change,
+            cause: ResidencyCause::Batch,
+        });
+        let rs = ReplicaSet::fold(3, 3, &events);
+        assert_eq!(rs.holders(0), &[0]);
+        assert_eq!(rs.holders(1), &[1]);
+        assert_eq!(rs.holders(2), &[2]);
+    }
+
+    #[test]
+    fn policy_specs_parse_and_label() {
+        assert_eq!(ReplicationPolicy::parse("none").unwrap(), ReplicationPolicy::None);
+        assert_eq!(
+            ReplicationPolicy::parse("adaptive").unwrap(),
+            ReplicationPolicy::Adaptive(AdaptiveConfig::default())
+        );
+        let ReplicationPolicy::Adaptive(cfg) = ReplicationPolicy::parse("adaptive:40").unwrap()
+        else {
+            panic!("adaptive:40 must parse as adaptive");
+        };
+        assert!((cfg.window_s - 0.04).abs() < 1e-12);
+        assert_eq!(
+            ReplicationPolicy::parse("static:2").unwrap(),
+            ReplicationPolicy::Static {
+                targets: vec![("*".to_string(), 2)]
+            }
+        );
+        assert_eq!(
+            ReplicationPolicy::parse("static:vgg11=2,mobilenetv1=1").unwrap(),
+            ReplicationPolicy::Static {
+                targets: vec![("vgg11".to_string(), 2), ("mobilenetv1".to_string(), 1)]
+            }
+        );
+        for p in [
+            ReplicationPolicy::None,
+            ReplicationPolicy::Adaptive(AdaptiveConfig::default()),
+            ReplicationPolicy::Static { targets: vec![] },
+        ] {
+            assert!(["none", "static", "adaptive"].contains(&p.label()));
+        }
+        for bad in [
+            "", "static", "static:", "static:x", "static:a=b", "adaptive:0", "adaptive:x", "rand",
+        ] {
+            assert!(ReplicationPolicy::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn static_targets_resolve_names_and_reject_unknowns() {
+        let policy = ReplicationPolicy::Static {
+            targets: vec![("*".to_string(), 1), ("a".to_string(), 2)],
+        };
+        let c = ReplicaController::new(&policy, &["a", "b"], &[1e-3, 1e-3], 4).unwrap();
+        assert_eq!(c.targets(), &[2, 1], "explicit names override the wildcard");
+        let bad = ReplicationPolicy::Static {
+            targets: vec![("nope".to_string(), 1)],
+        };
+        assert!(ReplicaController::new(&bad, &["a", "b"], &[1e-3, 1e-3], 4).is_err());
+        // Targets clamp to the fleet size.
+        let big = ReplicationPolicy::Static {
+            targets: vec![("a".to_string(), 9)],
+        };
+        let c = ReplicaController::new(&big, &["a", "b"], &[1e-3, 1e-3], 2).unwrap();
+        assert_eq!(c.targets(), &[2, 0]);
+    }
+
+    #[test]
+    fn off_controller_is_inert() {
+        let mut c =
+            ReplicaController::new(&ReplicationPolicy::None, &["a"], &[1e-3], 2).unwrap();
+        assert!(c.is_off());
+        let rs = ReplicaSet::new(1, 2);
+        assert_eq!(c.plan(0.0, &rs, &fleet(2)), None);
+    }
+
+    #[test]
+    fn static_plans_prewarms_up_to_target_without_stealing_below_target() {
+        let policy = ReplicationPolicy::Static {
+            targets: vec![("a".to_string(), 2), ("b".to_string(), 1)],
+        };
+        let mut c = ReplicaController::new(&policy, &["a", "b"], &[1e-3, 1e-3], 3).unwrap();
+        let mut rs = ReplicaSet::new(2, 3);
+        let workers = fleet(3);
+        // Applies actions exactly as the simulator would: plan, apply, replan.
+        let mut seen = Vec::new();
+        while let Some(a) = c.plan(0.0, &rs, &workers) {
+            let ReplicaAction::Prewarm { worker, net } = a else {
+                panic!("static never drains");
+            };
+            rs.on_load(worker, net);
+            seen.push((worker, net));
+            assert!(seen.len() <= 3, "static planning must converge");
+        }
+        assert_eq!(rs.holders(0), &[0, 1], "net a reaches its target of 2");
+        assert_eq!(rs.holders(1), &[2], "net b gets the remaining worker");
+        // Fully-provisioned fleet: no worker is empty or above target, so
+        // nothing more can be stolen even though a 4th deficit could exist.
+        assert_eq!(c.plan(0.0, &rs, &workers), None);
+    }
+
+    #[test]
+    fn static_never_touches_workers_with_open_batches() {
+        let policy = ReplicationPolicy::Static {
+            targets: vec![("a".to_string(), 1)],
+        };
+        let mut c = ReplicaController::new(&policy, &["a"], &[1e-3], 1).unwrap();
+        let rs = ReplicaSet::new(1, 1);
+        let mut workers = fleet(1);
+        workers[0].open = Some(OpenBatch {
+            net: 0,
+            first_arrival_s: 0.0,
+            deadline_s: 0.001,
+            members: vec![(0, 0.0)],
+        });
+        assert_eq!(
+            c.plan(0.0, &rs, &workers),
+            None,
+            "a quoted worker must never be pre-warmed"
+        );
+    }
+
+    #[test]
+    fn adaptive_repairs_cheap_grows_dear_and_clears_its_funding() {
+        let policy = ReplicationPolicy::Adaptive(AdaptiveConfig {
+            window_s: 1.0,
+            headroom: 1.0,
+            growth_factor: 3.0,
+            max_replicas: 0,
+        });
+        let mut c = ReplicaController::new(&policy, &["a", "b"], &[1e-3, 1e-3], 2).unwrap();
+        let mut rs = ReplicaSet::new(2, 2);
+        let workers = fleet(2);
+        c.note_arrival(0, 0.0);
+        // No reload pain yet: nothing to do.
+        assert_eq!(c.plan(0.01, &rs, &workers), None);
+        // One blocking reload covers one pre-warm: repair (count 0 → 1).
+        c.note_reload(0, 0.02, 1e-3);
+        let a = c.plan(0.03, &rs, &workers);
+        assert_eq!(a, Some(ReplicaAction::Prewarm { worker: 0, net: 0 }));
+        rs.on_load(0, 0);
+        c.prewarmed(0);
+        // Funding consumed: no second pre-warm until new reload pain.
+        assert_eq!(c.plan(0.04, &rs, &workers), None);
+        assert_eq!(c.targets()[0], 1);
+        // A resident network needs growth_factor × the pain to widen: one
+        // fresh reload is not enough...
+        c.note_reload(0, 0.05, 1e-3);
+        assert_eq!(c.plan(0.06, &rs, &workers), None, "growth is dearer than repair");
+        // ...three reloads' worth is.
+        c.note_reload(0, 0.07, 1e-3);
+        c.note_reload(0, 0.08, 1e-3);
+        let a = c.plan(0.09, &rs, &workers);
+        assert_eq!(a, Some(ReplicaAction::Prewarm { worker: 1, net: 0 }));
+        rs.on_load(1, 0);
+        c.prewarmed(0);
+        assert_eq!(c.targets()[0], 2);
+        // Fully replicated: even heavy fresh pain cannot grow past the fleet.
+        for i in 0..4 {
+            c.note_reload(0, 0.1 + i as f64 * 0.01, 1e-3);
+        }
+        assert_eq!(c.plan(0.2, &rs, &workers), None);
+    }
+
+    #[test]
+    fn adaptive_never_steals_a_hotter_networks_worker() {
+        let policy = ReplicationPolicy::Adaptive(AdaptiveConfig {
+            window_s: 1.0,
+            ..AdaptiveConfig::default()
+        });
+        let mut c = ReplicaController::new(&policy, &["hot", "cold"], &[1e-3, 1e-3], 1).unwrap();
+        let mut rs = ReplicaSet::new(2, 1);
+        let workers = fleet(1);
+        for i in 0..5 {
+            c.note_arrival(0, i as f64 * 0.01);
+        }
+        rs.on_load(0, 0);
+        c.note_arrival(1, 0.05);
+        c.note_reload(1, 0.05, 1e-3);
+        assert_eq!(
+            c.plan(0.06, &rs, &workers),
+            None,
+            "the only worker holds a hotter network: cold must not steal it"
+        );
+    }
+
+    #[test]
+    fn adaptive_drains_cold_networks_after_a_silent_window() {
+        let policy = ReplicationPolicy::Adaptive(AdaptiveConfig {
+            window_s: 0.01,
+            ..AdaptiveConfig::default()
+        });
+        let mut c = ReplicaController::new(&policy, &["a", "b"], &[1e-3, 1e-3], 2).unwrap();
+        let mut rs = ReplicaSet::new(2, 2);
+        let workers = fleet(2);
+        c.note_arrival(0, 0.0);
+        c.note_arrival(1, 0.0);
+        rs.on_load(0, 0);
+        rs.on_load(1, 1);
+        // Inside the window both networks are live: no drains.
+        assert_eq!(c.plan(0.005, &rs, &workers), None);
+        // A full silent window later, both are cold and drain in index order.
+        assert_eq!(
+            c.plan(0.1, &rs, &workers),
+            Some(ReplicaAction::Drain { worker: 0, net: 0 })
+        );
+        rs.on_evict(0);
+        assert_eq!(
+            c.plan(0.1, &rs, &workers),
+            Some(ReplicaAction::Drain { worker: 1, net: 1 })
+        );
+        rs.on_evict(1);
+        assert_eq!(c.plan(0.1, &rs, &workers), None, "nothing left to drain");
+        assert_eq!(c.targets(), &[0, 0]);
+    }
+}

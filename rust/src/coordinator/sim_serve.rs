@@ -29,6 +29,15 @@
 //!   alone. Routing to a worker already holding the request's weights
 //!   (`NetworkAffinity`) is what turns reload-avoidance into a placement
 //!   problem once `workers > 1`.
+//! * A [`ReplicaSet`] tracks, per network, which workers currently hold
+//!   its weights (maintained from every worker load/evict), and a
+//!   [`ReplicationPolicy`] may spend worker capacity widening a hot
+//!   network's lane: pre-warming weights onto a worker with no open batch
+//!   (charging the stream to its `busy_until`, off any batch's critical
+//!   path) and draining replicas of cold networks. Replication copies
+//!   weights, never plans — it prices pre-warms from the same per-network
+//!   `switch_s` reloads use, so K networks still cost exactly K engine
+//!   plans at any replica count.
 //! * Each worker has at most one *open* batch. A request placed on a
 //!   worker whose open batch matches its network joins it (a
 //!   **coalesce**) when the grown batch still meets the SLO for the
@@ -42,8 +51,9 @@
 //!   arrival itself when the request fills the batch), so a batch can
 //!   only finish at or before what was quoted. The quote argument is
 //!   per-worker: between a quote and the quoted batch, only that worker's
-//!   own open batch can execute on it, so `busy_until` and `loaded` are
-//!   exact at quote time — exactly the single-worker invariant, per slot.
+//!   own open batch can execute on it (pre-warms skip workers with open
+//!   batches), so `busy_until` and `loaded` are exact at quote time —
+//!   exactly the single-worker invariant, per slot.
 //! * The per-network batch cap is `batch_opt`-tuned: the largest batch
 //!   whose full-batch latency fits the SLO (capped by `max_batch`). A
 //!   network where even batch 1 misses the SLO has cap 0 — every request
@@ -58,6 +68,10 @@ use crate::nn::Network;
 use crate::sim::engine::{Design, Engine};
 
 use super::placement::Placement;
+use super::replica::{
+    ReplicaAction, ReplicaController, ReplicaSet, ReplicationPolicy, ResidencyCause,
+    ResidencyChange, ResidencyEvent,
+};
 use super::vworker::{OpenBatch, VWorker, WorkerStats};
 
 /// One simulated inference request: `net` indexes the network slice the
@@ -82,7 +96,7 @@ pub enum Verdict {
 }
 
 /// Simulated-serving configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SimServeConfig {
     /// Which design prices the batches (default: the paper's headline).
     pub design: Design,
@@ -101,6 +115,9 @@ pub struct SimServeConfig {
     /// Which worker each admitted request rides (default round-robin;
     /// irrelevant at `workers = 1`, where every policy picks worker 0).
     pub placement: Placement,
+    /// How the fleet spends capacity on weight residency (default
+    /// [`ReplicationPolicy::None`] — the pre-replication model, bitwise).
+    pub replication: ReplicationPolicy,
 }
 
 impl Default for SimServeConfig {
@@ -113,6 +130,7 @@ impl Default for SimServeConfig {
             admission: true,
             workers: 1,
             placement: Placement::RoundRobin,
+            replication: ReplicationPolicy::None,
         }
     }
 }
@@ -150,6 +168,11 @@ pub struct NetStats {
     /// Batches that had to stream this network's weights because the
     /// executing worker held a different network (or none).
     pub reloads: u64,
+    /// Anticipatory weight streams the replica controller spent on this
+    /// network (same bytes as a reload, off the batch critical path).
+    pub prewarms: u64,
+    /// Replicas of this network the controller dropped for being cold.
+    pub drains: u64,
     /// Completions within the SLO (== `completed` under admission).
     pub within_slo: u64,
     /// Sum of completion latencies, seconds.
@@ -185,8 +208,8 @@ impl NetStats {
     }
 }
 
-/// End-of-trace report: per-network rows, per-worker rows, and trace-wide
-/// aggregates.
+/// End-of-trace report: per-network rows, per-worker rows, residency
+/// accounting, and trace-wide aggregates.
 #[derive(Debug, Clone)]
 pub struct SimServeReport {
     pub per_net: Vec<NetStats>,
@@ -196,10 +219,18 @@ pub struct SimServeReport {
     pub span_s: f64,
     /// Engine plan computations this replay caused (cache misses while it
     /// ran). A fresh engine pays exactly one per distinct network —
-    /// independent of worker count and placement policy — and a warm one
-    /// pays zero: the cross-trace cache reuse the ROADMAP targets.
+    /// independent of worker count, placement policy, and replica count —
+    /// and a warm one pays zero: the cross-trace cache reuse the ROADMAP
+    /// targets.
     pub plans_computed: u64,
     pub completions: Vec<Completion>,
+    /// Every residency change (batch loads/evicts, pre-warms, drains), in
+    /// simulation order; folds back into `replica_holders` exactly
+    /// (property-checked in `tests/replica_props.rs`).
+    pub residency_log: Vec<ResidencyEvent>,
+    /// Final replica sets: `replica_holders[net]` is the sorted list of
+    /// workers holding `net`'s weights at end of trace.
+    pub replica_holders: Vec<Vec<usize>>,
 }
 
 impl SimServeReport {
@@ -235,6 +266,19 @@ impl SimServeReport {
         self.total(|n| n.reloads)
     }
 
+    pub fn prewarms(&self) -> u64 {
+        self.total(|n| n.prewarms)
+    }
+
+    pub fn drains(&self) -> u64 {
+        self.total(|n| n.drains)
+    }
+
+    /// Requests served within their SLO — the fleet's useful output.
+    pub fn goodput(&self) -> u64 {
+        self.total(|n| n.within_slo)
+    }
+
     /// Fleet size the replay ran with.
     pub fn workers(&self) -> usize {
         self.per_worker.len()
@@ -257,7 +301,7 @@ impl SimServeReport {
         if offered == 0 {
             0.0
         } else {
-            self.total(|n| n.within_slo) as f64 / offered as f64
+            self.goodput() as f64 / offered as f64
         }
     }
 
@@ -273,8 +317,9 @@ impl SimServeReport {
 
 /// The simulated serving coordinator. Borrows a shared [`Engine`]; all
 /// pricing flows through its plan cache, so a server over K networks costs
-/// K plan computations — for any fleet size — however long the trace is
-/// (pinned in `benches/hotpath.rs` and `tests/serve_sim.rs`).
+/// K plan computations — for any fleet size or replica count — however
+/// long the trace is (pinned in `benches/hotpath.rs`, `tests/serve_sim.rs`
+/// and `tests/replica_sim.rs`).
 pub struct SimServer<'e> {
     engine: &'e Engine,
     nets: Vec<Network>,
@@ -284,11 +329,17 @@ pub struct SimServer<'e> {
     /// per worker: each worker's batches are bounded independently, so
     /// quotes stay upper bounds per slot.
     caps: Vec<u32>,
-    /// Per-network weight-reload penalty, seconds.
+    /// Per-network weight-reload penalty, seconds (also the pre-warm
+    /// price: replication streams the same bytes, just off-path).
     switch_s: Vec<f64>,
     /// Fleet-shared makespan memo (the engine's plan cache sits below it).
     makespans: HashMap<(usize, u32), f64>,
     workers: Vec<VWorker>,
+    /// Who holds which network's weights (mirrors every `loaded` change).
+    replicas: ReplicaSet,
+    /// The replication decision-maker (inert under policy `None`).
+    controller: ReplicaController,
+    residency_log: Vec<ResidencyEvent>,
     /// Round-robin position, advanced once per placement consultation.
     rr_cursor: usize,
     last_arrival_s: f64,
@@ -321,10 +372,13 @@ impl<'e> SimServer<'e> {
             };
             caps.push(cap);
         }
-        let switch_s = nets
+        let switch_s: Vec<f64> = nets
             .iter()
             .map(|n| engine.dram().transfer_ns(n.weight_bytes()) * 1e-9)
             .collect();
+        let names: Vec<&str> = nets.iter().map(|n| n.name.as_str()).collect();
+        let controller =
+            ReplicaController::new(&cfg.replication, &names, &switch_s, cfg.workers)?;
         let stats = nets
             .iter()
             .map(|n| NetStats {
@@ -335,11 +389,14 @@ impl<'e> SimServer<'e> {
         Ok(SimServer {
             engine,
             nets: nets.to_vec(),
+            replicas: ReplicaSet::new(nets.len(), cfg.workers),
+            controller,
+            residency_log: Vec::new(),
+            workers: (0..cfg.workers).map(VWorker::new).collect(),
             cfg,
             caps,
             switch_s,
             makespans: HashMap::new(),
-            workers: (0..cfg.workers).map(VWorker::new).collect(),
             rr_cursor: 0,
             last_arrival_s: 0.0,
             stats,
@@ -352,6 +409,40 @@ impl<'e> SimServer<'e> {
     /// the server was built over).
     pub fn caps(&self) -> &[u32] {
         &self.caps
+    }
+
+    /// The fleet's live residency index (who holds which weights).
+    pub fn replicas(&self) -> &ReplicaSet {
+        &self.replicas
+    }
+
+    /// Completions recorded so far (grows as batches flush mid-trace) —
+    /// the feedback signal closed-loop drivers consume.
+    pub fn completions_so_far(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    /// Earliest linger deadline among the fleet's open batches, if any.
+    pub fn next_deadline_s(&self) -> Option<f64> {
+        self.workers
+            .iter()
+            .filter_map(|w| w.open.as_ref().map(|b| b.deadline_s))
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Advance virtual time to `now` without an arrival, flushing every
+    /// open batch whose linger deadline has passed. Closed-loop drivers
+    /// use this when every client is blocked on an in-flight batch.
+    /// Later offers must arrive at or after `now`.
+    pub fn advance(&mut self, now: f64) -> Result<()> {
+        anyhow::ensure!(
+            now >= self.last_arrival_s,
+            "advance to {} would move time backwards past {}",
+            now,
+            self.last_arrival_s
+        );
+        self.last_arrival_s = now;
+        self.flush_due(now)
     }
 
     /// Full-batch pipeline makespan for `k` requests of network `net`,
@@ -375,9 +466,9 @@ impl<'e> SimServer<'e> {
     /// pipeline. Returns `(start, reloaded, completion)` — the single
     /// source of truth both quoting and execution use, so the realized
     /// accounting can never diverge from the quoted completion. With at
-    /// most one open batch per worker, nothing else can execute on `w`
-    /// between now and that batch, so its `busy_until_s` and `loaded`
-    /// are exact at quote time.
+    /// most one open batch per worker (and pre-warms barred from workers
+    /// with one), nothing else can execute on `w` between now and that
+    /// batch, so its `busy_until_s` and `loaded` are exact at quote time.
     fn price(&mut self, w: usize, net: usize, k: u32, ready_s: f64) -> Result<(f64, bool, f64)> {
         let makespan = self.makespan_s(net, k)?;
         let wk = &self.workers[w];
@@ -398,6 +489,29 @@ impl<'e> SimServer<'e> {
     fn flush(&mut self, w: usize, batch: OpenBatch, ready_s: f64) -> Result<()> {
         let k = batch.members.len() as u32;
         let (start, reloaded, done) = self.price(w, batch.net, k, ready_s)?;
+        if reloaded {
+            if let Some(old) = self.replicas.resident(w) {
+                self.residency_log.push(ResidencyEvent {
+                    t_s: start,
+                    worker: w,
+                    net: old,
+                    change: ResidencyChange::Evict,
+                    cause: ResidencyCause::Batch,
+                });
+            }
+            self.replicas.on_load(w, batch.net);
+            self.residency_log.push(ResidencyEvent {
+                t_s: start,
+                worker: w,
+                net: batch.net,
+                change: ResidencyChange::Load,
+                cause: ResidencyCause::Batch,
+            });
+            if !self.controller.is_off() {
+                self.controller
+                    .note_reload(batch.net, start, self.switch_s[batch.net]);
+            }
+        }
         let wk = &mut self.workers[w];
         wk.batches += 1;
         wk.completed += batch.members.len() as u64;
@@ -444,6 +558,76 @@ impl<'e> SimServer<'e> {
         Ok(())
     }
 
+    /// Stream `net`'s weights onto worker `w` ahead of demand: the worker
+    /// commits `switch_s[net]` after whatever it already owes, and holds
+    /// `net` from now on (placement may route to it immediately — the
+    /// batch simply starts after the stream). Never touches a worker with
+    /// an open batch, so issued quotes stay upper bounds.
+    fn apply_prewarm(&mut self, w: usize, net: usize, now: f64) {
+        debug_assert!(self.workers[w].open.is_none());
+        debug_assert_ne!(self.replicas.resident(w), Some(net));
+        if let Some(old) = self.replicas.resident(w) {
+            self.residency_log.push(ResidencyEvent {
+                t_s: now,
+                worker: w,
+                net: old,
+                change: ResidencyChange::Evict,
+                cause: ResidencyCause::Prewarm,
+            });
+        }
+        self.replicas.on_load(w, net);
+        self.residency_log.push(ResidencyEvent {
+            t_s: now,
+            worker: w,
+            net,
+            change: ResidencyChange::Load,
+            cause: ResidencyCause::Prewarm,
+        });
+        let cost = self.switch_s[net];
+        let wk = &mut self.workers[w];
+        wk.busy_until_s = wk.busy_until_s.max(now) + cost;
+        wk.busy_s += cost;
+        wk.prewarms += 1;
+        wk.loaded = Some(net);
+        self.stats[net].prewarms += 1;
+    }
+
+    /// Drop `net`'s weights from worker `w` (free: residency bookkeeping
+    /// only — the worker becomes a clean pre-warm target).
+    fn apply_drain(&mut self, w: usize, net: usize, now: f64) {
+        debug_assert!(self.workers[w].open.is_none());
+        debug_assert_eq!(self.workers[w].loaded, Some(net));
+        self.replicas.on_evict(w);
+        self.residency_log.push(ResidencyEvent {
+            t_s: now,
+            worker: w,
+            net,
+            change: ResidencyChange::Evict,
+            cause: ResidencyCause::Drain,
+        });
+        self.workers[w].loaded = None;
+        self.stats[net].drains += 1;
+    }
+
+    /// Let the replication controller reshape residency at virtual time
+    /// `now`: plan → apply → re-plan until it is satisfied, so every plan
+    /// sees the residency its previous action produced. Each pre-warm
+    /// consumes its funding (`prewarmed`), so the loop terminates; the
+    /// budget is a backstop.
+    fn run_controller(&mut self, now: f64) {
+        let budget = self.workers.len() * (self.nets.len() + 1);
+        for _ in 0..budget {
+            match self.controller.plan(now, &self.replicas, &self.workers) {
+                Some(ReplicaAction::Prewarm { worker, net }) => {
+                    self.apply_prewarm(worker, net, now);
+                    self.controller.prewarmed(net);
+                }
+                Some(ReplicaAction::Drain { worker, net }) => self.apply_drain(worker, net, now),
+                None => return,
+            }
+        }
+    }
+
     /// Offer one request. Arrival times must be non-decreasing.
     pub fn offer(&mut self, req: SimRequest) -> Result<Verdict> {
         anyhow::ensure!(
@@ -464,6 +648,14 @@ impl<'e> SimServer<'e> {
         self.flush_due(req.arrival_s)?;
         self.stats[req.net].offered += 1;
 
+        // The replication controller observes demand and may reshape
+        // residency before placement sees it. Policy `None` skips this
+        // entirely: the pre-replication code path, bit for bit.
+        if !self.controller.is_off() {
+            self.controller.note_arrival(req.net, req.arrival_s);
+            self.run_controller(req.arrival_s);
+        }
+
         let t = req.arrival_s;
         let cap = self.caps[req.net];
         if cap == 0 {
@@ -479,7 +671,7 @@ impl<'e> SimServer<'e> {
         let w = self
             .cfg
             .placement
-            .choose(&self.workers, req.net, self.rr_cursor);
+            .choose(&self.workers, &self.replicas, req.net, self.rr_cursor);
         self.rr_cursor = (self.rr_cursor + 1) % self.workers.len();
 
         // Try to coalesce into the placed worker's open batch. The grown
@@ -582,6 +774,8 @@ impl<'e> SimServer<'e> {
             span_s,
             plans_computed: self.engine.cache_stats().misses - self.misses_at_start,
             completions: self.completions,
+            residency_log: self.residency_log,
+            replica_holders: self.replicas.snapshot(),
         })
     }
 }
@@ -637,9 +831,16 @@ mod tests {
         assert_eq!(r.coalesced(), r.accepted() - r.batches());
         // one network, batches back to back: exactly one weight reload
         assert_eq!(r.reloads(), 1);
+        assert_eq!(r.prewarms(), 0, "policy None never pre-warms");
+        assert_eq!(r.drains(), 0);
         assert_eq!(r.completed(), 6);
         assert_eq!(r.slo_attainment(), 1.0);
         assert!(r.span_s > 0.0);
+        // The residency log carries exactly that one load; it folds back
+        // into the final replica set.
+        assert_eq!(r.residency_log.len(), 1);
+        assert_eq!(r.replica_holders[0], vec![0]);
+        assert_eq!(r.per_worker[0].resident, Some(0));
     }
 
     #[test]
@@ -686,6 +887,7 @@ mod tests {
         assert_eq!(r.reloads(), 0);
         assert_eq!(r.span_s, 0.0);
         assert_eq!(r.slo_attainment(), 0.0);
+        assert!(r.residency_log.is_empty(), "rejections leave no residency");
     }
 
     #[test]
@@ -725,6 +927,7 @@ mod tests {
             max_wait_s: 0.001,
             ..SimServeConfig::default()
         };
+        let slo_s = cfg.slo_s;
         let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
         let trace = reqs(&[
             (0, 0.00),
@@ -739,7 +942,7 @@ mod tests {
         assert_eq!(r.completed(), r.accepted());
         for c in &r.completions {
             assert!(
-                c.latency_s() <= cfg.slo_s + 1e-9,
+                c.latency_s() <= slo_s + 1e-9,
                 "request {} latency {} > slo",
                 c.id,
                 c.latency_s()
@@ -770,6 +973,7 @@ mod tests {
         assert_eq!(r.rejected(), 0);
         assert_eq!(r.completed(), 3);
         assert_eq!(r.slo_attainment(), 0.0, "nothing fits a 1µs SLO");
+        assert_eq!(r.goodput(), 0);
     }
 
     #[test]
@@ -797,12 +1001,48 @@ mod tests {
                 arrival_s: 2.0
             })
             .is_err());
+        assert!(sv.advance(0.5).is_err(), "advance cannot rewind time");
         assert!(SimServer::new(&eng, &[], SimServeConfig::default()).is_err());
         let zero_workers = SimServeConfig {
             workers: 0,
             ..SimServeConfig::default()
         };
         assert!(SimServer::new(&eng, &nets, zero_workers).is_err());
+        // Static replication naming an absent network is a build error.
+        let bad_static = SimServeConfig {
+            replication: ReplicationPolicy::Static {
+                targets: vec![("resnet152".to_string(), 2)],
+            },
+            ..SimServeConfig::default()
+        };
+        assert!(SimServer::new(&eng, &nets, bad_static).is_err());
+    }
+
+    #[test]
+    fn advance_flushes_due_batches_between_arrivals() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        sv.offer(SimRequest {
+            id: 0,
+            net: 0,
+            arrival_s: 0.0,
+        })
+        .unwrap();
+        assert_eq!(sv.completions_so_far().len(), 0, "batch still lingering");
+        let deadline = sv.next_deadline_s().expect("one open batch");
+        assert_eq!(deadline, 0.001);
+        sv.advance(deadline).unwrap();
+        assert_eq!(sv.completions_so_far().len(), 1, "advance flushed it");
+        assert_eq!(sv.next_deadline_s(), None);
+        let r = sv.finish().unwrap();
+        assert_eq!(r.completed(), 1);
     }
 
     #[test]
@@ -857,6 +1097,8 @@ mod tests {
         assert_eq!(r.per_worker[1].reloads, 1);
         let completed: u64 = r.per_worker.iter().map(|w| w.completed).sum();
         assert_eq!(completed, r.completed());
+        // Both workers end up in net 0's replica set.
+        assert_eq!(r.replica_holders[0], vec![0, 1]);
     }
 
     #[test]
@@ -879,6 +1121,7 @@ mod tests {
         assert_eq!(r.per_worker[0].batches, 4, "everything rides the hot worker");
         assert_eq!(r.per_worker[1].batches, 0);
         assert_eq!(r.per_worker[2].batches, 0);
+        assert_eq!(r.replica_holders[0], vec![0], "single residency under None");
     }
 
     #[test]
@@ -893,6 +1136,10 @@ mod tests {
             placement: Placement::LeastLoaded,
             ..SimServeConfig::default()
         };
+        let solo_cfg = SimServeConfig {
+            workers: 1,
+            ..cfg.clone()
+        };
         let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
         run(&mut sv, &reqs(&[(0, 0.0), (0, 0.0), (0, 0.0), (0, 0.0)]));
         let r = sv.finish().unwrap();
@@ -905,10 +1152,6 @@ mod tests {
         }
         // Two workers halve the span of four serial batch-1 executions:
         // the fleet finishes strictly earlier than one worker would.
-        let solo_cfg = SimServeConfig {
-            workers: 1,
-            ..cfg
-        };
         let eng2 = engine();
         let mut solo = SimServer::new(&eng2, &nets, solo_cfg).unwrap();
         run(&mut solo, &reqs(&[(0, 0.0), (0, 0.0), (0, 0.0), (0, 0.0)]));
@@ -946,5 +1189,39 @@ mod tests {
         }
         assert_eq!(spans[0], spans[1]);
         assert_eq!(spans[0], spans[2]);
+    }
+
+    #[test]
+    fn static_replication_prewarms_the_fleet_before_any_batch() {
+        let eng = engine();
+        let nets = [
+            zoo::by_name("mobilenetv1", 100).unwrap(),
+            zoo::by_name("vgg11", 100).unwrap(),
+        ];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 2,
+            max_wait_s: 0.0,
+            workers: 3,
+            placement: Placement::NetworkAffinity,
+            replication: ReplicationPolicy::Static {
+                targets: vec![("mobilenetv1".to_string(), 2), ("vgg11".to_string(), 1)],
+            },
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        run(&mut sv, &reqs(&[(0, 0.0), (1, 0.0), (0, 0.0), (1, 0.0)]));
+        let r = sv.finish().unwrap();
+        // The first offer pre-warmed every target before placement ran:
+        // no batch ever paid a blocking reload.
+        assert_eq!(r.prewarms(), 3);
+        assert_eq!(r.reloads(), 0, "static pre-warm absorbs every first load");
+        assert_eq!(r.replica_holders[0].len(), 2, "hot net holds 2 replicas");
+        assert_eq!(r.replica_holders[1].len(), 1);
+        assert_eq!(r.completed(), 4);
+        // Pre-warm spend shows up in worker accounting.
+        let prewarms: u64 = r.per_worker.iter().map(|w| w.prewarms).sum();
+        assert_eq!(prewarms, 3);
+        assert!(r.per_worker.iter().all(|w| w.busy_s > 0.0));
     }
 }

@@ -2,17 +2,21 @@
 //!
 //! A [`VWorker`] is one simulated execution slot: it remembers when it
 //! drains (`busy_until_s`), which network's weights it currently holds
-//! (`loaded`), its single open batch, and its own reload/utilization
-//! accounting. The fleet-level scheduler ([`SimServer`]) owns the pricing
-//! (cached-plan makespans, reload penalties) and consults a
-//! [`Placement`] policy to pick which worker a request rides; the worker
+//! (`loaded`), its single open batch, and its own reload/pre-warm/
+//! utilization accounting. The fleet-level scheduler ([`SimServer`]) owns
+//! the pricing (cached-plan makespans, reload penalties), consults a
+//! [`Placement`] policy to pick which worker a request rides, and mirrors
+//! every `loaded` change into the fleet's [`ReplicaSet`]; the worker
 //! itself is pure state, so the accepted-never-misses-SLO argument stays
 //! per-worker: only this worker's own open batch can execute on it
 //! between a quote and the quoted batch, exactly as in the single-worker
-//! model.
+//! model. (The replication controller may also stream weights onto a
+//! worker — a pre-warm — but only when it has **no open batch**, so no
+//! issued quote is ever invalidated.)
 //!
 //! [`SimServer`]: crate::coordinator::sim_serve::SimServer
 //! [`Placement`]: crate::coordinator::placement::Placement
+//! [`ReplicaSet`]: crate::coordinator::replica::ReplicaSet
 
 /// One not-yet-executed batch on a worker. At most one per worker.
 #[derive(Debug, Clone)]
@@ -38,10 +42,16 @@ pub struct WorkerStats {
     /// Batches that had to stream weights because a different network (or
     /// none) was loaded on this worker when they executed.
     pub reloads: u64,
-    /// Seconds spent executing (reload + pipeline), excluding idle gaps.
+    /// Weight streams the replica controller charged to this worker ahead
+    /// of demand (same cost as a reload, off the batch critical path).
+    pub prewarms: u64,
+    /// Seconds spent executing (reload + pre-warm + pipeline), excluding
+    /// idle gaps.
     pub busy_s: f64,
     /// When this worker went idle after its last batch.
     pub idle_at_s: f64,
+    /// Network resident at end of trace, if any.
+    pub resident: Option<usize>,
 }
 
 impl WorkerStats {
@@ -56,7 +66,8 @@ impl WorkerStats {
 }
 
 /// One virtual worker: FIFO over its own batches, one open batch at a
-/// time, weights stay loaded until a different network executes.
+/// time, weights stay loaded until a different network executes (or the
+/// replica controller pre-warms/drains them).
 #[derive(Debug)]
 pub struct VWorker {
     pub id: usize,
@@ -69,6 +80,7 @@ pub struct VWorker {
     pub batches: u64,
     pub completed: u64,
     pub reloads: u64,
+    pub prewarms: u64,
     pub busy_s: f64,
 }
 
@@ -82,6 +94,7 @@ impl VWorker {
             batches: 0,
             completed: 0,
             reloads: 0,
+            prewarms: 0,
             busy_s: 0.0,
         }
     }
@@ -91,11 +104,20 @@ impl VWorker {
         self.open.as_ref().map_or(0, |b| b.members.len())
     }
 
+    /// Network of the open batch, if one is open.
+    pub fn open_net(&self) -> Option<usize> {
+        self.open.as_ref().map(|b| b.net)
+    }
+
     /// Whether routing a request for `net` here avoids a weight reload:
     /// the weights are resident, or the open batch (which will load them)
-    /// is for the same network.
+    /// is for the same network. This is the single-worker view; placement
+    /// evaluates the same predicate through the fleet's `ReplicaSet`
+    /// (`is_holder(w, net) || open_net() == Some(net)`), which the
+    /// simulator keeps in exact mirror with `loaded` — the equivalence is
+    /// what `tests/replica_props.rs` conserves.
     pub fn holds(&self, net: usize) -> bool {
-        self.loaded == Some(net) || self.open.as_ref().is_some_and(|b| b.net == net)
+        self.loaded == Some(net) || self.open_net() == Some(net)
     }
 
     /// Snapshot the end-of-trace counters.
@@ -105,8 +127,10 @@ impl VWorker {
             batches: self.batches,
             completed: self.completed,
             reloads: self.reloads,
+            prewarms: self.prewarms,
             busy_s: self.busy_s,
             idle_at_s: self.busy_until_s,
+            resident: self.loaded,
         }
     }
 }
@@ -121,9 +145,11 @@ mod tests {
         assert_eq!(w.id, 3);
         assert_eq!(w.busy_until_s, 0.0);
         assert_eq!(w.open_members(), 0);
+        assert_eq!(w.open_net(), None);
         assert!(!w.holds(0));
         let s = w.stats();
-        assert_eq!((s.batches, s.reloads, s.completed), (0, 0, 0));
+        assert_eq!((s.batches, s.reloads, s.completed, s.prewarms), (0, 0, 0, 0));
+        assert_eq!(s.resident, None);
         assert_eq!(s.utilization(1.0), 0.0);
     }
 
@@ -141,7 +167,9 @@ mod tests {
         });
         assert!(w.holds(1), "the open batch will load net 1's weights");
         assert!(w.holds(2), "net 2 is still resident until a flush");
+        assert_eq!(w.open_net(), Some(1));
         assert_eq!(w.open_members(), 1);
+        assert_eq!(w.stats().resident, Some(2));
     }
 
     #[test]

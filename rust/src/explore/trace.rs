@@ -11,13 +11,27 @@
 //! optional non-uniform network mix — so every replay is reproducible
 //! bit-for-bit, and replaying K distinct networks costs the shared engine
 //! exactly K plan computations however long the trace is and however many
-//! workers replay it ([`placement_sweep`]).
+//! workers replay it ([`placement_sweep`], [`replication_sweep`]).
+//!
+//! Two drivers:
+//!
+//! * open-loop ([`gen_trace`]/[`replay`]): arrival times are fixed before
+//!   any service happens — including `Arrival::ClosedLoop`, which models
+//!   the think-dominated closed loop as a superposed Poisson stream;
+//! * closed-loop with service-time feedback ([`closed_loop_replay`]):
+//!   each client submits, waits for its realized completion (or
+//!   rejection), re-thinks, and only then submits again — so the offered
+//!   rate slows under server backlog, which no open-loop process can
+//!   express.
 
 use anyhow::Result;
 
 use crate::coordinator::loadgen::Arrival;
 use crate::coordinator::placement::Placement;
-use crate::coordinator::sim_serve::{SimRequest, SimServeConfig, SimServeReport, SimServer};
+use crate::coordinator::replica::ReplicationPolicy;
+use crate::coordinator::sim_serve::{
+    SimRequest, SimServeConfig, SimServeReport, SimServer, Verdict,
+};
 use crate::nn::{zoo, Network};
 use crate::sim::engine::Engine;
 use crate::util::Rng;
@@ -25,6 +39,57 @@ use crate::util::Rng;
 /// Classifier-head size the convenience wrappers resolve zoo names with
 /// (CIFAR-100, the paper's workload).
 pub const DEFAULT_NUM_CLASSES: u32 = 100;
+
+/// Cumulative mix edges for drawing network indexes: `None` means uniform
+/// (draw with `Rng::index`, the pre-mix bit-identical path); otherwise the
+/// last positive-weight bucket's edge is `+inf` so it absorbs all rounding
+/// slack and zero-weight networks are unreachable.
+fn mix_cdf(num_networks: usize, weights: Option<&[f64]>) -> Option<Vec<f64>> {
+    weights.map(|w| {
+        assert_eq!(
+            w.len(),
+            num_networks,
+            "mix weights must cover every network: {} weights for {num_networks} networks",
+            w.len()
+        );
+        assert!(
+            w.iter().all(|&x| x.is_finite() && x >= 0.0),
+            "mix weights must be finite and non-negative: {w:?}"
+        );
+        let total: f64 = w.iter().sum();
+        assert!(total > 0.0, "mix weights must not all be zero");
+        let mut acc = 0.0;
+        let mut cum: Vec<f64> = w
+            .iter()
+            .map(|&x| {
+                acc += x / total;
+                acc
+            })
+            .collect();
+        let last_positive = w
+            .iter()
+            .rposition(|&x| x > 0.0)
+            .expect("a positive weight exists: total > 0");
+        cum[last_positive] = f64::INFINITY;
+        cum
+    })
+}
+
+/// Draw one network index from the mix (see `mix_cdf`).
+fn draw_net(rng: &mut Rng, num_networks: usize, cum: &Option<Vec<f64>>) -> usize {
+    match cum {
+        None => rng.index(num_networks),
+        Some(cum) => {
+            let u = rng.f64();
+            // First bucket whose cumulative edge exceeds the draw (the
+            // last positive bucket's edge is +inf, so the search always
+            // lands on a positive-weight network).
+            cum.iter()
+                .position(|&edge| u < edge)
+                .expect("cumulative edges end at +inf")
+        }
+    }
+}
 
 /// Deterministically generate `n` requests spread uniformly over
 /// `num_networks` networks under `arrival`, sorted by arrival time (the
@@ -48,54 +113,13 @@ pub fn gen_trace_mix(
     seed: u64,
 ) -> Vec<SimRequest> {
     assert!(num_networks > 0, "gen_trace needs at least one network");
-    let cum = weights.map(|w| {
-        assert_eq!(
-            w.len(),
-            num_networks,
-            "mix weights must cover every network: {} weights for {num_networks} networks",
-            w.len()
-        );
-        assert!(
-            w.iter().all(|&x| x.is_finite() && x >= 0.0),
-            "mix weights must be finite and non-negative: {w:?}"
-        );
-        let total: f64 = w.iter().sum();
-        assert!(total > 0.0, "mix weights must not all be zero");
-        let mut acc = 0.0;
-        let mut cum: Vec<f64> = w
-            .iter()
-            .map(|&x| {
-                acc += x / total;
-                acc
-            })
-            .collect();
-        // The last positive-weight bucket absorbs all rounding slack, so
-        // zero-weight networks are unreachable even when the cumulative
-        // sum lands below 1.0.
-        let last_positive = w
-            .iter()
-            .rposition(|&x| x > 0.0)
-            .expect("a positive weight exists: total > 0");
-        cum[last_positive] = f64::INFINITY;
-        cum
-    });
+    let cum = mix_cdf(num_networks, weights);
     let mut rng = Rng::new(seed);
     let mut t = 0.0f64;
     (0..n as u64)
         .map(|id| {
             t += arrival.delay_s(&mut rng);
-            let net = match &cum {
-                None => rng.index(num_networks),
-                Some(cum) => {
-                    let u = rng.f64();
-                    // First bucket whose cumulative edge exceeds the draw
-                    // (the last positive bucket's edge is +inf, so the
-                    // search always lands on a positive-weight network).
-                    cum.iter()
-                        .position(|&edge| u < edge)
-                        .expect("cumulative edges end at +inf")
-                }
-            };
+            let net = draw_net(&mut rng, num_networks, &cum);
             SimRequest { id, net, arrival_s: t }
         })
         .collect()
@@ -133,8 +157,9 @@ pub fn mixed_trace_mix(
 
 /// Replay a trace through a fresh [`SimServer`] over `engine` and return
 /// the end-of-trace report. The engine outlives the replay, so a second
-/// replay (same or different trace, fleet size, or placement policy over
-/// the same networks) pays zero additional plan computations.
+/// replay (same or different trace, fleet size, placement policy, or
+/// replication policy over the same networks) pays zero additional plan
+/// computations.
 pub fn replay(
     engine: &Engine,
     nets: &[Network],
@@ -146,6 +171,125 @@ pub fn replay(
         server.offer(*req)?;
     }
     server.finish()
+}
+
+/// One request of a closed-loop run, tagged with the client that issued
+/// it (requests are offered in id order; arrival times are non-decreasing
+/// by construction).
+#[derive(Debug, Clone, Copy)]
+pub struct ClosedLoopArrival {
+    pub req: SimRequest,
+    pub client: u32,
+}
+
+/// Closed-loop serving with **service-time feedback**: the
+/// `Arrival::ClosedLoop { clients, think_s }` population, but with each
+/// client submitting, waiting for its realized completion — or its
+/// rejection — and only then thinking again. Unlike the open-loop
+/// process (which models the think-dominated regime with arrival times
+/// fixed up front and remains available for the determinism pins), the
+/// loop here slows under backlog: a client whose batch sits behind a
+/// deep queue cannot offer its next request until that batch drains.
+/// Runs until `n` requests have been offered, then closes out.
+/// Deterministic: one seeded RNG draws think times (in completion order)
+/// and network choices (in offer order). Errors on any other `Arrival`
+/// variant.
+pub fn closed_loop_replay(
+    engine: &Engine,
+    nets: &[Network],
+    weights: Option<&[f64]>,
+    arrival: Arrival,
+    n: usize,
+    seed: u64,
+    cfg: SimServeConfig,
+) -> Result<(Vec<ClosedLoopArrival>, SimServeReport)> {
+    let Arrival::ClosedLoop { clients, think_s } = arrival else {
+        anyhow::bail!("closed_loop_replay needs Arrival::ClosedLoop, got {arrival:?}");
+    };
+    anyhow::ensure!(clients >= 1, "closed loop needs at least one client");
+    anyhow::ensure!(
+        think_s.is_finite() && think_s > 0.0,
+        "think time must be positive and finite, got {think_s}"
+    );
+    let cum = mix_cdf(nets.len(), weights);
+    let mut rng = Rng::new(seed);
+    let mut server = SimServer::new(engine, nets, cfg)?;
+    // Per-client state: Some(t) = thinking, next request arrives at `t`;
+    // None = waiting for an in-flight response.
+    let mut next_at: Vec<Option<f64>> = (0..clients).map(|_| Some(rng.exp(think_s))).collect();
+    // Request ids are sequential offer indexes, so `arrivals[id].client`
+    // is the id → client mapping the feedback loop reads back.
+    let mut arrivals: Vec<ClosedLoopArrival> = Vec::with_capacity(n);
+    let mut absorbed = 0usize;
+    let mut last_t = 0.0f64;
+    while arrivals.len() < n {
+        // Feedback: completed requests release their clients, who re-think
+        // from the *realized* completion time.
+        let comps = server.completions_so_far();
+        while absorbed < comps.len() {
+            let c = comps[absorbed];
+            let cl = arrivals[c.id as usize].client as usize;
+            debug_assert!(next_at[cl].is_none(), "a client has one request in flight");
+            next_at[cl] = Some(c.completion_s + rng.exp(think_s));
+            absorbed += 1;
+        }
+        // Earliest thinking client offers next (ties break to lowest id).
+        let mut pick: Option<(usize, f64)> = None;
+        for (cl, at) in next_at.iter().enumerate() {
+            if let Some(at) = *at {
+                let earlier = match pick {
+                    None => true,
+                    Some((_, best)) => at < best,
+                };
+                if earlier {
+                    pick = Some((cl, at));
+                }
+            }
+        }
+        let Some((cl, at)) = pick else {
+            // Every client is blocked on an in-flight batch: advance
+            // virtual time to the earliest linger deadline so it flushes.
+            let d = server
+                .next_deadline_s()
+                .expect("blocked clients imply an open batch");
+            server.advance(d)?;
+            last_t = last_t.max(d);
+            continue;
+        };
+        // Release earlier work first: a blocked client whose batch
+        // flushes before this offer must re-enter the think loop now, or
+        // its re-submission would be clamped past `at` and the feedback
+        // timing distorted.
+        if let Some(d) = server.next_deadline_s() {
+            if d < at {
+                server.advance(d)?;
+                last_t = last_t.max(d);
+                continue;
+            }
+        }
+        // A client cannot submit in the past: arrivals stay non-decreasing
+        // even when a completion lands before already-offered traffic.
+        let t = at.max(last_t);
+        let net = draw_net(&mut rng, nets.len(), &cum);
+        let req = SimRequest {
+            id: arrivals.len() as u64,
+            net,
+            arrival_s: t,
+        };
+        let verdict = server.offer(req)?;
+        arrivals.push(ClosedLoopArrival {
+            req,
+            client: cl as u32,
+        });
+        last_t = t;
+        // Rejected clients learn immediately and re-think from now;
+        // accepted ones block until their completion feeds back above.
+        next_at[cl] = match verdict {
+            Verdict::Rejected => Some(t + rng.exp(think_s)),
+            _ => None,
+        };
+    }
+    Ok((arrivals, server.finish()?))
 }
 
 /// Replay the same trace under each SLO in `slos_s` (engine shared, so
@@ -161,7 +305,10 @@ pub fn slo_sweep(
     slos_s
         .iter()
         .map(|&slo_s| {
-            let cfg = SimServeConfig { slo_s, ..base };
+            let cfg = SimServeConfig {
+                slo_s,
+                ..base.clone()
+            };
             Ok((slo_s, replay(engine, nets, trace, cfg)?))
         })
         .collect()
@@ -195,13 +342,86 @@ pub fn placement_sweep(
             let cfg = SimServeConfig {
                 workers,
                 placement,
-                ..base
+                ..base.clone()
             };
             rows.push(PlacementPoint {
                 workers,
                 placement,
                 report: replay(engine, nets, trace, cfg)?,
             });
+        }
+    }
+    Ok(rows)
+}
+
+/// One cell of the replication grid: a full replay at `workers` ×
+/// `skew` × replication `policy`.
+#[derive(Debug, Clone)]
+pub struct ReplicationPoint {
+    pub workers: usize,
+    /// Arrival weight of network 0 relative to 1.0 for every other
+    /// network (1.0 = uniform traffic).
+    pub skew: f64,
+    pub policy: ReplicationPolicy,
+    pub report: SimServeReport,
+}
+
+/// The axes of a [`replication_sweep`]: fleet sizes, mix skews, and
+/// replication policies to cross.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicationGrid<'a> {
+    pub worker_counts: &'a [usize],
+    /// Arrival weight of network 0 relative to 1.0 for every other
+    /// network (1.0 = uniform traffic).
+    pub skews: &'a [f64],
+    pub policies: &'a [ReplicationPolicy],
+}
+
+/// The replication trade-off grid: for each mix skew (network 0 weighted
+/// `skew×` against the rest), regenerate the trace and replay it at every
+/// worker-count × replication-policy operating point — reloads, pre-warm
+/// spend, throughput, and utilization as the fleet spends capacity
+/// widening hot networks' lanes. The engine is shared: the whole grid
+/// costs one plan per distinct network, because replication copies
+/// weights and never re-plans. Rows come back in `skews`-major,
+/// `worker_counts`, then `policies` order.
+pub fn replication_sweep(
+    engine: &Engine,
+    nets: &[Network],
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+    base: &SimServeConfig,
+    grid: &ReplicationGrid,
+) -> Result<Vec<ReplicationPoint>> {
+    let ReplicationGrid {
+        worker_counts,
+        skews,
+        policies,
+    } = *grid;
+    let mut rows = Vec::with_capacity(worker_counts.len() * skews.len() * policies.len());
+    for &skew in skews {
+        anyhow::ensure!(
+            skew.is_finite() && skew > 0.0,
+            "mix skew must be positive and finite, got {skew}"
+        );
+        let mut weights = vec![1.0; nets.len()];
+        weights[0] = skew;
+        let trace = gen_trace_mix(nets.len(), Some(&weights), n, arrival, seed);
+        for &workers in worker_counts {
+            for policy in policies {
+                let cfg = SimServeConfig {
+                    workers,
+                    replication: policy.clone(),
+                    ..base.clone()
+                };
+                rows.push(ReplicationPoint {
+                    workers,
+                    skew,
+                    policy: policy.clone(),
+                    report: replay(engine, nets, &trace, cfg)?,
+                });
+            }
         }
     }
     Ok(rows)
@@ -373,5 +593,125 @@ mod tests {
         assert_eq!(rows[0].workers, 1);
         assert_eq!(rows[0].placement, Placement::RoundRobin);
         assert_eq!(rows[Placement::ALL.len()].workers, 2);
+    }
+
+    #[test]
+    fn replication_sweep_covers_the_grid_on_one_plan_per_network() {
+        let engine = Engine::compact(presets::lpddr5());
+        let nets: Vec<Network> = ["mobilenetv1", "vgg11"]
+            .iter()
+            .map(|n| crate::nn::zoo::by_name(n, 100).unwrap())
+            .collect();
+        let base = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 8,
+            max_wait_s: 0.001,
+            placement: Placement::NetworkAffinity,
+            ..SimServeConfig::default()
+        };
+        let policies = [ReplicationPolicy::None, ReplicationPolicy::parse("adaptive").unwrap()];
+        let rows = replication_sweep(
+            &engine,
+            &nets,
+            32,
+            Arrival::Poisson(2000.0),
+            17,
+            &base,
+            &ReplicationGrid {
+                worker_counts: &[1, 2],
+                skews: &[1.0, 8.0],
+                policies: &policies,
+            },
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2 * 2 * 2);
+        // Skew-major, workers, then policies.
+        assert_eq!((rows[0].skew, rows[0].workers, rows[0].policy.label()), (1.0, 1, "none"));
+        assert_eq!(rows[1].policy.label(), "adaptive");
+        assert_eq!(rows[4].skew, 8.0);
+        for row in &rows {
+            assert_eq!(row.report.workers(), row.workers);
+            assert_eq!(row.report.accepted(), 32, "generous SLO accepts everything");
+        }
+        // The whole grid shared one engine: replication never re-plans.
+        assert_eq!(engine.cache_stats().misses, nets.len() as u64);
+        // Bad skews are rejected.
+        assert!(replication_sweep(
+            &engine,
+            &nets,
+            4,
+            Arrival::Burst,
+            1,
+            &base,
+            &ReplicationGrid {
+                worker_counts: &[1],
+                skews: &[0.0],
+                policies: &policies,
+            },
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn closed_loop_feedback_is_deterministic_and_causal() {
+        let engine = Engine::compact(presets::lpddr5());
+        let nets: Vec<Network> = ["mobilenetv1", "vgg11"]
+            .iter()
+            .map(|n| crate::nn::zoo::by_name(n, 100).unwrap())
+            .collect();
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 8,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        };
+        let arrival = Arrival::ClosedLoop {
+            clients: 8,
+            think_s: 0.004,
+        };
+        let (a1, r1) =
+            closed_loop_replay(&engine, &nets, None, arrival, 96, 23, cfg.clone()).unwrap();
+        let (a2, r2) =
+            closed_loop_replay(&engine, &nets, None, arrival, 96, 23, cfg.clone()).unwrap();
+        // Only the closed-loop process drives the feedback loop.
+        assert!(
+            closed_loop_replay(&engine, &nets, None, Arrival::Burst, 4, 1, cfg).is_err()
+        );
+        assert_eq!(a1.len(), 96);
+        for (x, y) in a1.iter().zip(&a2) {
+            assert_eq!(x.client, y.client);
+            assert_eq!(x.req.net, y.req.net);
+            assert_eq!(x.req.arrival_s.to_bits(), y.req.arrival_s.to_bits());
+        }
+        assert_eq!(r1.span_s.to_bits(), r2.span_s.to_bits());
+        // Arrivals are non-decreasing and fully offered.
+        assert!(a1.windows(2).all(|w| w[0].req.arrival_s <= w[1].req.arrival_s));
+        assert_eq!(r1.offered(), 96);
+        assert_eq!(r1.completed(), r1.accepted());
+        // The feedback property itself: a client never submits before its
+        // previous request's *realized* completion came back.
+        let mut completion_of = vec![None; 96];
+        for c in &r1.completions {
+            completion_of[c.id as usize] = Some(c.completion_s);
+        }
+        let mut last_of_client: Vec<Option<&ClosedLoopArrival>> = vec![None; 8];
+        for a in &a1 {
+            if let Some(prev) = last_of_client[a.client as usize] {
+                match completion_of[prev.req.id as usize] {
+                    Some(done) => assert!(
+                        a.req.arrival_s >= done,
+                        "client {} re-submitted at {} before its completion at {}",
+                        a.client,
+                        a.req.arrival_s,
+                        done
+                    ),
+                    None => assert!(
+                        a.req.arrival_s >= prev.req.arrival_s,
+                        "rejected requests re-think forward in time"
+                    ),
+                }
+            }
+            last_of_client[a.client as usize] = Some(a);
+        }
     }
 }

@@ -38,10 +38,12 @@
 //!   batcher, arrival processes, and [`coordinator::sim_serve`] — an
 //!   Engine-backed admission controller over a fleet of virtual-time
 //!   workers ([`coordinator::vworker`]) with pluggable
-//!   [`coordinator::placement`] policies, pricing every request from
-//!   cached plans, so the request path runs (and is tested) without any
-//!   accelerator present.
-//! * [`runtime`] + the coordinator's [`coordinator::server`] *(feature
+//!   [`coordinator::placement`] policies and fleet-level weight
+//!   replication ([`coordinator::replica`]: per-network replica sets,
+//!   static pinning, adaptive pre-warm/drain), pricing every request
+//!   from cached plans, so the request path runs (and is tested) without
+//!   any accelerator present.
+//! * `runtime` + the coordinator's `coordinator::server` *(feature
 //!   `runtime`, on by default)* — the real serving path: a PJRT executor
 //!   for AOT-compiled XLA artifacts and a threaded request router, with
 //!   Python never on the request path. Disable the feature

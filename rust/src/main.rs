@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use pimflow::cfg::{presets, Config, DramKind, PipelineCase};
 use pimflow::cli::{App, Command, Invocation, Opt, Parsed};
-use pimflow::coordinator::{Arrival, Placement, SimServeConfig};
+use pimflow::coordinator::{Arrival, Placement, ReplicationPolicy, SimServeConfig};
 #[cfg(feature = "runtime")]
 use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
 use pimflow::explore;
@@ -170,12 +170,31 @@ fn app() -> App {
                         "worker placement policy (round-robin, least-loaded, affinity)",
                     ),
                     Opt::value(
+                        "replication",
+                        Some("none"),
+                        "weight replication policy (none, static:<spec>, adaptive)",
+                    ),
+                    Opt::value(
                         "sweep-workers",
                         None,
                         "comma list of worker counts: replay the placement grid (all policies) instead",
                     ),
+                    Opt::value(
+                        "sweep-replication",
+                        None,
+                        "comma list of worker counts: replay the replication grid (skews x policies) instead",
+                    ),
+                    Opt::value(
+                        "skews",
+                        Some("1,4,16"),
+                        "mix skews for --sweep-replication (network 0's weight vs 1 for the rest)",
+                    ),
                     Opt::value("seed", Some("42"), "trace seed (same seed, same trace)"),
                     Opt::flag("no-admission", "accept everything (shows what admission buys)"),
+                    Opt::flag(
+                        "feedback",
+                        "closed-loop service-time feedback (needs --trace closed:<c>:<t>)",
+                    ),
                     dram_opt(),
                     csv_flag(),
                 ],
@@ -542,9 +561,108 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         admission: !p.flag("no-admission"),
         workers: p.get_u32("workers")?.unwrap_or(1) as usize,
         placement: Placement::parse(p.get_or("placement", "round-robin"))?,
+        replication: ReplicationPolicy::parse(p.get_or("replication", "none"))?,
         ..SimServeConfig::default()
     };
     let engine = Engine::compact(dram_of(p)?);
+
+    // Closed loop with service-time feedback: arrivals are generated from
+    // realized completions, so the open-loop trace is bypassed entirely.
+    if p.flag("feedback") {
+        anyhow::ensure!(
+            p.get("sweep-workers").is_none() && p.get("sweep-replication").is_none(),
+            "--feedback drives a single replay; drop the --sweep-* options"
+        );
+        let Arrival::ClosedLoop { clients, think_s } = arrival else {
+            anyhow::bail!("--feedback needs --trace closed:<clients>:<think_s>");
+        };
+        let workers = cfg.workers;
+        let (arrivals, report) =
+            explore::closed_loop_replay(&engine, &nets, mix.as_deref(), arrival, n, seed, cfg)?;
+        let (t, csv) = figures::trace_table(&report);
+        print!("{}", t.render());
+        if workers > 1 {
+            let (wt, _) = figures::worker_table(&report);
+            print!("{}", wt.render());
+        }
+        let span = arrivals.last().map(|a| a.req.arrival_s).unwrap_or(0.0);
+        println!(
+            "closed loop with feedback: {} clients offered {} requests over {:.3} s \
+             ({:.1} req/s offered vs {:.1} req/s think-capped), {:.1}% SLO attainment",
+            clients,
+            report.offered(),
+            span,
+            if span > 0.0 { n as f64 / span } else { 0.0 },
+            clients as f64 / think_s,
+            100.0 * report.slo_attainment()
+        );
+        if p.flag("csv") {
+            println!(
+                "wrote {}",
+                figures::write_csv(&csv, "serve_sim_feedback.csv")?.display()
+            );
+        }
+        return Ok(());
+    }
+
+    // The replication grid: regenerated per-skew traces at every worker
+    // count × replication policy (`none` vs the configured/adaptive one).
+    if let Some(list) = p.get("sweep-replication") {
+        anyhow::ensure!(
+            mix.is_none(),
+            "--sweep-replication generates its own per-skew mixes; drop --mix"
+        );
+        let counts = list
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("--sweep-replication expects comma-separated counts, got `{s}`")
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let skews = p
+            .get_or("skews", "1,4,16")
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!("--skews expects comma-separated numbers, got `{s}`")
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut policies = vec![ReplicationPolicy::None];
+        match &cfg.replication {
+            ReplicationPolicy::None => policies.push(ReplicationPolicy::parse("adaptive")?),
+            configured => policies.push(configured.clone()),
+        }
+        let rows = explore::replication_sweep(
+            &engine,
+            &nets,
+            n,
+            arrival,
+            seed,
+            &cfg,
+            &explore::ReplicationGrid {
+                worker_counts: &counts,
+                skews: &skews,
+                policies: &policies,
+            },
+        )?;
+        let (t, csv) = figures::replication_table(&rows);
+        print!("{}", t.render());
+        println!(
+            "{} replays over one engine: {} plans total (replication never re-plans)",
+            rows.len(),
+            engine.cache_stats().misses
+        );
+        if p.flag("csv") {
+            println!(
+                "wrote {}",
+                figures::write_csv(&csv, "replication_sweep.csv")?.display()
+            );
+        }
+        return Ok(());
+    }
+
     let trace = explore::gen_trace_mix(nets.len(), mix.as_deref(), n, arrival, seed);
 
     // The placement grid: same trace at every worker count × policy.
@@ -575,10 +693,12 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         return Ok(());
     }
 
+    let workers = cfg.workers;
+    let replicated = cfg.replication != ReplicationPolicy::None;
     let report = explore::replay(&engine, &nets, &trace, cfg)?;
     let (t, csv) = figures::trace_table(&report);
     print!("{}", t.render());
-    if cfg.workers > 1 {
+    if workers > 1 {
         let (wt, wcsv) = figures::worker_table(&report);
         print!("{}", wt.render());
         if p.flag("csv") {
@@ -596,6 +716,20 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         report.batches(),
         report.plans_computed
     );
+    if replicated {
+        println!(
+            "replication: {} pre-warms, {} drains; final replica counts: {}",
+            report.prewarms(),
+            report.drains(),
+            report
+                .replica_holders
+                .iter()
+                .enumerate()
+                .map(|(i, h)| format!("{}={}", report.per_net[i].network, h.len()))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
     if p.flag("csv") {
         println!("wrote {}", figures::write_csv(&csv, "serve_sim.csv")?.display());
     }

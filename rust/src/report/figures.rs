@@ -343,6 +343,7 @@ pub fn zoo_table() -> (Table, Csv) {
 /// admission/coalescing/weight-reload counters the one-shot sweeps
 /// cannot express.
 pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) {
+    use crate::coordinator::NetStats;
     let mut t = Table::new(
         format!(
             "serve-sim trace replay ({} requests, {} workers, {:.1} req/s served, {} plans)",
@@ -353,7 +354,7 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
         ),
         vec![
             "network", "offered", "accept", "coalesce", "reject", "batches", "mean b", "reloads",
-            "slo att", "mean lat",
+            "prewarm", "slo att", "mean lat",
         ],
     );
     let mut csv = Csv::new(vec![
@@ -365,86 +366,59 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
         "batches",
         "mean_batch",
         "reloads",
+        "prewarms",
+        "drains",
         "slo_attainment",
         "mean_latency_s",
     ]);
-    let mut row = |name: &str,
-                   offered: u64,
-                   accepted: u64,
-                   coalesced: u64,
-                   rejected: u64,
-                   batches: u64,
-                   mean_batch: f64,
-                   reloads: u64,
-                   att: f64,
-                   lat_s: f64| {
+    let mut row = |name: &str, n: &NetStats| {
         t.row(vec![
             name.to_string(),
-            offered.to_string(),
-            accepted.to_string(),
-            coalesced.to_string(),
-            rejected.to_string(),
-            batches.to_string(),
-            format!("{mean_batch:.2}"),
-            reloads.to_string(),
-            format!("{:.1}%", 100.0 * att),
-            format!("{:.2} ms", lat_s * 1e3),
+            n.offered.to_string(),
+            n.accepted.to_string(),
+            n.coalesced.to_string(),
+            n.rejected.to_string(),
+            n.batches.to_string(),
+            format!("{:.2}", n.mean_batch()),
+            n.reloads.to_string(),
+            n.prewarms.to_string(),
+            format!("{:.1}%", 100.0 * n.slo_attainment()),
+            format!("{:.2} ms", n.mean_latency_s() * 1e3),
         ]);
         csv.row(vec![
             name.to_string(),
-            offered.to_string(),
-            accepted.to_string(),
-            coalesced.to_string(),
-            rejected.to_string(),
-            batches.to_string(),
-            format!("{mean_batch:.4}"),
-            reloads.to_string(),
-            format!("{att:.4}"),
-            format!("{lat_s:.6}"),
+            n.offered.to_string(),
+            n.accepted.to_string(),
+            n.coalesced.to_string(),
+            n.rejected.to_string(),
+            n.batches.to_string(),
+            format!("{:.4}", n.mean_batch()),
+            n.reloads.to_string(),
+            n.prewarms.to_string(),
+            n.drains.to_string(),
+            format!("{:.4}", n.slo_attainment()),
+            format!("{:.6}", n.mean_latency_s()),
         ]);
     };
     for n in &report.per_net {
-        row(
-            &n.network,
-            n.offered,
-            n.accepted,
-            n.coalesced,
-            n.rejected,
-            n.batches,
-            n.mean_batch(),
-            n.reloads,
-            n.slo_attainment(),
-            n.mean_latency_s(),
-        );
+        row(&n.network, n);
     }
-    let completed = report.completed();
-    let mean_batch = if report.batches() == 0 {
-        0.0
-    } else {
-        completed as f64 / report.batches() as f64
-    };
-    let mean_lat = if completed == 0 {
-        0.0
-    } else {
-        report
-            .per_net
-            .iter()
-            .map(|n| n.latency_sum_s)
-            .sum::<f64>()
-            / completed as f64
-    };
-    row(
-        "TOTAL",
-        report.offered(),
-        report.accepted(),
-        report.coalesced(),
-        report.rejected(),
-        report.batches(),
-        mean_batch,
-        report.reloads(),
-        report.slo_attainment(),
-        mean_lat,
-    );
+    // The totals row reuses the per-network accessors on a synthetic sum.
+    let mut total = NetStats::default();
+    for n in &report.per_net {
+        total.offered += n.offered;
+        total.accepted += n.accepted;
+        total.coalesced += n.coalesced;
+        total.rejected += n.rejected;
+        total.completed += n.completed;
+        total.batches += n.batches;
+        total.reloads += n.reloads;
+        total.prewarms += n.prewarms;
+        total.drains += n.drains;
+        total.within_slo += n.within_slo;
+        total.latency_sum_s += n.latency_sum_s;
+    }
+    row("TOTAL", &total);
     (t, csv)
 }
 
@@ -460,33 +434,45 @@ pub fn worker_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv)
             report.span_s,
             100.0 * report.mean_utilization()
         ),
-        vec!["worker", "batches", "served", "reloads", "busy", "util"],
+        vec![
+            "worker", "batches", "served", "reloads", "prewarm", "busy", "util", "resident",
+        ],
     );
     let mut csv = Csv::new(vec![
         "worker",
         "batches",
         "served",
         "reloads",
+        "prewarms",
         "busy_s",
         "utilization",
+        "resident",
     ]);
     for w in &report.per_worker {
         let util = w.utilization(report.span_s);
+        let resident = match w.resident {
+            Some(net) => report.per_net[net].network.clone(),
+            None => "-".to_string(),
+        };
         t.row(vec![
             w.id.to_string(),
             w.batches.to_string(),
             w.completed.to_string(),
             w.reloads.to_string(),
+            w.prewarms.to_string(),
             format!("{:.3} s", w.busy_s),
             format!("{:.1}%", 100.0 * util),
+            resident.clone(),
         ]);
         csv.row(vec![
             w.id.to_string(),
             w.batches.to_string(),
             w.completed.to_string(),
             w.reloads.to_string(),
+            w.prewarms.to_string(),
             format!("{:.6}", w.busy_s),
             format!("{util:.4}"),
+            resident,
         ]);
     }
     (t, csv)
@@ -535,6 +521,69 @@ pub fn placement_table(rows: &[crate::explore::PlacementPoint]) -> (Table, Csv) 
             r.rejected().to_string(),
             r.batches().to_string(),
             r.reloads().to_string(),
+            format!("{:.3}", r.throughput_rps()),
+            format!("{:.4}", r.slo_attainment()),
+            format!("{:.4}", r.mean_utilization()),
+            format!("{:.6}", r.span_s),
+        ]);
+    }
+    (t, csv)
+}
+
+/// Replication-sweep grid: one row per (mix skew, worker count,
+/// replication policy) replay — blocking reloads vs pre-warm spend vs
+/// throughput vs utilization as the fleet spends capacity widening hot
+/// networks' serving lanes.
+pub fn replication_table(rows: &[crate::explore::ReplicationPoint]) -> (Table, Csv) {
+    let mut t = Table::new(
+        "replication sweep: reloads, pre-warms & goodput vs skew x workers x policy",
+        vec![
+            "skew", "workers", "policy", "accept", "reject", "reloads", "prewarm", "drain",
+            "req/s", "slo att", "util",
+        ],
+    );
+    let mut csv = Csv::new(vec![
+        "skew",
+        "workers",
+        "replication",
+        "accepted",
+        "rejected",
+        "batches",
+        "reloads",
+        "prewarms",
+        "drains",
+        "goodput",
+        "throughput_rps",
+        "slo_attainment",
+        "mean_utilization",
+        "span_s",
+    ]);
+    for p in rows {
+        let r = &p.report;
+        t.row(vec![
+            format!("{:.1}", p.skew),
+            p.workers.to_string(),
+            p.policy.label().to_string(),
+            r.accepted().to_string(),
+            r.rejected().to_string(),
+            r.reloads().to_string(),
+            r.prewarms().to_string(),
+            r.drains().to_string(),
+            format!("{:.1}", r.throughput_rps()),
+            format!("{:.1}%", 100.0 * r.slo_attainment()),
+            format!("{:.1}%", 100.0 * r.mean_utilization()),
+        ]);
+        csv.row(vec![
+            format!("{:.3}", p.skew),
+            p.workers.to_string(),
+            p.policy.label().to_string(),
+            r.accepted().to_string(),
+            r.rejected().to_string(),
+            r.batches().to_string(),
+            r.reloads().to_string(),
+            r.prewarms().to_string(),
+            r.drains().to_string(),
+            r.goodput().to_string(),
             format!("{:.3}", r.throughput_rps()),
             format!("{:.4}", r.slo_attainment()),
             format!("{:.4}", r.mean_utilization()),
@@ -681,6 +730,47 @@ mod tests {
         assert!(s.contains("round-robin"));
         assert!(s.contains("least-loaded"));
         assert!(s.contains("affinity"));
+        assert_eq!(csv.num_rows(), rows.len());
+    }
+
+    #[test]
+    fn replication_table_renders_the_grid() {
+        use crate::coordinator::{Arrival, Placement, ReplicationPolicy, SimServeConfig};
+        use crate::explore::trace::{replication_sweep, ReplicationGrid};
+        let engine = crate::explore::Engine::compact(presets::lpddr5());
+        let nets: Vec<crate::nn::Network> = ["mobilenetv1", "vgg11"]
+            .iter()
+            .map(|n| crate::nn::zoo::by_name(n, 100).unwrap())
+            .collect();
+        let base = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            placement: Placement::NetworkAffinity,
+            ..SimServeConfig::default()
+        };
+        let policies = [
+            ReplicationPolicy::None,
+            ReplicationPolicy::parse("adaptive").unwrap(),
+        ];
+        let rows = replication_sweep(
+            &engine,
+            &nets,
+            16,
+            Arrival::Poisson(2000.0),
+            5,
+            &base,
+            &ReplicationGrid {
+                worker_counts: &[1, 2],
+                skews: &[1.0, 8.0],
+                policies: &policies,
+            },
+        )
+        .unwrap();
+        let (t, csv) = replication_table(&rows);
+        let s = t.render();
+        assert!(s.contains("none"));
+        assert!(s.contains("adaptive"));
         assert_eq!(csv.num_rows(), rows.len());
     }
 

@@ -1,0 +1,181 @@
+//! Property net over the replica-set bookkeeping (respects
+//! `PIMFLOW_PROP_CASES`): randomized mixed-network traces through the
+//! serving simulator, across seeds, fleet shapes, placement policies, and
+//! replication policies, checking residency conservation —
+//!
+//! * the residency event log (batch loads/evicts, pre-warms, drains)
+//!   folds back into exactly the final replica sets the live
+//!   [`ReplicaSet`] reports: tracked residency is a pure function of the
+//!   worker load/evict events;
+//! * the replica sets are the exact inverse of the per-worker resident
+//!   networks (sorted, duplicate-free, mutually consistent);
+//! * event causes reconcile with the counters: one `Batch` load per
+//!   blocking reload, one `Prewarm` load per pre-warm, one `Drain` evict
+//!   per drain.
+//!
+//! One engine is shared across every random case: however many traces,
+//! fleets, and replica shapes the net replays, the four pool networks are
+//! planned at most once each — replication never re-plans.
+
+use pimflow::cfg::presets;
+use pimflow::coordinator::{
+    AdaptiveConfig, Arrival, Placement, ReplicaSet, ReplicationPolicy, ResidencyCause,
+    ResidencyChange, SimServeConfig,
+};
+use pimflow::explore::trace::{gen_trace, replay};
+use pimflow::nn::{zoo, Network};
+use pimflow::prop_assert;
+use pimflow::sim::Engine;
+use pimflow::testing::check;
+use pimflow::util::Rng;
+
+fn pool() -> Vec<Network> {
+    ["mobilenetv1", "vgg11", "resnet18", "vgg13"]
+        .iter()
+        .map(|n| zoo::by_name(n, 100).unwrap())
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    num_nets: usize,
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+    slo_s: f64,
+    max_batch: u32,
+    max_wait_s: f64,
+    workers: usize,
+    placement: Placement,
+    replication: ReplicationPolicy,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let arrival = match rng.index(3) {
+        0 => Arrival::Burst,
+        1 => Arrival::Uniform(rng.range_f64(100.0, 5000.0)),
+        _ => Arrival::Poisson(rng.range_f64(100.0, 5000.0)),
+    };
+    let replication = match rng.index(3) {
+        0 => ReplicationPolicy::None,
+        1 => ReplicationPolicy::Adaptive(AdaptiveConfig {
+            window_s: rng.range_f64(0.002, 0.5),
+            ..AdaptiveConfig::default()
+        }),
+        _ => ReplicationPolicy::Static {
+            targets: vec![
+                ("*".to_string(), rng.index(3)),
+                ("mobilenetv1".to_string(), 1 + rng.index(3)),
+            ],
+        },
+    };
+    Case {
+        num_nets: 1 + rng.index(4),
+        n: 1 + rng.index(40),
+        arrival,
+        seed: rng.next_u64(),
+        slo_s: 10f64.powf(rng.range_f64(-4.0, 0.5)),
+        max_batch: 1 + rng.index(8) as u32,
+        max_wait_s: rng.range_f64(0.0, 0.002),
+        workers: 1 + rng.index(5),
+        placement: Placement::ALL[rng.index(Placement::ALL.len())],
+        replication,
+    }
+}
+
+#[test]
+fn replica_residency_is_conserved_under_the_event_fold() {
+    let engine = Engine::compact(presets::lpddr5());
+    let nets = pool();
+    check(
+        "replica/residency-conservation",
+        gen_case,
+        |c| {
+            let trace = gen_trace(c.num_nets, c.n, c.arrival, c.seed);
+            let cfg = SimServeConfig {
+                slo_s: c.slo_s,
+                max_batch: c.max_batch,
+                max_wait_s: c.max_wait_s,
+                workers: c.workers,
+                placement: c.placement,
+                replication: c.replication.clone(),
+                ..SimServeConfig::default()
+            };
+            let r = replay(&engine, &nets[..c.num_nets], &trace, cfg).expect("replay failed");
+
+            // Conservation: the event log folds into the tracked residency.
+            let folded = ReplicaSet::fold(c.num_nets, c.workers, &r.residency_log);
+            prop_assert!(
+                folded.snapshot() == r.replica_holders,
+                "event fold {:?} disagrees with tracked residency {:?}",
+                folded.snapshot(),
+                r.replica_holders
+            );
+
+            // The replica sets invert the per-worker resident networks.
+            prop_assert!(
+                r.replica_holders.len() == c.num_nets,
+                "one holder list per network"
+            );
+            for (net, holders) in r.replica_holders.iter().enumerate() {
+                prop_assert!(
+                    holders.windows(2).all(|w| w[0] < w[1]),
+                    "net {net}: holders not sorted/unique: {holders:?}"
+                );
+                prop_assert!(
+                    holders.len() <= c.workers,
+                    "net {net}: more replicas than workers"
+                );
+                for &w in holders {
+                    prop_assert!(
+                        r.per_worker[w].resident == Some(net),
+                        "worker {w} is listed as holding net {net} but reports {:?}",
+                        r.per_worker[w].resident
+                    );
+                }
+            }
+            for w in &r.per_worker {
+                if let Some(net) = w.resident {
+                    prop_assert!(
+                        r.replica_holders[net].contains(&w.id),
+                        "worker {} holds net {net} but is missing from its replica set",
+                        w.id
+                    );
+                }
+            }
+
+            // Event causes reconcile with the counters, exactly.
+            let count = |change: ResidencyChange, cause: ResidencyCause| {
+                r.residency_log
+                    .iter()
+                    .filter(|e| e.change == change && e.cause == cause)
+                    .count() as u64
+            };
+            prop_assert!(
+                count(ResidencyChange::Load, ResidencyCause::Batch) == r.reloads(),
+                "batch loads {} != blocking reloads {}",
+                count(ResidencyChange::Load, ResidencyCause::Batch),
+                r.reloads()
+            );
+            prop_assert!(
+                count(ResidencyChange::Load, ResidencyCause::Prewarm) == r.prewarms(),
+                "pre-warm loads {} != pre-warms {}",
+                count(ResidencyChange::Load, ResidencyCause::Prewarm),
+                r.prewarms()
+            );
+            prop_assert!(
+                count(ResidencyChange::Evict, ResidencyCause::Drain) == r.drains(),
+                "drain evicts {} != drains {}",
+                count(ResidencyChange::Evict, ResidencyCause::Drain),
+                r.drains()
+            );
+            Ok(())
+        },
+    );
+    // However many random cases ran, the pool planned at most once each.
+    assert!(
+        engine.cache_stats().misses <= nets.len() as u64,
+        "cross-case plan reuse broke: {:?}",
+        engine.cache_stats()
+    );
+}

@@ -1,0 +1,322 @@
+//! Tier-1 pins for the fleet-level weight-replication subsystem:
+//!
+//! * `ReplicationPolicy::None` replays bitwise-identically to the
+//!   pre-replication model under every placement policy — including
+//!   against `Static` with an empty target map, which runs the whole
+//!   controller plumbing but takes no action, pinning that the
+//!   subsystem's presence alone perturbs nothing;
+//! * K distinct networks cost exactly K engine plans at any fleet size
+//!   and replica count — replication copies weights, never re-plans;
+//! * on a pinned skewed trace over 3 workers, adaptive replication
+//!   strictly reduces blocking weight reloads and never loses goodput
+//!   versus single-residency `NetworkAffinity` (the same scenario is
+//!   pinned in `benches/hotpath.rs`);
+//! * static pinning holds its replica targets; adaptive drains cold
+//!   networks' replicas once they fall silent for a window.
+
+use pimflow::cfg::presets;
+use pimflow::coordinator::{
+    AdaptiveConfig, Arrival, Placement, ReplicationPolicy, SimRequest, SimServeConfig,
+};
+use pimflow::explore::trace::{mixed_trace, replay};
+use pimflow::nn::{zoo, Network};
+use pimflow::sim::Engine;
+
+fn engine() -> Engine {
+    Engine::compact(presets::lpddr5())
+}
+
+/// The pinned skewed workload: one hot network (mobilenetv1, every other
+/// request) and three cold ones cycling behind it, arrivals spaced far
+/// apart (25 ms ≫ any makespan or weight stream) so the fleet drains
+/// between requests and the dynamics are pure placement/residency. On 3
+/// workers under single-residency affinity the three cold networks cycle
+/// through two cold slots in LRU order — the pathological pattern where
+/// every cold arrival finds its weights evicted.
+fn skewed_nets() -> Vec<Network> {
+    ["mobilenetv1", "vgg11", "resnet18", "vgg13"]
+        .iter()
+        .map(|n| zoo::by_name(n, 100).unwrap())
+        .collect()
+}
+
+fn skewed_trace(n: usize) -> Vec<SimRequest> {
+    (0..n)
+        .map(|j| SimRequest {
+            id: j as u64,
+            net: if j % 2 == 0 { 0 } else { 1 + (j / 2) % 3 },
+            arrival_s: j as f64 * 0.025,
+        })
+        .collect()
+}
+
+fn base_cfg() -> SimServeConfig {
+    SimServeConfig {
+        slo_s: 1e6,
+        max_batch: 8,
+        max_wait_s: 0.001,
+        workers: 3,
+        placement: Placement::NetworkAffinity,
+        ..SimServeConfig::default()
+    }
+}
+
+#[test]
+fn replication_none_is_bitwise_identical_to_an_inert_controller_under_every_placement() {
+    // `None` short-circuits the controller; `Static` with an empty target
+    // map runs every controller entry point and never acts. Bitwise
+    // equality between the two, per placement policy and fleet size, pins
+    // that the replication subsystem is transparent when it does nothing
+    // — i.e., `None` is exactly the pre-replication model.
+    let (nets, trace) =
+        mixed_trace(&["mobilenetv1", "vgg11", "resnet18"], 180, Arrival::Poisson(2000.0), 2026)
+            .unwrap();
+    for workers in [1usize, 3] {
+        for placement in Placement::ALL {
+            let cfg = |replication: ReplicationPolicy| SimServeConfig {
+                workers,
+                placement,
+                replication,
+                slo_s: 0.05,
+                max_batch: 16,
+                max_wait_s: 0.001,
+                ..SimServeConfig::default()
+            };
+            let none = replay(&engine(), &nets, &trace, cfg(ReplicationPolicy::None)).unwrap();
+            let inert = replay(
+                &engine(),
+                &nets,
+                &trace,
+                cfg(ReplicationPolicy::Static { targets: vec![] }),
+            )
+            .unwrap();
+            let label = format!("{} workers / {}", workers, placement.label());
+            assert_eq!(none.accepted(), inert.accepted(), "{label}: accepted");
+            assert_eq!(none.coalesced(), inert.coalesced(), "{label}: coalesced");
+            assert_eq!(none.rejected(), inert.rejected(), "{label}: rejected");
+            assert_eq!(none.batches(), inert.batches(), "{label}: batches");
+            assert_eq!(none.reloads(), inert.reloads(), "{label}: reloads");
+            assert_eq!(
+                none.span_s.to_bits(),
+                inert.span_s.to_bits(),
+                "{label}: span"
+            );
+            assert_eq!(none.completions.len(), inert.completions.len());
+            for (a, b) in none.completions.iter().zip(&inert.completions) {
+                assert_eq!(a.id, b.id, "{label}: completion order");
+                assert_eq!(a.worker, b.worker, "{label}: worker of request {}", a.id);
+                assert_eq!(
+                    a.completion_s.to_bits(),
+                    b.completion_s.to_bits(),
+                    "{label}: completion time of request {}",
+                    a.id
+                );
+            }
+            assert_eq!(none.replica_holders, inert.replica_holders, "{label}: residency");
+            for r in [&none, &inert] {
+                assert_eq!(r.prewarms(), 0, "{label}: no policy may pre-warm here");
+                assert_eq!(r.drains(), 0, "{label}: no policy may drain here");
+            }
+        }
+    }
+}
+
+#[test]
+fn k_networks_cost_k_plans_at_any_fleet_size_and_replica_count() {
+    let nets = skewed_nets();
+    let trace = skewed_trace(120);
+    let policies = [
+        ReplicationPolicy::None,
+        ReplicationPolicy::Static {
+            targets: vec![("mobilenetv1".to_string(), 2), ("*".to_string(), 1)],
+        },
+        ReplicationPolicy::Adaptive(AdaptiveConfig::default()),
+    ];
+    for workers in [1usize, 3, 5] {
+        for policy in &policies {
+            let eng = engine();
+            let cfg = SimServeConfig {
+                workers,
+                replication: policy.clone(),
+                ..base_cfg()
+            };
+            let r = replay(&eng, &nets, &trace, cfg).unwrap();
+            assert_eq!(
+                r.plans_computed,
+                nets.len() as u64,
+                "{workers} workers / {}: replication must copy weights, never re-plan",
+                policy.label()
+            );
+            assert_eq!(eng.cache_stats().misses, nets.len() as u64);
+            assert_eq!(r.accepted(), 120, "generous SLO accepts everything");
+        }
+    }
+}
+
+#[test]
+fn adaptive_replication_beats_single_residency_affinity_on_the_pinned_skewed_trace() {
+    // The headline pin: same trace, same 3-worker affinity fleet; the only
+    // difference is the adaptive replica controller. Single residency
+    // churns — every cold arrival finds its weights evicted (three cold
+    // networks cycling over the two non-hot slots in LRU order) — while
+    // the controller's repairs re-stream evicted weights onto idle
+    // workers between arrivals, so a strict share of cold batches find
+    // their weights already resident.
+    let eng = engine();
+    let nets = skewed_nets();
+    let trace = skewed_trace(240);
+    let none = replay(
+        &eng,
+        &nets,
+        &trace,
+        SimServeConfig {
+            replication: ReplicationPolicy::None,
+            ..base_cfg()
+        },
+    )
+    .unwrap();
+    let adaptive = replay(
+        &eng,
+        &nets,
+        &trace,
+        SimServeConfig {
+            replication: ReplicationPolicy::Adaptive(AdaptiveConfig::default()),
+            ..base_cfg()
+        },
+    )
+    .unwrap();
+
+    // Both runs serve the full trace under the generous SLO.
+    for (label, r) in [("none", &none), ("adaptive", &adaptive)] {
+        assert_eq!(r.offered(), 240, "{label}");
+        assert_eq!(r.accepted(), 240, "{label}");
+        assert_eq!(r.completed(), 240, "{label}");
+    }
+    // Sanity: single residency really is in the churn regime.
+    assert!(
+        none.reloads() >= 30,
+        "expected heavy cold churn under single residency, got {} reloads",
+        none.reloads()
+    );
+    assert_eq!(none.prewarms(), 0);
+    // The acceptance pin: strictly fewer blocking reloads, no goodput
+    // loss, and the savings actually came from pre-warmed replicas.
+    assert!(
+        adaptive.reloads() < none.reloads(),
+        "adaptive reloads {} not strictly below single-residency {}",
+        adaptive.reloads(),
+        none.reloads()
+    );
+    assert!(
+        adaptive.goodput() >= none.goodput(),
+        "adaptive goodput {} fell below single-residency {}",
+        adaptive.goodput(),
+        none.goodput()
+    );
+    assert!(adaptive.prewarms() > 0, "the controller must have pre-warmed");
+    // The hot network's lane is protected: it never pays more reloads
+    // than under single residency.
+    assert!(
+        adaptive.per_net[0].reloads <= none.per_net[0].reloads,
+        "the controller made the hot lane worse: {} vs {}",
+        adaptive.per_net[0].reloads,
+        none.per_net[0].reloads
+    );
+    // One engine, both replays: still one plan per network.
+    assert_eq!(eng.cache_stats().misses, nets.len() as u64);
+}
+
+#[test]
+fn static_targets_hold_their_replica_counts_across_the_trace() {
+    let eng = engine();
+    let nets = skewed_nets();
+    let trace = skewed_trace(120);
+    let cfg = SimServeConfig {
+        replication: ReplicationPolicy::Static {
+            targets: vec![("mobilenetv1".to_string(), 2), ("*".to_string(), 0)],
+        },
+        workers: 4,
+        ..base_cfg()
+    };
+    let r = replay(&eng, &nets, &trace, cfg).unwrap();
+    // The pinned double lane makes the hot network reload-proof: its two
+    // replicas were pre-warmed before its first batch, and whenever a
+    // cold fallback steals one, the controller restores it at the next
+    // offer — always before both replicas can be lost, so every hot
+    // batch finds resident weights.
+    assert_eq!(r.per_net[0].reloads, 0, "a pinned hot lane never reloads");
+    assert!(r.prewarms() >= 2, "initial provisioning alone takes 2 pre-warms");
+    // At least one hot replica survives to end of trace (a final-offer
+    // steal can leave the second deficit unrestored).
+    assert!(
+        !r.replica_holders[0].is_empty(),
+        "hot network lost all replicas: {:?}",
+        r.replica_holders
+    );
+    assert_eq!(r.completed(), 120);
+}
+
+#[test]
+fn adaptive_drains_replicas_of_networks_that_fall_silent() {
+    let eng = engine();
+    let nets: Vec<Network> = ["mobilenetv1", "vgg11"]
+        .iter()
+        .map(|n| zoo::by_name(n, 100).unwrap())
+        .collect();
+    // vgg11 is live early, then falls silent; mobilenetv1 keeps arriving,
+    // driving controller steps past the silent window.
+    let mut trace = Vec::new();
+    for j in 0..6u64 {
+        trace.push(SimRequest {
+            id: j,
+            net: (j % 2) as usize,
+            arrival_s: j as f64 * 0.01,
+        });
+    }
+    for j in 6..30u64 {
+        trace.push(SimRequest {
+            id: j,
+            net: 0,
+            arrival_s: 0.06 + (j - 6) as f64 * 0.01,
+        });
+    }
+    let cfg = SimServeConfig {
+        workers: 2,
+        placement: Placement::NetworkAffinity,
+        replication: ReplicationPolicy::Adaptive(AdaptiveConfig {
+            window_s: 0.05,
+            ..AdaptiveConfig::default()
+        }),
+        slo_s: 1e6,
+        max_batch: 4,
+        max_wait_s: 0.001,
+        ..SimServeConfig::default()
+    };
+    let r = replay(&eng, &nets, &trace, cfg).unwrap();
+    assert!(r.drains() >= 1, "the silent network's replica must drain");
+    assert!(
+        r.replica_holders[1].is_empty(),
+        "vgg11 must hold nothing at end of trace: {:?}",
+        r.replica_holders
+    );
+    // Under policy None the weights would have squatted on their worker.
+    let none = replay(
+        &eng,
+        &nets,
+        &trace,
+        SimServeConfig {
+            replication: ReplicationPolicy::None,
+            workers: 2,
+            placement: Placement::NetworkAffinity,
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(
+        !none.replica_holders[1].is_empty(),
+        "without a controller the cold weights stay resident"
+    );
+}

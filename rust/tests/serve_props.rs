@@ -4,9 +4,11 @@
 //! design promises —
 //!
 //! * admission never violates the SLO bound it quotes: every accepted
-//!   request completes within the SLO, exactly, for any fleet size and
-//!   placement policy (the quote is an upper bound on the realized
-//!   completion by construction, per worker);
+//!   request completes within the SLO, exactly, for any fleet size,
+//!   placement policy, and replication policy (the quote is an upper
+//!   bound on the realized completion by construction, per worker —
+//!   pre-warms only ever touch workers with no open batch, so no issued
+//!   quote is invalidated);
 //! * conservation: per-network completed ≤ offered, accepted + rejected
 //!   == offered, batches == accepted − coalesced, reloads ≤ batches, and
 //!   the per-worker rows sum to the fleet totals;
@@ -24,7 +26,7 @@
 //! most once each.
 
 use pimflow::cfg::presets;
-use pimflow::coordinator::{Arrival, Placement, SimServeConfig};
+use pimflow::coordinator::{AdaptiveConfig, Arrival, Placement, ReplicationPolicy, SimServeConfig};
 use pimflow::explore::batch_opt::max_batch_for_latency;
 use pimflow::explore::trace::{gen_trace, replay};
 use pimflow::nn::{zoo, Network};
@@ -56,6 +58,23 @@ struct Case {
     admission: bool,
     workers: usize,
     placement: Placement,
+    replication: ReplicationPolicy,
+}
+
+/// Random replication policy. `None` half the time (the workhorse path),
+/// otherwise adaptive (random window) or static targets on net 0 — the
+/// pool's first network, which every case serves.
+fn any_replication(rng: &mut Rng) -> ReplicationPolicy {
+    match rng.index(4) {
+        0 | 1 => ReplicationPolicy::None,
+        2 => ReplicationPolicy::Adaptive(AdaptiveConfig {
+            window_s: rng.range_f64(0.005, 0.5),
+            ..AdaptiveConfig::default()
+        }),
+        _ => ReplicationPolicy::Static {
+            targets: vec![("mobilenetv1".to_string(), 1 + rng.index(3))],
+        },
+    }
 }
 
 fn gen_case(rng: &mut Rng, admission: bool) -> Case {
@@ -80,6 +99,7 @@ fn gen_case(rng: &mut Rng, admission: bool) -> Case {
         admission,
         workers: 1 + rng.index(4),
         placement: any_placement(rng),
+        replication: any_replication(rng),
     }
 }
 
@@ -92,6 +112,7 @@ fn run_case(engine: &Engine, nets: &[Network], c: &Case) -> pimflow::coordinator
         admission: c.admission,
         workers: c.workers,
         placement: c.placement,
+        replication: c.replication.clone(),
         ..SimServeConfig::default()
     };
     replay(engine, &nets[..c.num_nets], &trace, cfg).expect("replay failed")
@@ -216,6 +237,18 @@ fn serving_counters_are_conserved_per_network_and_per_worker() {
                 "worker reloads {w_reloads} != fleet {}",
                 r.reloads()
             );
+            let w_prewarms: u64 = r.per_worker.iter().map(|w| w.prewarms).sum();
+            prop_assert!(
+                w_prewarms == r.prewarms(),
+                "worker pre-warms {w_prewarms} != fleet {}",
+                r.prewarms()
+            );
+            if c.replication == ReplicationPolicy::None {
+                prop_assert!(
+                    r.prewarms() == 0 && r.drains() == 0,
+                    "policy None must never pre-warm or drain"
+                );
+            }
             for w in &r.per_worker {
                 prop_assert!(
                     w.busy_s <= r.span_s + 1e-9,
