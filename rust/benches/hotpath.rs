@@ -8,10 +8,11 @@ use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
 use pimflow::cfg::PipelineCase;
 use pimflow::coordinator::{
-    AdaptiveConfig, Arrival, Placement, ReplicationPolicy, SimRequest, SimServeConfig,
+    AdaptiveConfig, Arrival, Placement, RateSchedule, ReplicationPolicy, SimRequest,
+    SimServeConfig, SimServer,
 };
 use pimflow::ddm;
-use pimflow::explore::{fig6_sweep, mixed_trace, replay, BATCHES};
+use pimflow::explore::{fig6_sweep, mixed_trace, replay, replay_stream, stream_trace, BATCHES};
 use pimflow::nn::{resnet, zoo};
 use pimflow::partition::{partition, search_partition_with};
 use pimflow::pim::ChipModel;
@@ -84,7 +85,110 @@ fn main() {
             .sweep(&r34, &Design::FIG6, &sweep_batches)
             .unwrap()
     });
+
+    // Tentpole acceptance: a streaming million-request replay through the
+    // event-heap kernel over a 32-worker fleet (100k in quick mode, so CI
+    // smoke stays fast). Requests are generated and consumed one at a
+    // time; the engine is pre-warmed so the case times the kernel, not
+    // plan computation.
+    let quick = std::env::var("PIMFLOW_BENCH_QUICK").is_ok();
+    let stream_n: usize = if quick { 100_000 } else { 1_000_000 };
+    let stream_engine = Engine::compact(dram.clone());
+    let stream_nets: Vec<_> = ["mobilenetv1", "vgg11", "resnet18"]
+        .iter()
+        .map(|n| zoo::by_name(n, 100).unwrap())
+        .collect();
+    let stream_cfg = SimServeConfig {
+        slo_s: 1e6,
+        max_batch: 16,
+        max_wait_s: 0.001,
+        workers: 32,
+        placement: Placement::NetworkAffinity,
+        ..SimServeConfig::default()
+    };
+    {
+        // Warm the plan cache outside the timed region.
+        let stream = stream_trace(
+            stream_nets.len(),
+            None,
+            Arrival::Poisson(2000.0),
+            RateSchedule::default(),
+            11,
+        )
+        .take(64);
+        replay_stream(&stream_engine, &stream_nets, stream, stream_cfg.clone()).unwrap();
+    }
+    let stream_label = if quick {
+        "serve_stream_100k_32w"
+    } else {
+        "serve_stream_1m_32w"
+    };
+    let stream_median = b
+        .case(stream_label, || {
+            let stream = stream_trace(
+                stream_nets.len(),
+                None,
+                Arrival::Poisson(2000.0),
+                RateSchedule::default(),
+                11,
+            )
+            .take(stream_n);
+            replay_stream(&stream_engine, &stream_nets, stream, stream_cfg.clone()).unwrap()
+        })
+        .median
+        .as_secs_f64();
+    println!(
+        "streaming kernel replay: {stream_n} requests / 32 workers in {:.3} s median \
+         ({:.0} req/s)",
+        stream_median,
+        stream_n as f64 / stream_median
+    );
+    assert!(
+        stream_median < 10.0,
+        "streaming replay blew the wall-clock budget: {stream_median:.3} s for {stream_n} requests"
+    );
+
     b.report();
+
+    // Memory-independence evidence for the streaming path: per-request
+    // logs stay empty and the event heap stays O(workers + open batches)
+    // across the whole run — its high-water mark is set by in-flight work
+    // and batches opened inside one max_wait window, not by trace length.
+    {
+        let mut server = SimServer::new(
+            &stream_engine,
+            &stream_nets,
+            SimServeConfig {
+                retain_per_request: false,
+                ..stream_cfg.clone()
+            },
+        )
+        .unwrap();
+        let mut max_pending = 0usize;
+        let probe = stream_trace(
+            stream_nets.len(),
+            None,
+            Arrival::Poisson(2000.0),
+            RateSchedule::default(),
+            11,
+        )
+        .take(stream_n.min(200_000));
+        for req in probe {
+            server.offer(req).unwrap();
+            max_pending = max_pending.max(server.pending_events());
+        }
+        let report = server.finish().unwrap();
+        println!(
+            "streaming kernel heap high-water mark: {max_pending} events for {} completions",
+            report.completed()
+        );
+        assert!(report.completions.is_empty(), "streaming retains no completions");
+        assert!(report.residency_log.is_empty(), "streaming retains no residency log");
+        assert!(
+            max_pending < 512,
+            "event heap must stay O(workers + open batches), saw {max_pending}"
+        );
+    }
 
     let results = b.results();
     let uncached = results
@@ -262,4 +366,16 @@ fn main() {
         replicated.goodput(),
         single.goodput()
     );
+
+    // Persist the baseline next to Cargo.toml: the committed
+    // BENCH_hotpath.json is regenerated by every bench run, so perf
+    // regressions show up as a diff.
+    let note = if quick {
+        "quick-mode baseline (PIMFLOW_BENCH_QUICK=1); regenerate with `cargo bench --bench hotpath`"
+    } else {
+        "regenerated by `cargo bench --bench hotpath`"
+    };
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+    pimflow::bench_harness::write_bench_json(b.results(), note, &out).unwrap();
+    println!("wrote {}", out.display());
 }

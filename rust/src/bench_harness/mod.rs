@@ -121,6 +121,56 @@ impl Bench {
     }
 }
 
+/// Escape a string for inclusion in a JSON string literal (names are
+/// ASCII case labels, so only quotes/backslashes/control bytes matter).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render bench results as a JSON document (the `BENCH_*.json` baselines
+/// CI and the driver diff between runs). Hand-rolled: the offline
+/// registry carries no `serde`, and the schema is flat — one object per
+/// case with seconds-valued statistics.
+pub fn render_bench_json(results: &[BenchResult], note: &str) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+    out.push_str("  \"cases\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"median_s\": {:.9}, \"mean_s\": {:.9}, \
+             \"stddev_s\": {:.9}, \"min_s\": {:.9}, \"max_s\": {:.9}}}{}\n",
+            json_escape(&r.name),
+            r.iters,
+            r.median.as_secs_f64(),
+            r.mean.as_secs_f64(),
+            r.stddev.as_secs_f64(),
+            r.min.as_secs_f64(),
+            r.max.as_secs_f64(),
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON baseline to `path` (see [`render_bench_json`]).
+pub fn write_bench_json(
+    results: &[BenchResult],
+    note: &str,
+    path: &std::path::Path,
+) -> std::io::Result<()> {
+    std::fs::write(path, render_bench_json(results, note))
+}
+
 /// Render bench results as an aligned table.
 pub fn render_bench_table(results: &[BenchResult]) -> String {
     let mut rows = vec![vec![
@@ -218,5 +268,27 @@ mod tests {
     #[test]
     fn align_empty() {
         assert_eq!(align(&[]), "");
+    }
+
+    #[test]
+    fn bench_json_is_flat_and_escaped() {
+        let r = BenchResult {
+            name: "serve \"1M\"".into(),
+            iters: 7,
+            median: Duration::from_millis(10),
+            mean: Duration::from_millis(11),
+            stddev: Duration::ZERO,
+            min: Duration::from_millis(9),
+            max: Duration::from_millis(12),
+        };
+        let s = render_bench_json(&[r.clone(), r], "baseline");
+        assert!(s.contains("\"note\": \"baseline\""));
+        assert!(s.contains("\\\"1M\\\""), "quotes must be escaped: {s}");
+        assert!(s.contains("\"median_s\": 0.010000000"));
+        // Two cases → exactly one separating comma between the objects.
+        assert_eq!(s.matches("\"name\"").count(), 2);
+        assert_eq!(s.matches("},\n").count(), 1);
+        assert!(s.ends_with("  ]\n}\n"));
+        assert_eq!(render_bench_json(&[], "x").matches("\"name\"").count(), 0);
     }
 }

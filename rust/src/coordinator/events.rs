@@ -1,0 +1,248 @@
+//! Discrete-event kernel for the simulated serving fleet.
+//!
+//! [`SimServer`] used to advance virtual time by scanning every worker's open
+//! batch on each offer. The kernel replaces those scans with a
+//! [`BinaryHeap`]-backed [`EventQueue`]: state transitions are scheduled as
+//! [`Event`]s and popped in time order, so an offer touches O(log events)
+//! heap work plus only the transitions actually due.
+//!
+//! ## Ordering / tie-break contract
+//!
+//! Events pop in ascending `(t_s, kind rank, worker, push sequence)` order.
+//! The kind ranks break ties at equal timestamps:
+//!
+//! | rank | kind              | meaning                                      |
+//! |------|-------------------|----------------------------------------------|
+//! | 0    | `Completion`      | a worker's in-flight work finishes           |
+//! | 1    | `FlushDeadline`   | an open batch's max-wait deadline expires    |
+//! | 2    | `PrewarmDone`     | a controller pre-warm weight stream finishes |
+//! | 3    | `ControllerTick`  | the replica controller runs a planning step  |
+//! | 4    | `Arrival`         | a request arrives (delivered by the caller)  |
+//!
+//! Completions settle before deadlines fire, deadlines before the controller
+//! replans, and all internal transitions before the next arrival is offered.
+//! One deliberate exception lives in the server, not the queue: *due flush
+//! deadlines apply in worker-id order* (each at its own recorded deadline),
+//! not pop order — see `SimServer::dispatch_due` for why that discipline is
+//! load-bearing.
+//!
+//! Stale events are tolerated by design: a batch that fills and flushes early
+//! leaves its `FlushDeadline` event in the heap. Events carry the `epoch` of
+//! the batch they were scheduled for; the dispatcher drops any whose epoch no
+//! longer matches the worker's open batch. This keeps pushes O(log n) with no
+//! in-heap deletion.
+//!
+//! [`SimServer`]: super::SimServer
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What a scheduled [`Event`] means when it fires. Variants are ordered by
+/// tie-break rank at equal timestamps (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A worker's in-flight work reaches its completion time.
+    Completion,
+    /// An open batch's max-wait deadline expires and the batch must flush.
+    FlushDeadline,
+    /// A controller-initiated pre-warm weight stream finishes.
+    PrewarmDone,
+    /// The replica controller runs a planning step.
+    ControllerTick,
+    /// A request arrives. The serving loop delivers arrivals by calling
+    /// `offer` directly — the variant documents the rank arrivals hold in
+    /// the ordering contract (after every internal transition at the same
+    /// instant).
+    Arrival,
+}
+
+impl EventKind {
+    /// Tie-break rank at equal timestamps (lower pops first).
+    pub fn rank(self) -> u8 {
+        match self {
+            EventKind::Completion => 0,
+            EventKind::FlushDeadline => 1,
+            EventKind::PrewarmDone => 2,
+            EventKind::ControllerTick => 3,
+            EventKind::Arrival => 4,
+        }
+    }
+}
+
+/// A scheduled state transition.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Virtual time at which the event fires, in seconds.
+    pub t_s: f64,
+    /// What fires.
+    pub kind: EventKind,
+    /// The worker the event concerns (0 for fleet-wide events).
+    pub worker: usize,
+    /// Staleness guard: the batch epoch this event was scheduled for.
+    /// Dispatchers drop events whose epoch no longer matches live state.
+    pub epoch: u64,
+}
+
+/// Heap entry: an [`Event`] plus a monotone push sequence as the final
+/// tie-break, making pop order total and deterministic.
+struct HeapEntry {
+    ev: Event,
+    seq: u64,
+}
+
+impl HeapEntry {
+    fn key(&self) -> (f64, u8, usize, u64) {
+        (self.ev.t_s, self.ev.kind.rank(), self.ev.worker, self.seq)
+    }
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: `BinaryHeap` is a max-heap and we want the earliest
+        // event on top. NaN timestamps order via `total_cmp` (they sort
+        // last and can only arise from corrupted pricing anyway).
+        let (at, ak, aw, aseq) = self.key();
+        let (bt, bk, bw, bseq) = other.key();
+        bt.total_cmp(&at)
+            .then_with(|| bk.cmp(&ak))
+            .then_with(|| bw.cmp(&aw))
+            .then_with(|| bseq.cmp(&aseq))
+    }
+}
+
+/// Min-heap of scheduled [`Event`]s with deterministic total ordering.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<HeapEntry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule an event.
+    pub fn push(&mut self, ev: Event) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(HeapEntry { ev, seq });
+    }
+
+    /// Pop the earliest event if it fires at or before `now_s`.
+    pub fn pop_due(&mut self, now_s: f64) -> Option<Event> {
+        if self.heap.peek()?.ev.t_s <= now_s {
+            self.heap.pop().map(|e| e.ev)
+        } else {
+            None
+        }
+    }
+
+    /// Pop the earliest event unconditionally (end-of-trace drains).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|e| e.ev)
+    }
+
+    /// Fire time of the earliest scheduled event.
+    pub fn peek_t(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.ev.t_s)
+    }
+
+    /// Number of scheduled events (live and stale).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no events are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drop every scheduled event.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_s: f64, kind: EventKind, worker: usize) -> Event {
+        Event { t_s, kind, worker, epoch: 0 }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(3.0, EventKind::Completion, 0));
+        q.push(ev(1.0, EventKind::Arrival, 0));
+        q.push(ev(2.0, EventKind::FlushDeadline, 0));
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.t_s).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_times_break_by_kind_rank_then_worker_then_push_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(1.0, EventKind::Arrival, 0));
+        q.push(ev(1.0, EventKind::ControllerTick, 5));
+        q.push(ev(1.0, EventKind::FlushDeadline, 2));
+        q.push(ev(1.0, EventKind::FlushDeadline, 1));
+        q.push(ev(1.0, EventKind::Completion, 9));
+        q.push(ev(1.0, EventKind::PrewarmDone, 0));
+        let kinds: Vec<(EventKind, usize)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.kind, e.worker)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (EventKind::Completion, 9),
+                (EventKind::FlushDeadline, 1),
+                (EventKind::FlushDeadline, 2),
+                (EventKind::PrewarmDone, 0),
+                (EventKind::ControllerTick, 5),
+                (EventKind::Arrival, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn identical_events_pop_in_push_order() {
+        let mut q = EventQueue::new();
+        for epoch in [7u64, 8, 9] {
+            q.push(Event { t_s: 1.0, kind: EventKind::FlushDeadline, worker: 3, epoch });
+        }
+        let epochs: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.epoch).collect();
+        assert_eq!(epochs, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn pop_due_respects_the_horizon_inclusively() {
+        let mut q = EventQueue::new();
+        q.push(ev(1.0, EventKind::Completion, 0));
+        q.push(ev(2.0, EventKind::Completion, 0));
+        assert_eq!(q.pop_due(0.5).map(|e| e.t_s), None);
+        assert_eq!(q.pop_due(1.0).map(|e| e.t_s), Some(1.0));
+        assert_eq!(q.pop_due(1.0).map(|e| e.t_s), None);
+        assert_eq!(q.peek_t(), Some(2.0));
+        assert_eq!(q.len(), 1);
+        q.clear();
+        assert!(q.is_empty());
+    }
+}

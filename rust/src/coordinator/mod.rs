@@ -7,15 +7,18 @@
 //!   artifact variant → PJRT execute → per-request reply channels; and
 //! * the simulated path ([`sim_serve`], always available): an
 //!   Engine-backed admission controller over a fleet of virtual-time
-//!   workers ([`vworker`]) with pluggable [`placement`] policies and a
-//!   weight-replication subsystem ([`replica`]: per-network replica sets,
-//!   static pinning, and an adaptive pre-warm/drain controller), charging
-//!   pipeline makespans instead of PJRT executions — so the full request
-//!   path (batching policy, arrival statistics, admission, placement,
-//!   replication, SLO accounting) is exercised in the default (no-xla)
-//!   CI lane.
+//!   workers ([`vworker`]) driven by a discrete-event kernel
+//!   ([`events`]: a `BinaryHeap` of flush-deadline / completion /
+//!   controller-tick / prewarm events), with pluggable [`placement`]
+//!   policies and a weight-replication subsystem ([`replica`]:
+//!   per-network replica sets, static pinning, and an adaptive
+//!   pre-warm/drain controller), charging pipeline makespans instead of
+//!   PJRT executions — so the full request path (batching policy,
+//!   arrival statistics, admission, placement, replication, SLO
+//!   accounting) is exercised in the default (no-xla) CI lane.
 
 pub mod batcher;
+pub mod events;
 pub mod loadgen;
 pub mod placement;
 pub mod replica;
@@ -28,7 +31,8 @@ pub mod vworker;
 pub mod worker;
 
 pub use batcher::BatchPolicy;
-pub use loadgen::Arrival;
+pub use events::{Event, EventKind, EventQueue};
+pub use loadgen::{Arrival, Diurnal, FlashCrowd, RateSchedule};
 #[cfg(feature = "runtime")]
 pub use loadgen::{run_load, LoadReport};
 pub use placement::Placement;

@@ -58,6 +58,21 @@
 //!   whose full-batch latency fits the SLO (capped by `max_batch`). A
 //!   network where even batch 1 misses the SLO has cap 0 — every request
 //!   for it is rejected up front, before placement is consulted.
+//! * Virtual time advances through a discrete-event kernel
+//!   ([`super::events`]): open-batch linger deadlines, worker
+//!   completions, controller ticks, and pre-warm finishes are scheduled
+//!   as heap events and dispatched when an arrival (or [`advance`]) moves
+//!   time forward, so an offer costs O(log events) heap work instead of
+//!   an O(workers) scan — and the heap itself stays O(workers + open
+//!   batches), independent of trace length. Due flush deadlines apply in
+//!   *worker-id order*, each at its own recorded deadline (see
+//!   `dispatch_due` for why that tie-break is load-bearing). Per-request
+//!   retention (`completions`, `residency_log`) can be switched off
+//!   ([`SimServeConfig::retain_per_request`]) for streaming replays;
+//!   latency tails survive in per-network log-scale histograms
+//!   ([`LatencyHist`]) either way.
+//!
+//! [`advance`]: SimServer::advance
 
 use std::collections::HashMap;
 
@@ -66,7 +81,9 @@ use anyhow::Result;
 use crate::explore::batch_opt::max_batch_for_latency;
 use crate::nn::Network;
 use crate::sim::engine::{Design, Engine};
+use crate::util::LatencyHist;
 
+use super::events::{Event, EventKind, EventQueue};
 use super::placement::Placement;
 use super::replica::{
     ReplicaAction, ReplicaController, ReplicaSet, ReplicationPolicy, ResidencyCause,
@@ -118,6 +135,12 @@ pub struct SimServeConfig {
     /// How the fleet spends capacity on weight residency (default
     /// [`ReplicationPolicy::None`] — the pre-replication model, bitwise).
     pub replication: ReplicationPolicy,
+    /// Retain per-request artifacts (the report's `completions` and
+    /// `residency_log`) — default true. Streaming replays
+    /// (`explore::replay_stream`) switch this off so memory stays
+    /// O(workers + open batches) however long the trace; the latency
+    /// histograms keep the tail statistics either way.
+    pub retain_per_request: bool,
 }
 
 impl Default for SimServeConfig {
@@ -131,6 +154,7 @@ impl Default for SimServeConfig {
             workers: 1,
             placement: Placement::RoundRobin,
             replication: ReplicationPolicy::None,
+            retain_per_request: true,
         }
     }
 }
@@ -177,6 +201,10 @@ pub struct NetStats {
     pub within_slo: u64,
     /// Sum of completion latencies, seconds.
     pub latency_sum_s: f64,
+    /// Log-scale latency histogram of this network's completions —
+    /// p50/p99/p999 come from here in O(1) memory; the mean stays exact
+    /// via `latency_sum_s`.
+    pub hist: LatencyHist,
 }
 
 impl NetStats {
@@ -223,10 +251,13 @@ pub struct SimServeReport {
     /// and a warm one pays zero: the cross-trace cache reuse the ROADMAP
     /// targets.
     pub plans_computed: u64,
+    /// Every completion, in flush order. Empty when the replay ran with
+    /// [`SimServeConfig::retain_per_request`] off (streaming mode).
     pub completions: Vec<Completion>,
     /// Every residency change (batch loads/evicts, pre-warms, drains), in
     /// simulation order; folds back into `replica_holders` exactly
-    /// (property-checked in `tests/replica_props.rs`).
+    /// (property-checked in `tests/replica_props.rs`). Empty in
+    /// streaming mode, like `completions`.
     pub residency_log: Vec<ResidencyEvent>,
     /// Final replica sets: `replica_holders[net]` is the sorted list of
     /// workers holding `net`'s weights at end of trace.
@@ -313,6 +344,17 @@ impl SimServeReport {
             self.completed() as f64 / self.span_s
         }
     }
+
+    /// Fleet-wide latency histogram: the merge of every per-network
+    /// histogram. p50/p99/p999 and SLO quantiles for the whole trace
+    /// come from here without retaining any [`Completion`].
+    pub fn fleet_hist(&self) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        for n in &self.per_net {
+            h.merge(&n.hist);
+        }
+        h
+    }
 }
 
 /// The simulated serving coordinator. Borrows a shared [`Engine`]; all
@@ -346,6 +388,22 @@ pub struct SimServer<'e> {
     stats: Vec<NetStats>,
     completions: Vec<Completion>,
     misses_at_start: u64,
+    /// The discrete-event kernel: scheduled flush deadlines, worker
+    /// completions, controller ticks, and pre-warm finishes.
+    events: EventQueue,
+    /// Monotone batch-epoch counter; stamps every open batch so stale
+    /// flush-deadline events are dropped on pop, with no in-heap deletion.
+    epoch_counter: u64,
+    /// Epoch of each worker's current open batch.
+    batch_epoch: Vec<u64>,
+    /// Whether a live `Completion` event is scheduled per worker — at
+    /// most one each, re-armed on pop, keeps the heap O(workers + open
+    /// batches).
+    completion_armed: Vec<bool>,
+    /// Workers whose scheduled work the kernel has not yet seen complete.
+    busy_workers: usize,
+    /// Controller pre-warm weight streams still in flight.
+    prewarms_pending: usize,
 }
 
 impl<'e> SimServer<'e> {
@@ -393,6 +451,8 @@ impl<'e> SimServer<'e> {
             controller,
             residency_log: Vec::new(),
             workers: (0..cfg.workers).map(VWorker::new).collect(),
+            batch_epoch: vec![0; cfg.workers],
+            completion_armed: vec![false; cfg.workers],
             cfg,
             caps,
             switch_s,
@@ -402,6 +462,10 @@ impl<'e> SimServer<'e> {
             stats,
             completions: Vec::new(),
             misses_at_start,
+            events: EventQueue::new(),
+            epoch_counter: 0,
+            busy_workers: 0,
+            prewarms_pending: 0,
         })
     }
 
@@ -430,10 +494,29 @@ impl<'e> SimServer<'e> {
             .min_by(|a, b| a.total_cmp(b))
     }
 
-    /// Advance virtual time to `now` without an arrival, flushing every
-    /// open batch whose linger deadline has passed. Closed-loop drivers
-    /// use this when every client is blocked on an in-flight batch.
-    /// Later offers must arrive at or after `now`.
+    /// Kernel gauge: workers whose scheduled work has not completed by
+    /// the last dispatched instant (exact between dispatches).
+    pub fn busy_workers(&self) -> usize {
+        self.busy_workers
+    }
+
+    /// Kernel gauge: controller pre-warm weight streams still in flight.
+    pub fn prewarms_pending(&self) -> usize {
+        self.prewarms_pending
+    }
+
+    /// Events in the kernel's heap (live + not-yet-popped stale). Stays
+    /// O(workers + open batches) however long the trace — the memory
+    /// claim the streaming bench pins.
+    pub fn pending_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Advance virtual time to `now` without an arrival, dispatching
+    /// every due event (flushing open batches whose linger deadline has
+    /// passed). Closed-loop drivers use this when every client is
+    /// blocked on an in-flight batch. Later offers must arrive at or
+    /// after `now`.
     pub fn advance(&mut self, now: f64) -> Result<()> {
         anyhow::ensure!(
             now >= self.last_arrival_s,
@@ -442,7 +525,7 @@ impl<'e> SimServer<'e> {
             self.last_arrival_s
         );
         self.last_arrival_s = now;
-        self.flush_due(now)
+        self.dispatch_due(now)
     }
 
     /// Full-batch pipeline makespan for `k` requests of network `net`,
@@ -491,7 +574,7 @@ impl<'e> SimServer<'e> {
         let (start, reloaded, done) = self.price(w, batch.net, k, ready_s)?;
         if reloaded {
             if let Some(old) = self.replicas.resident(w) {
-                self.residency_log.push(ResidencyEvent {
+                self.log_residency(ResidencyEvent {
                     t_s: start,
                     worker: w,
                     net: old,
@@ -500,7 +583,7 @@ impl<'e> SimServer<'e> {
                 });
             }
             self.replicas.on_load(w, batch.net);
-            self.residency_log.push(ResidencyEvent {
+            self.log_residency(ResidencyEvent {
                 t_s: start,
                 worker: w,
                 net: batch.net,
@@ -512,15 +595,30 @@ impl<'e> SimServer<'e> {
                     .note_reload(batch.net, start, self.switch_s[batch.net]);
             }
         }
-        let wk = &mut self.workers[w];
-        wk.batches += 1;
-        wk.completed += batch.members.len() as u64;
-        if reloaded {
-            wk.reloads += 1;
+        {
+            let wk = &mut self.workers[w];
+            wk.batches += 1;
+            wk.completed += batch.members.len() as u64;
+            if reloaded {
+                wk.reloads += 1;
+            }
+            wk.busy_s += done - start;
+            wk.busy_until_s = done;
+            wk.loaded = Some(batch.net);
         }
-        wk.busy_s += done - start;
-        wk.busy_until_s = done;
-        wk.loaded = Some(batch.net);
+        // One live completion event per worker: arm it at this batch's
+        // finish; the dispatcher re-arms it forward if more work lands
+        // behind. Bounds the heap at O(workers + open batches).
+        if !self.completion_armed[w] {
+            self.completion_armed[w] = true;
+            self.busy_workers += 1;
+            self.events.push(Event {
+                t_s: done,
+                kind: EventKind::Completion,
+                worker: w,
+                epoch: 0,
+            });
+        }
         let s = &mut self.stats[batch.net];
         s.batches += 1;
         if reloaded {
@@ -534,28 +632,82 @@ impl<'e> SimServer<'e> {
                 arrival_s,
                 completion_s: done,
             };
+            let lat = c.latency_s();
             s.completed += 1;
-            s.latency_sum_s += c.latency_s();
-            if c.latency_s() <= self.cfg.slo_s {
+            s.latency_sum_s += lat;
+            s.hist.record(lat);
+            if lat <= self.cfg.slo_s {
                 s.within_slo += 1;
             }
-            self.completions.push(c);
+            self.workers[w].hist.record(lat);
+            if self.cfg.retain_per_request {
+                self.completions.push(c);
+            }
         }
         Ok(())
     }
 
-    /// Flush every worker's open batch whose linger deadline has passed
-    /// by `now_s` (worker-id order, for determinism).
-    fn flush_due(&mut self, now_s: f64) -> Result<()> {
-        for w in 0..self.workers.len() {
-            let due = matches!(&self.workers[w].open, Some(b) if now_s >= b.deadline_s);
-            if due {
-                let b = self.workers[w].open.take().expect("due batch exists");
-                let ready = b.deadline_s;
-                self.flush(w, b, ready)?;
-            }
+    /// Append to the residency log unless per-request retention is off.
+    fn log_residency(&mut self, ev: ResidencyEvent) {
+        if self.cfg.retain_per_request {
+            self.residency_log.push(ev);
         }
-        Ok(())
+    }
+
+    /// Dispatch every kernel event due at or before `now_s`: settle
+    /// completion and pre-warm gauges, run scheduled controller ticks,
+    /// and flush every open batch whose linger deadline has passed.
+    ///
+    /// **Tie-break contract:** due flush deadlines apply in *worker-id
+    /// order*, each at its own recorded deadline — not heap pop order.
+    /// Completion order feeds closed-loop drivers' RNG draw assignment,
+    /// the residency log, and the controller's reload windows (pruned
+    /// front-first, assuming time-ordered insertion); per-instant
+    /// worker-id order is the discipline every downstream pin was built
+    /// on, and the kernel preserves it bitwise.
+    fn dispatch_due(&mut self, now_s: f64) -> Result<()> {
+        loop {
+            let mut due_flushes: Vec<(usize, f64)> = Vec::new();
+            while let Some(ev) = self.events.pop_due(now_s) {
+                match ev.kind {
+                    EventKind::FlushDeadline => {
+                        let live = self.batch_epoch[ev.worker] == ev.epoch
+                            && self.workers[ev.worker].open.is_some();
+                        if live {
+                            due_flushes.push((ev.worker, ev.t_s));
+                        }
+                    }
+                    EventKind::Completion => {
+                        let busy_until = self.workers[ev.worker].busy_until_s;
+                        if busy_until > ev.t_s {
+                            // More work landed behind this one; re-arm at
+                            // the worker's new horizon.
+                            self.events.push(Event {
+                                t_s: busy_until,
+                                ..ev
+                            });
+                        } else {
+                            self.completion_armed[ev.worker] = false;
+                            self.busy_workers -= 1;
+                        }
+                    }
+                    EventKind::PrewarmDone => self.prewarms_pending -= 1,
+                    EventKind::ControllerTick => self.run_controller(ev.t_s),
+                    // Arrivals are delivered by the caller via `offer`.
+                    EventKind::Arrival => {}
+                }
+            }
+            if due_flushes.is_empty() {
+                return Ok(());
+            }
+            due_flushes.sort_unstable_by_key(|&(w, _)| w);
+            for (w, deadline_s) in due_flushes {
+                let b = self.workers[w].open.take().expect("due batch exists");
+                self.flush(w, b, deadline_s)?;
+            }
+            // Flushing overdue batches can schedule completions that are
+            // already due; loop once more to settle them.
+        }
     }
 
     /// Stream `net`'s weights onto worker `w` ahead of demand: the worker
@@ -567,7 +719,7 @@ impl<'e> SimServer<'e> {
         debug_assert!(self.workers[w].open.is_none());
         debug_assert_ne!(self.replicas.resident(w), Some(net));
         if let Some(old) = self.replicas.resident(w) {
-            self.residency_log.push(ResidencyEvent {
+            self.log_residency(ResidencyEvent {
                 t_s: now,
                 worker: w,
                 net: old,
@@ -576,7 +728,7 @@ impl<'e> SimServer<'e> {
             });
         }
         self.replicas.on_load(w, net);
-        self.residency_log.push(ResidencyEvent {
+        self.log_residency(ResidencyEvent {
             t_s: now,
             worker: w,
             net,
@@ -584,11 +736,31 @@ impl<'e> SimServer<'e> {
             cause: ResidencyCause::Prewarm,
         });
         let cost = self.switch_s[net];
-        let wk = &mut self.workers[w];
-        wk.busy_until_s = wk.busy_until_s.max(now) + cost;
-        wk.busy_s += cost;
-        wk.prewarms += 1;
-        wk.loaded = Some(net);
+        let done = {
+            let wk = &mut self.workers[w];
+            wk.busy_until_s = wk.busy_until_s.max(now) + cost;
+            wk.busy_s += cost;
+            wk.prewarms += 1;
+            wk.loaded = Some(net);
+            wk.busy_until_s
+        };
+        self.prewarms_pending += 1;
+        self.events.push(Event {
+            t_s: done,
+            kind: EventKind::PrewarmDone,
+            worker: w,
+            epoch: 0,
+        });
+        if !self.completion_armed[w] {
+            self.completion_armed[w] = true;
+            self.busy_workers += 1;
+            self.events.push(Event {
+                t_s: done,
+                kind: EventKind::Completion,
+                worker: w,
+                epoch: 0,
+            });
+        }
         self.stats[net].prewarms += 1;
     }
 
@@ -598,7 +770,7 @@ impl<'e> SimServer<'e> {
         debug_assert!(self.workers[w].open.is_none());
         debug_assert_eq!(self.workers[w].loaded, Some(net));
         self.replicas.on_evict(w);
-        self.residency_log.push(ResidencyEvent {
+        self.log_residency(ResidencyEvent {
             t_s: now,
             worker: w,
             net,
@@ -645,15 +817,23 @@ impl<'e> SimServer<'e> {
             self.last_arrival_s
         );
         self.last_arrival_s = req.arrival_s;
-        self.flush_due(req.arrival_s)?;
+        self.dispatch_due(req.arrival_s)?;
         self.stats[req.net].offered += 1;
 
         // The replication controller observes demand and may reshape
-        // residency before placement sees it. Policy `None` skips this
-        // entirely: the pre-replication code path, bit for bit.
+        // residency before placement sees it — scheduled as a kernel
+        // tick at the arrival instant (rank: after every due flush, per
+        // the ordering contract). Policy `None` skips this entirely: the
+        // pre-replication code path, bit for bit.
         if !self.controller.is_off() {
             self.controller.note_arrival(req.net, req.arrival_s);
-            self.run_controller(req.arrival_s);
+            self.events.push(Event {
+                t_s: req.arrival_s,
+                kind: EventKind::ControllerTick,
+                worker: 0,
+                epoch: 0,
+            });
+            self.dispatch_due(req.arrival_s)?;
         }
 
         let t = req.arrival_s;
@@ -740,6 +920,8 @@ impl<'e> SimServer<'e> {
         if let Some(b) = self.workers[w].open.take() {
             self.flush(w, b, t)?;
         }
+        self.epoch_counter += 1;
+        self.batch_epoch[w] = self.epoch_counter;
         self.workers[w].open = Some(OpenBatch {
             net: req.net,
             first_arrival_s: t,
@@ -748,14 +930,26 @@ impl<'e> SimServer<'e> {
         });
         self.stats[req.net].accepted += 1;
         if cap == 1 {
+            // Full on arrival: flushes right here, so no deadline event
+            // is ever scheduled for it.
             let b = self.workers[w].open.take().expect("batch opened above");
             self.flush(w, b, t)?;
+        } else {
+            self.events.push(Event {
+                t_s: t + self.cfg.max_wait_s,
+                kind: EventKind::FlushDeadline,
+                worker: w,
+                epoch: self.epoch_counter,
+            });
         }
         Ok(Verdict::Accepted)
     }
 
     /// End of trace: close every worker's open batch (at its linger
-    /// deadline, as quoted; worker-id order) and return the report.
+    /// deadline, as quoted; worker-id order — the same discipline
+    /// `dispatch_due` applies) and return the report. Remaining kernel
+    /// events (in-flight completions, stale deadlines) are dropped with
+    /// the server.
     pub fn finish(mut self) -> Result<SimServeReport> {
         for w in 0..self.workers.len() {
             if let Some(b) = self.workers[w].open.take() {
@@ -1223,5 +1417,72 @@ mod tests {
         let prewarms: u64 = r.per_worker.iter().map(|w| w.prewarms).sum();
         assert_eq!(prewarms, 3);
         assert!(r.per_worker.iter().all(|w| w.busy_s > 0.0));
+    }
+
+    #[test]
+    fn kernel_gauges_track_in_flight_work_and_the_heap_stays_small() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        assert_eq!(sv.busy_workers(), 0);
+        assert_eq!(sv.pending_events(), 0);
+        sv.offer(SimRequest {
+            id: 0,
+            net: 0,
+            arrival_s: 0.0,
+        })
+        .unwrap();
+        assert_eq!(sv.pending_events(), 1, "an open batch schedules its deadline");
+        assert_eq!(sv.busy_workers(), 0, "nothing flushed yet");
+        sv.advance(0.001).unwrap();
+        assert_eq!(sv.busy_workers(), 1, "the flushed batch is in flight");
+        sv.advance(10.0).unwrap();
+        assert_eq!(sv.busy_workers(), 0, "completion observed");
+        assert_eq!(sv.pending_events(), 0, "the heap drained completely");
+        let r = sv.finish().unwrap();
+        assert_eq!(r.completed(), 1);
+        assert_eq!(r.fleet_hist().count(), 1);
+    }
+
+    #[test]
+    fn retention_off_keeps_aggregates_and_histograms_but_drops_logs() {
+        let trace = reqs(&[(0, 0.0), (1, 0.0), (0, 0.001), (1, 0.002), (0, 0.002)]);
+        let nets = [
+            zoo::by_name("mobilenetv1", 100).unwrap(),
+            zoo::by_name("vgg11", 100).unwrap(),
+        ];
+        let cfg = |retain| SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            retain_per_request: retain,
+            ..SimServeConfig::default()
+        };
+        let eng = engine();
+        let mut full = SimServer::new(&eng, &nets, cfg(true)).unwrap();
+        run(&mut full, &trace);
+        let full = full.finish().unwrap();
+        let mut lean = SimServer::new(&eng, &nets, cfg(false)).unwrap();
+        run(&mut lean, &trace);
+        let lean = lean.finish().unwrap();
+        assert!(lean.completions.is_empty(), "streaming mode retains no completions");
+        assert!(lean.residency_log.is_empty(), "nor the residency log");
+        assert!(!full.completions.is_empty());
+        assert_eq!(full.span_s.to_bits(), lean.span_s.to_bits());
+        for (a, b) in full.per_net.iter().zip(&lean.per_net) {
+            assert_eq!(a.offered, b.offered);
+            assert_eq!(a.accepted, b.accepted);
+            assert_eq!(a.batches, b.batches);
+            assert_eq!(a.reloads, b.reloads);
+            assert_eq!(a.latency_sum_s.to_bits(), b.latency_sum_s.to_bits());
+            assert_eq!(a.hist, b.hist, "histograms fold identically");
+        }
+        assert_eq!(full.replica_holders, lean.replica_holders);
     }
 }

@@ -18,6 +18,8 @@
 //! [`Placement`]: crate::coordinator::placement::Placement
 //! [`ReplicaSet`]: crate::coordinator::replica::ReplicaSet
 
+use crate::util::LatencyHist;
+
 /// One not-yet-executed batch on a worker. At most one per worker.
 #[derive(Debug, Clone)]
 pub struct OpenBatch {
@@ -52,6 +54,9 @@ pub struct WorkerStats {
     pub idle_at_s: f64,
     /// Network resident at end of trace, if any.
     pub resident: Option<usize>,
+    /// Log-scale latency histogram of the completions this worker served
+    /// (p50/p99/p999 per worker in the fleet table).
+    pub hist: LatencyHist,
 }
 
 impl WorkerStats {
@@ -82,6 +87,8 @@ pub struct VWorker {
     pub reloads: u64,
     pub prewarms: u64,
     pub busy_s: f64,
+    /// Latencies of the completions this worker served.
+    pub hist: LatencyHist,
 }
 
 impl VWorker {
@@ -96,6 +103,7 @@ impl VWorker {
             reloads: 0,
             prewarms: 0,
             busy_s: 0.0,
+            hist: LatencyHist::new(),
         }
     }
 
@@ -131,6 +139,7 @@ impl VWorker {
             busy_s: self.busy_s,
             idle_at_s: self.busy_until_s,
             resident: self.loaded,
+            hist: self.hist.clone(),
         }
     }
 }

@@ -23,10 +23,19 @@
 //!   rejection), re-thinks, and only then submits again — so the offered
 //!   rate slows under server backlog, which no open-loop process can
 //!   express.
+//!
+//! Generation is **streaming-first**: [`stream_trace`] is an infinite
+//! iterator of requests (one RNG draw pair per request, optional
+//! time-varying [`RateSchedule`]), and [`replay_stream`] feeds it straight
+//! into the serving kernel with per-request retention off — so a
+//! million-request replay holds O(workers + open batches) memory, not
+//! O(requests). [`gen_trace`]/[`gen_trace_mix`] are thin `collect`
+//! adapters over the same stream and reproduce their historical output
+//! bit for bit.
 
 use anyhow::Result;
 
-use crate::coordinator::loadgen::Arrival;
+use crate::coordinator::loadgen::{Arrival, RateSchedule};
 use crate::coordinator::placement::Placement;
 use crate::coordinator::replica::ReplicationPolicy;
 use crate::coordinator::sim_serve::{
@@ -104,7 +113,9 @@ pub fn gen_trace(num_networks: usize, n: usize, arrival: Arrival, seed: u64) -> 
 /// [`gen_trace`] with an optional non-uniform network mix: `weights[i]`
 /// is the relative arrival weight of network `i` (they need not sum to 1;
 /// zero-weight networks never appear). `None` is the uniform default and
-/// reproduces [`gen_trace`] bit-for-bit.
+/// reproduces [`gen_trace`] bit-for-bit. A thin `collect` adapter over
+/// [`stream_trace`] with the constant schedule (pinned bitwise-equal in
+/// `tests/kernel_stream.rs`).
 pub fn gen_trace_mix(
     num_networks: usize,
     weights: Option<&[f64]>,
@@ -112,17 +123,76 @@ pub fn gen_trace_mix(
     arrival: Arrival,
     seed: u64,
 ) -> Vec<SimRequest> {
-    assert!(num_networks > 0, "gen_trace needs at least one network");
-    let cum = mix_cdf(num_networks, weights);
-    let mut rng = Rng::new(seed);
-    let mut t = 0.0f64;
-    (0..n as u64)
-        .map(|id| {
-            t += arrival.delay_s(&mut rng);
-            let net = draw_net(&mut rng, num_networks, &cum);
-            SimRequest { id, net, arrival_s: t }
-        })
+    stream_trace(num_networks, weights, arrival, RateSchedule::default(), seed)
+        .take(n)
         .collect()
+}
+
+/// Infinite streaming request generator: each `next()` samples one
+/// inter-arrival delay (divided by the schedule's instantaneous rate
+/// factor) and one network draw — the exact RNG draw order of the
+/// materialized generators, so with the constant schedule the stream is
+/// bit-identical to [`gen_trace_mix`]. Bound it with `.take(n)` or feed
+/// it straight to [`replay_stream`]; memory is O(1) per request.
+pub struct TraceStream {
+    rng: Rng,
+    num_networks: usize,
+    cum: Option<Vec<f64>>,
+    arrival: Arrival,
+    schedule: RateSchedule,
+    t: f64,
+    next_id: u64,
+}
+
+impl Iterator for TraceStream {
+    type Item = SimRequest;
+
+    fn next(&mut self) -> Option<SimRequest> {
+        let d = self.arrival.delay_s(&mut self.rng);
+        // Constant schedules skip the division entirely, making the
+        // bitwise-reproduction invariant structural (IEEE `d / 1.0 == d`
+        // would hold anyway).
+        self.t += if self.schedule.is_constant() {
+            d
+        } else {
+            d / self.schedule.factor(self.t)
+        };
+        let net = draw_net(&mut self.rng, self.num_networks, &self.cum);
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(SimRequest {
+            id,
+            net,
+            arrival_s: self.t,
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (usize::MAX, None)
+    }
+}
+
+/// Build a [`TraceStream`] over `num_networks` networks: optional
+/// non-uniform `weights` (validated exactly like [`gen_trace_mix`]), any
+/// base [`Arrival`] process, and a [`RateSchedule`] shaping the offered
+/// rate over virtual time.
+pub fn stream_trace(
+    num_networks: usize,
+    weights: Option<&[f64]>,
+    arrival: Arrival,
+    schedule: RateSchedule,
+    seed: u64,
+) -> TraceStream {
+    assert!(num_networks > 0, "gen_trace needs at least one network");
+    TraceStream {
+        rng: Rng::new(seed),
+        num_networks,
+        cum: mix_cdf(num_networks, weights),
+        arrival,
+        schedule,
+        t: 0.0,
+        next_id: 0,
+    }
 }
 
 /// Resolve zoo names (CIFAR-100 heads) and generate a uniform mixed trace
@@ -155,6 +225,26 @@ pub fn mixed_trace_mix(
     Ok((nets, trace))
 }
 
+/// Streaming [`mixed_trace`]: resolve zoo names and return the networks
+/// plus an unbounded [`TraceStream`] over them. `.take(n).collect()`
+/// reproduces [`mixed_trace_mix`]'s trace bit for bit under the constant
+/// schedule.
+pub fn mixed_trace_stream(
+    names: &[&str],
+    weights: Option<&[f64]>,
+    num_classes: u32,
+    arrival: Arrival,
+    schedule: RateSchedule,
+    seed: u64,
+) -> Result<(Vec<Network>, TraceStream)> {
+    let nets = names
+        .iter()
+        .map(|name| zoo::by_name(name, num_classes))
+        .collect::<Result<Vec<_>>>()?;
+    let stream = stream_trace(nets.len(), weights, arrival, schedule, seed);
+    Ok((nets, stream))
+}
+
 /// Replay a trace through a fresh [`SimServer`] over `engine` and return
 /// the end-of-trace report. The engine outlives the replay, so a second
 /// replay (same or different trace, fleet size, placement policy, or
@@ -169,6 +259,31 @@ pub fn replay(
     let mut server = SimServer::new(engine, nets, cfg)?;
     for req in trace {
         server.offer(*req)?;
+    }
+    server.finish()
+}
+
+/// Streaming [`replay`]: feed any request iterator (typically a
+/// [`TraceStream`] bounded with `.take(n)`) straight through the serving
+/// kernel with per-request retention **off** — the report carries every
+/// aggregate, per-network/per-worker counters, and latency histograms,
+/// but `completions` and `residency_log` stay empty, so memory is
+/// O(workers + open batches) however long the trace runs. Aggregates are
+/// bit-identical to materializing the same trace and calling [`replay`]
+/// with `retain_per_request: false` (pinned in `tests/kernel_stream.rs`).
+pub fn replay_stream(
+    engine: &Engine,
+    nets: &[Network],
+    trace: impl IntoIterator<Item = SimRequest>,
+    cfg: SimServeConfig,
+) -> Result<SimServeReport> {
+    let cfg = SimServeConfig {
+        retain_per_request: false,
+        ..cfg
+    };
+    let mut server = SimServer::new(engine, nets, cfg)?;
+    for req in trace {
+        server.offer(req)?;
     }
     server.finish()
 }
@@ -650,6 +765,99 @@ mod tests {
             },
         )
         .is_err());
+    }
+
+    #[test]
+    fn stream_with_constant_schedule_reproduces_the_materialized_trace() {
+        let w = [0.6, 0.4, 1.0];
+        let vec_path = gen_trace_mix(3, Some(&w), 200, Arrival::Poisson(1500.0), 41);
+        let streamed: Vec<SimRequest> = stream_trace(
+            3,
+            Some(&w),
+            Arrival::Poisson(1500.0),
+            RateSchedule::default(),
+            41,
+        )
+        .take(200)
+        .collect();
+        assert_eq!(vec_path.len(), streamed.len());
+        for (x, y) in vec_path.iter().zip(&streamed) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.net, y.net);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn schedules_reshape_arrival_times_but_not_the_network_sequence() {
+        let schedule = RateSchedule::parse("diurnal:10:0.5+flash:40:5:6").unwrap();
+        let flat: Vec<SimRequest> = stream_trace(
+            3,
+            None,
+            Arrival::Poisson(500.0),
+            RateSchedule::default(),
+            9,
+        )
+        .take(300)
+        .collect();
+        let shaped: Vec<SimRequest> =
+            stream_trace(3, None, Arrival::Poisson(500.0), schedule, 9)
+                .take(300)
+                .collect();
+        // One delay draw + one net draw per request either way, so the
+        // network sequence is untouched; only the clock is warped.
+        for (x, y) in flat.iter().zip(&shaped) {
+            assert_eq!(x.net, y.net);
+        }
+        assert!(shaped.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(
+            flat.iter()
+                .zip(&shaped)
+                .any(|(x, y)| x.arrival_s.to_bits() != y.arrival_s.to_bits()),
+            "a non-constant schedule must move some arrival"
+        );
+        // Factors ≥ 1 everywhere here (gain 6 bursts, diurnal ≥ 0.5 —
+        // but flash windows overlap enough that total span compresses
+        // only when factor > 1; just check times stay finite/positive).
+        assert!(shaped.iter().all(|r| r.arrival_s.is_finite() && r.arrival_s >= 0.0));
+    }
+
+    #[test]
+    fn replay_stream_matches_replay_aggregates_with_empty_logs() {
+        let engine = Engine::compact(presets::lpddr5());
+        let (nets, trace) =
+            mixed_trace(&["mobilenetv1", "vgg11"], 120, Arrival::Poisson(2000.0), 29).unwrap();
+        let cfg = SimServeConfig {
+            slo_s: 0.05,
+            max_batch: 8,
+            max_wait_s: 0.001,
+            workers: 2,
+            ..SimServeConfig::default()
+        };
+        let full = replay(&engine, &nets, &trace, cfg.clone()).unwrap();
+        let (nets2, stream) = mixed_trace_stream(
+            &["mobilenetv1", "vgg11"],
+            None,
+            DEFAULT_NUM_CLASSES,
+            Arrival::Poisson(2000.0),
+            RateSchedule::default(),
+            29,
+        )
+        .unwrap();
+        let lean = replay_stream(&engine, &nets2, stream.take(120), cfg).unwrap();
+        assert!(lean.completions.is_empty(), "streaming replay retains no completions");
+        assert!(lean.residency_log.is_empty(), "streaming replay retains no residency log");
+        assert_eq!(lean.offered(), full.offered());
+        assert_eq!(lean.accepted(), full.accepted());
+        assert_eq!(lean.completed(), full.completed());
+        assert_eq!(lean.span_s.to_bits(), full.span_s.to_bits());
+        for (a, b) in full.per_net.iter().zip(&lean.per_net) {
+            assert_eq!(a.batches, b.batches);
+            assert_eq!(a.reloads, b.reloads);
+            assert_eq!(a.latency_sum_s.to_bits(), b.latency_sum_s.to_bits());
+            assert_eq!(a.hist, b.hist);
+        }
+        assert_eq!(full.fleet_hist(), lean.fleet_hist());
     }
 
     #[test]

@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use pimflow::cfg::{presets, Config, DramKind, PipelineCase};
 use pimflow::cli::{App, Command, Invocation, Opt, Parsed};
-use pimflow::coordinator::{Arrival, Placement, ReplicationPolicy, SimServeConfig};
+use pimflow::coordinator::{Arrival, Placement, RateSchedule, ReplicationPolicy, SimServeConfig};
 #[cfg(feature = "runtime")]
 use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
 use pimflow::explore;
@@ -159,6 +159,15 @@ fn app() -> App {
                         "mix",
                         None,
                         "per-network arrival weights, comma list matching --networks (default uniform)",
+                    ),
+                    Opt::value(
+                        "schedule",
+                        Some("constant"),
+                        "rate schedule: constant, or `+`-joined diurnal:<period_s>:<depth> / flash:<every_s>:<width_s>:<gain>",
+                    ),
+                    Opt::flag(
+                        "stream",
+                        "stream the trace through the kernel (O(workers) memory; per-request logs off)",
                     ),
                     Opt::value("slo", Some("50"), "latency SLO per request, ms"),
                     Opt::value("max-batch", Some("64"), "batch ceiling (per-network caps tune below it)"),
@@ -525,6 +534,7 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
     let nets = networks_of(p)?;
     let n = p.get_u32("requests")?.unwrap_or(256) as usize;
     let arrival = Arrival::parse(p.get_or("trace", "poisson:2000"))?;
+    let schedule = RateSchedule::parse(p.get_or("schedule", "constant"))?;
     let seed = p.get_u64("seed")?.unwrap_or(42);
     let mix: Option<Vec<f64>> = match p.get("mix") {
         None => None,
@@ -573,6 +583,10 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
             p.get("sweep-workers").is_none() && p.get("sweep-replication").is_none(),
             "--feedback drives a single replay; drop the --sweep-* options"
         );
+        anyhow::ensure!(
+            schedule.is_constant(),
+            "--feedback generates arrivals from completions; drop --schedule"
+        );
         let Arrival::ClosedLoop { clients, think_s } = arrival else {
             anyhow::bail!("--feedback needs --trace closed:<clients>:<think_s>");
         };
@@ -611,6 +625,10 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         anyhow::ensure!(
             mix.is_none(),
             "--sweep-replication generates its own per-skew mixes; drop --mix"
+        );
+        anyhow::ensure!(
+            schedule.is_constant(),
+            "--sweep-replication replays constant-rate traces; drop --schedule"
         );
         let counts = list
             .split(',')
@@ -663,10 +681,13 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         return Ok(());
     }
 
-    let trace = explore::gen_trace_mix(nets.len(), mix.as_deref(), n, arrival, seed);
-
     // The placement grid: same trace at every worker count × policy.
     if let Some(list) = p.get("sweep-workers") {
+        anyhow::ensure!(
+            schedule.is_constant(),
+            "--sweep-workers replays the constant-rate trace; drop --schedule"
+        );
+        let trace = explore::gen_trace_mix(nets.len(), mix.as_deref(), n, arrival, seed);
         let counts = list
             .split(',')
             .map(|s| {
@@ -695,7 +716,18 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
 
     let workers = cfg.workers;
     let replicated = cfg.replication != ReplicationPolicy::None;
-    let report = explore::replay(&engine, &nets, &trace, cfg)?;
+    // Streaming path: requests are generated and offered one at a time
+    // (O(workers) memory, no per-request logs). Any non-constant schedule
+    // implies it, since only the stream generator shapes the rate.
+    let streaming = p.flag("stream") || !schedule.is_constant();
+    let report = if streaming {
+        let stream =
+            explore::stream_trace(nets.len(), mix.as_deref(), arrival, schedule, seed).take(n);
+        explore::replay_stream(&engine, &nets, stream, cfg)?
+    } else {
+        let trace = explore::gen_trace_mix(nets.len(), mix.as_deref(), n, arrival, seed);
+        explore::replay(&engine, &nets, &trace, cfg)?
+    };
     let (t, csv) = figures::trace_table(&report);
     print!("{}", t.render());
     if workers > 1 {
@@ -715,6 +747,19 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         report.reloads(),
         report.batches(),
         report.plans_computed
+    );
+    let fleet = report.fleet_hist();
+    println!(
+        "fleet latency p50/p99/p999: {:.2} / {:.2} / {:.2} ms over {} completions{}",
+        fleet.p50() * 1e3,
+        fleet.p99() * 1e3,
+        fleet.p999() * 1e3,
+        fleet.count(),
+        if streaming {
+            " (streaming: per-request logs off)"
+        } else {
+            ""
+        }
     );
     if replicated {
         println!(

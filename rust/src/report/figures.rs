@@ -354,7 +354,7 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
         ),
         vec![
             "network", "offered", "accept", "coalesce", "reject", "batches", "mean b", "reloads",
-            "prewarm", "slo att", "mean lat",
+            "prewarm", "slo att", "mean lat", "p50", "p99", "p999",
         ],
     );
     let mut csv = Csv::new(vec![
@@ -370,6 +370,9 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
         "drains",
         "slo_attainment",
         "mean_latency_s",
+        "p50_s",
+        "p99_s",
+        "p999_s",
     ]);
     let mut row = |name: &str, n: &NetStats| {
         t.row(vec![
@@ -384,6 +387,9 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
             n.prewarms.to_string(),
             format!("{:.1}%", 100.0 * n.slo_attainment()),
             format!("{:.2} ms", n.mean_latency_s() * 1e3),
+            format!("{:.2} ms", n.hist.p50() * 1e3),
+            format!("{:.2} ms", n.hist.p99() * 1e3),
+            format!("{:.2} ms", n.hist.p999() * 1e3),
         ]);
         csv.row(vec![
             name.to_string(),
@@ -398,6 +404,9 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
             n.drains.to_string(),
             format!("{:.4}", n.slo_attainment()),
             format!("{:.6}", n.mean_latency_s()),
+            format!("{:.6}", n.hist.p50()),
+            format!("{:.6}", n.hist.p99()),
+            format!("{:.6}", n.hist.p999()),
         ]);
     };
     for n in &report.per_net {
@@ -417,6 +426,7 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
         total.drains += n.drains;
         total.within_slo += n.within_slo;
         total.latency_sum_s += n.latency_sum_s;
+        total.hist.merge(&n.hist);
     }
     row("TOTAL", &total);
     (t, csv)
@@ -435,7 +445,8 @@ pub fn worker_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv)
             100.0 * report.mean_utilization()
         ),
         vec![
-            "worker", "batches", "served", "reloads", "prewarm", "busy", "util", "resident",
+            "worker", "batches", "served", "reloads", "prewarm", "busy", "util", "p50", "p99",
+            "p999", "resident",
         ],
     );
     let mut csv = Csv::new(vec![
@@ -446,6 +457,9 @@ pub fn worker_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv)
         "prewarms",
         "busy_s",
         "utilization",
+        "p50_s",
+        "p99_s",
+        "p999_s",
         "resident",
     ]);
     for w in &report.per_worker {
@@ -462,6 +476,9 @@ pub fn worker_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv)
             w.prewarms.to_string(),
             format!("{:.3} s", w.busy_s),
             format!("{:.1}%", 100.0 * util),
+            format!("{:.2} ms", w.hist.p50() * 1e3),
+            format!("{:.2} ms", w.hist.p99() * 1e3),
+            format!("{:.2} ms", w.hist.p999() * 1e3),
             resident.clone(),
         ]);
         csv.row(vec![
@@ -472,6 +489,9 @@ pub fn worker_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv)
             w.prewarms.to_string(),
             format!("{:.6}", w.busy_s),
             format!("{util:.4}"),
+            format!("{:.6}", w.hist.p50()),
+            format!("{:.6}", w.hist.p99()),
+            format!("{:.6}", w.hist.p999()),
             resident,
         ]);
     }
@@ -539,7 +559,7 @@ pub fn replication_table(rows: &[crate::explore::ReplicationPoint]) -> (Table, C
         "replication sweep: reloads, pre-warms & goodput vs skew x workers x policy",
         vec![
             "skew", "workers", "policy", "accept", "reject", "reloads", "prewarm", "drain",
-            "req/s", "slo att", "util",
+            "req/s", "slo att", "util", "p50", "p99", "p999",
         ],
     );
     let mut csv = Csv::new(vec![
@@ -557,9 +577,13 @@ pub fn replication_table(rows: &[crate::explore::ReplicationPoint]) -> (Table, C
         "slo_attainment",
         "mean_utilization",
         "span_s",
+        "p50_s",
+        "p99_s",
+        "p999_s",
     ]);
     for p in rows {
         let r = &p.report;
+        let hist = r.fleet_hist();
         t.row(vec![
             format!("{:.1}", p.skew),
             p.workers.to_string(),
@@ -572,6 +596,9 @@ pub fn replication_table(rows: &[crate::explore::ReplicationPoint]) -> (Table, C
             format!("{:.1}", r.throughput_rps()),
             format!("{:.1}%", 100.0 * r.slo_attainment()),
             format!("{:.1}%", 100.0 * r.mean_utilization()),
+            format!("{:.2} ms", hist.p50() * 1e3),
+            format!("{:.2} ms", hist.p99() * 1e3),
+            format!("{:.2} ms", hist.p999() * 1e3),
         ]);
         csv.row(vec![
             format!("{:.3}", p.skew),
@@ -588,6 +615,9 @@ pub fn replication_table(rows: &[crate::explore::ReplicationPoint]) -> (Table, C
             format!("{:.4}", r.slo_attainment()),
             format!("{:.4}", r.mean_utilization()),
             format!("{:.6}", r.span_s),
+            format!("{:.6}", hist.p50()),
+            format!("{:.6}", hist.p99()),
+            format!("{:.6}", hist.p999()),
         ]);
     }
     (t, csv)

@@ -1,0 +1,303 @@
+//! Fixed-bucket log-scale latency histograms.
+//!
+//! Serving reports used to retain every [`Completion`] to compute latency
+//! statistics, making report memory O(requests). A [`LatencyHist`] folds each
+//! completion into a fixed 146-bucket log-scale array covering 1 µs to ~10³ s
+//! at [`BUCKETS_PER_DECADE`] buckets per decade (≈ 15.5 % relative bucket
+//! width), so per-network and fleet-wide p50/p99/p999 and SLO-attainment
+//! quantiles come out of O(1) memory regardless of trace length.
+//!
+//! Quantiles are **pessimistic**: [`LatencyHist::quantile`] returns the upper
+//! edge of the bucket holding the rank-`⌈q·n⌉` sample (clamped to the observed
+//! maximum), so the reported value is never below the exact sorted-order
+//! quantile and never more than one bucket width above it. The property test
+//! in `tests/kernel_stream.rs` pins that bound against exact quantiles.
+//!
+//! [`Completion`]: crate::coordinator::Completion
+
+/// Upper edge of the underflow bucket: latencies at or below 1 µs.
+pub const FLOOR_S: f64 = 1e-6;
+/// Log-scale resolution: buckets per factor-of-10 of latency.
+pub const BUCKETS_PER_DECADE: usize = 16;
+/// Decades covered above [`FLOOR_S`] (1 µs … 10³ s).
+pub const DECADES: usize = 9;
+/// Total bucket count: underflow + `DECADES * BUCKETS_PER_DECADE` + overflow.
+pub const NUM_BUCKETS: usize = DECADES * BUCKETS_PER_DECADE + 2;
+
+/// A fixed-bucket log-scale histogram of latencies in seconds.
+///
+/// Bucket `0` is the underflow bucket (`v ≤ FLOOR_S`); bucket `i ≥ 1` covers
+/// `(edge(i-1), edge(i)]` with `edge(i) = FLOOR_S · 10^(i / BUCKETS_PER_DECADE)`;
+/// the last bucket absorbs any overflow. Alongside the buckets it tracks exact
+/// count, sum, min, and max, so means and extremes stay exact — only the
+/// quantiles are bucketed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self {
+            counts: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+        }
+    }
+}
+
+impl LatencyHist {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a latency. Non-positive and NaN inputs land in the
+    /// underflow bucket; anything past the covered range in the overflow one.
+    fn bucket_index(v_s: f64) -> usize {
+        if !(v_s > FLOOR_S) {
+            return 0;
+        }
+        let pos = (v_s / FLOOR_S).log10() * BUCKETS_PER_DECADE as f64;
+        (pos.floor() as usize + 1).min(NUM_BUCKETS - 1)
+    }
+
+    /// Upper edge of bucket `i` in seconds.
+    fn upper_edge(i: usize) -> f64 {
+        if i == 0 {
+            FLOOR_S
+        } else {
+            FLOOR_S * 10f64.powf(i as f64 / BUCKETS_PER_DECADE as f64)
+        }
+    }
+
+    /// Fold one latency sample into the histogram.
+    pub fn record(&mut self, v_s: f64) {
+        self.counts[Self::bucket_index(v_s)] += 1;
+        self.count += 1;
+        self.sum_s += v_s;
+        self.min_s = self.min_s.min(v_s);
+        self.max_s = self.max_s.max(v_s);
+    }
+
+    /// Fold another histogram into this one (fleet = merge of per-network).
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+        self.min_s = self.min_s.min(other.min_s);
+        self.max_s = self.max_s.max(other.max_s);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact mean of the recorded samples (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    /// Exact minimum recorded sample (0 when empty).
+    pub fn min_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+
+    /// Exact maximum recorded sample (0 when empty).
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Pessimistic quantile: the upper edge of the bucket holding the
+    /// rank-`⌈q·n⌉` sample, clamped to the observed maximum. Never below the
+    /// exact sorted-order quantile, never more than one bucket width above.
+    /// Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // The overflow bucket has no finite upper edge; the
+                // observed maximum is the only sound pessimistic answer.
+                if i == NUM_BUCKETS - 1 {
+                    return self.max_s;
+                }
+                return Self::upper_edge(i).min(self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    /// Median latency.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th-percentile latency.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// 99.9th-percentile latency.
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
+    }
+
+    /// Conservative fraction of samples at or below `limit_s`: counts whole
+    /// buckets whose upper edge fits, so the result never exceeds the true
+    /// attainment. Returns 1 when empty (no sample missed the limit).
+    pub fn fraction_below(&self, limit_s: f64) -> f64 {
+        if self.count == 0 {
+            return 1.0;
+        }
+        if self.max_s <= limit_s {
+            return 1.0;
+        }
+        let mut below = 0u64;
+        // Overflow samples are unbounded above, so that bucket never
+        // counts as below (the max_s guard handled the all-below case).
+        for (i, &c) in self.counts.iter().enumerate().take(NUM_BUCKETS - 1) {
+            if Self::upper_edge(i) <= limit_s {
+                below += c;
+            } else {
+                break;
+            }
+        }
+        below as f64 / self.count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One multiplicative bucket width, with slack for edge-placement fp noise.
+    fn width_factor() -> f64 {
+        10f64.powf(1.0 / BUCKETS_PER_DECADE as f64) * (1.0 + 1e-9)
+    }
+
+    #[test]
+    fn empty_hist_reports_zeros() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.min_s(), 0.0);
+        assert_eq!(h.max_s(), 0.0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p999(), 0.0);
+        assert_eq!(h.fraction_below(1.0), 1.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_clamp_to_the_observed_max() {
+        let mut h = LatencyHist::new();
+        h.record(0.0042);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0042, "q={q}");
+        }
+        assert_eq!(h.mean_s(), 0.0042);
+        assert_eq!(h.min_s(), 0.0042);
+    }
+
+    #[test]
+    fn quantiles_bound_exact_order_statistics_within_one_bucket() {
+        let mut h = LatencyHist::new();
+        let mut samples: Vec<f64> = (1..=500).map(|i| 1e-5 * 1.013f64.powi(i)).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        samples.sort_by(f64::total_cmp);
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let rank = ((q * samples.len() as f64).ceil() as usize).clamp(1, samples.len());
+            let exact = samples[rank - 1];
+            let est = h.quantile(q);
+            assert!(est >= exact, "q={q}: {est} < exact {exact}");
+            assert!(est <= exact * width_factor(), "q={q}: {est} > one bucket above {exact}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_into_one() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        let mut whole = LatencyHist::new();
+        for i in 0..200 {
+            let v = 1e-4 * (1 + i % 37) as f64;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        a.merge(&b);
+        // Bucket counts and extremes merge exactly, so every quantile
+        // agrees bitwise; the sum is re-associated (one addition per merge
+        // instead of per sample), so the mean agrees only to rounding.
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min_s().to_bits(), whole.min_s().to_bits());
+        assert_eq!(a.max_s().to_bits(), whole.max_s().to_bits());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q).to_bits(), whole.quantile(q).to_bits(), "q={q}");
+        }
+        assert!((a.mean_s() - whole.mean_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fraction_below_is_a_conservative_attainment_bound() {
+        let mut h = LatencyHist::new();
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        for limit in [0.01, 0.05, 0.0999] {
+            let exact =
+                samples.iter().filter(|&&s| s <= limit).count() as f64 / samples.len() as f64;
+            let est = h.fraction_below(limit);
+            assert!(est <= exact + 1e-12, "limit={limit}: {est} above exact {exact}");
+            // Within one bucket of counts: everything below limit/width counts.
+            let floor =
+                samples.iter().filter(|&&s| s * width_factor() <= limit).count() as f64
+                    / samples.len() as f64;
+            assert!(est >= floor, "limit={limit}: {est} under floor {floor}");
+        }
+        assert_eq!(h.fraction_below(1.0), 1.0);
+        assert_eq!(h.fraction_below(0.0), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_samples_land_in_end_buckets() {
+        let mut h = LatencyHist::new();
+        h.record(0.0);
+        h.record(1e-9);
+        h.record(5e3);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max_s(), 5e3);
+        // Overflow quantile reports the observed max, not a bucket edge.
+        assert_eq!(h.quantile(1.0), 5e3);
+        // Underflow quantile reports the floor clamped to max.
+        assert_eq!(h.quantile(0.01), FLOOR_S);
+    }
+}

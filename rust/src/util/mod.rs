@@ -1,15 +1,18 @@
 //! Small self-contained utilities: deterministic PRNG, streaming statistics,
-//! SI-unit formatting, CSV emission, and a minimal logger.
+//! log-scale latency histograms, SI-unit formatting, CSV emission, and a
+//! minimal logger.
 //!
 //! These exist because the offline registry carries no `rand`, `csv`, or
 //! `env_logger`; everything here is dependency-free.
 
 pub mod csv;
+pub mod hist;
 pub mod json;
 pub mod logger;
 pub mod rng;
 pub mod stats;
 pub mod units;
 
+pub use hist::LatencyHist;
 pub use rng::Rng;
 pub use stats::Summary;

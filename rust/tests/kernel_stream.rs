@@ -1,0 +1,233 @@
+//! Tier-1 pins for the discrete-event kernel's streaming front end:
+//!
+//! * the streaming generators ([`stream_trace`]/[`mixed_trace_stream`])
+//!   reproduce the materialized [`gen_trace`]/[`gen_trace_mix`] traces
+//!   bit for bit under the constant schedule;
+//! * [`replay_stream`] (per-request retention off) reports the same
+//!   aggregates, histograms, and span bits as the materialized [`replay`]
+//!   while holding no per-request state;
+//! * histogram quantiles bound the exact sorted-order quantiles from
+//!   above by at most one log-scale bucket width (property test).
+
+use pimflow::cfg::presets;
+use pimflow::coordinator::{Arrival, Placement, RateSchedule, SimServeConfig};
+use pimflow::explore::{
+    gen_trace, gen_trace_mix, mixed_trace, mixed_trace_stream, replay, replay_stream,
+    stream_trace, Engine, DEFAULT_NUM_CLASSES,
+};
+use pimflow::prop_assert;
+use pimflow::util::hist::{LatencyHist, BUCKETS_PER_DECADE};
+
+/// One multiplicative bucket width, with slack for edge-placement fp noise.
+fn width_factor() -> f64 {
+    10f64.powf(1.0 / BUCKETS_PER_DECADE as f64) * (1.0 + 1e-9)
+}
+
+#[test]
+fn streaming_generator_is_bitwise_equal_to_the_materialized_one() {
+    let cases: &[(usize, Option<&[f64]>, Arrival, u64)] = &[
+        (3, None, Arrival::Poisson(2000.0), 2026),
+        (4, Some(&[8.0, 1.0, 1.0, 1.0]), Arrival::Poisson(1500.0), 7),
+        (
+            2,
+            None,
+            Arrival::ClosedLoop {
+                clients: 16,
+                think_s: 0.008,
+            },
+            13,
+        ),
+        (5, Some(&[0.5, 0.0, 1.0, 2.0, 0.25]), Arrival::Burst, 99),
+    ];
+    for &(nets, weights, arrival, seed) in cases {
+        let materialized = gen_trace_mix(nets, weights, 300, arrival, seed);
+        let streamed: Vec<_> =
+            stream_trace(nets, weights, arrival, RateSchedule::default(), seed)
+                .take(300)
+                .collect();
+        assert_eq!(materialized.len(), streamed.len());
+        for (a, b) in materialized.iter().zip(&streamed) {
+            assert_eq!(a.id, b.id, "seed {seed}");
+            assert_eq!(a.net, b.net, "seed {seed}");
+            assert_eq!(
+                a.arrival_s.to_bits(),
+                b.arrival_s.to_bits(),
+                "seed {seed} req {}",
+                a.id
+            );
+        }
+    }
+    // The uniform shorthand rides the same stream.
+    let plain = gen_trace(3, 120, Arrival::Poisson(1000.0), 5);
+    let via_stream: Vec<_> = stream_trace(
+        3,
+        None,
+        Arrival::Poisson(1000.0),
+        RateSchedule::default(),
+        5,
+    )
+    .take(120)
+    .collect();
+    for (a, b) in plain.iter().zip(&via_stream) {
+        assert_eq!((a.id, a.net, a.arrival_s.to_bits()), (b.id, b.net, b.arrival_s.to_bits()));
+    }
+}
+
+#[test]
+fn mixed_trace_stream_matches_mixed_trace_networks_and_requests() {
+    let names = ["mobilenetv1", "vgg11", "resnet18"];
+    let (nets_vec, trace) = mixed_trace(&names, 240, Arrival::Poisson(2000.0), 2026).unwrap();
+    let (nets_stream, stream) = mixed_trace_stream(
+        &names,
+        None,
+        DEFAULT_NUM_CLASSES,
+        Arrival::Poisson(2000.0),
+        RateSchedule::default(),
+        2026,
+    )
+    .unwrap();
+    assert_eq!(nets_vec.len(), nets_stream.len());
+    for (a, b) in nets_vec.iter().zip(&nets_stream) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.total_weights(), b.total_weights());
+    }
+    let streamed: Vec<_> = stream.take(240).collect();
+    for (a, b) in trace.iter().zip(&streamed) {
+        assert_eq!((a.id, a.net, a.arrival_s.to_bits()), (b.id, b.net, b.arrival_s.to_bits()));
+    }
+}
+
+#[test]
+fn streaming_replay_matches_the_materialized_pinned_trace() {
+    // The pinned 240-request 3-network trace, replayed both ways at 1 and
+    // 3 workers: every aggregate, per-network counter, and histogram must
+    // agree bit for bit; only the per-request logs differ (empty when
+    // streaming).
+    let names = ["mobilenetv1", "vgg11", "resnet18"];
+    let engine = Engine::compact(presets::lpddr5());
+    for workers in [1usize, 3] {
+        let cfg = SimServeConfig {
+            slo_s: 0.05,
+            max_batch: 16,
+            max_wait_s: 0.001,
+            workers,
+            placement: Placement::NetworkAffinity,
+            ..SimServeConfig::default()
+        };
+        let (nets, trace) = mixed_trace(&names, 240, Arrival::Poisson(2000.0), 2026).unwrap();
+        let full = replay(&engine, &nets, &trace, cfg.clone()).unwrap();
+        let (nets2, stream) = mixed_trace_stream(
+            &names,
+            None,
+            DEFAULT_NUM_CLASSES,
+            Arrival::Poisson(2000.0),
+            RateSchedule::default(),
+            2026,
+        )
+        .unwrap();
+        let lean = replay_stream(&engine, &nets2, stream.take(240), cfg).unwrap();
+        assert!(lean.completions.is_empty(), "streaming keeps no completions");
+        assert!(lean.residency_log.is_empty(), "streaming keeps no residency log");
+        assert!(!full.completions.is_empty(), "materialized replay keeps them");
+        assert_eq!(lean.offered(), full.offered(), "{workers} workers");
+        assert_eq!(lean.accepted(), full.accepted(), "{workers} workers");
+        assert_eq!(lean.rejected(), full.rejected(), "{workers} workers");
+        assert_eq!(lean.completed(), full.completed(), "{workers} workers");
+        assert_eq!(lean.batches(), full.batches(), "{workers} workers");
+        assert_eq!(lean.reloads(), full.reloads(), "{workers} workers");
+        assert_eq!(lean.span_s.to_bits(), full.span_s.to_bits(), "{workers} workers");
+        for (a, b) in full.per_net.iter().zip(&lean.per_net) {
+            assert_eq!(a.offered, b.offered);
+            assert_eq!(a.accepted, b.accepted);
+            assert_eq!(a.coalesced, b.coalesced);
+            assert_eq!(a.batches, b.batches);
+            assert_eq!(a.within_slo, b.within_slo);
+            assert_eq!(a.latency_sum_s.to_bits(), b.latency_sum_s.to_bits());
+            assert_eq!(a.hist, b.hist, "per-net histograms must agree");
+        }
+        for (a, b) in full.per_worker.iter().zip(&lean.per_worker) {
+            assert_eq!(a.batches, b.batches);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits());
+            assert_eq!(a.hist, b.hist, "per-worker histograms must agree");
+        }
+        assert_eq!(full.fleet_hist(), lean.fleet_hist());
+    }
+}
+
+#[test]
+fn flash_schedules_compress_arrival_times_and_keep_the_net_sequence() {
+    // Flash factors are ≥ 1 everywhere (gain > 1, no diurnal dip), so the
+    // shaped clock can only run at or ahead of the flat one; network draws
+    // are untouched because the per-request draw count is unchanged.
+    let schedule = RateSchedule::parse("flash:5:1:4").unwrap();
+    let flat: Vec<_> = stream_trace(
+        3,
+        None,
+        Arrival::Poisson(200.0),
+        RateSchedule::default(),
+        17,
+    )
+    .take(400)
+    .collect();
+    let shaped: Vec<_> = stream_trace(3, None, Arrival::Poisson(200.0), schedule, 17)
+        .take(400)
+        .collect();
+    let mut moved = false;
+    for (a, b) in flat.iter().zip(&shaped) {
+        assert_eq!(a.net, b.net);
+        assert!(b.arrival_s <= a.arrival_s, "gain-only schedules never slow the clock");
+        moved |= b.arrival_s.to_bits() != a.arrival_s.to_bits();
+    }
+    assert!(moved, "a 4x flash window must compress some arrivals");
+    assert!(shaped.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+}
+
+#[test]
+fn histogram_quantiles_bound_exact_quantiles_within_one_bucket() {
+    pimflow::testing::check(
+        "hist-quantile-vs-exact",
+        |rng| {
+            let n = 1 + rng.index(400);
+            // Keep samples a decade above the underflow floor so the
+            // one-bucket bound is exact (underflow collapses to FLOOR_S).
+            (0..n)
+                .map(|_| 1e-5 + rng.exp(0.004))
+                .collect::<Vec<f64>>()
+        },
+        |samples| {
+            let mut h = LatencyHist::new();
+            for &s in samples {
+                h.record(s);
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_by(f64::total_cmp);
+            prop_assert!(h.count() == sorted.len() as u64, "count mismatch");
+            for q in [0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+                let exact = sorted[rank - 1];
+                let est = h.quantile(q);
+                prop_assert!(
+                    est >= exact,
+                    "q={q}: histogram {est} below exact {exact} (n={})",
+                    sorted.len()
+                );
+                prop_assert!(
+                    est <= exact * width_factor(),
+                    "q={q}: histogram {est} more than one bucket above exact {exact}",
+                );
+            }
+            let exact_mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+            prop_assert!(
+                (h.mean_s() - exact_mean).abs() <= 1e-12 + exact_mean * 1e-12,
+                "mean drifted: {} vs {exact_mean}",
+                h.mean_s()
+            );
+            prop_assert!(
+                h.max_s().to_bits() == sorted.last().unwrap().to_bits(),
+                "max must be exact"
+            );
+            Ok(())
+        },
+    );
+}
