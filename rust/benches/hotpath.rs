@@ -8,7 +8,7 @@ use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
 use pimflow::cfg::PipelineCase;
 use pimflow::coordinator::{
-    AdaptiveConfig, Arrival, Placement, RateSchedule, ReplicationPolicy, SimRequest,
+    AdaptiveConfig, Arrival, FaultPlan, Placement, RateSchedule, ReplicationPolicy, SimRequest,
     SimServeConfig, SimServer,
 };
 use pimflow::ddm;
@@ -365,6 +365,43 @@ fn main() {
         "replication must not cost goodput: {} vs {}",
         replicated.goodput(),
         single.goodput()
+    );
+
+    // Chaos acceptance pin: crash the hot-network worker mid-trace on the
+    // same skewed fixture. The weakened SLO contract must hold (every
+    // miss fault-attributed), the crash must cost something real (a
+    // destroyed batch), the faulted replay must be bitwise-deterministic,
+    // and fault injection must never touch the plan cache.
+    let t0 = std::time::Instant::now();
+    let chaos_cfg = SimServeConfig {
+        faults: FaultPlan::parse("crash:w0@3.0005s+1.0s").unwrap(),
+        ..repl_cfg(ReplicationPolicy::Adaptive(AdaptiveConfig::default()))
+    };
+    let faulted = replay(&serve_engine, &skewed_nets, &skewed_trace, chaos_cfg.clone()).unwrap();
+    let faulted2 = replay(&serve_engine, &skewed_nets, &skewed_trace, chaos_cfg).unwrap();
+    println!(
+        "chaos replay (hot-worker crash): {} lost to crash, {} fault-attributed misses, \
+         {} residency repairs (mean {:.3} s) in {:.3} s",
+        faulted.lost_to_crash(),
+        faulted.missed_by_fault(),
+        faulted.chaos.repaired(),
+        faulted.chaos.mean_repair_s(),
+        t0.elapsed().as_secs_f64()
+    );
+    assert_eq!(faulted.missed_bug(), 0, "chaos replay broke the weakened SLO contract");
+    assert!(faulted.lost_to_crash() > 0, "the crash must destroy the open hot batch");
+    assert_eq!(
+        faulted.completed() + faulted.lost_to_crash(),
+        faulted.accepted(),
+        "crash losses and completions must partition the accepted set"
+    );
+    assert_eq!(faulted.span_s.to_bits(), faulted2.span_s.to_bits());
+    assert_eq!(faulted.completed(), faulted2.completed());
+    assert_eq!(faulted.chaos.repairs_s, faulted2.chaos.repairs_s);
+    assert_eq!(
+        serve_engine.cache_stats().misses,
+        nets.len() as u64 + 1,
+        "fault injection must never re-plan"
     );
 
     // Persist the baseline next to Cargo.toml: the committed

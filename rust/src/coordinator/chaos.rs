@@ -1,0 +1,505 @@
+//! Deterministic fault injection for the simulated serving fleet.
+//!
+//! Real PIM deployments lose nodes, see DRAM bandwidth degrade under
+//! thermal/refresh pressure, and suffer stragglers — and the serving
+//! stack's admission contract has to say something honest about SLOs
+//! under those conditions. This module is the chaos layer over the
+//! discrete-event kernel ([`super::events`]): a [`FaultPlan`] is a
+//! parseable, seed-free schedule of faults that [`SimServer`] replays
+//! bitwise-deterministically alongside the trace.
+//!
+//! Three fault shapes:
+//!
+//! * **crash** — `crash:w2@10s+30s`: worker 2 crashes at t = 10 s and is
+//!   down for 30 s. The crash drops the worker's open batch (its members
+//!   are *lost*, counted per network as `lost_to_crash`), evicts its
+//!   resident weights (a [`ResidencyCause::Crash`] evict in the residency
+//!   log), and holds the worker unavailable (`busy_until` pushed to the
+//!   recovery instant) until it recovers.
+//! * **dramslow** — `dramslow:0.5x@20s..40s`: between t = 20 s and
+//!   t = 40 s the DRAM channel runs at 0.5× bandwidth, so every blocking
+//!   weight reload and pre-warm stream that *starts* inside the window
+//!   takes `1/0.5 = 2×` its quoted `switch_s`.
+//! * **straggle** — `straggle:w0:3x`: worker 0 executes every batch 3×
+//!   slower than priced, for the whole trace.
+//!
+//! Terms compose with commas: `crash:w2@10s+30s,dramslow:0.5x@20s..40s`.
+//! `none` (or the empty string) parses to the inert [`FaultPlan::default`].
+//!
+//! ## The weakened SLO contract
+//!
+//! Fault-free, the admission controller's quotes are upper bounds and an
+//! accepted request **never** misses its SLO. Faults break that soundness
+//! deliberately: quotes stay fault-*oblivious* (the controller cannot see
+//! the future fault schedule), while execution is fault-*aware*, so a
+//! realized completion can exceed its quote. The replacement contract,
+//! pinned in `tests/chaos_sim.rs`:
+//!
+//! > An accepted request misses its SLO **only if a fault event
+//! > intersects its quoted window** — a crash of its worker, a DRAM
+//! > degradation window, or a straggler factor on its worker overlapping
+//! > `[arrival, completion]`.
+//!
+//! [`SloOutcome`] names the three cases: [`SloOutcome::Met`],
+//! [`SloOutcome::MissedByFault`] (miss with an intersecting fault), and
+//! [`SloOutcome::MissedBug`] (miss with **no** intersecting fault —
+//! a quote-soundness violation, which must always count zero).
+//!
+//! [`SimServer`]: super::sim_serve::SimServer
+//! [`ResidencyCause::Crash`]: super::replica::ResidencyCause::Crash
+
+use anyhow::Result;
+
+/// One scheduled worker crash: `worker` goes down at `at_s` and recovers
+/// `down_s` seconds later.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashFault {
+    pub worker: usize,
+    /// Virtual time of the crash, seconds.
+    pub at_s: f64,
+    /// Downtime; the worker recovers at `at_s + down_s`.
+    pub down_s: f64,
+}
+
+impl CrashFault {
+    /// The recovery instant.
+    pub fn recover_s(&self) -> f64 {
+        self.at_s + self.down_s
+    }
+}
+
+/// A DRAM-bandwidth degradation window: between `from_s` and `to_s` the
+/// channel runs at `factor ×` its nominal bandwidth (`factor ∈ (0, 1]`),
+/// so weight streams started inside the window take `switch_s / factor`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DramSlowFault {
+    /// Bandwidth multiplier in `(0, 1]` — 1 is nominal, 0.5 halves it.
+    pub factor: f64,
+    pub from_s: f64,
+    pub to_s: f64,
+}
+
+/// A permanent straggler: every batch executed on `worker` takes
+/// `factor ×` its priced pipeline makespan (`factor ≥ 1`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StraggleFault {
+    pub worker: usize,
+    pub factor: f64,
+}
+
+/// SLO outcome of one completed request under the weakened (fault-aware)
+/// admission contract. Only quoted requests are classified — with
+/// admission off nothing was promised, so misses carry no outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloOutcome {
+    /// Completed within the SLO.
+    Met,
+    /// Missed the SLO, and a fault event intersects the request's
+    /// `[arrival, completion]` window on its worker — the miss the
+    /// weakened contract permits.
+    MissedByFault,
+    /// Missed the SLO with **no** intersecting fault: a quote-soundness
+    /// violation. Must always count zero (`tests/chaos_sim.rs`).
+    MissedBug,
+}
+
+/// A deterministic fault schedule, threaded through
+/// [`SimServeConfig::faults`]. The default plan is empty and **inert**:
+/// [`FaultPlan::is_off`] short-circuits every chaos code path, so
+/// fault-free replays are bitwise-identical to the pre-chaos simulator
+/// (pinned in `tests/chaos_sim.rs` against a structurally-on plan with
+/// neutral factors).
+///
+/// [`SimServeConfig::faults`]: super::sim_serve::SimServeConfig::faults
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub crashes: Vec<CrashFault>,
+    pub dram_slow: Vec<DramSlowFault>,
+    pub stragglers: Vec<StraggleFault>,
+}
+
+/// Parse `<x>s` or `<x>` as seconds.
+fn secs(s: &str, what: &str, term: &str) -> Result<f64> {
+    let raw = s.strip_suffix('s').unwrap_or(s);
+    let v: f64 = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad {what} `{s}` in fault term `{term}`"))?;
+    anyhow::ensure!(v.is_finite(), "{what} must be finite in fault term `{term}`");
+    Ok(v)
+}
+
+/// Parse `<f>x` as a factor (the `x` suffix is required).
+fn factor_x(s: &str, term: &str) -> Result<f64> {
+    let raw = s
+        .strip_suffix('x')
+        .ok_or_else(|| anyhow::anyhow!("factor `{s}` needs an `x` suffix in `{term}`"))?;
+    let v: f64 = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad factor `{s}` in fault term `{term}`"))?;
+    anyhow::ensure!(v.is_finite() && v > 0.0, "factor must be positive and finite in `{term}`");
+    Ok(v)
+}
+
+/// Parse `w<id>` as a worker index.
+fn worker_id(s: &str, term: &str) -> Result<usize> {
+    let raw = s
+        .strip_prefix('w')
+        .ok_or_else(|| anyhow::anyhow!("worker `{s}` must be `w<id>` in fault term `{term}`"))?;
+    raw.parse()
+        .map_err(|_| anyhow::anyhow!("bad worker id `{s}` in fault term `{term}`"))
+}
+
+impl FaultPlan {
+    /// Whether the plan injects nothing. Inert plans skip every chaos
+    /// code path in the simulator — the structural guarantee behind the
+    /// fault-free bitwise pins.
+    pub fn is_off(&self) -> bool {
+        self.crashes.is_empty() && self.dram_slow.is_empty() && self.stragglers.is_empty()
+    }
+
+    /// Parse a comma-joined fault spec: `crash:w<id>@<at>s+<down>s`,
+    /// `dramslow:<factor>x@<from>s..<to>s`, `straggle:w<id>:<factor>x`;
+    /// `none` or the empty string is the inert default plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultPlan::default());
+        }
+        let mut plan = FaultPlan::default();
+        for term in spec.split(',') {
+            let term = term.trim();
+            match term.split_once(':') {
+                Some(("crash", rest)) => {
+                    let (w, times) = rest.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("crash term is crash:w<id>@<at>s+<down>s, got `{term}`")
+                    })?;
+                    let worker = worker_id(w, term)?;
+                    let (at, down) = times.split_once('+').ok_or_else(|| {
+                        anyhow::anyhow!("crash term is crash:w<id>@<at>s+<down>s, got `{term}`")
+                    })?;
+                    let at_s = secs(at, "crash time", term)?;
+                    let down_s = secs(down, "downtime", term)?;
+                    anyhow::ensure!(at_s >= 0.0, "crash time must be >= 0 in `{term}`");
+                    anyhow::ensure!(down_s > 0.0, "downtime must be positive in `{term}`");
+                    plan.crashes.push(CrashFault { worker, at_s, down_s });
+                }
+                Some(("dramslow", rest)) => {
+                    let (f, win) = rest.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "dramslow term is dramslow:<factor>x@<from>s..<to>s, got `{term}`"
+                        )
+                    })?;
+                    let factor = factor_x(f, term)?;
+                    anyhow::ensure!(
+                        factor <= 1.0,
+                        "dramslow is a degradation: factor must be in (0, 1], got {factor}"
+                    );
+                    let (a, b) = win.split_once("..").ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "dramslow term is dramslow:<factor>x@<from>s..<to>s, got `{term}`"
+                        )
+                    })?;
+                    let from_s = secs(a, "window start", term)?;
+                    let to_s = secs(b, "window end", term)?;
+                    anyhow::ensure!(
+                        from_s >= 0.0 && to_s > from_s,
+                        "dramslow window must satisfy 0 <= from < to in `{term}`"
+                    );
+                    plan.dram_slow.push(DramSlowFault { factor, from_s, to_s });
+                }
+                Some(("straggle", rest)) => {
+                    let (w, f) = rest.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("straggle term is straggle:w<id>:<factor>x, got `{term}`")
+                    })?;
+                    let worker = worker_id(w, term)?;
+                    let factor = factor_x(f, term)?;
+                    anyhow::ensure!(
+                        factor >= 1.0,
+                        "straggle is a slowdown: factor must be >= 1, got {factor}"
+                    );
+                    anyhow::ensure!(
+                        plan.stragglers.iter().all(|s| s.worker != worker),
+                        "duplicate straggle term for worker {worker} in `{spec}`"
+                    );
+                    plan.stragglers.push(StraggleFault { worker, factor });
+                }
+                _ => anyhow::bail!(
+                    "unknown fault term `{term}` (expected crash:w<id>@<at>s+<down>s, \
+                     dramslow:<factor>x@<from>s..<to>s, straggle:w<id>:<factor>x, \
+                     composed with `,`; or `none`)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Check every named worker exists in a fleet of `num_workers`.
+    pub fn validate(&self, num_workers: usize) -> Result<()> {
+        for c in &self.crashes {
+            anyhow::ensure!(
+                c.worker < num_workers,
+                "fault plan crashes worker {} but the fleet has {}",
+                c.worker,
+                num_workers
+            );
+        }
+        for s in &self.stragglers {
+            anyhow::ensure!(
+                s.worker < num_workers,
+                "fault plan straggles worker {} but the fleet has {}",
+                s.worker,
+                num_workers
+            );
+        }
+        Ok(())
+    }
+
+    /// DRAM bandwidth multiplier at virtual time `t_s`: the product of
+    /// every degradation window containing `t_s` (half-open `[from, to)`).
+    /// Exactly `1.0` when no window is active.
+    pub fn dram_factor(&self, t_s: f64) -> f64 {
+        let mut f = 1.0;
+        for d in &self.dram_slow {
+            if d.from_s <= t_s && t_s < d.to_s {
+                f *= d.factor;
+            }
+        }
+        f
+    }
+
+    /// Execution slowdown multiplier for batches on `worker`. Exactly
+    /// `1.0` for non-straggling workers.
+    pub fn straggle_factor(&self, worker: usize) -> f64 {
+        let mut f = 1.0;
+        for s in &self.stragglers {
+            if s.worker == worker {
+                f *= s.factor;
+            }
+        }
+        f
+    }
+
+    /// Whether any fault event intersects the closed window
+    /// `[from_s, to_s]` of a request served on `worker`: a crash of that
+    /// worker overlapping the window, any DRAM degradation window
+    /// overlapping it, or a straggler factor on that worker (always
+    /// active). This is the attribution predicate of the weakened SLO
+    /// contract — deliberately conservative (any overlap attributes).
+    pub fn affects(&self, worker: usize, from_s: f64, to_s: f64) -> bool {
+        self.crashes
+            .iter()
+            .any(|c| c.worker == worker && c.at_s <= to_s && from_s <= c.recover_s())
+            || self.dram_slow.iter().any(|d| d.from_s <= to_s && from_s <= d.to_s)
+            || self.stragglers.iter().any(|s| s.worker == worker)
+    }
+
+    /// Classify one completion under the weakened contract. `quoted` is
+    /// whether admission control actually promised this request an SLO
+    /// (false in `--no-admission` runs, whose misses carry no outcome).
+    pub fn classify(
+        &self,
+        quoted: bool,
+        worker: usize,
+        slo_s: f64,
+        arrival_s: f64,
+        completion_s: f64,
+    ) -> Option<SloOutcome> {
+        if completion_s - arrival_s <= slo_s {
+            return Some(SloOutcome::Met);
+        }
+        if !quoted {
+            return None;
+        }
+        if self.affects(worker, arrival_s, completion_s) {
+            Some(SloOutcome::MissedByFault)
+        } else {
+            Some(SloOutcome::MissedBug)
+        }
+    }
+}
+
+/// Fleet-wide chaos accounting carried on the serving report: crash and
+/// recovery counts, cumulative scheduled downtime, and residency-repair
+/// times (crash-evicted networks' time-to-next-load, via blocking reload
+/// or controller pre-warm — whichever restores residency first).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChaosStats {
+    /// Crash events applied during the trace.
+    pub crashes: u64,
+    /// Recovery events observed during the trace (a crash whose recovery
+    /// falls beyond the last arrival is not replayed).
+    pub recoveries: u64,
+    /// Total scheduled downtime across applied crashes, seconds.
+    pub downtime_s: f64,
+    /// Seconds from each crash-evicted residency to the instant the lost
+    /// network's weights were next loaded anywhere in the fleet, in
+    /// repair order. A crash that evicted nothing contributes no entry.
+    pub repairs_s: Vec<f64>,
+}
+
+impl ChaosStats {
+    /// Residencies lost to crashes that the fleet restored.
+    pub fn repaired(&self) -> usize {
+        self.repairs_s.len()
+    }
+
+    /// Mean residency-repair time (0 when nothing was repaired).
+    pub fn mean_repair_s(&self) -> f64 {
+        if self.repairs_s.is_empty() {
+            0.0
+        } else {
+            self.repairs_s.iter().sum::<f64>() / self.repairs_s.len() as f64
+        }
+    }
+
+    /// Worst residency-repair time (0 when nothing was repaired).
+    pub fn max_repair_s(&self) -> f64 {
+        self.repairs_s.iter().fold(0.0, |a, &b| a.max(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let p = FaultPlan::default();
+        assert!(p.is_off());
+        assert_eq!(FaultPlan::parse("none").unwrap(), p);
+        assert_eq!(FaultPlan::parse("").unwrap(), p);
+        assert_eq!(FaultPlan::parse("  ").unwrap(), p);
+        assert_eq!(p.dram_factor(12.3).to_bits(), 1.0f64.to_bits());
+        assert_eq!(p.straggle_factor(0).to_bits(), 1.0f64.to_bits());
+        assert!(!p.affects(0, 0.0, 1e9));
+        assert!(p.validate(0).is_ok());
+    }
+
+    #[test]
+    fn parses_the_issue_spec_examples() {
+        let p = FaultPlan::parse("crash:w2@10s+30s,dramslow:0.5x@20s..40s,straggle:w0:3x")
+            .unwrap();
+        assert_eq!(
+            p.crashes,
+            vec![CrashFault { worker: 2, at_s: 10.0, down_s: 30.0 }]
+        );
+        assert_eq!(p.crashes[0].recover_s(), 40.0);
+        assert_eq!(
+            p.dram_slow,
+            vec![DramSlowFault { factor: 0.5, from_s: 20.0, to_s: 40.0 }]
+        );
+        assert_eq!(p.stragglers, vec![StraggleFault { worker: 0, factor: 3.0 }]);
+        assert!(!p.is_off());
+        // The `s` suffix is optional; whitespace around terms is fine.
+        let q = FaultPlan::parse(" crash:w2@10+30 , dramslow:0.5x@20..40 , straggle:w0:3x ")
+            .unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn hostile_specs_error_not_panic() {
+        for bad in [
+            "crash",
+            "crash:w2",
+            "crash:2@10s+30s",
+            "crash:w2@10s",
+            "crash:wx@10s+30s",
+            "crash:w2@-1s+30s",
+            "crash:w2@10s+0s",
+            "crash:w2@10s+-3s",
+            "crash:w2@NaNs+30s",
+            "dramslow:0.5x",
+            "dramslow:0.5@20s..40s",
+            "dramslow:2x@20s..40s",
+            "dramslow:0x@20s..40s",
+            "dramslow:0.5x@40s..20s",
+            "dramslow:0.5x@20s..20s",
+            "dramslow:0.5x@-5s..20s",
+            "dramslow:infx@1s..2s",
+            "straggle:w0",
+            "straggle:w0:0.5x",
+            "straggle:w0:3",
+            "straggle:0:3x",
+            "straggle:w0:3x,straggle:w0:2x",
+            "meteor:w0",
+            "crash:w0@1s+1s,,",
+            "nonez",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn validate_checks_worker_ids_against_the_fleet() {
+        let p = FaultPlan::parse("crash:w2@10s+30s,straggle:w0:3x").unwrap();
+        assert!(p.validate(3).is_ok());
+        assert!(p.validate(2).is_err(), "worker 2 does not exist in a 2-fleet");
+        let s = FaultPlan::parse("straggle:w5:2x").unwrap();
+        assert!(s.validate(5).is_err());
+        assert!(s.validate(6).is_ok());
+    }
+
+    #[test]
+    fn dram_windows_are_half_open_and_multiply() {
+        let p =
+            FaultPlan::parse("dramslow:0.5x@10s..20s,dramslow:0.5x@15s..30s").unwrap();
+        assert_eq!(p.dram_factor(5.0), 1.0);
+        assert_eq!(p.dram_factor(10.0), 0.5, "window start is inclusive");
+        assert_eq!(p.dram_factor(17.0), 0.25, "overlapping windows compound");
+        assert_eq!(p.dram_factor(20.0), 0.5, "window end is exclusive");
+        assert_eq!(p.dram_factor(30.0), 1.0);
+    }
+
+    #[test]
+    fn straggle_factors_are_per_worker() {
+        let p = FaultPlan::parse("straggle:w1:3x").unwrap();
+        assert_eq!(p.straggle_factor(0), 1.0);
+        assert_eq!(p.straggle_factor(1), 3.0);
+    }
+
+    #[test]
+    fn affects_matches_worker_and_window_overlap() {
+        let p = FaultPlan::parse("crash:w1@10s+5s,dramslow:0.5x@100s..110s").unwrap();
+        // Crash windows only touch their own worker.
+        assert!(p.affects(1, 9.0, 11.0));
+        assert!(p.affects(1, 15.0, 16.0), "closed overlap at the recovery edge");
+        assert!(!p.affects(0, 9.0, 11.0), "worker 0 never crashed");
+        assert!(!p.affects(1, 16.0, 20.0));
+        // DRAM windows touch every worker.
+        assert!(p.affects(0, 99.0, 101.0));
+        assert!(p.affects(2, 110.0, 120.0), "closed overlap at the window edge");
+        assert!(!p.affects(2, 111.0, 120.0));
+        // A straggler taints its worker's whole timeline.
+        let s = FaultPlan::parse("straggle:w0:2x").unwrap();
+        assert!(s.affects(0, 1e6, 1e6 + 1.0));
+        assert!(!s.affects(1, 0.0, 1e9));
+    }
+
+    #[test]
+    fn classify_names_the_three_outcomes() {
+        let p = FaultPlan::parse("straggle:w0:4x").unwrap();
+        // Within SLO: met, quoted or not.
+        assert_eq!(p.classify(true, 0, 0.1, 0.0, 0.05), Some(SloOutcome::Met));
+        assert_eq!(p.classify(false, 0, 0.1, 0.0, 0.05), Some(SloOutcome::Met));
+        // Quoted miss on the straggled worker: attributed to the fault.
+        assert_eq!(
+            p.classify(true, 0, 0.1, 0.0, 0.5),
+            Some(SloOutcome::MissedByFault)
+        );
+        // Quoted miss on a clean worker: a soundness violation.
+        assert_eq!(p.classify(true, 1, 0.1, 0.0, 0.5), Some(SloOutcome::MissedBug));
+        // Unquoted misses carry no outcome.
+        assert_eq!(p.classify(false, 1, 0.1, 0.0, 0.5), None);
+    }
+
+    #[test]
+    fn chaos_stats_aggregate_repairs() {
+        let mut c = ChaosStats::default();
+        assert_eq!(c.mean_repair_s(), 0.0);
+        assert_eq!(c.max_repair_s(), 0.0);
+        c.repairs_s.extend([0.1, 0.3]);
+        assert_eq!(c.repaired(), 2);
+        assert!((c.mean_repair_s() - 0.2).abs() < 1e-12);
+        assert_eq!(c.max_repair_s(), 0.3);
+    }
+}

@@ -14,13 +14,21 @@
 //! | rank | kind              | meaning                                      |
 //! |------|-------------------|----------------------------------------------|
 //! | 0    | `Completion`      | a worker's in-flight work finishes           |
-//! | 1    | `FlushDeadline`   | an open batch's max-wait deadline expires    |
-//! | 2    | `PrewarmDone`     | a controller pre-warm weight stream finishes |
-//! | 3    | `ControllerTick`  | the replica controller runs a planning step  |
-//! | 4    | `Arrival`         | a request arrives (delivered by the caller)  |
+//! | 1    | `Crash`           | a scheduled fault takes a worker down        |
+//! | 2    | `Recover`         | a crashed worker comes back                  |
+//! | 3    | `FlushDeadline`   | an open batch's max-wait deadline expires    |
+//! | 4    | `PrewarmDone`     | a controller pre-warm weight stream finishes |
+//! | 5    | `ControllerTick`  | the replica controller runs a planning step  |
+//! | 6    | `Arrival`         | a request arrives (delivered by the caller)  |
 //!
-//! Completions settle before deadlines fire, deadlines before the controller
-//! replans, and all internal transitions before the next arrival is offered.
+//! Completions settle before faults land (work that finished by `t` is
+//! already committed when the crash at `t` hits), a crash at exactly a
+//! batch's deadline kills the batch before the deadline can flush it,
+//! deadlines fire before the controller replans, and all internal
+//! transitions settle before the next arrival is offered. `Crash`/`Recover`
+//! events exist only under a non-inert [`FaultPlan`] — a fault-free run
+//! never pushes them, so the pre-chaos heap behavior is preserved
+//! structurally, not just numerically.
 //! One deliberate exception lives in the server, not the queue: *due flush
 //! deadlines apply in worker-id order* (each at its own recorded deadline),
 //! not pop order — see `SimServer::dispatch_due` for why that discipline is
@@ -33,6 +41,7 @@
 //! in-heap deletion.
 //!
 //! [`SimServer`]: super::SimServer
+//! [`FaultPlan`]: super::chaos::FaultPlan
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -43,6 +52,13 @@ use std::collections::BinaryHeap;
 pub enum EventKind {
     /// A worker's in-flight work reaches its completion time.
     Completion,
+    /// A scheduled fault takes a worker down: its open batch and resident
+    /// weights are lost and it stays unavailable until the paired
+    /// [`EventKind::Recover`]. The event's `epoch` indexes the crash in
+    /// the run's `FaultPlan`.
+    Crash,
+    /// A crashed worker becomes available again.
+    Recover,
     /// An open batch's max-wait deadline expires and the batch must flush.
     FlushDeadline,
     /// A controller-initiated pre-warm weight stream finishes.
@@ -61,10 +77,12 @@ impl EventKind {
     pub fn rank(self) -> u8 {
         match self {
             EventKind::Completion => 0,
-            EventKind::FlushDeadline => 1,
-            EventKind::PrewarmDone => 2,
-            EventKind::ControllerTick => 3,
-            EventKind::Arrival => 4,
+            EventKind::Crash => 1,
+            EventKind::Recover => 2,
+            EventKind::FlushDeadline => 3,
+            EventKind::PrewarmDone => 4,
+            EventKind::ControllerTick => 5,
+            EventKind::Arrival => 6,
         }
     }
 }
@@ -203,9 +221,11 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(ev(1.0, EventKind::Arrival, 0));
         q.push(ev(1.0, EventKind::ControllerTick, 5));
+        q.push(ev(1.0, EventKind::Recover, 4));
         q.push(ev(1.0, EventKind::FlushDeadline, 2));
         q.push(ev(1.0, EventKind::FlushDeadline, 1));
         q.push(ev(1.0, EventKind::Completion, 9));
+        q.push(ev(1.0, EventKind::Crash, 7));
         q.push(ev(1.0, EventKind::PrewarmDone, 0));
         let kinds: Vec<(EventKind, usize)> =
             std::iter::from_fn(|| q.pop()).map(|e| (e.kind, e.worker)).collect();
@@ -213,6 +233,8 @@ mod tests {
             kinds,
             vec![
                 (EventKind::Completion, 9),
+                (EventKind::Crash, 7),
+                (EventKind::Recover, 4),
                 (EventKind::FlushDeadline, 1),
                 (EventKind::FlushDeadline, 2),
                 (EventKind::PrewarmDone, 0),

@@ -15,9 +15,15 @@
 //!   pre-warm/drain controller), charging pipeline makespans instead of
 //!   PJRT executions — so the full request path (batching policy,
 //!   arrival statistics, admission, placement, replication, SLO
-//!   accounting) is exercised in the default (no-xla) CI lane.
+//!   accounting) is exercised in the default (no-xla) CI lane. A
+//!   deterministic fault-injection layer ([`chaos`]: worker crashes,
+//!   DRAM-bandwidth degradation windows, stragglers, driven by a
+//!   parseable [`FaultPlan`]) replays faults through the same kernel and
+//!   weakens the SLO contract explicitly (every miss must be
+//!   fault-attributable).
 
 pub mod batcher;
+pub mod chaos;
 pub mod events;
 pub mod loadgen;
 pub mod placement;
@@ -31,6 +37,7 @@ pub mod vworker;
 pub mod worker;
 
 pub use batcher::BatchPolicy;
+pub use chaos::{ChaosStats, CrashFault, DramSlowFault, FaultPlan, SloOutcome, StraggleFault};
 pub use events::{Event, EventKind, EventQueue};
 pub use loadgen::{Arrival, Diurnal, FlashCrowd, RateSchedule};
 #[cfg(feature = "runtime")]

@@ -24,6 +24,14 @@
 //! With one worker every policy degenerates to "worker 0", which is what
 //! pins the fleet refactor bitwise against the single-worker replay
 //! (`tests/serve_sim.rs`).
+//!
+//! Placement needs no fault-awareness: a crashed worker (see
+//! [`chaos`](super::chaos)) has its `busy_until_s` pushed past its
+//! recovery time and its residency evicted, so `LeastLoaded` and the
+//! affinity fallback deprioritize it through the load key they already
+//! sort by, and `NetworkAffinity` stops seeing it as a holder. Routing a
+//! request there anyway (round-robin, or a fleet-wide outage) is still
+//! sound — its quote starts after recovery, it just queues longer.
 
 use super::replica::ReplicaSet;
 use super::vworker::VWorker;

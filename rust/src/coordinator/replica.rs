@@ -158,6 +158,10 @@ pub enum ResidencyCause {
     Prewarm,
     /// The replica controller dropped a cold network's weights.
     Drain,
+    /// A fault-plan crash destroyed the worker's resident weights
+    /// (see `coordinator::chaos`). Always an evict; the repair shows up
+    /// as a later `Batch` or `Prewarm` load somewhere in the fleet.
+    Crash,
 }
 
 /// One residency change, as logged by the serving simulator. The full log

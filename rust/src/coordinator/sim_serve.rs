@@ -9,9 +9,15 @@
 //! network switches. This module prices those decisions from the
 //! long-lived, `Sync`-shared [`Engine`]'s cached plans — the admission
 //! controller quotes each request an exact-or-pessimistic completion time
-//! and only accepts it when the quote fits the SLO, so **an accepted
-//! request never misses the SLO by construction** (asserted in
-//! `tests/serve_props.rs`).
+//! and only accepts it when the quote fits the SLO. Fault-free, **an
+//! accepted request never misses the SLO by construction** (asserted in
+//! `tests/serve_props.rs`). Under a non-inert [`FaultPlan`]
+//! ([`SimServeConfig::faults`]) quotes stay fault-*oblivious* while
+//! execution is fault-*aware*, so the contract weakens to: an accepted
+//! request misses its SLO **only if a fault event intersects its quoted
+//! window** — every miss is classified ([`SloOutcome`]) and the
+//! no-intersecting-fault bucket ([`NetStats::missed_bug`]) must always be
+//! zero (pinned in `tests/chaos_sim.rs`; see [`super::chaos`]).
 //!
 //! Model, in one page:
 //!
@@ -83,6 +89,7 @@ use crate::nn::Network;
 use crate::sim::engine::{Design, Engine};
 use crate::util::LatencyHist;
 
+use super::chaos::{ChaosStats, FaultPlan, SloOutcome};
 use super::events::{Event, EventKind, EventQueue};
 use super::placement::Placement;
 use super::replica::{
@@ -141,6 +148,12 @@ pub struct SimServeConfig {
     /// O(workers + open batches) however long the trace; the latency
     /// histograms keep the tail statistics either way.
     pub retain_per_request: bool,
+    /// Deterministic fault schedule (default: inert — no faults, and the
+    /// pre-chaos code paths run bit for bit). Non-inert plans weaken the
+    /// quote contract as documented on [`super::chaos`]: quotes ignore
+    /// faults, execution honors them, and every SLO miss must be
+    /// attributable to an intersecting fault event.
+    pub faults: FaultPlan,
 }
 
 impl Default for SimServeConfig {
@@ -155,6 +168,7 @@ impl Default for SimServeConfig {
             placement: Placement::RoundRobin,
             replication: ReplicationPolicy::None,
             retain_per_request: true,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -197,8 +211,24 @@ pub struct NetStats {
     pub prewarms: u64,
     /// Replicas of this network the controller dropped for being cold.
     pub drains: u64,
-    /// Completions within the SLO (== `completed` under admission).
+    /// Completions within the SLO (== `completed` under fault-free
+    /// admission).
     pub within_slo: u64,
+    /// Quoted completions that missed their SLO with an intersecting
+    /// fault event ([`SloOutcome::MissedByFault`]) — the misses the
+    /// weakened chaos contract permits. Always 0 fault-free. Only quoted
+    /// (admission-gated) completions are classified: accept-all misses
+    /// broke no promise and land in neither miss bucket.
+    pub missed_by_fault: u64,
+    /// Quoted completions that missed their SLO with **no** intersecting
+    /// fault ([`SloOutcome::MissedBug`]) — a quote-soundness violation.
+    /// Must always be zero, faults or not (pinned in
+    /// `tests/chaos_sim.rs`).
+    pub missed_bug: u64,
+    /// Accepted requests destroyed by a worker crash before their batch
+    /// executed: they never complete, so at end of trace
+    /// `completed + lost_to_crash == accepted`.
+    pub lost_to_crash: u64,
     /// Sum of completion latencies, seconds.
     pub latency_sum_s: f64,
     /// Log-scale latency histogram of this network's completions —
@@ -262,6 +292,9 @@ pub struct SimServeReport {
     /// Final replica sets: `replica_holders[net]` is the sorted list of
     /// workers holding `net`'s weights at end of trace.
     pub replica_holders: Vec<Vec<usize>>,
+    /// Fleet-wide fault-injection accounting (crashes, recoveries,
+    /// downtime, residency-repair times). Default-zero on fault-free runs.
+    pub chaos: ChaosStats,
 }
 
 impl SimServeReport {
@@ -308,6 +341,23 @@ impl SimServeReport {
     /// Requests served within their SLO — the fleet's useful output.
     pub fn goodput(&self) -> u64 {
         self.total(|n| n.within_slo)
+    }
+
+    /// Quoted SLO misses attributable to an intersecting fault event —
+    /// the degradation the weakened chaos contract permits.
+    pub fn missed_by_fault(&self) -> u64 {
+        self.total(|n| n.missed_by_fault)
+    }
+
+    /// Quoted SLO misses with no intersecting fault: quote-soundness
+    /// violations. Must always be zero (`tests/chaos_sim.rs`).
+    pub fn missed_bug(&self) -> u64 {
+        self.total(|n| n.missed_bug)
+    }
+
+    /// Accepted requests destroyed by worker crashes before execution.
+    pub fn lost_to_crash(&self) -> u64 {
+        self.total(|n| n.lost_to_crash)
     }
 
     /// Fleet size the replay ran with.
@@ -404,6 +454,17 @@ pub struct SimServer<'e> {
     busy_workers: usize,
     /// Controller pre-warm weight streams still in flight.
     prewarms_pending: usize,
+    /// Fleet-wide fault accounting (stays default-zero under an inert
+    /// fault plan).
+    chaos: ChaosStats,
+    /// Networks whose residency a crash destroyed, with the crash time —
+    /// resolved (into `chaos.repairs_s`) by the next load of that network
+    /// anywhere in the fleet, blocking reload or pre-warm alike.
+    repairs_pending: Vec<(usize, f64)>,
+    /// Set by `finish()`: the kernel drains at `t = ∞`, and controller
+    /// ticks plus fault events are quiesced so post-trace events cannot
+    /// perturb the report (the legacy end-of-trace scan never saw them).
+    finishing: bool,
 }
 
 impl<'e> SimServer<'e> {
@@ -417,7 +478,28 @@ impl<'e> SimServer<'e> {
         anyhow::ensure!(cfg.slo_s > 0.0, "slo must be positive");
         anyhow::ensure!(cfg.max_wait_s >= 0.0, "max_wait must be non-negative");
         anyhow::ensure!(cfg.workers >= 1, "the fleet needs at least one worker");
+        cfg.faults.validate(cfg.workers)?;
         let misses_at_start = engine.cache_stats().misses;
+        // Schedule the fault plan up front: crash/recover pairs enter the
+        // heap once, at build time, carrying their index into
+        // `cfg.faults.crashes` as the event epoch. An inert plan pushes
+        // nothing — the fault-free heap is structurally identical to the
+        // pre-chaos kernel.
+        let mut events = EventQueue::new();
+        for (i, c) in cfg.faults.crashes.iter().enumerate() {
+            events.push(Event {
+                t_s: c.at_s,
+                kind: EventKind::Crash,
+                worker: c.worker,
+                epoch: i as u64,
+            });
+            events.push(Event {
+                t_s: c.recover_s(),
+                kind: EventKind::Recover,
+                worker: c.worker,
+                epoch: i as u64,
+            });
+        }
         let mut caps = Vec::with_capacity(nets.len());
         for net in nets {
             let cap = if cfg.admission {
@@ -462,10 +544,13 @@ impl<'e> SimServer<'e> {
             stats,
             completions: Vec::new(),
             misses_at_start,
-            events: EventQueue::new(),
+            events,
             epoch_counter: 0,
             busy_workers: 0,
             prewarms_pending: 0,
+            chaos: ChaosStats::default(),
+            repairs_pending: Vec::new(),
+            finishing: false,
         })
     }
 
@@ -572,6 +657,25 @@ impl<'e> SimServer<'e> {
     fn flush(&mut self, w: usize, batch: OpenBatch, ready_s: f64) -> Result<()> {
         let k = batch.members.len() as u32;
         let (start, reloaded, done) = self.price(w, batch.net, k, ready_s)?;
+        // Execution is fault-aware where quotes are not: under a non-inert
+        // fault plan, re-derive the completion with the DRAM window scaling
+        // the reload and the straggler factor scaling the makespan. The
+        // terms and association mirror `price` exactly (`(start + switch)
+        // + makespan`), and `x / 1.0` / `x * 1.0` are bitwise identities,
+        // so a structurally-on plan with neutral factors reproduces the
+        // fault-free completion bit for bit (pinned in
+        // `tests/chaos_sim.rs`).
+        let done = if self.cfg.faults.is_off() {
+            done
+        } else {
+            let makespan = self.makespan_s(batch.net, k)?;
+            let switch = if reloaded {
+                self.switch_s[batch.net] / self.cfg.faults.dram_factor(start)
+            } else {
+                0.0
+            };
+            start + switch + makespan * self.cfg.faults.straggle_factor(w)
+        };
         if reloaded {
             if let Some(old) = self.replicas.resident(w) {
                 self.log_residency(ResidencyEvent {
@@ -590,6 +694,9 @@ impl<'e> SimServer<'e> {
                 change: ResidencyChange::Load,
                 cause: ResidencyCause::Batch,
             });
+            if !self.cfg.faults.is_off() {
+                self.note_residency_restored(batch.net, start);
+            }
             if !self.controller.is_off() {
                 self.controller
                     .note_reload(batch.net, start, self.switch_s[batch.net]);
@@ -636,8 +743,22 @@ impl<'e> SimServer<'e> {
             s.completed += 1;
             s.latency_sum_s += lat;
             s.hist.record(lat);
-            if lat <= self.cfg.slo_s {
-                s.within_slo += 1;
+            // Weakened-contract accounting: every quoted miss must be
+            // attributable to an intersecting fault, so `missed_bug`
+            // stays zero — faults are the only place execution is allowed
+            // to diverge from the quote.
+            match self.cfg.faults.classify(
+                self.cfg.admission,
+                w,
+                self.cfg.slo_s,
+                arrival_s,
+                done,
+            ) {
+                Some(SloOutcome::Met) => s.within_slo += 1,
+                Some(SloOutcome::MissedByFault) => s.missed_by_fault += 1,
+                Some(SloOutcome::MissedBug) => s.missed_bug += 1,
+                // Unquoted (accept-all) miss: no promise was broken.
+                None => {}
             }
             self.workers[w].hist.record(lat);
             if self.cfg.retain_per_request {
@@ -651,6 +772,66 @@ impl<'e> SimServer<'e> {
     fn log_residency(&mut self, ev: ResidencyEvent) {
         if self.cfg.retain_per_request {
             self.residency_log.push(ev);
+        }
+    }
+
+    /// A load of `net` landed at `t`: if a crash had destroyed `net`'s
+    /// residency, this load is its repair — record the crash-to-load gap.
+    /// Works in streaming mode too (it hooks the load sites, not the log).
+    fn note_residency_restored(&mut self, net: usize, t: f64) {
+        if let Some(pos) = self.repairs_pending.iter().position(|&(n, _)| n == net) {
+            let (_, crash_t) = self.repairs_pending.remove(pos);
+            self.chaos.repairs_s.push(t - crash_t);
+        }
+    }
+
+    /// Apply crash `idx` of the fault plan at virtual time `t`: the
+    /// worker's open batch dies (its accepted members are lost — they
+    /// never complete), its resident weights are destroyed (a
+    /// `Crash`-cause evict, queued for repair tracking), and the worker
+    /// stays unavailable until `t + down_s` (folded into `busy_until`, so
+    /// quoting and placement see the outage without any new code path).
+    /// Work already flushed *onto* the worker stands: those batches were
+    /// committed — under the simulator's semantics they complete, merely
+    /// behind the recovery if scheduled past it.
+    fn apply_crash(&mut self, t: f64, idx: usize) {
+        let c = self.cfg.faults.crashes[idx];
+        let w = c.worker;
+        self.chaos.crashes += 1;
+        self.chaos.downtime_s += c.down_s;
+        if let Some(b) = self.workers[w].open.take() {
+            // The pending FlushDeadline event goes stale automatically:
+            // its liveness check requires an open batch.
+            self.stats[b.net].lost_to_crash += b.members.len() as u64;
+        }
+        if let Some(net) = self.workers[w].loaded.take() {
+            self.replicas.on_evict(w);
+            self.log_residency(ResidencyEvent {
+                t_s: t,
+                worker: w,
+                net,
+                change: ResidencyChange::Evict,
+                cause: ResidencyCause::Crash,
+            });
+            self.repairs_pending.push((net, t));
+        }
+        let wk = &mut self.workers[w];
+        wk.crashes += 1;
+        wk.down_s += c.down_s;
+        wk.busy_until_s = wk.busy_until_s.max(t + c.down_s);
+        // Downtime is in-flight unavailability as far as the kernel's
+        // completion gauge is concerned: arm (or let the dispatcher
+        // re-arm) the worker's completion event at the new horizon.
+        if !self.completion_armed[w] {
+            self.completion_armed[w] = true;
+            self.busy_workers += 1;
+            let t_s = self.workers[w].busy_until_s;
+            self.events.push(Event {
+                t_s,
+                kind: EventKind::Completion,
+                worker: w,
+                epoch: 0,
+            });
         }
     }
 
@@ -692,7 +873,30 @@ impl<'e> SimServer<'e> {
                         }
                     }
                     EventKind::PrewarmDone => self.prewarms_pending -= 1,
-                    EventKind::ControllerTick => self.run_controller(ev.t_s),
+                    EventKind::ControllerTick => {
+                        // `finish()` quiesces ticks: none can actually be
+                        // pending there (ticks are pushed and dispatched
+                        // within the same offer), but the guard keeps the
+                        // end-of-trace drain provably inert.
+                        if !self.finishing {
+                            self.run_controller(ev.t_s);
+                        }
+                    }
+                    // Fault-plan events, scheduled at build time. The
+                    // epoch indexes the crash in the plan. Quiesced during
+                    // `finish()`: the fault plan applies over the offered
+                    // trace's arrival span, and faults landing after the
+                    // last arrival are not replayed.
+                    EventKind::Crash => {
+                        if !self.finishing {
+                            self.apply_crash(ev.t_s, ev.epoch as usize);
+                        }
+                    }
+                    EventKind::Recover => {
+                        if !self.finishing {
+                            self.chaos.recoveries += 1;
+                        }
+                    }
                     // Arrivals are delivered by the caller via `offer`.
                     EventKind::Arrival => {}
                 }
@@ -735,10 +939,21 @@ impl<'e> SimServer<'e> {
             change: ResidencyChange::Load,
             cause: ResidencyCause::Prewarm,
         });
-        let cost = self.switch_s[net];
+        if !self.cfg.faults.is_off() {
+            self.note_residency_restored(net, now);
+        }
         let done = {
             let wk = &mut self.workers[w];
-            wk.busy_until_s = wk.busy_until_s.max(now) + cost;
+            let start = wk.busy_until_s.max(now);
+            // Pre-warms stream over the same DRAM channel reloads use, so
+            // a degradation window slows them identically (`x / 1.0` is a
+            // bitwise identity, keeping inert plans exact).
+            let cost = if self.cfg.faults.is_off() {
+                self.switch_s[net]
+            } else {
+                self.switch_s[net] / self.cfg.faults.dram_factor(start)
+            };
+            wk.busy_until_s = start + cost;
             wk.busy_s += cost;
             wk.prewarms += 1;
             wk.loaded = Some(net);
@@ -945,18 +1160,18 @@ impl<'e> SimServer<'e> {
         Ok(Verdict::Accepted)
     }
 
-    /// End of trace: close every worker's open batch (at its linger
-    /// deadline, as quoted; worker-id order — the same discipline
-    /// `dispatch_due` applies) and return the report. Remaining kernel
-    /// events (in-flight completions, stale deadlines) are dropped with
-    /// the server.
+    /// End of trace: drain the kernel at `t = ∞`, which flushes every
+    /// worker's open batch at its recorded linger deadline (as quoted) in
+    /// worker-id order — exactly the discipline `dispatch_due` applies
+    /// mid-trace, so end-of-trace cannot diverge from it (pinned in
+    /// `tests/chaos_sim.rs` against an `advance`-past-every-deadline run,
+    /// including a pre-warm landing exactly at an open batch's deadline).
+    /// Controller ticks and fault events are quiesced during the drain:
+    /// the fault plan applies over the offered arrival span only, and
+    /// post-trace events must not perturb the report.
     pub fn finish(mut self) -> Result<SimServeReport> {
-        for w in 0..self.workers.len() {
-            if let Some(b) = self.workers[w].open.take() {
-                let ready = b.deadline_s;
-                self.flush(w, b, ready)?;
-            }
-        }
+        self.finishing = true;
+        self.dispatch_due(f64::INFINITY)?;
         let span_s = self
             .workers
             .iter()
@@ -970,6 +1185,7 @@ impl<'e> SimServer<'e> {
             completions: self.completions,
             residency_log: self.residency_log,
             replica_holders: self.replicas.snapshot(),
+            chaos: self.chaos,
         })
     }
 }
@@ -1081,7 +1297,37 @@ mod tests {
         assert_eq!(r.reloads(), 0);
         assert_eq!(r.span_s, 0.0);
         assert_eq!(r.slo_attainment(), 0.0);
+        // Zero-span report: utilization and throughput must be 0, not NaN
+        // (busy/span and completed/span both divide by the span).
+        assert_eq!(r.mean_utilization(), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
         assert!(r.residency_log.is_empty(), "rejections leave no residency");
+    }
+
+    #[test]
+    fn empty_fleet_report_yields_zero_utilization_not_nan() {
+        // `SimServer::new` rejects zero-worker fleets, but reports are
+        // plain data (CSV loaders, future aggregators) — a fleetless or
+        // zero-span report must degrade to 0.0, never NaN.
+        let r = SimServeReport {
+            per_net: Vec::new(),
+            per_worker: Vec::new(),
+            span_s: 0.0,
+            plans_computed: 0,
+            completions: Vec::new(),
+            residency_log: Vec::new(),
+            replica_holders: Vec::new(),
+            chaos: ChaosStats::default(),
+        };
+        assert_eq!(r.mean_utilization(), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
+        assert_eq!(r.slo_attainment(), 0.0);
+        let with_span = SimServeReport { span_s: 1.0, ..r };
+        assert_eq!(
+            with_span.mean_utilization(),
+            0.0,
+            "positive span over an empty fleet still divides by zero workers"
+        );
     }
 
     #[test]
@@ -1484,5 +1730,96 @@ mod tests {
             assert_eq!(a.hist, b.hist, "histograms fold identically");
         }
         assert_eq!(full.replica_holders, lean.replica_holders);
+    }
+
+    #[test]
+    fn a_crash_loses_the_open_batch_and_residency_and_holds_the_worker() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 8,
+            max_wait_s: 0.5,
+            faults: FaultPlan::parse("crash:w0@1.0s+2.0s").unwrap(),
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        // Batch 1 flushes at its 0.5 s deadline (committed work survives
+        // the later crash); batch 2 opens at 0.9 s and dies at t = 1.0
+        // before its 1.4 s deadline.
+        sv.offer(SimRequest { id: 0, net: 0, arrival_s: 0.0 }).unwrap();
+        sv.advance(0.6).unwrap();
+        sv.offer(SimRequest { id: 1, net: 0, arrival_s: 0.9 }).unwrap();
+        sv.offer(SimRequest { id: 2, net: 0, arrival_s: 0.9 }).unwrap();
+        // Crossing the crash instant kills the open batch and residency.
+        sv.advance(1.5).unwrap();
+        assert_eq!(sv.replicas().count(0), 0, "the crash evicted the weights");
+        // A later arrival pays a blocking reload on the recovered worker —
+        // that load is the residency repair.
+        sv.offer(SimRequest { id: 3, net: 0, arrival_s: 4.0 }).unwrap();
+        let r = sv.finish().unwrap();
+        assert_eq!(r.accepted(), 4);
+        assert_eq!(r.lost_to_crash(), 2, "the open batch's members are lost");
+        assert_eq!(r.completed(), 2, "ids 0 and 3");
+        assert_eq!(r.completed() + r.lost_to_crash(), r.accepted());
+        assert_eq!(r.chaos.crashes, 1);
+        assert_eq!(r.chaos.recoveries, 1);
+        assert_eq!(r.chaos.downtime_s, 2.0);
+        assert_eq!(r.per_worker[0].crashes, 1);
+        assert_eq!(r.per_worker[0].down_s, 2.0);
+        // Repair lands when the reload actually starts: the id-3 batch
+        // flushes at its 4.5 s linger deadline, 3.5 s after the crash.
+        assert_eq!(r.chaos.repaired(), 1, "the reload repaired residency");
+        assert!((r.chaos.repairs_s[0] - 3.5).abs() < 1e-9);
+        // The crash evict and the repair load both reach the residency log.
+        assert!(r
+            .residency_log
+            .iter()
+            .any(|e| e.cause == ResidencyCause::Crash && e.change == ResidencyChange::Evict));
+        assert_eq!(r.missed_bug(), 0);
+        assert_eq!(r.replica_holders[0], vec![0]);
+    }
+
+    #[test]
+    fn a_straggler_causes_attributed_misses_never_bugs() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        // SLO tight enough that a 50× slowdown breaks it, loose enough to
+        // accept at the quoted (fault-oblivious) speed.
+        let base = SimServeConfig {
+            slo_s: 0.5,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            ..SimServeConfig::default()
+        };
+        let mut clean = SimServer::new(&eng, &nets, base.clone()).unwrap();
+        clean.offer(SimRequest { id: 0, net: 0, arrival_s: 0.0 }).unwrap();
+        let clean = clean.finish().unwrap();
+        assert_eq!(clean.goodput(), 1, "fits the SLO at nominal speed");
+        let cfg = SimServeConfig {
+            faults: FaultPlan::parse("straggle:w0:50x").unwrap(),
+            ..base
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        sv.offer(SimRequest { id: 0, net: 0, arrival_s: 0.0 }).unwrap();
+        let r = sv.finish().unwrap();
+        assert_eq!(r.accepted(), 1, "quotes are fault-oblivious: still accepted");
+        assert_eq!(r.completed(), 1);
+        assert_eq!(r.missed_by_fault(), 1, "the straggler broke the quote");
+        assert_eq!(r.missed_bug(), 0, "and the miss is fully attributed");
+        assert_eq!(r.goodput(), 0);
+        assert!(r.span_s > clean.span_s * 10.0, "execution really slowed");
+    }
+
+    #[test]
+    fn fault_plans_validate_against_the_fleet_at_build() {
+        let eng = engine();
+        let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+        let cfg = SimServeConfig {
+            workers: 2,
+            faults: FaultPlan::parse("crash:w5@1s+1s").unwrap(),
+            ..SimServeConfig::default()
+        };
+        assert!(SimServer::new(&eng, &nets, cfg).is_err());
     }
 }

@@ -54,6 +54,11 @@ pub struct WorkerStats {
     pub idle_at_s: f64,
     /// Network resident at end of trace, if any.
     pub resident: Option<usize>,
+    /// Fault-plan crashes applied to this worker during the trace.
+    pub crashes: u64,
+    /// Total scheduled downtime from those crashes, seconds (not counted
+    /// as busy time — a down worker is unavailable, not utilized).
+    pub down_s: f64,
     /// Log-scale latency histogram of the completions this worker served
     /// (p50/p99/p999 per worker in the fleet table).
     pub hist: LatencyHist,
@@ -87,6 +92,10 @@ pub struct VWorker {
     pub reloads: u64,
     pub prewarms: u64,
     pub busy_s: f64,
+    /// Fault-plan crashes applied to this worker (see `coordinator::chaos`).
+    pub crashes: u64,
+    /// Total scheduled downtime from those crashes, seconds.
+    pub down_s: f64,
     /// Latencies of the completions this worker served.
     pub hist: LatencyHist,
 }
@@ -103,6 +112,8 @@ impl VWorker {
             reloads: 0,
             prewarms: 0,
             busy_s: 0.0,
+            crashes: 0,
+            down_s: 0.0,
             hist: LatencyHist::new(),
         }
     }
@@ -139,6 +150,8 @@ impl VWorker {
             busy_s: self.busy_s,
             idle_at_s: self.busy_until_s,
             resident: self.loaded,
+            crashes: self.crashes,
+            down_s: self.down_s,
             hist: self.hist.clone(),
         }
     }
@@ -158,6 +171,7 @@ mod tests {
         assert!(!w.holds(0));
         let s = w.stats();
         assert_eq!((s.batches, s.reloads, s.completed, s.prewarms), (0, 0, 0, 0));
+        assert_eq!((s.crashes, s.down_s), (0, 0.0));
         assert_eq!(s.resident, None);
         assert_eq!(s.utilization(1.0), 0.0);
     }

@@ -24,8 +24,8 @@ pub use nn_sweep::{
     ddm_row, fig8_sweep, max_deployable, paper_networks, zoo_sweep, Floor, EXPLORE_BATCH,
 };
 pub use trace::{
-    closed_loop_replay, gen_trace, gen_trace_mix, mixed_trace, mixed_trace_mix,
-    mixed_trace_stream, placement_sweep, replay, replay_stream, replication_sweep, slo_sweep,
-    stream_trace, ClosedLoopArrival, PlacementPoint, ReplicationGrid, ReplicationPoint,
-    TraceStream, DEFAULT_NUM_CLASSES,
+    chaos_sweep, closed_loop_replay, fault_ladder, gen_trace, gen_trace_mix, mixed_trace,
+    mixed_trace_mix, mixed_trace_stream, placement_sweep, replay, replay_stream,
+    replication_sweep, slo_sweep, stream_trace, ChaosGrid, ChaosPoint, ClosedLoopArrival,
+    PlacementPoint, ReplicationGrid, ReplicationPoint, TraceStream, DEFAULT_NUM_CLASSES,
 };

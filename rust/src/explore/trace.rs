@@ -35,6 +35,7 @@
 
 use anyhow::Result;
 
+use crate::coordinator::chaos::FaultPlan;
 use crate::coordinator::loadgen::{Arrival, RateSchedule};
 use crate::coordinator::placement::Placement;
 use crate::coordinator::replica::ReplicationPolicy;
@@ -286,6 +287,94 @@ pub fn replay_stream(
         server.offer(req)?;
     }
     server.finish()
+}
+
+/// One cell of the chaos grid: a full replay of the same trace under one
+/// labelled [`FaultPlan`] × one replication policy.
+#[derive(Debug, Clone)]
+pub struct ChaosPoint {
+    /// Human-readable fault-intensity label (e.g. `"none"`, `"crash"`).
+    pub label: String,
+    pub faults: FaultPlan,
+    pub policy: ReplicationPolicy,
+    pub report: SimServeReport,
+}
+
+/// The axes of a [`chaos_sweep`]: labelled fault plans (the intensity
+/// ladder) and replication policies to cross.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosGrid<'a> {
+    pub plans: &'a [(&'a str, FaultPlan)],
+    pub policies: &'a [ReplicationPolicy],
+}
+
+/// A default fault-intensity ladder scaled to a trace that spans
+/// `span_s` seconds over `workers` workers: fault-free, a mid-trace
+/// DRAM-bandwidth brownout, a mid-trace crash of worker 0 (the hot
+/// worker under affinity placement of a skewed mix), and all faults at
+/// once plus a straggler. Deterministic — the ladder is a pure function
+/// of its arguments.
+pub fn fault_ladder(workers: usize, span_s: f64) -> Result<Vec<(String, FaultPlan)>> {
+    anyhow::ensure!(workers >= 1, "fault ladder needs at least one worker");
+    anyhow::ensure!(
+        span_s.is_finite() && span_s > 0.0,
+        "fault ladder needs a positive finite span, got {span_s}"
+    );
+    let quarter = span_s / 4.0;
+    let crash = format!("crash:w0@{}s+{}s", quarter, quarter);
+    let slow = format!("dramslow:0.5x@{}s..{}s", quarter, 3.0 * quarter);
+    let last = workers - 1;
+    let all = format!("{crash},{slow},straggle:w{last}:2x");
+    Ok(vec![
+        ("none".to_string(), FaultPlan::default()),
+        ("dramslow".to_string(), FaultPlan::parse(&slow)?),
+        ("crash".to_string(), FaultPlan::parse(&crash)?),
+        ("crash+slow+straggle".to_string(), FaultPlan::parse(&all)?),
+    ])
+}
+
+/// The chaos trade-off grid: replay the same trace under every fault
+/// plan × replication policy operating point, so the figures can show
+/// how much SLO degradation each fault shape inflicts and how much of
+/// the lost residency each replication policy repairs. The engine is
+/// shared (one plan per distinct network for the whole grid — faults
+/// reshape execution, never planning). Rows come back in plans-major,
+/// policies-minor order. Every report's `missed_bug()` must be zero —
+/// the sweep checks and errors otherwise, because a nonzero count means
+/// the simulator broke a quote no fault can explain.
+pub fn chaos_sweep(
+    engine: &Engine,
+    nets: &[Network],
+    trace: &[SimRequest],
+    base: &SimServeConfig,
+    grid: &ChaosGrid,
+) -> Result<Vec<ChaosPoint>> {
+    let ChaosGrid { plans, policies } = *grid;
+    let mut rows = Vec::with_capacity(plans.len() * policies.len());
+    for (label, faults) in plans {
+        for policy in policies {
+            let cfg = SimServeConfig {
+                faults: faults.clone(),
+                replication: policy.clone(),
+                ..base.clone()
+            };
+            let report = replay(engine, nets, trace, cfg)?;
+            anyhow::ensure!(
+                report.missed_bug() == 0,
+                "chaos sweep cell {label} × {} broke the weakened SLO contract: \
+                 {} misses with no fault to blame",
+                policy.label(),
+                report.missed_bug()
+            );
+            rows.push(ChaosPoint {
+                label: label.to_string(),
+                faults: faults.clone(),
+                policy: policy.clone(),
+                report,
+            });
+        }
+    }
+    Ok(rows)
 }
 
 /// One request of a closed-loop run, tagged with the client that issued
@@ -765,6 +854,60 @@ mod tests {
             },
         )
         .is_err());
+    }
+
+    #[test]
+    fn chaos_sweep_covers_the_grid_and_every_miss_is_fault_attributed() {
+        let engine = Engine::compact(presets::lpddr5());
+        let (nets, trace) =
+            mixed_trace(&["mobilenetv1", "vgg11"], 48, Arrival::Poisson(2000.0), 19).unwrap();
+        let base = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 8,
+            max_wait_s: 0.001,
+            workers: 2,
+            placement: Placement::NetworkAffinity,
+            ..SimServeConfig::default()
+        };
+        let span = trace.last().unwrap().arrival_s;
+        let ladder = fault_ladder(2, span).unwrap();
+        let plans: Vec<(&str, FaultPlan)> =
+            ladder.iter().map(|(l, p)| (l.as_str(), p.clone())).collect();
+        let policies = [ReplicationPolicy::None, ReplicationPolicy::parse("adaptive").unwrap()];
+        let rows = chaos_sweep(
+            &engine,
+            &nets,
+            &trace,
+            &base,
+            &ChaosGrid {
+                plans: &plans,
+                policies: &policies,
+            },
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 4 * 2);
+        // Plans-major, policies-minor; the ladder starts fault-free.
+        assert_eq!((rows[0].label.as_str(), rows[0].policy.label()), ("none", "none"));
+        assert!(rows[0].faults.is_off());
+        assert_eq!(rows[1].policy.label(), "adaptive");
+        assert_eq!(rows[2].label, "dramslow");
+        for row in &rows {
+            assert_eq!(row.report.missed_bug(), 0, "{}: unattributed miss", row.label);
+        }
+        // Fault-free cells replay bitwise-identically to a plain replay.
+        let clean = replay(&engine, &nets, &trace, base.clone()).unwrap();
+        assert_eq!(rows[0].report.span_s.to_bits(), clean.span_s.to_bits());
+        assert_eq!(rows[0].report.completed(), clean.completed());
+        assert_eq!(rows[0].report.chaos.crashes, 0);
+        // The crash rung loses work or residency somewhere.
+        let crash_row = &rows[4];
+        assert_eq!(crash_row.label, "crash");
+        assert_eq!(crash_row.report.chaos.crashes, 1);
+        // The whole grid shared one engine: faults never re-plan.
+        assert_eq!(engine.cache_stats().misses, nets.len() as u64);
+        // Bad ladders are rejected.
+        assert!(fault_ladder(0, 1.0).is_err());
+        assert!(fault_ladder(2, 0.0).is_err());
     }
 
     #[test]

@@ -18,7 +18,9 @@ use anyhow::Result;
 
 use pimflow::cfg::{presets, Config, DramKind, PipelineCase};
 use pimflow::cli::{App, Command, Invocation, Opt, Parsed};
-use pimflow::coordinator::{Arrival, Placement, RateSchedule, ReplicationPolicy, SimServeConfig};
+use pimflow::coordinator::{
+    Arrival, FaultPlan, Placement, RateSchedule, ReplicationPolicy, SimServeConfig,
+};
 #[cfg(feature = "runtime")]
 use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
 use pimflow::explore;
@@ -182,6 +184,15 @@ fn app() -> App {
                         "replication",
                         Some("none"),
                         "weight replication policy (none, static:<spec>, adaptive)",
+                    ),
+                    Opt::value(
+                        "faults",
+                        Some("none"),
+                        "fault plan: `,`-joined crash:w<id>@<at>s+<down>s / dramslow:<f>x@<a>s..<b>s / straggle:w<id>:<f>x",
+                    ),
+                    Opt::flag(
+                        "sweep-faults",
+                        "replay the chaos grid (fault-intensity ladder x replication policies) instead",
                     ),
                     Opt::value(
                         "sweep-workers",
@@ -572,6 +583,7 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         workers: p.get_u32("workers")?.unwrap_or(1) as usize,
         placement: Placement::parse(p.get_or("placement", "round-robin"))?,
         replication: ReplicationPolicy::parse(p.get_or("replication", "none"))?,
+        faults: FaultPlan::parse(p.get_or("faults", "none"))?,
         ..SimServeConfig::default()
     };
     let engine = Engine::compact(dram_of(p)?);
@@ -580,8 +592,15 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
     // realized completions, so the open-loop trace is bypassed entirely.
     if p.flag("feedback") {
         anyhow::ensure!(
-            p.get("sweep-workers").is_none() && p.get("sweep-replication").is_none(),
+            p.get("sweep-workers").is_none()
+                && p.get("sweep-replication").is_none()
+                && !p.flag("sweep-faults"),
             "--feedback drives a single replay; drop the --sweep-* options"
+        );
+        anyhow::ensure!(
+            cfg.faults.is_off(),
+            "--feedback clients wait for completions, and a crash destroys its victims' \
+             requests outright — the loop would deadlock; drop --faults"
         );
         anyhow::ensure!(
             schedule.is_constant(),
@@ -614,6 +633,62 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
             println!(
                 "wrote {}",
                 figures::write_csv(&csv, "serve_sim_feedback.csv")?.display()
+            );
+        }
+        return Ok(());
+    }
+
+    // The chaos grid: same trace under a fault-intensity ladder scaled to
+    // its span × replication policies (`none` vs the configured/adaptive
+    // one), with the weakened SLO contract checked on every cell.
+    if p.flag("sweep-faults") {
+        anyhow::ensure!(
+            p.get("sweep-workers").is_none() && p.get("sweep-replication").is_none(),
+            "--sweep-faults is its own grid; drop the other --sweep-* options"
+        );
+        anyhow::ensure!(
+            cfg.faults.is_off(),
+            "--sweep-faults builds its own fault ladder; drop --faults"
+        );
+        anyhow::ensure!(
+            schedule.is_constant(),
+            "--sweep-faults replays the constant-rate trace; drop --schedule"
+        );
+        let trace = explore::gen_trace_mix(nets.len(), mix.as_deref(), n, arrival, seed);
+        let span = trace.last().map(|r| r.arrival_s).unwrap_or(0.0);
+        anyhow::ensure!(span > 0.0, "--sweep-faults needs a trace with a positive span");
+        let ladder = explore::fault_ladder(cfg.workers, span)?;
+        let plans: Vec<(&str, FaultPlan)> = ladder
+            .iter()
+            .map(|(label, plan)| (label.as_str(), plan.clone()))
+            .collect();
+        let mut policies = vec![ReplicationPolicy::None];
+        match &cfg.replication {
+            ReplicationPolicy::None => policies.push(ReplicationPolicy::parse("adaptive")?),
+            configured => policies.push(configured.clone()),
+        }
+        let rows = explore::chaos_sweep(
+            &engine,
+            &nets,
+            &trace,
+            &cfg,
+            &explore::ChaosGrid {
+                plans: &plans,
+                policies: &policies,
+            },
+        )?;
+        let (t, csv) = figures::chaos_table(&rows);
+        print!("{}", t.render());
+        println!(
+            "{} replays over one engine: {} plans total (faults never re-plan); \
+             every SLO miss fault-attributed",
+            rows.len(),
+            engine.cache_stats().misses
+        );
+        if p.flag("csv") {
+            println!(
+                "wrote {}",
+                figures::write_csv(&csv, "chaos_sweep.csv")?.display()
             );
         }
         return Ok(());
@@ -716,6 +791,7 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
 
     let workers = cfg.workers;
     let replicated = cfg.replication != ReplicationPolicy::None;
+    let faulted = !cfg.faults.is_off();
     // Streaming path: requests are generated and offered one at a time
     // (O(workers) memory, no per-request logs). Any non-constant schedule
     // implies it, since only the stream generator shapes the rate.
@@ -761,6 +837,26 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
             ""
         }
     );
+    if faulted {
+        println!(
+            "chaos: {} crashes ({} recoveries, {:.2} s scheduled downtime), \
+             {} requests lost to crashes; SLO misses: {} fault-attributed, {} unattributed; \
+             {} residency repairs, mean {:.3} s",
+            report.chaos.crashes,
+            report.chaos.recoveries,
+            report.chaos.downtime_s,
+            report.lost_to_crash(),
+            report.missed_by_fault(),
+            report.missed_bug(),
+            report.chaos.repaired(),
+            report.chaos.mean_repair_s()
+        );
+        anyhow::ensure!(
+            report.missed_bug() == 0,
+            "weakened SLO contract violated: {} misses with no fault to blame",
+            report.missed_bug()
+        );
+    }
     if replicated {
         println!(
             "replication: {} pre-warms, {} drains; final replica counts: {}",

@@ -17,6 +17,18 @@ use crate::util::csv::Csv;
 
 use super::table::Table;
 
+/// Latency table cell: `-` when the backing histogram recorded nothing.
+/// An empty histogram's mean and quantiles are all 0.0, and a printed
+/// "0.00 ms" reads as an impossibly fast network instead of an unserved
+/// one.
+fn latency_ms_cell(hist: &crate::util::LatencyHist, seconds: f64) -> String {
+    if hist.count() == 0 {
+        "-".to_string()
+    } else {
+        format!("{:.2} ms", seconds * 1e3)
+    }
+}
+
 /// Unique batch values of a sweep grid, in first-appearance order.
 fn batch_axis(points: &[DesignPoint]) -> Vec<u32> {
     let mut axis = Vec::new();
@@ -386,10 +398,10 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
             n.reloads.to_string(),
             n.prewarms.to_string(),
             format!("{:.1}%", 100.0 * n.slo_attainment()),
-            format!("{:.2} ms", n.mean_latency_s() * 1e3),
-            format!("{:.2} ms", n.hist.p50() * 1e3),
-            format!("{:.2} ms", n.hist.p99() * 1e3),
-            format!("{:.2} ms", n.hist.p999() * 1e3),
+            latency_ms_cell(&n.hist, n.mean_latency_s()),
+            latency_ms_cell(&n.hist, n.hist.p50()),
+            latency_ms_cell(&n.hist, n.hist.p99()),
+            latency_ms_cell(&n.hist, n.hist.p999()),
         ]);
         csv.row(vec![
             name.to_string(),
@@ -476,9 +488,9 @@ pub fn worker_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv)
             w.prewarms.to_string(),
             format!("{:.3} s", w.busy_s),
             format!("{:.1}%", 100.0 * util),
-            format!("{:.2} ms", w.hist.p50() * 1e3),
-            format!("{:.2} ms", w.hist.p99() * 1e3),
-            format!("{:.2} ms", w.hist.p999() * 1e3),
+            latency_ms_cell(&w.hist, w.hist.p50()),
+            latency_ms_cell(&w.hist, w.hist.p99()),
+            latency_ms_cell(&w.hist, w.hist.p999()),
             resident.clone(),
         ]);
         csv.row(vec![
@@ -596,9 +608,9 @@ pub fn replication_table(rows: &[crate::explore::ReplicationPoint]) -> (Table, C
             format!("{:.1}", r.throughput_rps()),
             format!("{:.1}%", 100.0 * r.slo_attainment()),
             format!("{:.1}%", 100.0 * r.mean_utilization()),
-            format!("{:.2} ms", hist.p50() * 1e3),
-            format!("{:.2} ms", hist.p99() * 1e3),
-            format!("{:.2} ms", hist.p999() * 1e3),
+            latency_ms_cell(&hist, hist.p50()),
+            latency_ms_cell(&hist, hist.p99()),
+            latency_ms_cell(&hist, hist.p999()),
         ]);
         csv.row(vec![
             format!("{:.3}", p.skew),
@@ -618,6 +630,87 @@ pub fn replication_table(rows: &[crate::explore::ReplicationPoint]) -> (Table, C
             format!("{:.6}", hist.p50()),
             format!("{:.6}", hist.p99()),
             format!("{:.6}", hist.p999()),
+        ]);
+    }
+    (t, csv)
+}
+
+/// Chaos-sweep grid: one row per (fault plan, replication policy) replay
+/// of the same trace — the weakened-SLO-contract ledger. Every miss must
+/// sit in the `missed_fault` column; a nonzero `missed_bug` is a
+/// scheduler defect no fault can explain. `mean repair` is how long
+/// crash-destroyed weight residency took to come back (via a demand
+/// reload or a controller pre-warm).
+pub fn chaos_table(rows: &[crate::explore::ChaosPoint]) -> (Table, Csv) {
+    let mut t = Table::new(
+        "chaos sweep: SLO degradation & residency repair vs faults x replication",
+        vec![
+            "faults", "policy", "accept", "lost", "missed fault", "missed bug", "crashes",
+            "downtime", "mean repair", "req/s", "slo att", "p99",
+        ],
+    );
+    let mut csv = Csv::new(vec![
+        "faults",
+        "replication",
+        "accepted",
+        "completed",
+        "lost_to_crash",
+        "missed_by_fault",
+        "missed_bug",
+        "crashes",
+        "recoveries",
+        "downtime_s",
+        "repairs",
+        "mean_repair_s",
+        "max_repair_s",
+        "reloads",
+        "prewarms",
+        "throughput_rps",
+        "slo_attainment",
+        "span_s",
+        "p99_s",
+    ]);
+    for p in rows {
+        let r = &p.report;
+        let hist = r.fleet_hist();
+        t.row(vec![
+            p.label.clone(),
+            p.policy.label().to_string(),
+            r.accepted().to_string(),
+            r.lost_to_crash().to_string(),
+            r.missed_by_fault().to_string(),
+            r.missed_bug().to_string(),
+            r.chaos.crashes.to_string(),
+            format!("{:.2} s", r.chaos.downtime_s),
+            if r.chaos.repaired() == 0 {
+                "-".to_string()
+            } else {
+                format!("{:.3} s", r.chaos.mean_repair_s())
+            },
+            format!("{:.1}", r.throughput_rps()),
+            format!("{:.1}%", 100.0 * r.slo_attainment()),
+            latency_ms_cell(&hist, hist.p99()),
+        ]);
+        csv.row(vec![
+            p.label.clone(),
+            p.policy.label().to_string(),
+            r.accepted().to_string(),
+            r.completed().to_string(),
+            r.lost_to_crash().to_string(),
+            r.missed_by_fault().to_string(),
+            r.missed_bug().to_string(),
+            r.chaos.crashes.to_string(),
+            r.chaos.recoveries.to_string(),
+            format!("{:.6}", r.chaos.downtime_s),
+            r.chaos.repaired().to_string(),
+            format!("{:.6}", r.chaos.mean_repair_s()),
+            format!("{:.6}", r.chaos.max_repair_s()),
+            r.reloads().to_string(),
+            r.prewarms().to_string(),
+            format!("{:.3}", r.throughput_rps()),
+            format!("{:.4}", r.slo_attainment()),
+            format!("{:.6}", r.span_s),
+            format!("{:.6}", hist.p99()),
         ]);
     }
     (t, csv)
@@ -802,6 +895,74 @@ mod tests {
         assert!(s.contains("none"));
         assert!(s.contains("adaptive"));
         assert_eq!(csv.num_rows(), rows.len());
+    }
+
+    #[test]
+    fn chaos_table_renders_the_grid_with_fault_attribution() {
+        use crate::coordinator::{Arrival, FaultPlan, Placement, ReplicationPolicy, SimServeConfig};
+        use crate::explore::trace::{chaos_sweep, mixed_trace, ChaosGrid};
+        let engine = crate::explore::Engine::compact(presets::lpddr5());
+        let (nets, trace) =
+            mixed_trace(&["mobilenetv1", "vgg11"], 24, Arrival::Poisson(2000.0), 5).unwrap();
+        let base = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            workers: 2,
+            placement: Placement::NetworkAffinity,
+            ..SimServeConfig::default()
+        };
+        let plans = [
+            ("none", FaultPlan::default()),
+            ("crash", FaultPlan::parse("crash:w0@0.002s+0.01s").unwrap()),
+        ];
+        let policies = [
+            ReplicationPolicy::None,
+            ReplicationPolicy::parse("adaptive").unwrap(),
+        ];
+        let rows = chaos_sweep(
+            &engine,
+            &nets,
+            &trace,
+            &base,
+            &ChaosGrid {
+                plans: &plans,
+                policies: &policies,
+            },
+        )
+        .unwrap();
+        let (t, csv) = chaos_table(&rows);
+        let s = t.render();
+        assert!(s.contains("crash"));
+        assert!(s.contains("adaptive"));
+        assert!(s.contains("missed bug"));
+        assert_eq!(csv.num_rows(), rows.len());
+        // The fault-free rows report zero chaos activity.
+        assert!(csv.to_string().lines().nth(1).unwrap().starts_with("none,none,"));
+    }
+
+    #[test]
+    fn empty_latency_histograms_render_as_dashes_not_zero_ms() {
+        use crate::coordinator::{Arrival, SimServeConfig};
+        use crate::explore::trace::{mixed_trace, replay};
+        let engine = crate::explore::Engine::compact(presets::lpddr5());
+        let (nets, trace) = mixed_trace(&["mobilenetv1", "vgg11"], 8, Arrival::Burst, 5).unwrap();
+        // An impossible SLO rejects everything: every histogram is empty.
+        let cfg = SimServeConfig {
+            slo_s: 1e-12,
+            max_batch: 4,
+            max_wait_s: 0.001,
+            workers: 2,
+            ..SimServeConfig::default()
+        };
+        let report = replay(&engine, &nets, &trace, cfg).unwrap();
+        assert_eq!(report.completed(), 0);
+        let (t, _) = trace_table(&report);
+        let s = t.render();
+        assert!(s.contains('-'), "empty quantiles must print as dashes");
+        assert!(!s.contains("0.00 ms"), "empty quantiles must not print as 0.00 ms:\n{s}");
+        let (wt, _) = worker_table(&report);
+        assert!(!wt.render().contains("0.00 ms"));
     }
 
     #[test]

@@ -1,0 +1,310 @@
+//! Tier-1 pins for the chaos fault-injection layer:
+//!
+//! * the fault-free [`FaultPlan::default`] is structurally invisible — an
+//!   inert-but-non-empty plan (`straggle:w0:1x`, which routes every flush
+//!   through the fault-aware arithmetic) replays bitwise-identically to
+//!   the default plan under every placement × replication policy, so the
+//!   chaos layer's presence perturbs nothing until a fault actually
+//!   fires;
+//! * the acceptance scenario: crashing the hot-network worker mid-trace
+//!   on the pinned skewed workload keeps the weakened SLO contract
+//!   (`missed_bug == 0`, conservation `completed + lost == accepted`),
+//!   adaptive replication repairs the destroyed residency well inside
+//!   its controller window, and the whole faulted replay is
+//!   bitwise-deterministic across two runs;
+//! * miss attribution: DRAM brownouts and stragglers inflate execution
+//!   past quotes, and every resulting miss lands in `missed_by_fault`;
+//! * `finish()` is the event kernel: closing out with pending flush
+//!   deadlines **and a pending pre-warm** is bitwise-identical to
+//!   advancing virtual time past every scheduled event first (the
+//!   equal-time FlushDeadline-before-PrewarmDone order is pinned in the
+//!   kernel's own unit tests).
+
+use pimflow::cfg::presets;
+use pimflow::coordinator::{
+    AdaptiveConfig, FaultPlan, Placement, ReplicationPolicy, SimRequest, SimServeConfig,
+    SimServeReport, SimServer,
+};
+use pimflow::explore::trace::replay;
+use pimflow::nn::{zoo, Network};
+use pimflow::sim::Engine;
+
+fn engine() -> Engine {
+    Engine::compact(presets::lpddr5())
+}
+
+/// The pinned skewed workload shared with `tests/replica_sim.rs` and
+/// `benches/hotpath.rs`: one hot network (mobilenetv1, every other
+/// request) and three cold ones cycling behind it, arrivals 25 ms apart
+/// so the fleet drains between requests.
+fn skewed_nets() -> Vec<Network> {
+    ["mobilenetv1", "vgg11", "resnet18", "vgg13"]
+        .iter()
+        .map(|n| zoo::by_name(n, 100).unwrap())
+        .collect()
+}
+
+fn skewed_trace(n: usize) -> Vec<SimRequest> {
+    (0..n)
+        .map(|j| SimRequest {
+            id: j as u64,
+            net: if j % 2 == 0 { 0 } else { 1 + (j / 2) % 3 },
+            arrival_s: j as f64 * 0.025,
+        })
+        .collect()
+}
+
+fn base_cfg() -> SimServeConfig {
+    SimServeConfig {
+        slo_s: 1e6,
+        max_batch: 8,
+        max_wait_s: 0.001,
+        workers: 3,
+        placement: Placement::NetworkAffinity,
+        ..SimServeConfig::default()
+    }
+}
+
+/// Assert two reports are bitwise-identical in every externally visible
+/// dimension: counters, span bits, completion stream, and residency.
+fn assert_bitwise_equal(a: &SimServeReport, b: &SimServeReport, label: &str) {
+    assert_eq!(a.accepted(), b.accepted(), "{label}: accepted");
+    assert_eq!(a.coalesced(), b.coalesced(), "{label}: coalesced");
+    assert_eq!(a.rejected(), b.rejected(), "{label}: rejected");
+    assert_eq!(a.batches(), b.batches(), "{label}: batches");
+    assert_eq!(a.reloads(), b.reloads(), "{label}: reloads");
+    assert_eq!(a.prewarms(), b.prewarms(), "{label}: prewarms");
+    assert_eq!(a.goodput(), b.goodput(), "{label}: goodput");
+    assert_eq!(a.span_s.to_bits(), b.span_s.to_bits(), "{label}: span");
+    assert_eq!(a.completions.len(), b.completions.len(), "{label}: completions");
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.id, y.id, "{label}: completion order");
+        assert_eq!(x.worker, y.worker, "{label}: worker of request {}", x.id);
+        assert_eq!(
+            x.completion_s.to_bits(),
+            y.completion_s.to_bits(),
+            "{label}: completion time of request {}",
+            x.id
+        );
+    }
+    assert_eq!(a.replica_holders, b.replica_holders, "{label}: residency");
+    for (x, y) in a.per_worker.iter().zip(&b.per_worker) {
+        assert_eq!(x.busy_s.to_bits(), y.busy_s.to_bits(), "{label}: worker {} busy", x.id);
+        assert_eq!(
+            x.idle_at_s.to_bits(),
+            y.idle_at_s.to_bits(),
+            "{label}: worker {} idle-at",
+            x.id
+        );
+    }
+}
+
+#[test]
+fn an_inert_fault_plan_is_bitwise_invisible_under_every_placement_and_replication() {
+    // `straggle:w0:1x` is non-empty, so every flush and pre-warm routes
+    // through the fault-aware cost recompute (`switch / 1.0`,
+    // `makespan * 1.0`) and every completion through `classify` — yet all
+    // of it must be bitwise-invisible against `FaultPlan::default()`,
+    // which short-circuits those paths entirely. This pins that the
+    // chaos layer preserves pre-chaos behavior structurally: fault-free
+    // runs push no Crash/Recover events and change no arithmetic.
+    let nets = skewed_nets();
+    let trace = skewed_trace(180);
+    let policies = [
+        ReplicationPolicy::None,
+        ReplicationPolicy::Static { targets: vec![("mobilenetv1".to_string(), 2)] },
+        ReplicationPolicy::Adaptive(AdaptiveConfig::default()),
+    ];
+    let inert = FaultPlan::parse("straggle:w0:1x").unwrap();
+    assert!(!inert.is_off(), "the plan must be structurally on");
+    for placement in Placement::ALL {
+        for policy in &policies {
+            let cfg = |faults: FaultPlan| SimServeConfig {
+                placement,
+                replication: policy.clone(),
+                faults,
+                ..base_cfg()
+            };
+            let clean = replay(&engine(), &nets, &trace, cfg(FaultPlan::default())).unwrap();
+            let faulted = replay(&engine(), &nets, &trace, cfg(inert.clone())).unwrap();
+            let label = format!("{} / {}", placement.label(), policy.label());
+            assert_bitwise_equal(&clean, &faulted, &label);
+            assert_eq!(faulted.missed_bug(), 0, "{label}: missed_bug");
+            assert_eq!(faulted.lost_to_crash(), 0, "{label}: lost");
+            assert_eq!(faulted.chaos.crashes, 0, "{label}: crashes");
+        }
+    }
+}
+
+#[test]
+fn crashing_the_hot_worker_mid_trace_keeps_the_weakened_contract_and_repairs_residency() {
+    // The acceptance scenario: the pinned 3-worker skewed trace with the
+    // hot-network worker crashed mid-trace under adaptive replication.
+    // Worker 0 is the hot lane under affinity (mobilenetv1 lands there
+    // first and, as sole holder, keeps every hot request); the hot
+    // arrival at t = 3.0 s opens a batch there with flush deadline
+    // 3.001 s, and the crash at 3.0005 s lands inside that window —
+    // destroying the open batch and the resident weights for 1 s.
+    let eng = engine();
+    let nets = skewed_nets();
+    let trace = skewed_trace(240);
+    let cfg = SimServeConfig {
+        replication: ReplicationPolicy::Adaptive(AdaptiveConfig::default()),
+        faults: FaultPlan::parse("crash:w0@3.0005s+1.0s").unwrap(),
+        ..base_cfg()
+    };
+    let r = replay(&eng, &nets, &trace, cfg.clone()).unwrap();
+
+    // The fault actually fired, on the right worker.
+    assert_eq!(r.chaos.crashes, 1);
+    assert_eq!(r.chaos.recoveries, 1);
+    assert_eq!(r.chaos.downtime_s, 1.0);
+    assert_eq!(r.per_worker[0].crashes, 1);
+    assert_eq!(r.per_worker[0].down_s, 1.0);
+    assert_eq!(r.per_worker[1].crashes + r.per_worker[2].crashes, 0);
+
+    // The weakened SLO contract: every accepted request either completed
+    // or was destroyed by the crash, and no miss lacks a fault to blame.
+    assert_eq!(r.accepted(), 240, "quotes stay finite through the outage; the generous SLO accepts all");
+    assert_eq!(r.missed_bug(), 0, "a miss with no fault to blame is a scheduler bug");
+    assert!(r.lost_to_crash() > 0, "the batch opened at t = 3.0 s must be destroyed");
+    assert_eq!(
+        r.completed() + r.lost_to_crash(),
+        r.accepted(),
+        "crash losses and completions partition the accepted set"
+    );
+
+    // The crash evicted live residency, and the adaptive controller (or a
+    // demand reload on a surviving worker) repaired it well inside the
+    // controller window: the next hot arrival lands at most 25 ms after
+    // the crash and re-streams the weights elsewhere.
+    assert!(r.chaos.repaired() >= 1, "worker 0 held weights at t = 3.0 s");
+    let window = AdaptiveConfig::default().window_s;
+    assert!(
+        r.chaos.max_repair_s() <= window,
+        "slowest residency repair {:.3} s exceeds the {:.2} s controller window",
+        r.chaos.max_repair_s(),
+        window
+    );
+
+    // Bitwise determinism: the faulted replay reproduces exactly.
+    let again = replay(&eng, &nets, &trace, cfg).unwrap();
+    assert_bitwise_equal(&r, &again, "second faulted run");
+    assert_eq!(r.chaos.crashes, again.chaos.crashes);
+    assert_eq!(r.lost_to_crash(), again.lost_to_crash());
+    assert_eq!(r.missed_by_fault(), again.missed_by_fault());
+    for (x, y) in r.chaos.repairs_s.iter().zip(&again.chaos.repairs_s) {
+        assert_eq!(x.to_bits(), y.to_bits(), "repair times");
+    }
+}
+
+#[test]
+fn brownouts_and_stragglers_attribute_every_miss_to_a_fault() {
+    // A trace-wide DRAM brownout (reloads stream at a billionth of the
+    // channel bandwidth) plus extreme stragglers on every worker, under
+    // an SLO the fault-free replay meets with room to spare. Quote
+    // *formulas* stay fault-oblivious, so the first request — priced on
+    // an idle, identical fleet — is accepted exactly as in the clean
+    // run, then blows through its quoted window by nine orders of
+    // magnitude. Later quotes see the fault-inflated `busy_until` chain
+    // and reject honestly. Every miss must land in `missed_by_fault`,
+    // never `missed_bug`.
+    let eng = engine();
+    let nets = skewed_nets();
+    let trace = skewed_trace(240);
+    let slo = SimServeConfig { slo_s: 30.0, ..base_cfg() };
+    let clean = replay(&eng, &nets, &trace, slo.clone()).unwrap();
+    assert_eq!(clean.accepted(), 240, "a 30 s SLO dwarfs every fault-free latency");
+    assert_eq!(clean.goodput(), clean.completed(), "fault-free misses are impossible");
+    let faults = FaultPlan::parse(
+        "dramslow:1e-9x@0s..1e9s,straggle:w0:1e9x,straggle:w1:1e9x,straggle:w2:1e9x",
+    )
+    .unwrap();
+    let r = replay(&eng, &nets, &trace, SimServeConfig { faults, ..slo }).unwrap();
+    assert!(r.accepted() > 0, "the idle-fleet quote for request 0 is fault-oblivious");
+    assert!(r.rejected() > 0, "later quotes see the inflated backlog and reject");
+    assert_eq!(r.completed(), r.accepted(), "no crashes: everything accepted completes");
+    assert_eq!(r.lost_to_crash(), 0);
+    assert!(r.missed_by_fault() > 0, "1e9x-inflated execution must miss the 30 s SLO");
+    assert_eq!(r.missed_bug(), 0, "every miss has a fault to blame");
+    assert_eq!(
+        r.goodput() + r.missed_by_fault(),
+        r.completed(),
+        "met and fault-missed partition the completions"
+    );
+}
+
+#[test]
+fn finish_with_a_pending_prewarm_matches_advancing_past_every_event_first() {
+    // Satellite pin for routing `finish()` through the event kernel: a
+    // single offer at t = 0 leaves *both* its flush deadline and the
+    // static controller's provisioning pre-warm scheduled strictly in
+    // the future, so `finish()` must drain them through the same heap
+    // discipline `advance` uses. Closing out immediately and closing out
+    // after advancing past every scheduled event must be bitwise
+    // identical — including the pre-warmed residency in the report.
+    let eng = engine();
+    let nets = skewed_nets();
+    let trace = vec![SimRequest { id: 0, net: 0, arrival_s: 0.0 }];
+    let cfg = SimServeConfig {
+        replication: ReplicationPolicy::Static {
+            targets: vec![("mobilenetv1".to_string(), 2)],
+        },
+        ..base_cfg()
+    };
+
+    let mut direct = SimServer::new(&eng, &nets, cfg.clone()).unwrap();
+    for req in &trace {
+        direct.offer(*req).unwrap();
+    }
+    assert!(
+        direct.prewarms_pending() > 0,
+        "the provisioning pre-warm must still be in flight at finish time"
+    );
+    let direct = direct.finish().unwrap();
+
+    let mut advanced = SimServer::new(&eng, &nets, cfg).unwrap();
+    for req in &trace {
+        advanced.offer(*req).unwrap();
+    }
+    advanced.advance(1e6).unwrap();
+    assert_eq!(advanced.prewarms_pending(), 0, "advance applied the pre-warm");
+    let advanced = advanced.finish().unwrap();
+
+    assert_bitwise_equal(&direct, &advanced, "finish vs advance-then-finish");
+    assert!(direct.prewarms() >= 2, "both hot replicas were provisioned");
+    assert_eq!(
+        direct.replica_holders[0].len(),
+        2,
+        "the pre-warmed replica must appear in the immediate-finish report: {:?}",
+        direct.replica_holders
+    );
+    assert_eq!(direct.completed(), 1);
+}
+
+#[test]
+fn longer_skewed_replays_stay_deterministic_under_a_multi_fault_plan() {
+    // Belt-and-braces over the full fault grammar: two crashes on
+    // different workers, a brownout window, and a straggler, replayed
+    // twice on the pinned workload. Exercises crash-while-idle,
+    // crash-at-exact-arrival-instants, and repairs under degraded DRAM.
+    let eng = engine();
+    let nets = skewed_nets();
+    let trace = skewed_trace(240);
+    let cfg = SimServeConfig {
+        replication: ReplicationPolicy::Adaptive(AdaptiveConfig::default()),
+        faults: FaultPlan::parse(
+            "crash:w0@1.5s+0.5s,crash:w2@3.0s+0.25s,dramslow:0.5x@2s..4s,straggle:w1:2x",
+        )
+        .unwrap(),
+        ..base_cfg()
+    };
+    let a = replay(&eng, &nets, &trace, cfg.clone()).unwrap();
+    let b = replay(&eng, &nets, &trace, cfg).unwrap();
+    assert_bitwise_equal(&a, &b, "multi-fault replay");
+    assert_eq!(a.chaos.crashes, 2);
+    assert_eq!(a.chaos.recoveries, 2);
+    assert_eq!(a.chaos.downtime_s, 0.75);
+    assert_eq!(a.missed_bug(), 0, "every miss fault-attributed under the full grammar");
+    assert_eq!(a.completed() + a.lost_to_crash(), a.accepted());
+}

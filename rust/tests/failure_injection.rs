@@ -185,3 +185,53 @@ fn batch_zero_is_rejected_by_simulator() {
         .try_run(&pimflow::nn::resnet::tiny(100), 0);
     assert!(err.is_err());
 }
+
+// ---------- hostile fault-plan specs (chaos layer) ----------
+
+#[test]
+fn hostile_fault_specs_error_not_panic() {
+    use pimflow::coordinator::FaultPlan;
+    for bad in [
+        "crash",                         // bare kind
+        "crash:w0",                      // no schedule
+        "crash:x0@1s+1s",                // bad worker tag
+        "crash:w0@1s",                   // missing downtime
+        "crash:w0@1s+1s+1s",             // extra field
+        "crash:w0@-1s+1s",               // negative onset
+        "crash:w0@1s+0s",                // zero downtime
+        "crash:w0@nans+1s",              // non-finite onset
+        "dramslow:0.5@1s..2s",           // factor without x
+        "dramslow:0x@1s..2s",            // zero factor
+        "dramslow:1.5x@1s..2s",          // speed-up, not a brownout
+        "dramslow:0.5x@2s..2s",          // empty window
+        "dramslow:0.5x@2s..1s",          // inverted window
+        "dramslow:0.5x@1s",              // no window at all
+        "straggle:w0",                   // no factor
+        "straggle:w0:0.5x",              // faster-than-1 straggler
+        "straggle:w0:2x,straggle:w0:3x", // duplicate worker
+        "crash:w0@1s+1s,,straggle:w0:2x", // empty term
+        "wobble:w0:2x",                  // unknown fault kind
+    ] {
+        assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn fault_plans_naming_absent_workers_are_rejected_at_build() {
+    use pimflow::coordinator::{FaultPlan, SimServeConfig};
+    use pimflow::explore::trace::replay;
+    use pimflow::nn::zoo;
+    use pimflow::sim::Engine;
+
+    let eng = Engine::compact(presets::lpddr5());
+    let nets = [zoo::by_name("mobilenetv1", 100).unwrap()];
+    for spec in ["crash:w2@1s+1s", "straggle:w7:2x"] {
+        let cfg = SimServeConfig {
+            workers: 2,
+            faults: FaultPlan::parse(spec).unwrap(), // parses fine in isolation
+            ..SimServeConfig::default()
+        };
+        let err = replay(&eng, &nets, &[], cfg).unwrap_err().to_string();
+        assert!(err.contains("worker"), "spec `{spec}` gave: {err}");
+    }
+}

@@ -3,12 +3,15 @@
 //! admission controller and worker fleet, checking the invariants the
 //! design promises —
 //!
-//! * admission never violates the SLO bound it quotes: every accepted
-//!   request completes within the SLO, exactly, for any fleet size,
-//!   placement policy, and replication policy (the quote is an upper
-//!   bound on the realized completion by construction, per worker —
-//!   pre-warms only ever touch workers with no open batch, so no issued
-//!   quote is invalidated);
+//! * fault-free admission never violates the SLO bound it quotes: every
+//!   accepted request completes within the SLO, exactly, for any fleet
+//!   size, placement policy, and replication policy (the quote is an
+//!   upper bound on the realized completion by construction, per worker
+//!   — pre-warms only ever touch workers with no open batch, so no
+//!   issued quote is invalidated). Under an active `FaultPlan` this
+//!   weakens to the chaos contract — misses happen but every one is
+//!   fault-attributed (`missed_bug == 0`, pinned in `tests/chaos_sim.rs`);
+//!   the property net here runs fault-free, where the strict bound holds;
 //! * conservation: per-network completed ≤ offered, accepted + rejected
 //!   == offered, batches == accepted − coalesced, reloads ≤ batches, and
 //!   the per-worker rows sum to the fleet totals;
@@ -120,6 +123,9 @@ fn run_case(engine: &Engine, nets: &[Network], c: &Case) -> pimflow::coordinator
 
 #[test]
 fn admission_never_violates_the_slo_it_quotes() {
+    // The strict (fault-free) contract: no faults are injected anywhere
+    // in this property net, so every accepted request must meet its
+    // quote exactly. The fault-weakened version lives in chaos_sim.rs.
     let engine = Engine::compact(presets::lpddr5());
     let nets = pool();
     check(
