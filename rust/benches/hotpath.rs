@@ -143,10 +143,16 @@ fn main() {
         stream_median,
         stream_n as f64 / stream_median
     );
-    assert!(
-        stream_median < 10.0,
-        "streaming replay blew the wall-clock budget: {stream_median:.3} s for {stream_n} requests"
-    );
+    // Wall-clock guard for full local runs only: quick mode is CI's
+    // bench-smoke lane, where shared-runner contention makes wall-clock
+    // a coin flip — perf regressions there are tracked by the committed
+    // BENCH_hotpath.json diff instead of a hard assert.
+    if !quick {
+        assert!(
+            stream_median < 10.0,
+            "streaming replay blew the wall-clock budget: {stream_median:.3} s for {stream_n} requests"
+        );
+    }
 
     b.report();
 

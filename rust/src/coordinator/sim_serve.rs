@@ -846,9 +846,23 @@ impl<'e> SimServer<'e> {
     /// front-first, assuming time-ordered insertion); per-instant
     /// worker-id order is the discipline every downstream pin was built
     /// on, and the kernel preserves it bitwise.
+    ///
+    /// **Crash horizon:** a due `Crash` caps each pop pass. The heap pops
+    /// in ascending `(t, rank)` order and `Crash` outranks `FlushDeadline`
+    /// at equal times, so every deadline collected before the crash popped
+    /// is strictly earlier in event order — those batches were due to
+    /// flush *before* the worker died and must flush (the crash may not
+    /// steal them out from under the already-collected flush, which would
+    /// both panic the dispatcher and misattribute flushed members as
+    /// `lost_to_crash`). The pass applies its collected flushes, then the
+    /// crash, then loops; deadlines at or after the crash instant are
+    /// popped in a later pass and dropped by the liveness check, because
+    /// the crash already took the batch — a crash at exactly a deadline
+    /// still kills the batch, per the kernel's rank table.
     fn dispatch_due(&mut self, now_s: f64) -> Result<()> {
         loop {
             let mut due_flushes: Vec<(usize, f64)> = Vec::new();
+            let mut due_crash: Option<Event> = None;
             while let Some(ev) = self.events.pop_due(now_s) {
                 match ev.kind {
                     EventKind::FlushDeadline => {
@@ -889,7 +903,10 @@ impl<'e> SimServer<'e> {
                     // last arrival are not replayed.
                     EventKind::Crash => {
                         if !self.finishing {
-                            self.apply_crash(ev.t_s, ev.epoch as usize);
+                            // Stop popping: flushes collected so far are
+                            // due before this crash and must land first.
+                            due_crash = Some(ev);
+                            break;
                         }
                     }
                     EventKind::Recover => {
@@ -901,16 +918,25 @@ impl<'e> SimServer<'e> {
                     EventKind::Arrival => {}
                 }
             }
-            if due_flushes.is_empty() {
+            if due_flushes.is_empty() && due_crash.is_none() {
                 return Ok(());
             }
             due_flushes.sort_unstable_by_key(|&(w, _)| w);
             for (w, deadline_s) in due_flushes {
+                // Sound within one pass: flushes are collected live, and
+                // nothing popped since can close the batch — completions
+                // only settle bookkeeping, controller pre-warms/drains
+                // never touch a worker with an open batch, and a crash
+                // ends the pass before applying.
                 let b = self.workers[w].open.take().expect("due batch exists");
                 self.flush(w, b, deadline_s)?;
             }
+            if let Some(ev) = due_crash {
+                self.apply_crash(ev.t_s, ev.epoch as usize);
+            }
             // Flushing overdue batches can schedule completions that are
-            // already due; loop once more to settle them.
+            // already due, and a crash truncates the pop pass; loop once
+            // more to settle whatever remains due.
         }
     }
 

@@ -65,7 +65,17 @@ impl LatencyHist {
             return 0;
         }
         let pos = (v_s / FLOOR_S).log10() * BUCKETS_PER_DECADE as f64;
-        (pos.floor() as usize + 1).min(NUM_BUCKETS - 1)
+        let i = (pos.floor() as usize + 1).min(NUM_BUCKETS - 1);
+        // A sample exactly on a bucket's upper edge computes an integer
+        // `pos`, which floor+1 would push into the next bucket; compare
+        // against the same `upper_edge` the quantile walk uses so the
+        // documented `(edge(i-1), edge(i)]` range holds exactly (one step
+        // suffices — fp noise cannot overshoot by a whole bucket).
+        if v_s <= Self::upper_edge(i - 1) {
+            i - 1
+        } else {
+            i
+        }
     }
 
     /// Upper edge of bucket `i` in seconds.
@@ -285,6 +295,25 @@ mod tests {
         }
         assert_eq!(h.fraction_below(1.0), 1.0);
         assert_eq!(h.fraction_below(0.0), 0.0);
+    }
+
+    #[test]
+    fn exact_bucket_edges_stay_in_their_documented_bucket() {
+        // Buckets are `(edge(i-1), edge(i)]`: a sample exactly on an upper
+        // edge belongs to that bucket, not the next one. Observable via
+        // `fraction_below`, which counts whole buckets whose edge fits —
+        // if the edge sample leaked upward it would not count as below.
+        let mut h = LatencyHist::new();
+        h.record(1e-3); // interior edge: 10^(48/16) µs exactly
+        h.record(1.0); // keeps max_s above the probed limits
+        assert_eq!(h.fraction_below(1e-3), 0.5);
+
+        // The top covered edge (1e3 s) stays in the last finite bucket
+        // rather than leaking into overflow.
+        let mut top = LatencyHist::new();
+        top.record(1e3);
+        top.record(5e3); // genuine overflow
+        assert_eq!(top.fraction_below(1e3), 0.5);
     }
 
     #[test]

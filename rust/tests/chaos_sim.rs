@@ -283,6 +283,36 @@ fn finish_with_a_pending_prewarm_matches_advancing_past_every_event_first() {
 }
 
 #[test]
+fn a_due_flush_deadline_before_a_due_crash_flushes_before_the_crash_lands() {
+    // A sparse trace leaves worker 0's open batch to linger: the arrival
+    // at t = 0 opens it with flush deadline 0.001 s, nothing else lands,
+    // and the same worker crashes at t = 0.5 s. Both events come due in
+    // the dispatch window of the next arrival at t = 1 s. Event-time
+    // order puts the deadline first, so the batch must flush (and its
+    // member complete) before the crash takes the worker — the crash
+    // finds no open batch and destroys residency only. A crash applied
+    // in pop-collection order instead used to steal the open batch out
+    // from under the already-collected flush and panic the dispatcher.
+    let eng = engine();
+    let nets = skewed_nets();
+    let trace = vec![
+        SimRequest { id: 0, net: 0, arrival_s: 0.0 },
+        SimRequest { id: 1, net: 0, arrival_s: 1.0 },
+    ];
+    let cfg = SimServeConfig {
+        faults: FaultPlan::parse("crash:w0@0.5s+1s").unwrap(),
+        ..base_cfg()
+    };
+    let r = replay(&eng, &nets, &trace, cfg.clone()).unwrap();
+    assert_eq!(r.chaos.crashes, 1, "the crash still fires");
+    assert_eq!(r.lost_to_crash(), 0, "the batch flushed at its deadline, before the crash");
+    assert_eq!(r.completed(), r.accepted(), "both requests complete");
+    assert_eq!(r.missed_bug(), 0);
+    let again = replay(&eng, &nets, &trace, cfg).unwrap();
+    assert_bitwise_equal(&r, &again, "deadline-then-crash replay");
+}
+
+#[test]
 fn longer_skewed_replays_stay_deterministic_under_a_multi_fault_plan() {
     // Belt-and-braces over the full fault grammar: two crashes on
     // different workers, a brownout window, and a straggler, replayed
