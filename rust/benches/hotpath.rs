@@ -14,7 +14,10 @@ use pimflow::coordinator::{
 use pimflow::ddm;
 use pimflow::explore::{fig6_sweep, mixed_trace, replay, replay_stream, stream_trace, BATCHES};
 use pimflow::nn::{resnet, zoo};
-use pimflow::partition::{partition, search_partition_with};
+use pimflow::partition::{
+    exact_plan, partition, search_partition, search_partition_with, ExactLimits,
+};
+use pimflow::testing::oracle::{certify, downscale, small_chip};
 use pimflow::pim::ChipModel;
 use pimflow::pipeline::simulate;
 use pimflow::sim::{Design, Engine, System};
@@ -47,6 +50,30 @@ fn main() {
     });
     b.case("search_vgg19_memo", || {
         search_partition_with(&plan_vgg, &chip, true).unwrap()
+    });
+    // Planning-cost comparison for the incremental span evaluator: the
+    // default path replays duplication ladders instead of running a fresh
+    // Algorithm 1 per candidate span (tests/search_incremental.rs pins
+    // the bitwise-identical outcome and the zero fresh-eval count).
+    b.case("search_r34_incremental", || {
+        search_partition(&plan34, &chip).unwrap()
+    });
+    b.case("search_vgg19_incremental", || {
+        search_partition(&plan_vgg, &chip).unwrap()
+    });
+    // The certification oracle on a representative admitted instance:
+    // with the feasibility cut closing spans at the root whenever the
+    // Algorithm-1 incumbent is optimal, this prices the whole
+    // differential harness (B&B over every span + both heuristics), not
+    // an exponential tail.
+    let cert_chip = small_chip(48).unwrap();
+    let cert_net = downscale(&r34, 6);
+    let cert_plan = partition(&cert_net, &cert_chip).unwrap();
+    b.case("exact_plan_r34_6l_48t", || {
+        exact_plan(&cert_plan, &cert_chip, &ExactLimits::default()).unwrap()
+    });
+    b.case("certify_r34_6l_48t", || {
+        certify(&cert_net, &cert_chip, &ExactLimits::default()).unwrap()
     });
     b.case("pipeline_sim_r34_b64", || {
         simulate(&r34, &plan34, &dd34, &chip, &dram, 64, PipelineCase::Auto).unwrap()

@@ -86,11 +86,55 @@ pub fn ddm_part(part: &Part, chip: &ChipModel) -> PartDups {
     dups
 }
 
+/// Work counters for one [`run_with_stats`] pass over a plan.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DdmRunStats {
+    /// Parts that went through the full Algorithm-1 loop.
+    pub evaluated: u64,
+    /// Singleton parts answered by the closed-form early-out.
+    pub singleton_skips: u64,
+}
+
+/// A singleton part whose unit provably keeps `dup = 1`, so the greedy
+/// loop would return `[1]` without granting anything: the unit is FC
+/// (lines 8-9), already at `MAX[l] = 1` (lines 10-11), or there is no
+/// room for a second copy (`E < N_tile`, the line-4 guard — for a
+/// singleton `min_tile` *is* the unit's footprint).
+fn singleton_pinned(part: &Part, chip: &ChipModel) -> bool {
+    let [u] = part.units.as_slice() else {
+        return false;
+    };
+    u.tiles >= 1
+        && (u.is_fc
+            || max_dup(chip, u) <= 1
+            || extra_tiles(part, chip, &[1]) < next_copy_cost(u))
+}
+
+/// [`run`] with work counters: singleton parts already at their
+/// duplication bound skip the loop entirely. The result is bitwise
+/// identical to evaluating every part (pinned by the inline tests and
+/// `tests/exact_oracle.rs`).
+pub fn run_with_stats(plan: &PartitionPlan, chip: &ChipModel) -> (DdmResult, DdmRunStats) {
+    let mut stats = DdmRunStats::default();
+    let dup_per_part = plan
+        .parts
+        .iter()
+        .map(|p| {
+            if singleton_pinned(p, chip) {
+                stats.singleton_skips += 1;
+                vec![1]
+            } else {
+                stats.evaluated += 1;
+                ddm_part(p, chip)
+            }
+        })
+        .collect();
+    (DdmResult { dup_per_part }, stats)
+}
+
 /// Run Algorithm 1 over every part of the plan.
 pub fn run(plan: &PartitionPlan, chip: &ChipModel) -> DdmResult {
-    DdmResult {
-        dup_per_part: plan.parts.iter().map(|p| ddm_part(p, chip)).collect(),
-    }
+    run_with_stats(plan, chip).0
 }
 
 #[cfg(test)]
@@ -187,5 +231,61 @@ mod tests {
         let a = run(&plan, &chip);
         let b = run(&plan, &chip);
         assert_eq!(a.dup_per_part, b.dup_per_part);
+    }
+
+    /// Reference `run` without the singleton early-out (the pre-fix
+    /// behaviour): every part goes through the full greedy loop.
+    fn run_all_parts(plan: &crate::partition::PartitionPlan, chip: &ChipModel) -> DdmResult {
+        DdmResult {
+            dup_per_part: plan.parts.iter().map(|p| ddm_part(p, chip)).collect(),
+        }
+    }
+
+    #[test]
+    fn singleton_early_out_is_bitwise_identical() {
+        for net in ["resnet18", "resnet34", "resnet50", "resnet101", "resnet152"] {
+            let (chip, plan) = setup(net);
+            let (fast, stats) = run_with_stats(&plan, &chip);
+            let reference = run_all_parts(&plan, &chip);
+            assert_eq!(fast.dup_per_part, reference.dup_per_part, "{net}");
+            assert_eq!(
+                stats.evaluated + stats.singleton_skips,
+                plan.num_parts() as u64,
+                "{net}: every part accounted for"
+            );
+        }
+    }
+
+    #[test]
+    fn singleton_early_out_counts_skips() {
+        // Force pinned singletons: one FC-only part and one part whose
+        // unit fills the whole chip (no room for a second copy).
+        let (chip, plan) = setup("resnet34");
+        let fc_unit = plan
+            .parts
+            .iter()
+            .flat_map(|p| &p.units)
+            .find(|u| u.is_fc)
+            .expect("resnet34 has an FC head")
+            .clone();
+        let mut big_unit = plan.parts[0].units[0].clone();
+        big_unit.tiles = chip.num_tiles(); // fills the chip exactly
+        let open_unit = plan.parts[0].units[0].clone(); // has idle room
+        assert!(open_unit.tiles * 2 <= chip.num_tiles());
+        let synthetic = crate::partition::PartitionPlan {
+            parts: vec![
+                Part { units: vec![fc_unit] },
+                Part { units: vec![big_unit] },
+                Part { units: vec![open_unit] },
+            ],
+            network: "synthetic".into(),
+        };
+        let (res, stats) = run_with_stats(&synthetic, &chip);
+        assert_eq!(stats.singleton_skips, 2, "FC + chip-filling singletons");
+        assert_eq!(stats.evaluated, 1, "the open singleton still runs");
+        assert_eq!(res.dup_per_part, run_all_parts(&synthetic, &chip).dup_per_part);
+        assert_eq!(res.dup_per_part[0], vec![1]);
+        assert_eq!(res.dup_per_part[1], vec![1]);
+        assert!(res.dup_per_part[2][0] > 1, "open singleton must duplicate");
     }
 }

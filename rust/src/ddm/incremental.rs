@@ -1,0 +1,280 @@
+//! Incremental (ladder-heap) evaluation of Algorithm 1 for the boundary
+//! search.
+//!
+//! The Fig-2 search evaluates O(U²) candidate spans, and each fresh
+//! [`super::algorithm::ddm_part`] run costs O(span) per granted copy just
+//! to rescan the ITP argmax. This module restructures the greedy loop
+//! around each unit's *duplication ladder* — the fixed schedule of
+//! sequential-MVM counts `mvms(d) = ⌈O²/d⌉` it steps down as copies are
+//! granted — which depends only on the unit, never on the span. The
+//! ladders (plus tile prefix sums) are derived once per search in
+//! [`UnitLadders::new`] and reused by every span evaluation: evaluating
+//! `[i-1..j)` after `[i..j)` reuses all of `[i..j)`'s per-unit state and
+//! only adds unit `i-1`'s rung, so the amortized setup cost across the DP
+//! is O(U) instead of O(U·span) fresh DDM evaluations.
+//!
+//! A span walk replays Algorithm 1 *exactly*: a max-heap holds one
+//! [`Rung`] per live unit (its current predicted latency as an integer
+//! MVM count), `pop` is the ITP bottleneck selection, a grant pushes the
+//! unit's next rung, and a skip (FC / unaffordable / at `MAX[l]`) retires
+//! the unit — mirroring Algorithm 1's `Flag` set. Equivalence is exact,
+//! not approximate:
+//!
+//! - `predict_ns = mvms × t_mvm` with `t_mvm > 0` constant, and the MVM
+//!   counts are small integers exactly representable in `f64`, so the
+//!   integer `mvms` order *is* the ITP latency order (no rounding
+//!   collapses);
+//! - [`super::itp::bottleneck`] keeps the earliest index on ties
+//!   (`bt >= t` never replaces), and the heap breaks equal `mvms` toward
+//!   the smaller unit index; a unit reaching level `m` is always selected
+//!   before a later unit already sitting at `m`, because its strictly
+//!   higher rungs popped first;
+//! - the `E < min_tile` check runs before every selection, exactly where
+//!   Algorithm 1 re-checks it at the loop head.
+//!
+//! `tests/search_incremental.rs` pins bitwise-identical search outcomes
+//! on the full zoo, and the inline tests below pin `walk == ddm_part` on
+//! every greedy part and on random spans.
+
+use std::collections::BinaryHeap;
+
+use crate::partition::MapUnit;
+use crate::pim::ChipModel;
+
+use super::algorithm::PartDups;
+
+/// One rung of a unit's duplication ladder: the unit currently holds
+/// `dup` copies and answers one IFM in `mvms` sequential MVM rounds.
+/// Heap order is ITP order: higher `mvms` first, ties toward the earlier
+/// unit (matching [`super::itp::bottleneck`]'s stable argmax).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Rung {
+    mvms: u64,
+    /// Index within the walked span (span order == global unit order).
+    unit: u32,
+    dup: u32,
+}
+
+impl Ord for Rung {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.mvms
+            .cmp(&other.mvms)
+            .then_with(|| other.unit.cmp(&self.unit))
+            .then_with(|| other.dup.cmp(&self.dup))
+    }
+}
+
+impl PartialOrd for Rung {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-unit ladder state, derived from the layer once per search.
+#[derive(Debug, Clone, Copy)]
+struct LadderUnit {
+    out_pixels: u64,
+    tiles: u32,
+    max_dup: u32,
+    is_fc: bool,
+}
+
+/// All per-unit ladders plus tile prefix sums over one flattened unit
+/// list — the state every span evaluation of one search shares.
+#[derive(Debug, Clone)]
+pub struct UnitLadders {
+    units: Vec<LadderUnit>,
+    num_tiles: u32,
+    /// `prefix_tiles[i]` = Σ tiles of units `[0..i)` (u64: immune to
+    /// overflow on synthetic unlimited chips).
+    prefix_tiles: Vec<u64>,
+}
+
+impl UnitLadders {
+    pub fn new(chip: &ChipModel, units: &[MapUnit]) -> Self {
+        let mut prefix_tiles = Vec::with_capacity(units.len() + 1);
+        prefix_tiles.push(0u64);
+        for u in units {
+            prefix_tiles.push(prefix_tiles.last().unwrap() + u.tiles as u64);
+        }
+        UnitLadders {
+            units: units
+                .iter()
+                .map(|u| LadderUnit {
+                    out_pixels: u.layer.out_pixels(),
+                    tiles: u.tiles,
+                    max_dup: crate::mapping::duplication::max_dup(chip, u),
+                    is_fc: u.is_fc,
+                })
+                .collect(),
+            num_tiles: chip.num_tiles(),
+            prefix_tiles,
+        }
+    }
+
+    /// Tiles of span `[i, j)` at `dup = 1`, O(1) via the prefix sums.
+    pub fn span_tiles(&self, i: usize, j: usize) -> u64 {
+        self.prefix_tiles[j] - self.prefix_tiles[i]
+    }
+
+    /// Replay Algorithm 1 on span `[i, j)`; the caller must have checked
+    /// the span fits the chip. Returns the duplication vector (bitwise
+    /// identical to `ddm_part` on the same span) and the number of
+    /// bottleneck selections processed.
+    pub fn walk(&self, i: usize, j: usize) -> (PartDups, u64) {
+        let span = &self.units[i..j];
+        let n = span.len();
+        let mut dups: PartDups = vec![1; n];
+        if n == 0 {
+            return (dups, 0);
+        }
+        // Algorithm 1 line 3: minimum tile footprint in the part.
+        let min_tile = span.iter().map(|u| u.tiles).min().unwrap_or(1).max(1);
+        let base = self.span_tiles(i, j);
+        let mut e = (self.num_tiles as u64).saturating_sub(base) as u32;
+
+        let mut heap: BinaryHeap<Rung> = BinaryHeap::with_capacity(n);
+        for (li, u) in span.iter().enumerate() {
+            heap.push(Rung {
+                mvms: u.out_pixels,
+                unit: li as u32,
+                dup: 1,
+            });
+        }
+
+        let mut steps = 0u64;
+        while let Some(r) = heap.pop() {
+            // line 4: the loop head re-checks E before each selection.
+            if e < min_tile {
+                break;
+            }
+            steps += 1;
+            let li = r.unit as usize;
+            let u = &span[li];
+            debug_assert_eq!(dups[li], r.dup, "ladder walk out of sync");
+            if e < u.tiles {
+                // lines 13-14: bottleneck unaffordable — retire it.
+            } else if u.is_fc {
+                // lines 8-9: FC layers are never duplicated.
+            } else if r.dup + 1 > u.max_dup {
+                // lines 10-11: cap at MAX[l].
+            } else {
+                // line 7: grant the copy and re-enter at the next rung.
+                let d = r.dup + 1;
+                dups[li] = d;
+                e -= u.tiles;
+                heap.push(Rung {
+                    mvms: u.out_pixels.div_ceil(d as u64),
+                    unit: r.unit,
+                    dup: d,
+                });
+            }
+        }
+        (dups, steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::ddm::algorithm::ddm_part;
+    use crate::partition::{partition, Part};
+    use crate::pim::ChipModel;
+
+    fn flat_units(plan: &crate::partition::PartitionPlan) -> Vec<MapUnit> {
+        plan.parts
+            .iter()
+            .flat_map(|p| p.units.iter().cloned())
+            .collect()
+    }
+
+    #[test]
+    fn walk_matches_ddm_part_on_greedy_parts() {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        for net in ["tiny", "resnet18", "resnet34", "vgg16", "mobilenetv1"] {
+            let plan =
+                partition(&crate::nn::zoo::by_name(net, 100).unwrap(), &chip).unwrap();
+            let units = flat_units(&plan);
+            let ladders = UnitLadders::new(&chip, &units);
+            let mut off = 0;
+            for part in &plan.parts {
+                let end = off + part.units.len();
+                let (dups, _) = ladders.walk(off, end);
+                assert_eq!(dups, ddm_part(part, &chip), "{net} part [{off},{end})");
+                off = end;
+            }
+        }
+    }
+
+    #[test]
+    fn walk_matches_ddm_part_on_every_feasible_span() {
+        // Exhaustive over all spans of a mid-size net: the DP evaluates
+        // exactly these, so bitwise search identity follows from this.
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let plan =
+            partition(&crate::nn::zoo::by_name("resnet18", 100).unwrap(), &chip).unwrap();
+        let units = flat_units(&plan);
+        let ladders = UnitLadders::new(&chip, &units);
+        let budget = chip.num_tiles() as u64;
+        let mut checked = 0u32;
+        for i in 0..units.len() {
+            for j in (i + 1)..=units.len() {
+                if ladders.span_tiles(i, j) > budget {
+                    break;
+                }
+                let part = Part {
+                    units: units[i..j].to_vec(),
+                };
+                let (dups, _) = ladders.walk(i, j);
+                assert_eq!(dups, ddm_part(&part, &chip), "span [{i},{j})");
+                checked += 1;
+            }
+        }
+        assert!(checked > 100, "degenerate span coverage: {checked}");
+    }
+
+    #[test]
+    fn span_tiles_matches_direct_sum() {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let plan =
+            partition(&crate::nn::zoo::by_name("vgg11", 100).unwrap(), &chip).unwrap();
+        let units = flat_units(&plan);
+        let ladders = UnitLadders::new(&chip, &units);
+        for i in 0..units.len() {
+            for j in i..=units.len() {
+                let direct: u64 = units[i..j].iter().map(|u| u.tiles as u64).sum();
+                assert_eq!(ladders.span_tiles(i, j), direct);
+            }
+        }
+    }
+
+    #[test]
+    fn heap_order_is_itp_order() {
+        // Higher mvms wins; ties break toward the earlier unit.
+        let a = Rung { mvms: 10, unit: 3, dup: 1 };
+        let b = Rung { mvms: 9, unit: 0, dup: 2 };
+        let c = Rung { mvms: 10, unit: 1, dup: 4 };
+        assert!(a > b);
+        assert!(c > a, "tie must prefer the earlier unit");
+        let mut h = BinaryHeap::from(vec![a, b, c]);
+        assert_eq!(h.pop(), Some(c));
+        assert_eq!(h.pop(), Some(a));
+        assert_eq!(h.pop(), Some(b));
+    }
+
+    #[test]
+    fn empty_and_saturated_spans() {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let plan =
+            partition(&crate::nn::zoo::by_name("resnet34", 100).unwrap(), &chip).unwrap();
+        let units = flat_units(&plan);
+        let ladders = UnitLadders::new(&chip, &units);
+        assert_eq!(ladders.walk(3, 3), (vec![], 0));
+        // A full greedy part is packed to capacity; whatever the walk
+        // grants must match the reference exactly (often nothing).
+        let first_len = plan.parts[0].units.len();
+        let (dups, _) = ladders.walk(0, first_len);
+        assert_eq!(dups, ddm_part(&plan.parts[0], &chip));
+    }
+}

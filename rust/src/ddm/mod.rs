@@ -3,6 +3,8 @@
 //! inference-time predictor ([`itp`]).
 
 pub mod algorithm;
+pub mod incremental;
 pub mod itp;
 
-pub use algorithm::{ddm_part, run, DdmResult, PartDups};
+pub use algorithm::{ddm_part, run, run_with_stats, DdmResult, DdmRunStats, PartDups};
+pub use incremental::UnitLadders;

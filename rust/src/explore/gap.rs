@@ -1,0 +1,178 @@
+//! Optimality-gap sweep: the certification grid behind `pimflow certify`
+//! and `figures::gap_table`.
+//!
+//! Fans the differential oracle ([`crate::testing::oracle`]) out over a
+//! (downscaled network × tile budget) grid. Every admitted cell yields
+//! one [`GapPoint`] per strategy; cells the exact optimizer refuses
+//! (admission bounds) or that cannot be partitioned at all (a unit wider
+//! than the whole chip) are recorded in [`GapSweep::skipped`] with the
+//! reason — silent truncation would read as "certified" when it wasn't.
+
+use crate::partition::ExactLimits;
+use crate::sim::engine::parallel_map;
+use crate::sim::PartitionStrategy;
+use crate::testing::oracle::{certify, small_chip, GapCase};
+
+/// One certified grid cell × strategy.
+#[derive(Debug, Clone)]
+pub struct GapPoint {
+    pub network: String,
+    pub strategy: PartitionStrategy,
+    pub units: usize,
+    pub budget_tiles: u32,
+    pub heuristic_ns: f64,
+    pub exact_ns: f64,
+    pub gap_ns: f64,
+    pub gap_pct: f64,
+    pub bnb_nodes: u64,
+}
+
+impl From<&GapCase> for GapPoint {
+    fn from(c: &GapCase) -> Self {
+        GapPoint {
+            network: c.network.clone(),
+            strategy: c.strategy,
+            units: c.units,
+            budget_tiles: c.budget_tiles,
+            heuristic_ns: c.heuristic_ns,
+            exact_ns: c.exact_ns,
+            gap_ns: c.gap_ns(),
+            gap_pct: c.gap_pct(),
+            bnb_nodes: c.bnb_nodes,
+        }
+    }
+}
+
+/// Result of one certification sweep.
+#[derive(Debug, Clone)]
+pub struct GapSweep {
+    /// Certified points, grid order (network-major, then budget, then
+    /// strategy).
+    pub points: Vec<GapPoint>,
+    /// Cells that could not be certified, as `network@budget: reason`.
+    pub skipped: Vec<String>,
+}
+
+impl GapSweep {
+    /// Largest relative gap over all certified points (0 if none).
+    pub fn max_gap_pct(&self) -> f64 {
+        self.points.iter().map(|p| p.gap_pct).fold(0.0, f64::max)
+    }
+
+    /// Mean relative gap over all certified points (0 if none).
+    pub fn mean_gap_pct(&self) -> f64 {
+        if self.points.is_empty() {
+            0.0
+        } else {
+            self.points.iter().map(|p| p.gap_pct).sum::<f64>() / self.points.len() as f64
+        }
+    }
+
+    /// Points whose gap is exactly zero bitwise (heuristic == optimum).
+    pub fn zero_gap_points(&self) -> usize {
+        self.points
+            .iter()
+            .filter(|p| p.heuristic_ns.to_bits() == p.exact_ns.to_bits())
+            .count()
+    }
+}
+
+/// Certify every (network × budget) cell, both strategies per cell, in
+/// parallel over the grid. Infeasible cells land in `skipped`, never
+/// abort the sweep.
+pub fn gap_sweep(
+    nets: &[crate::nn::Network],
+    budgets: &[u32],
+    limits: &ExactLimits,
+) -> GapSweep {
+    let grid: Vec<(usize, u32)> = nets
+        .iter()
+        .enumerate()
+        .flat_map(|(ni, _)| budgets.iter().map(move |&b| (ni, b)))
+        .collect();
+    let cells = parallel_map(&grid, |&(ni, budget)| {
+        let net = &nets[ni];
+        let run = small_chip(budget)
+            .and_then(|chip| certify(net, &chip, limits));
+        match run {
+            Ok(cases) => Ok(cases.iter().map(GapPoint::from).collect::<Vec<_>>()),
+            Err(e) => Err(format!("{}@{budget}t: {e:#}", net.name)),
+        }
+    });
+
+    let mut sweep = GapSweep {
+        points: Vec::new(),
+        skipped: Vec::new(),
+    };
+    for cell in cells {
+        match cell {
+            Ok(points) => sweep.points.extend(points),
+            Err(reason) => sweep.skipped.push(reason),
+        }
+    }
+    sweep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::oracle::downscaled_zoo;
+
+    #[test]
+    fn sweep_certifies_search_gap_free_and_records_skips() {
+        let nets = downscaled_zoo(5);
+        let sweep = gap_sweep(&nets, &[24, 48], &ExactLimits::default());
+        assert!(
+            sweep.points.len() >= 4,
+            "grid too sparse: {} points, skipped {:?}",
+            sweep.points.len(),
+            sweep.skipped
+        );
+        for p in &sweep.points {
+            assert!(p.gap_ns >= -1e-9, "{}: negative gap", p.network);
+            if p.strategy == PartitionStrategy::Search {
+                assert_eq!(
+                    p.heuristic_ns.to_bits(),
+                    p.exact_ns.to_bits(),
+                    "{}@{}t: search not optimal",
+                    p.network,
+                    p.budget_tiles
+                );
+            }
+        }
+        assert_eq!(sweep.points.len() % 2, 0, "two strategies per cell");
+        // summary helpers agree with the points
+        assert!(sweep.max_gap_pct() >= sweep.mean_gap_pct());
+        assert!(sweep.zero_gap_points() >= sweep.points.len() / 2);
+    }
+
+    #[test]
+    fn inadmissible_cells_are_skipped_not_fatal() {
+        // 512 tiles exceeds the oracle's 320-tile admission bound, so
+        // every cell at that budget must skip with the bound message.
+        let nets = downscaled_zoo(4);
+        let sweep = gap_sweep(&nets[..1], &[512], &ExactLimits::default());
+        assert!(sweep.points.is_empty());
+        assert_eq!(sweep.skipped.len(), 1);
+        assert!(sweep.skipped[0].contains("@512t"), "{:?}", sweep.skipped);
+        assert!(
+            sweep.skipped[0].contains("exact search bounded to"),
+            "{:?}",
+            sweep.skipped
+        );
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_runs() {
+        let nets = downscaled_zoo(4);
+        let a = gap_sweep(&nets[..3], &[32], &ExactLimits::default());
+        let b = gap_sweep(&nets[..3], &[32], &ExactLimits::default());
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.heuristic_ns.to_bits(), y.heuristic_ns.to_bits());
+            assert_eq!(x.exact_ns.to_bits(), y.exact_ns.to_bits());
+            assert_eq!(x.bnb_nodes, y.bnb_nodes);
+        }
+        assert_eq!(a.skipped, b.skipped);
+    }
+}

@@ -17,11 +17,16 @@
 //!   string-keyed [`nn::zoo`] registry every sweep and CLI command
 //!   resolves networks through.
 //! * [`partition`] / [`mapping`] — the paper's §II-C partition criteria and
-//!   tile allocation with layer duplication.
+//!   tile allocation with layer duplication, plus [`partition::exact`]: a
+//!   branch-and-bound optimality oracle over boundaries × duplication
+//!   splits for small instances, the ground truth behind the `certify`
+//!   differential suite ([`testing::oracle`], [`explore::gap_sweep`]).
 //! * [`pipeline`] — the compact-chip pipeline method (Fig. 4 cases 1–3) as a
 //!   slot-level simulator with bubble accounting.
 //! * [`ddm`] — Algorithm 1, the Dynamic Duplication Method, plus its
-//!   roofline inference-time predictor.
+//!   roofline inference-time predictor and [`ddm::incremental`], the
+//!   ladder-heap replay that lets the boundary search evaluate every
+//!   candidate span without a fresh Algorithm-1 run.
 //! * [`baselines`] — the area-unlimited chip and the RTX 4090 comparison
 //!   model, unified with the compact variants under
 //!   [`sim::engine::Design`].

@@ -3,6 +3,8 @@
 //! Subcommands map one-to-one onto the paper's experiments:
 //! `run` (one simulation point), `fig1/fig3/fig4/fig6/fig7/fig8`
 //! (regenerate each figure), `explore` (max-NN search with a floor),
+//! `certify` (differential gap sweep of the heuristic planners against
+//! the exact branch-and-bound oracle),
 //! `zoo` (list the model registry), `tune` (per-network batch auto-tune),
 //! `serve-sim` (mixed-network trace replay through the Engine-backed
 //! admission controller — no accelerator needed), `serve` (the L3 serving
@@ -140,6 +142,22 @@ fn app() -> App {
                     Opt::value("network", Some("resnet18"), "network"),
                     batch_opt(),
                     dram_opt(),
+                ],
+            },
+            Command {
+                name: "certify",
+                about: "differential certification: heuristic planners vs the exact optimum",
+                opts: vec![
+                    Opt::value(
+                        "networks",
+                        Some("zoo"),
+                        "certification workload: `zoo` (tiny + evaluation zoo), `paper`, or a comma list",
+                    ),
+                    Opt::value("layers", Some("6"), "downscale to at most this many crossbar layers"),
+                    Opt::value("budgets", Some("24,32,48,64"), "comma list of chip tile budgets"),
+                    Opt::value("max-units", Some("12"), "exact-search admission bound on map units"),
+                    Opt::value("max-tiles", Some("320"), "exact-search admission bound on tiles"),
+                    csv_flag(),
                 ],
             },
             Command {
@@ -877,6 +895,71 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+fn cmd_certify(p: &Parsed) -> Result<()> {
+    use pimflow::partition::ExactLimits;
+    use pimflow::testing::oracle::{downscale, downscaled_zoo};
+    let layers = p.get_u32("layers")?.unwrap_or(6) as usize;
+    let budgets = p
+        .get_or("budgets", "24,32,48,64")
+        .split(',')
+        .map(|s| {
+            s.trim().parse::<u32>().map_err(|_| {
+                anyhow::anyhow!("--budgets expects comma-separated tile counts, got `{s}`")
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let limits = ExactLimits {
+        max_units: p.get_u32("max-units")?.unwrap_or(12) as usize,
+        max_tiles: p.get_u32("max-tiles")?.unwrap_or(320),
+        ..ExactLimits::default()
+    };
+    let nets: Vec<Network> = match p.get_or("networks", "zoo") {
+        "zoo" => downscaled_zoo(layers),
+        "paper" => explore::paper_networks()
+            .iter()
+            .map(|n| downscale(n, layers))
+            .collect(),
+        list => list
+            .split(',')
+            .map(|n| zoo::by_name(n.trim(), 100))
+            .collect::<Result<Vec<_>>>()?
+            .iter()
+            .map(|n| downscale(n, layers))
+            .collect(),
+    };
+
+    let sweep = explore::gap_sweep(&nets, &budgets, &limits);
+    anyhow::ensure!(
+        !sweep.points.is_empty(),
+        "no cell admitted: every instance exceeded the exact-search bounds \
+         ({} units / {} tiles). Skipped:\n  {}",
+        limits.max_units,
+        limits.max_tiles,
+        sweep.skipped.join("\n  ")
+    );
+    let (t, csv) = figures::gap_table(&sweep);
+    print!("{}", t.render());
+    println!(
+        "certified {} instances ({} strategy points): max gap {:.3}%, mean gap {:.3}%, \
+         {} points exactly optimal",
+        sweep.points.len() / 2,
+        sweep.points.len(),
+        sweep.max_gap_pct(),
+        sweep.mean_gap_pct(),
+        sweep.zero_gap_points()
+    );
+    for s in &sweep.skipped {
+        println!("skipped {s}");
+    }
+    if p.flag("csv") {
+        println!(
+            "wrote {}",
+            figures::write_csv(&csv, "gap_sweep.csv")?.display()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_zoo(p: &Parsed) -> Result<()> {
     let (t, csv) = figures::zoo_table();
     print!("{}", t.render());
@@ -980,6 +1063,7 @@ fn dispatch(p: Parsed) -> Result<()> {
         "fig7" => cmd_fig7(&p),
         "fig8" => cmd_fig8(&p),
         "explore" => cmd_explore(&p),
+        "certify" => cmd_certify(&p),
         "zoo" => cmd_zoo(&p),
         "serve-sim" => cmd_serve_sim(&p),
         "tune" => cmd_tune(&p),

@@ -1,0 +1,568 @@
+//! Exact small-instance optimizer over partition boundaries × per-part
+//! duplication splits — the certification oracle for the heuristic
+//! planner stack (`partition::search` + `ddm::algorithm`).
+//!
+//! ## Decomposition
+//!
+//! The search objective `Σ_p (T_p + switch_p)` is additive over parts, so
+//! the joint problem over (boundaries × duplication splits) decomposes
+//! exactly: run the same boundary DP as [`super::search`], but price each
+//! candidate span `[i, j)` with its *exact* minimax duplication optimum
+//! instead of Algorithm 1's greedy answer. The DP enumerates every
+//! boundary placement (the overflow break is safe — span tiles grow
+//! monotonically), so the result is the true optimum of the planner's
+//! objective on the instance.
+//!
+//! ## Per-part exact duplication
+//!
+//! Per part the problem is minimax: minimize `max_u ⌈O²_u / d_u⌉` subject
+//! to `Σ tiles_u·(d_u − 1) ≤ E`, `1 ≤ d_u ≤ MAX[u]`, `d_u = 1` for FC.
+//! [`exact_part`] solves it by branch-and-bound over per-unit *latency
+//! levels* (the distinct MVM counts, each at its minimal duplication —
+//! any other dup is dominated), seeded with Algorithm 1's answer as the
+//! incumbent and pruned by an admissible lower bound from the ITP
+//! ([`crate::ddm::itp::predict_ns`] at the most optimistic affordable
+//! duplication — the relaxed bottleneck), a per-unit feasibility cut
+//! (every unit must beat the incumbent strictly), and a dominance cut
+//! (levels faster than the rest of the part's optimistic bottleneck are
+//! never needed). [`brute_force_span_mvms`] is the independent
+//! exhaustive cross-check for tiny parts.
+//!
+//! ## Why the DP+DDM stack certifies clean
+//!
+//! Algorithm 1 is *exactly optimal* per part for this cost model: while
+//! the current bottleneck `l` is above the optimal interval `T*`, every
+//! granted unit satisfies `d_u ≤ d_min(u, T*)`, so the tiles spent never
+//! exceed what the optimum spends — which means the bottleneck's next
+//! copy is always affordable (no skip, cap, or `E < min_tile` break can
+//! fire above `T*`) and the loop provably descends to `T*`. Grants past
+//! that point cannot lower the interval below the optimum. Hence the
+//! differential suite (`tests/exact_oracle.rs`) asserts a bitwise-zero
+//! gap for the Search strategy, while the greedy §II-C packer — which
+//! never searches boundaries — shows real, pinned gaps. The oracle's
+//! value is that this argument is *checked mechanically* on every
+//! instance instead of trusted.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure};
+
+use super::layerwise::{Part, PartitionPlan};
+use super::search::switch_cost_ns;
+use super::MapUnit;
+use crate::ddm::algorithm::{ddm_part, DdmResult, PartDups};
+use crate::ddm::itp;
+use crate::mapping::duplication::max_dup;
+use crate::pim::ChipModel;
+
+/// Admission bounds for the exact optimizer. Exact search is
+/// exponential in the worst case; instances beyond these bounds are
+/// rejected with a clear error instead of hanging.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExactLimits {
+    /// Maximum flattened map units (layers after channel splitting).
+    pub max_units: usize,
+    /// Maximum chip tile budget.
+    pub max_tiles: u32,
+    /// Per-span branch-and-bound node budget (last-resort valve; with
+    /// the feasibility cut real instances stay orders of magnitude
+    /// below it — the hot-path bench records actual node counts).
+    pub max_nodes: u64,
+}
+
+impl Default for ExactLimits {
+    fn default() -> Self {
+        ExactLimits {
+            max_units: 12,
+            max_tiles: 320,
+            max_nodes: 2_000_000,
+        }
+    }
+}
+
+/// Work counters for one [`exact_plan`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExactStats {
+    /// Candidate spans solved exactly.
+    pub spans: u64,
+    /// Branch-and-bound nodes visited across all spans.
+    pub nodes: u64,
+    /// Nodes cut by the lower bound / feasibility / dominance prunes.
+    pub pruned: u64,
+    /// Spans where branch-and-bound strictly beat the Algorithm-1
+    /// incumbent. Zero certifies the heuristic; nonzero is the
+    /// regression signal the differential tests exist to catch.
+    pub improved: u64,
+}
+
+/// Exact result for one plan: the same shapes the engine consumes, so an
+/// exact plan can be swapped in anywhere a searched plan is used.
+#[derive(Debug, Clone)]
+pub struct ExactOutcome {
+    pub plan: PartitionPlan,
+    /// Optimal per-part duplication vectors, parallel to `plan.parts`.
+    pub ddm: DdmResult,
+    /// True optimum of the search objective `Σ_p (T_p + switch_p)`, ns.
+    pub cost_ns: f64,
+    pub stats: ExactStats,
+}
+
+/// Exact minimax duplication for one part.
+#[derive(Debug, Clone)]
+pub struct ExactPart {
+    pub dups: PartDups,
+    /// Optimal bottleneck MVM count (interval = this × t_mvm).
+    pub bottleneck_mvms: u64,
+    pub nodes: u64,
+    pub pruned: u64,
+    /// True iff branch-and-bound strictly beat the DDM incumbent.
+    pub improved: bool,
+}
+
+/// One latency level of a unit: the minimal duplication reaching `mvms`
+/// sequential rounds. Any larger dup at the same level is dominated.
+#[derive(Debug, Clone, Copy)]
+struct DupLevel {
+    dup: u32,
+    mvms: u64,
+}
+
+fn unit_levels(u: &MapUnit, chip: &ChipModel, extra: u32) -> Vec<DupLevel> {
+    let op = u.layer.out_pixels();
+    let mut levels = vec![DupLevel { dup: 1, mvms: op }];
+    if u.is_fc || u.tiles == 0 {
+        return levels;
+    }
+    let cap = max_dup(chip, u).min(1 + extra / u.tiles);
+    let mut d = 1u32;
+    while d < cap {
+        d += 1;
+        let m = op.div_ceil(d as u64);
+        if m < levels.last().unwrap().mvms {
+            levels.push(DupLevel { dup: d, mvms: m });
+        }
+    }
+    levels
+}
+
+/// Bottleneck MVM count of a dup assignment (the integer form of
+/// [`itp::part_interval_ns`]; both orders agree exactly because the
+/// interval is `mvms × t_mvm` with small exact integers).
+fn bottleneck_mvms(units: &[MapUnit], dups: &[u32]) -> u64 {
+    units
+        .iter()
+        .zip(dups)
+        .map(|(u, &d)| u.layer.out_pixels().div_ceil(d.max(1) as u64))
+        .max()
+        .unwrap_or(0)
+}
+
+struct SpanSolver<'a> {
+    tiles: &'a [u32],
+    levels: &'a [Vec<DupLevel>],
+    max_nodes: u64,
+    inc_mvms: u64,
+    inc_dups: PartDups,
+    dups: PartDups,
+    nodes: u64,
+    pruned: u64,
+    improved: bool,
+}
+
+impl SpanSolver<'_> {
+    /// Lowest MVM count unit `r` can reach with `e` extra tiles — the
+    /// admissible ITP bound (each unit priced optimistically alone).
+    fn best_mvms(&self, r: usize, e: u32) -> u64 {
+        let lv = &self.levels[r];
+        if self.tiles[r] == 0 {
+            return lv[0].mvms;
+        }
+        let cap = 1 + e / self.tiles[r];
+        let idx = lv.partition_point(|l| l.dup <= cap);
+        lv[idx.saturating_sub(1).min(lv.len() - 1)].mvms
+    }
+
+    /// Extra tiles for unit `r` to get strictly below `target` MVMs;
+    /// `None` if no level does (the unit pins the interval at ≥ target).
+    fn min_spend_below(&self, r: usize, target: u64) -> Option<u64> {
+        self.levels[r]
+            .iter()
+            .find(|l| l.mvms < target)
+            .map(|l| (l.dup as u64 - 1) * self.tiles[r] as u64)
+    }
+
+    fn bnb(&mut self, k: usize, e: u32, cur_max: u64) -> anyhow::Result<()> {
+        self.nodes += 1;
+        if self.nodes > self.max_nodes {
+            bail!(
+                "exact search exceeded the {}-node per-span budget",
+                self.max_nodes
+            );
+        }
+        let n = self.levels.len();
+        if k == n {
+            // Callers only recurse with cur_max < inc_mvms, so this is a
+            // strict improvement over the incumbent.
+            self.inc_mvms = cur_max;
+            self.inc_dups = self.dups.clone();
+            self.improved = true;
+            return Ok(());
+        }
+
+        // Admissible lower bound + strict-improvement feasibility cut:
+        // beating the incumbent needs *every* remaining unit strictly
+        // below it, and their minimal spends must fit the budget.
+        let mut lb = cur_max;
+        let mut need: u64 = 0;
+        for r in k..n {
+            lb = lb.max(self.best_mvms(r, e));
+            match self.min_spend_below(r, self.inc_mvms) {
+                Some(s) => need += s,
+                None => {
+                    self.pruned += 1;
+                    return Ok(());
+                }
+            }
+        }
+        if lb >= self.inc_mvms || need > e as u64 {
+            self.pruned += 1;
+            return Ok(());
+        }
+
+        // Dominance floor: the final bottleneck is at least the rest of
+        // the part's optimistic bound, so pushing unit `k` below it only
+        // wastes tiles — stop at the first level under the floor.
+        let mut floor = cur_max;
+        for r in (k + 1)..n {
+            floor = floor.max(self.best_mvms(r, e));
+        }
+
+        for li in 0..self.levels[k].len() {
+            let DupLevel { dup, mvms } = self.levels[k][li];
+            let spend = (dup as u64 - 1) * self.tiles[k] as u64;
+            if spend > e as u64 {
+                break;
+            }
+            if cur_max.max(mvms) < self.inc_mvms {
+                self.dups[k] = dup;
+                self.bnb(k + 1, e - spend as u32, cur_max.max(mvms))?;
+                self.dups[k] = 1;
+            }
+            if mvms <= floor {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Exact minimax duplication for one part; `None` if the part overflows
+/// the chip at `dup = 1`. Deterministic: the Algorithm-1 incumbent is
+/// kept unless a strictly better assignment exists.
+pub fn exact_part(
+    part: &Part,
+    chip: &ChipModel,
+    limits: &ExactLimits,
+) -> anyhow::Result<Option<ExactPart>> {
+    let units = &part.units;
+    if units.is_empty() {
+        return Ok(Some(ExactPart {
+            dups: vec![],
+            bottleneck_mvms: 0,
+            nodes: 0,
+            pruned: 0,
+            improved: false,
+        }));
+    }
+    let base: u64 = units.iter().map(|u| u.tiles as u64).sum();
+    if base > chip.num_tiles() as u64 {
+        return Ok(None);
+    }
+    let extra = (chip.num_tiles() as u64 - base) as u32;
+    let inc_dups = ddm_part(part, chip);
+    let inc_mvms = bottleneck_mvms(units, &inc_dups);
+    let tiles: Vec<u32> = units.iter().map(|u| u.tiles).collect();
+    let levels: Vec<Vec<DupLevel>> =
+        units.iter().map(|u| unit_levels(u, chip, extra)).collect();
+    let mut solver = SpanSolver {
+        tiles: &tiles,
+        levels: &levels,
+        max_nodes: limits.max_nodes,
+        inc_mvms,
+        inc_dups,
+        dups: vec![1; units.len()],
+        nodes: 0,
+        pruned: 0,
+        improved: false,
+    };
+    solver.bnb(0, extra, 0)?;
+    Ok(Some(ExactPart {
+        dups: solver.inc_dups,
+        bottleneck_mvms: solver.inc_mvms,
+        nodes: solver.nodes,
+        pruned: solver.pruned,
+        improved: solver.improved,
+    }))
+}
+
+/// Independent exhaustive cross-check: the optimal bottleneck MVM count
+/// of one part by full enumeration over latency levels. `None` if the
+/// part overflows; errors if the level product exceeds `max_combos`.
+pub fn brute_force_span_mvms(
+    part: &Part,
+    chip: &ChipModel,
+    max_combos: u64,
+) -> anyhow::Result<Option<u64>> {
+    let units = &part.units;
+    let base: u64 = units.iter().map(|u| u.tiles as u64).sum();
+    if base > chip.num_tiles() as u64 {
+        return Ok(None);
+    }
+    let extra = (chip.num_tiles() as u64 - base) as u32;
+    let levels: Vec<Vec<DupLevel>> =
+        units.iter().map(|u| unit_levels(u, chip, extra)).collect();
+    let combos: u64 = levels
+        .iter()
+        .map(|l| l.len() as u64)
+        .try_fold(1u64, |a, b| a.checked_mul(b))
+        .unwrap_or(u64::MAX);
+    ensure!(
+        combos <= max_combos,
+        "brute force bounded to {max_combos} combinations, instance has {combos}"
+    );
+
+    fn recurse(levels: &[Vec<DupLevel>], tiles: &[u32], k: usize, e: u64, cur_max: u64) -> u64 {
+        if k == levels.len() {
+            return cur_max;
+        }
+        let mut best = u64::MAX;
+        for l in &levels[k] {
+            let spend = (l.dup as u64 - 1) * tiles[k] as u64;
+            if spend > e {
+                break;
+            }
+            best = best.min(recurse(levels, tiles, k + 1, e - spend, cur_max.max(l.mvms)));
+        }
+        best
+    }
+
+    let tiles: Vec<u32> = units.iter().map(|u| u.tiles).collect();
+    Ok(Some(recurse(&levels, &tiles, 0, extra as u64, 0)))
+}
+
+/// Exact optimum over partition boundaries × duplication splits for the
+/// unit sequence of `greedy`, under the search objective. Instances
+/// beyond `limits` are rejected (never a hang).
+pub fn exact_plan(
+    greedy: &PartitionPlan,
+    chip: &ChipModel,
+    limits: &ExactLimits,
+) -> anyhow::Result<ExactOutcome> {
+    let units: Vec<MapUnit> = greedy
+        .parts
+        .iter()
+        .flat_map(|p| p.units.iter().cloned())
+        .collect();
+    let u = units.len();
+    ensure!(u > 0, "empty plan");
+    ensure!(
+        u <= limits.max_units && chip.num_tiles() <= limits.max_tiles,
+        "exact search bounded to {} units / {} tiles: `{}` flattens to {} units on a \
+         {}-tile chip — downscale the instance (certify --layers / --budgets) or raise \
+         the limits",
+        limits.max_units,
+        limits.max_tiles,
+        greedy.network,
+        u,
+        chip.num_tiles()
+    );
+
+    let mut stats = ExactStats::default();
+    let mut span: HashMap<(usize, usize), (f64, PartDups)> = HashMap::new();
+
+    // Same DP shape as `search_partition` (strict improvement, overflow
+    // break), so identical costs reconstruct identical boundaries.
+    let mut cost = vec![f64::INFINITY; u + 1];
+    let mut parent = vec![usize::MAX; u + 1];
+    cost[0] = 0.0;
+    for j in 1..=u {
+        for i in (0..j).rev() {
+            let part = Part {
+                units: units[i..j].to_vec(),
+            };
+            let Some(ex) = exact_part(&part, chip, limits)? else {
+                break; // units[i..j) no longer fits; longer spans only worse
+            };
+            stats.spans += 1;
+            stats.nodes += ex.nodes;
+            stats.pruned += ex.pruned;
+            stats.improved += ex.improved as u64;
+            let c = itp::part_interval_ns(chip, &part.units, &ex.dups)
+                + switch_cost_ns(&part.units, chip);
+            span.insert((i, j), (c, ex.dups));
+            let total = cost[i] + c;
+            if total < cost[j] {
+                cost[j] = total;
+                parent[j] = i;
+            }
+        }
+        ensure!(
+            cost[j].is_finite(),
+            "unit {} cannot fit any part (needs {} tiles of {})",
+            units[j - 1].layer.name,
+            units[j - 1].tiles,
+            chip.num_tiles()
+        );
+    }
+
+    let mut bounds = Vec::new();
+    let mut j = u;
+    while j > 0 {
+        let i = parent[j];
+        bounds.push((i, j));
+        j = i;
+    }
+    bounds.reverse();
+    let mut parts = Vec::with_capacity(bounds.len());
+    let mut dup_per_part = Vec::with_capacity(bounds.len());
+    for &(i, j) in &bounds {
+        parts.push(Part {
+            units: units[i..j].to_vec(),
+        });
+        dup_per_part.push(span[&(i, j)].1.clone());
+    }
+
+    Ok(ExactOutcome {
+        plan: PartitionPlan {
+            parts,
+            network: greedy.network.clone(),
+        },
+        ddm: DdmResult { dup_per_part },
+        cost_ns: cost[u],
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::partition::partition;
+    use crate::pim::ChipModel;
+
+    fn small_chip(tiles: u32) -> ChipModel {
+        ChipModel::new(presets::compact_rram_41mm2().with_tiles(tiles)).unwrap()
+    }
+
+    #[test]
+    fn bnb_matches_brute_force_on_real_parts() {
+        let chip = small_chip(24);
+        let limits = ExactLimits::default();
+        let net = crate::nn::zoo::by_name("tiny", 100).unwrap();
+        let plan = partition(&net, &chip).unwrap();
+        for part in &plan.parts {
+            let ex = exact_part(part, &chip, &limits).unwrap().unwrap();
+            let brute = brute_force_span_mvms(part, &chip, 1_000_000)
+                .unwrap()
+                .unwrap();
+            assert_eq!(ex.bottleneck_mvms, brute, "part of {}", net.name);
+        }
+    }
+
+    #[test]
+    fn ddm_incumbent_is_never_beaten() {
+        // The per-part optimality theorem, checked mechanically: the
+        // branch-and-bound proves Algorithm 1's answer optimal.
+        for tiles in [8, 16, 24, 48] {
+            let chip = small_chip(tiles);
+            for net in ["tiny", "resnet18"] {
+                let plan = partition(&crate::nn::zoo::by_name(net, 100).unwrap(), &chip).unwrap();
+                for part in &plan.parts {
+                    let ex = exact_part(part, &chip, &ExactLimits::default())
+                        .unwrap()
+                        .unwrap();
+                    assert!(!ex.improved, "{net}@{tiles}t: DDM was suboptimal");
+                    assert_eq!(ex.dups, crate::ddm::ddm_part(part, &chip), "{net}@{tiles}t");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn admissible_bound_matches_itp_prediction() {
+        // best_mvms is the integer form of itp::predict_ns at the most
+        // optimistic affordable duplication.
+        let chip = small_chip(32);
+        let plan = partition(&crate::nn::zoo::by_name("tiny", 100).unwrap(), &chip).unwrap();
+        let part = &plan.parts[0];
+        let base: u64 = part.units.iter().map(|u| u.tiles as u64).sum();
+        let extra = (chip.num_tiles() as u64 - base) as u32;
+        let tiles: Vec<u32> = part.units.iter().map(|u| u.tiles).collect();
+        let levels: Vec<Vec<DupLevel>> = part
+            .units
+            .iter()
+            .map(|u| unit_levels(u, &chip, extra))
+            .collect();
+        let solver = SpanSolver {
+            tiles: &tiles,
+            levels: &levels,
+            max_nodes: u64::MAX,
+            inc_mvms: 0,
+            inc_dups: vec![],
+            dups: vec![],
+            nodes: 0,
+            pruned: 0,
+            improved: false,
+        };
+        for (r, u) in part.units.iter().enumerate() {
+            let best = solver.best_mvms(r, extra);
+            let dup = levels[r]
+                .iter()
+                .rev()
+                .find(|l| (l.dup as u64 - 1) * tiles[r] as u64 <= extra as u64)
+                .unwrap()
+                .dup;
+            let want = itp::predict_ns(&chip, u, dup) / chip.cfg.t_mvm_ns();
+            assert!((best as f64 - want).abs() < 1e-9, "unit {r}");
+        }
+    }
+
+    #[test]
+    fn oversize_instance_is_rejected_with_bounds() {
+        let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+        let net = crate::nn::zoo::by_name("resnet34", 100).unwrap();
+        let greedy = partition(&net, &chip).unwrap();
+        let err = exact_plan(&greedy, &chip, &ExactLimits::default()).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("exact search bounded to"),
+            "unhelpful rejection: {msg}"
+        );
+        assert!(msg.contains("resnet34"), "should name the instance: {msg}");
+    }
+
+    #[test]
+    fn levels_are_strictly_decreasing_and_minimal() {
+        let chip = small_chip(64);
+        let plan = partition(&crate::nn::zoo::by_name("tiny", 100).unwrap(), &chip).unwrap();
+        for part in &plan.parts {
+            for u in &part.units {
+                let lv = unit_levels(u, &chip, 63);
+                assert_eq!(lv[0].dup, 1);
+                assert_eq!(lv[0].mvms, u.layer.out_pixels());
+                for w in lv.windows(2) {
+                    assert!(w[1].mvms < w[0].mvms, "levels not strictly decreasing");
+                    assert!(w[1].dup > w[0].dup);
+                    // minimality: one fewer copy misses the level
+                    assert!(
+                        u.layer.out_pixels().div_ceil(w[1].dup as u64 - 1) > w[1].mvms,
+                        "dup not minimal for its level"
+                    );
+                }
+                if u.is_fc {
+                    assert_eq!(lv.len(), 1, "FC must stay at dup 1");
+                }
+            }
+        }
+    }
+}

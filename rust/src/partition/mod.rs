@@ -7,8 +7,13 @@
 //! whole chip.
 
 pub mod channel;
+pub mod exact;
 pub mod layerwise;
 pub mod search;
 
+pub use exact::{exact_plan, ExactLimits, ExactOutcome, ExactStats};
 pub use layerwise::{partition, MapUnit, Part, PartitionPlan};
-pub use search::{search_partition, search_partition_with, SearchOutcome, SearchStats};
+pub use search::{
+    search_partition, search_partition_cfg, search_partition_with, SearchConfig, SearchOutcome,
+    SearchStats,
+};

@@ -9,16 +9,23 @@
 //! minimizes the steady-state cost Σ_p T_p^DDM, where each candidate
 //! part's interval is evaluated *after* running Algorithm 1 on it.
 //!
-//! Complexity: O(U²) part-candidate evaluations, each running the DDM on
-//! up to U units (U = number of map units, ≤ ~160 for ResNet-152). Every
-//! candidate cost is memoized per boundary pair `(i, j)` so no span is
-//! ever evaluated through the DDM twice — the DP and the greedy-objective
-//! comparison share one cost cache ([`SearchStats`] counts the work).
+//! Complexity: O(U²) part-candidate evaluations (U = number of map
+//! units, ≤ ~160 for ResNet-152). Every candidate cost is memoized per
+//! boundary pair `(i, j)` so no span is ever evaluated through the DDM
+//! twice — the DP and the greedy-objective comparison share one cost
+//! cache — and, by default, spans are evaluated through
+//! [`crate::ddm::incremental::UnitLadders`]: per-unit duplication
+//! ladders built once for the whole search and replayed per span with a
+//! bottleneck heap, so the search runs zero fresh Algorithm-1
+//! evaluations (amortized O(U) setup instead of O(U·span) per-span DDM
+//! work). [`SearchStats`] counts the work on every path and
+//! `tests/search_incremental.rs` pins the outcomes bitwise identical.
 
 use std::collections::HashMap;
 
 use super::layerwise::{Part, PartitionPlan};
 use crate::ddm::algorithm::ddm_part;
+use crate::ddm::incremental::UnitLadders;
 use crate::ddm::itp;
 use crate::pim::ChipModel;
 use crate::pipeline::sim::t_prog_row_ns;
@@ -32,7 +39,7 @@ pub const SEARCH_AMORTIZE_BATCH: u64 = 256;
 /// Amortized per-IFM cost of opening one more part: DRAM weight fetch at
 /// peak LPDDR5-class bandwidth plus crossbar programming, divided by the
 /// reference batch.
-fn switch_cost_ns(units: &[super::MapUnit], chip: &ChipModel) -> f64 {
+pub(crate) fn switch_cost_ns(units: &[super::MapUnit], chip: &ChipModel) -> f64 {
     let bytes: u64 = units.iter().map(|u| u.layer.weights()).sum();
     let fetch_ns = bytes as f64 / 68.0; // ~68 GB/s => bytes/68 ns
     let prog_ns = chip.cfg.subarray_rows as f64 * t_prog_row_ns(chip.cfg.cell);
@@ -41,7 +48,7 @@ fn switch_cost_ns(units: &[super::MapUnit], chip: &ChipModel) -> f64 {
 
 /// Objective evaluated for one candidate part `[i, j)` of the unit list:
 /// steady-state interval after per-part DDM plus the amortized switch cost.
-fn part_cost_ns(units: &[super::MapUnit], chip: &ChipModel) -> Option<f64> {
+pub(crate) fn part_cost_ns(units: &[super::MapUnit], chip: &ChipModel) -> Option<f64> {
     let tiles: u32 = units.iter().map(|u| u.tiles).sum();
     if tiles > chip.num_tiles() {
         return None;
@@ -53,33 +60,71 @@ fn part_cost_ns(units: &[super::MapUnit], chip: &ChipModel) -> Option<f64> {
     Some(itp::part_interval_ns(chip, &part.units, &dups) + switch_cost_ns(units, chip))
 }
 
+/// How one boundary search evaluates candidate spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SearchConfig {
+    /// Cache span costs per boundary pair (one evaluation per span).
+    pub memoize: bool,
+    /// Evaluate spans through the shared [`UnitLadders`] replay instead
+    /// of a fresh Algorithm-1 run per span. The outcome is bitwise
+    /// identical either way (`tests/search_incremental.rs`); only
+    /// [`SearchStats`] moves.
+    pub incremental: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            memoize: true,
+            incremental: true,
+        }
+    }
+}
+
 /// Work counters for one boundary search: how many candidate spans went
-/// through the full Algorithm-1 + ITP evaluation vs. hit the memo.
+/// through a fresh Algorithm-1 + ITP evaluation, how many rode the
+/// incremental ladder replay, and how many hit the memo.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SearchStats {
-    /// Spans evaluated through `part_cost_ns` (each runs the DDM).
+    /// Spans evaluated through `part_cost_ns` (each runs the DDM fresh).
     pub ddm_evals: u64,
+    /// Spans evaluated through the incremental [`UnitLadders`] walk
+    /// (zero fresh DDM runs on this path).
+    pub ladder_evals: u64,
+    /// Total bottleneck selections the ladder walks processed.
+    pub ladder_steps: u64,
     /// Spans answered from the per-boundary memo instead.
     pub memo_hits: u64,
 }
 
+impl SearchStats {
+    /// Spans evaluated by either path (fresh or incremental).
+    pub fn spans_evaluated(&self) -> u64 {
+        self.ddm_evals + self.ladder_evals
+    }
+}
+
 /// Per-boundary cost cache over one flattened unit list: span `[i, j)` of
 /// `units` maps to its (deterministic) DDM-evaluated cost exactly once.
-/// With `memo: None` every lookup re-evaluates — the pre-memoization
-/// behaviour, kept for the regression test and the hot-path bench.
+/// With `memoize` off every lookup re-evaluates — the pre-memoization
+/// behaviour, kept for the regression test and the hot-path bench. With
+/// `incremental` on, evaluations replay Algorithm 1 over per-unit
+/// duplication ladders built once for the whole search.
 struct CostMemo<'a> {
     units: &'a [super::MapUnit],
     chip: &'a ChipModel,
     memo: Option<HashMap<(usize, usize), Option<f64>>>,
+    ladders: Option<UnitLadders>,
     stats: SearchStats,
 }
 
 impl<'a> CostMemo<'a> {
-    fn new(units: &'a [super::MapUnit], chip: &'a ChipModel, memoize: bool) -> Self {
+    fn new(units: &'a [super::MapUnit], chip: &'a ChipModel, cfg: SearchConfig) -> Self {
         CostMemo {
             units,
             chip,
-            memo: memoize.then(HashMap::new),
+            memo: cfg.memoize.then(HashMap::new),
+            ladders: cfg.incremental.then(|| UnitLadders::new(chip, units)),
             stats: SearchStats::default(),
         }
     }
@@ -91,8 +136,22 @@ impl<'a> CostMemo<'a> {
                 return c;
             }
         }
-        self.stats.ddm_evals += 1;
-        let c = part_cost_ns(&self.units[i..j], self.chip);
+        let c = if let Some(ladders) = &self.ladders {
+            self.stats.ladder_evals += 1;
+            if ladders.span_tiles(i, j) > self.chip.num_tiles() as u64 {
+                None
+            } else {
+                let (dups, steps) = ladders.walk(i, j);
+                self.stats.ladder_steps += steps;
+                Some(
+                    itp::part_interval_ns(self.chip, &self.units[i..j], &dups)
+                        + switch_cost_ns(&self.units[i..j], self.chip),
+                )
+            }
+        } else {
+            self.stats.ddm_evals += 1;
+            part_cost_ns(&self.units[i..j], self.chip)
+        };
         if let Some(m) = &mut self.memo {
             m.insert((i, j), c);
         }
@@ -115,21 +174,40 @@ pub struct SearchOutcome {
 /// DP boundary search over the unit sequence of `greedy` (unit expansion —
 /// including channel splits — is reused from the greedy pass, so both
 /// plans map the identical unit list). Candidate costs are memoized per
-/// boundary pair.
+/// boundary pair and evaluated through the incremental ladder replay
+/// ([`SearchConfig::default`]).
 pub fn search_partition(
     greedy: &PartitionPlan,
     chip: &ChipModel,
 ) -> anyhow::Result<SearchOutcome> {
-    search_partition_with(greedy, chip, true)
+    search_partition_cfg(greedy, chip, SearchConfig::default())
 }
 
-/// [`search_partition`] with the per-boundary memo toggleable. The
-/// outcome (plan, costs) is identical either way — only [`SearchStats`]
-/// moves — which `tests/search_memo.rs` pins.
+/// [`search_partition`] with the per-boundary memo toggleable and the
+/// incremental evaluator off — the pre-incremental behaviour, kept for
+/// the regression tests and the hot-path bench. The outcome (plan,
+/// costs) is identical to the default path — only [`SearchStats`] moves
+/// — which `tests/search_memo.rs` and `tests/search_incremental.rs` pin.
 pub fn search_partition_with(
     greedy: &PartitionPlan,
     chip: &ChipModel,
     memoize: bool,
+) -> anyhow::Result<SearchOutcome> {
+    search_partition_cfg(
+        greedy,
+        chip,
+        SearchConfig {
+            memoize,
+            incremental: false,
+        },
+    )
+}
+
+/// [`search_partition`] under an explicit [`SearchConfig`].
+pub fn search_partition_cfg(
+    greedy: &PartitionPlan,
+    chip: &ChipModel,
+    cfg: SearchConfig,
 ) -> anyhow::Result<SearchOutcome> {
     let units: Vec<super::MapUnit> = greedy
         .parts
@@ -138,7 +216,7 @@ pub fn search_partition_with(
         .collect();
     let u = units.len();
     anyhow::ensure!(u > 0, "empty plan");
-    let mut costs = CostMemo::new(&units, chip, memoize);
+    let mut costs = CostMemo::new(&units, chip, cfg);
 
     // cost[j] = minimal Σ T_p covering units[0..j); parent[j] = start of
     // the last part in the optimum.
@@ -277,12 +355,40 @@ mod tests {
     #[test]
     fn memo_never_runs_a_span_twice() {
         let (chip, greedy) = setup("vgg16");
-        let out = search_partition(&greedy, &chip).unwrap();
+        let out = search_partition_with(&greedy, &chip, true).unwrap();
         // the greedy-objective pass rides the DP's memo
         assert!(out.stats.memo_hits >= greedy.num_parts() as u64);
         let unmemo = search_partition_with(&greedy, &chip, false).unwrap();
         assert_eq!(unmemo.stats.memo_hits, 0);
         assert!(out.stats.ddm_evals < unmemo.stats.ddm_evals);
+    }
+
+    #[test]
+    fn incremental_default_is_bitwise_identical() {
+        for net in ["resnet18", "vgg16", "mobilenetv1"] {
+            let (chip, greedy) = setup(net);
+            let incremental = search_partition(&greedy, &chip).unwrap();
+            let fresh = search_partition_with(&greedy, &chip, true).unwrap();
+            assert_eq!(
+                incremental.cost_ns.to_bits(),
+                fresh.cost_ns.to_bits(),
+                "{net}: costs must match bitwise"
+            );
+            assert_eq!(
+                incremental.greedy_cost_ns.to_bits(),
+                fresh.greedy_cost_ns.to_bits(),
+                "{net}"
+            );
+            assert_eq!(incremental.plan.num_parts(), fresh.plan.num_parts(), "{net}");
+            // The whole point: zero fresh DDM runs on the default path,
+            // with the same number of spans evaluated overall.
+            assert_eq!(incremental.stats.ddm_evals, 0, "{net}");
+            assert_eq!(
+                incremental.stats.ladder_evals, fresh.stats.ddm_evals,
+                "{net}: span count must be conserved"
+            );
+            assert_eq!(incremental.stats.memo_hits, fresh.stats.memo_hits, "{net}");
+        }
     }
 
     #[test]

@@ -716,6 +716,65 @@ pub fn chaos_table(rows: &[crate::explore::ChaosPoint]) -> (Table, Csv) {
     (t, csv)
 }
 
+/// Certification-sweep grid: one row per (downscaled network, tile
+/// budget, strategy) cell with the heuristic-vs-exact optimality gap.
+/// The Search rows certify at exactly zero; the Greedy rows carry the
+/// measured gap the boundary search exists to close.
+pub fn gap_table(sweep: &crate::explore::GapSweep) -> (Table, Csv) {
+    let strategy_label = |s: crate::sim::PartitionStrategy| match s {
+        crate::sim::PartitionStrategy::Greedy => "greedy",
+        crate::sim::PartitionStrategy::Search => "search",
+    };
+    let mut t = Table::new(
+        format!(
+            "certify: heuristic vs exact optimum ({} cells, {} skipped, max gap {:.2}%)",
+            sweep.points.len(),
+            sweep.skipped.len(),
+            sweep.max_gap_pct()
+        ),
+        vec![
+            "network", "strategy", "units", "tiles", "heuristic", "exact", "gap", "b&b nodes",
+        ],
+    );
+    let mut csv = Csv::new(vec![
+        "network",
+        "strategy",
+        "units",
+        "budget_tiles",
+        "heuristic_ns",
+        "exact_ns",
+        "gap_pct",
+        "bnb_nodes",
+    ]);
+    for p in &sweep.points {
+        t.row(vec![
+            p.network.clone(),
+            strategy_label(p.strategy).to_string(),
+            p.units.to_string(),
+            p.budget_tiles.to_string(),
+            format!("{:.0} ns", p.heuristic_ns),
+            format!("{:.0} ns", p.exact_ns),
+            if p.heuristic_ns.to_bits() == p.exact_ns.to_bits() {
+                "exact".to_string()
+            } else {
+                format!("{:.2}%", p.gap_pct)
+            },
+            p.bnb_nodes.to_string(),
+        ]);
+        csv.row(vec![
+            p.network.clone(),
+            strategy_label(p.strategy).to_string(),
+            p.units.to_string(),
+            p.budget_tiles.to_string(),
+            format!("{:.4}", p.heuristic_ns),
+            format!("{:.4}", p.exact_ns),
+            format!("{:.6}", p.gap_pct),
+            p.bnb_nodes.to_string(),
+        ]);
+    }
+    (t, csv)
+}
+
 /// Fig. 1 helper (used by the CLI): write a CSV under `results/`.
 pub fn write_csv(csv: &Csv, name: &str) -> std::io::Result<std::path::PathBuf> {
     let path = Path::new("results").join(name);
@@ -963,6 +1022,26 @@ mod tests {
         assert!(!s.contains("0.00 ms"), "empty quantiles must not print as 0.00 ms:\n{s}");
         let (wt, _) = worker_table(&report);
         assert!(!wt.render().contains("0.00 ms"));
+    }
+
+    #[test]
+    fn gap_table_renders_the_certification_grid() {
+        use crate::explore::gap_sweep;
+        use crate::partition::ExactLimits;
+        use crate::testing::oracle::downscaled_zoo;
+        let nets = downscaled_zoo(4);
+        let sweep = gap_sweep(&nets[..2], &[32], &ExactLimits::default());
+        let (t, csv) = gap_table(&sweep);
+        let s = t.render();
+        assert!(s.contains("certify"));
+        assert!(s.contains("greedy") && s.contains("search"));
+        assert!(s.contains("exact"), "zero-gap rows must print as `exact`");
+        assert_eq!(csv.num_rows(), sweep.points.len());
+        // search rows certify gap 0.000000 in the CSV
+        for line in csv.to_string().lines().filter(|l| l.contains(",search,")) {
+            let gap = line.split(',').nth(6).unwrap();
+            assert_eq!(gap, "0.000000", "search row with nonzero gap: {line}");
+        }
     }
 
     #[test]

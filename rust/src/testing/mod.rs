@@ -4,6 +4,8 @@
 //! and, on failure, retries with the same seed to report a reproducible
 //! counterexample including the case index and seed.
 
+pub mod oracle;
+
 use crate::util::rng::Rng;
 
 /// Number of cases per property (overridable via `PIMFLOW_PROP_CASES`).

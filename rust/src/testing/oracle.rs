@@ -1,0 +1,219 @@
+//! Differential certification of the planner stack against the exact
+//! optimizer ([`crate::partition::exact`]).
+//!
+//! Replays (chip, network, strategy) triples through both the heuristic
+//! planners and the exact brute-force/branch-and-bound oracle, under the
+//! *same* objective the boundary search minimizes (Σ_p T_p^DDM plus the
+//! amortized switch cost), and reports the per-instance optimality gap:
+//!
+//! * **Search** (Fig. 2 DP + Algorithm 1): expected gap exactly zero on
+//!   every admitted instance — the DP enumerates all boundaries and
+//!   Algorithm 1 is provably optimal per part, so the differential layer
+//!   is a mechanical check of that proof.
+//! * **Greedy** (§II-C capacity packing): never searches boundaries, so
+//!   it carries a real, measurable gap — the quantity the paper's Fig. 2
+//!   search exists to close. `pimflow certify` and
+//!   [`crate::explore::gap_sweep`] tabulate it.
+//!
+//! Full-size networks exceed the exact oracle's admission bounds, so the
+//! differential grid runs on [`downscale`]d zoo prefixes over small tile
+//! budgets ([`small_chip`]) — exactly the regime where exhaustive search
+//! is tractable and where boundary mistakes are most visible.
+
+use anyhow::{anyhow, Result};
+
+use crate::cfg::presets;
+use crate::nn::{zoo, Network};
+use crate::partition::search::part_cost_ns;
+use crate::partition::{exact_plan, partition, search_partition, ExactLimits, PartitionPlan};
+use crate::pim::ChipModel;
+use crate::sim::PartitionStrategy;
+
+/// One differential measurement: a heuristic strategy vs the exact
+/// optimum on the same instance and objective.
+#[derive(Debug, Clone)]
+pub struct GapCase {
+    pub network: String,
+    pub strategy: PartitionStrategy,
+    /// Flattened map units in the instance.
+    pub units: usize,
+    pub budget_tiles: u32,
+    /// Heuristic cost under the search objective (ns).
+    pub heuristic_ns: f64,
+    /// Exact optimum of the same objective (ns).
+    pub exact_ns: f64,
+    /// Branch-and-bound nodes the oracle spent on this instance.
+    pub bnb_nodes: u64,
+}
+
+impl GapCase {
+    /// Absolute optimality gap (ns); ≥ 0 up to fp noise by construction.
+    pub fn gap_ns(&self) -> f64 {
+        self.heuristic_ns - self.exact_ns
+    }
+
+    /// Relative optimality gap in percent of the exact optimum.
+    pub fn gap_pct(&self) -> f64 {
+        if self.exact_ns <= 0.0 {
+            0.0
+        } else {
+            100.0 * self.gap_ns() / self.exact_ns
+        }
+    }
+}
+
+/// The compact-chip preset scaled to a small tile budget — the
+/// certification grid's chip axis.
+pub fn small_chip(num_tiles: u32) -> Result<ChipModel> {
+    ChipModel::new(presets::compact_rram_41mm2().with_tiles(num_tiles))
+}
+
+/// Cost of `strategy`'s plan under the search objective — the exact same
+/// expression the DP minimizes, so gaps compare like with like.
+pub fn heuristic_cost_ns(
+    greedy: &PartitionPlan,
+    chip: &ChipModel,
+    strategy: PartitionStrategy,
+) -> Result<f64> {
+    match strategy {
+        PartitionStrategy::Greedy => greedy
+            .parts
+            .iter()
+            .map(|p| {
+                part_cost_ns(&p.units, chip)
+                    .ok_or_else(|| anyhow!("greedy part overflows the chip"))
+            })
+            .sum(),
+        PartitionStrategy::Search => Ok(search_partition(greedy, chip)?.cost_ns),
+    }
+}
+
+/// Certify one instance: run both heuristic strategies and the exact
+/// oracle on (net, chip), returning a [`GapCase`] per strategy. Errors if
+/// the instance exceeds `limits` (see the "exact search bounded to"
+/// admission message) or cannot be partitioned at all.
+pub fn certify(net: &Network, chip: &ChipModel, limits: &ExactLimits) -> Result<Vec<GapCase>> {
+    let greedy = partition(net, chip)?;
+    let exact = exact_plan(&greedy, chip, limits)?;
+    let units = greedy.total_units();
+    [PartitionStrategy::Greedy, PartitionStrategy::Search]
+        .into_iter()
+        .map(|strategy| {
+            Ok(GapCase {
+                network: net.name.clone(),
+                strategy,
+                units,
+                budget_tiles: chip.num_tiles(),
+                heuristic_ns: heuristic_cost_ns(&greedy, chip, strategy)?,
+                exact_ns: exact.cost_ns,
+                bnb_nodes: exact.stats.nodes,
+            })
+        })
+        .collect()
+}
+
+/// Prefix-truncate `net` to at most `max_crossbar_layers` weight-bearing
+/// layers, keeping interleaved digital layers (pools, residual adds) that
+/// fall inside the prefix. The clone is renamed `{name}@{kept}L` so gap
+/// tables stay unambiguous about what was actually certified.
+pub fn downscale(net: &Network, max_crossbar_layers: usize) -> Network {
+    let mut layers = Vec::new();
+    let mut kept = 0usize;
+    for l in &net.layers {
+        if l.is_crossbar() {
+            if kept == max_crossbar_layers {
+                break;
+            }
+            kept += 1;
+        }
+        layers.push(l.clone());
+    }
+    let mut out = Network::new(
+        format!("{}@{kept}L", net.name),
+        net.input_hw,
+        net.input_ch,
+    );
+    for l in layers {
+        out.push(l);
+    }
+    out
+}
+
+/// The certification workload: the serving-artifact `tiny` model plus the
+/// whole evaluation zoo, each [`downscale`]d to `max_crossbar_layers`.
+pub fn downscaled_zoo(max_crossbar_layers: usize) -> Vec<Network> {
+    let mut nets = vec![zoo::by_name("tiny", 100).expect("tiny is registered")];
+    nets.extend(zoo::all_sorted());
+    nets.iter()
+        .map(|n| downscale(n, max_crossbar_layers))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downscale_keeps_a_consistent_prefix() {
+        let net = zoo::by_name("resnet18", 100).unwrap();
+        let small = downscale(&net, 5);
+        assert_eq!(small.crossbar_layers().len(), 5);
+        assert_eq!(small.name, "resnet18@5L");
+        small.validate().unwrap();
+        // prefix property: layer k of the downscale is layer k of the net
+        for (a, b) in small.layers.iter().zip(&net.layers) {
+            assert_eq!(a.name, b.name);
+        }
+        // truncating beyond the end is the identity (modulo the rename)
+        let full = downscale(&net, 10_000);
+        assert_eq!(full.layers.len(), net.layers.len());
+        assert_eq!(
+            full.name,
+            format!("resnet18@{}L", net.crossbar_layers().len())
+        );
+    }
+
+    #[test]
+    fn downscaled_zoo_is_certifiable_sized() {
+        let nets = downscaled_zoo(6);
+        assert_eq!(nets.len(), 1 + zoo::all_sorted().len());
+        for n in &nets {
+            assert!(n.crossbar_layers().len() <= 6, "{}", n.name);
+            n.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn certify_reports_both_strategies_and_zero_search_gap() {
+        let chip = small_chip(32).unwrap();
+        let net = downscale(&zoo::by_name("tiny", 100).unwrap(), 6);
+        let cases = certify(&net, &chip, &ExactLimits::default()).unwrap();
+        assert_eq!(cases.len(), 2);
+        for c in &cases {
+            assert_eq!(c.budget_tiles, 32);
+            assert!(c.gap_ns() >= -1e-9, "{:?}: negative gap", c.strategy);
+            assert!(c.gap_pct() >= -1e-12);
+        }
+        let search = cases
+            .iter()
+            .find(|c| c.strategy == PartitionStrategy::Search)
+            .unwrap();
+        // DP + per-part-optimal DDM is exactly optimal for the objective.
+        assert_eq!(
+            search.heuristic_ns.to_bits(),
+            search.exact_ns.to_bits(),
+            "search strategy must certify gap-free"
+        );
+    }
+
+    #[test]
+    fn heuristic_search_cost_matches_search_partition() {
+        let chip = small_chip(48).unwrap();
+        let net = downscale(&zoo::by_name("resnet18", 100).unwrap(), 6);
+        let greedy = partition(&net, &chip).unwrap();
+        let via_oracle =
+            heuristic_cost_ns(&greedy, &chip, PartitionStrategy::Search).unwrap();
+        let direct = search_partition(&greedy, &chip).unwrap().cost_ns;
+        assert_eq!(via_oracle.to_bits(), direct.to_bits());
+    }
+}

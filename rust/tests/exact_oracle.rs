@@ -1,0 +1,263 @@
+//! Differential certification net over the whole planner stack: the
+//! branch-and-bound oracle ([`pimflow::partition::exact`]) is the ground
+//! truth, and every heuristic layer is measured against it.
+//!
+//! What the suite pins:
+//! * the DP+DDM `Search` strategy is *exactly* optimal for its objective
+//!   on every admitted instance — asserted bitwise, not within epsilon;
+//! * the §II-C greedy packer carries a real, hand-derivable gap on a
+//!   crafted instance (pinned to the nanosecond);
+//! * hostile oversize inputs are rejected with the admission message,
+//!   never a hang, and the largest admitted instance finishes fast.
+
+use std::time::{Duration, Instant};
+
+use pimflow::cfg::presets;
+use pimflow::explore::gap_sweep;
+use pimflow::nn::{zoo, Layer, Network};
+use pimflow::partition::exact::{brute_force_span_mvms, exact_part};
+use pimflow::partition::{exact_plan, partition, search_partition, ExactLimits};
+use pimflow::pim::ChipModel;
+use pimflow::prop_assert;
+use pimflow::sim::PartitionStrategy;
+use pimflow::testing::oracle::{certify, downscale, downscaled_zoo, heuristic_cost_ns, small_chip};
+
+/// Three 1-tile convolutions on a 3-tile chip. The greedy packer fuses
+/// all three into one part (they fit), which leaves zero tiles for
+/// duplication; the optimum is three singleton parts, each triplicated.
+/// Every number in the pin below is derivable by hand — see
+/// `crafted_instance_pins_the_greedy_gap_exactly`.
+fn crafted_net() -> Network {
+    let mut net = Network::new("crafted3", 8, 128);
+    net.push(Layer::conv("c0", 8, 128, 128, 1, 1, 0));
+    net.push(Layer::conv("c1", 8, 128, 128, 1, 1, 0));
+    net.push(Layer::conv("c2", 8, 128, 128, 1, 2, 0));
+    net
+}
+
+#[test]
+fn crafted_instance_pins_the_greedy_gap_exactly() {
+    // Each conv: crossbar 128×128 → ceil(128/128)·ceil(128/32) = 4
+    // subarrays = exactly one tile. t_mvm = 8 bits × 30 ns = 240 ns.
+    //
+    // Greedy (one 3-tile part, no spare tiles, dups [1,1,1]):
+    //   interval = max(64, 64, 16)·240 = 15 360 ns, one switch.
+    // Exact (three singletons, 2 spare tiles each → dup 3):
+    //   (⌈64/3⌉ + ⌈64/3⌉ + ⌈16/3⌉)·240 = (22+22+6)·240 = 12 000 ns,
+    //   three switches.
+    // Each switch = (weights/68 + 128 rows × 1000 ns)/256; the
+    // weight-fetch terms cancel (49 152 bytes either way), the program
+    // terms differ by 2×500 ns. Gap = 3 360 − 1 000 = 2 360 ns exactly.
+    let chip = small_chip(3).unwrap();
+    let net = crafted_net();
+    let greedy = partition(&net, &chip).unwrap();
+    assert_eq!(greedy.num_parts(), 1, "greedy must fuse all three convs");
+
+    let exact = exact_plan(&greedy, &chip, &ExactLimits::default()).unwrap();
+    assert_eq!(exact.plan.parts.len(), 3, "optimum is three singletons");
+    assert_eq!(
+        exact.ddm.dup_per_part,
+        vec![vec![3], vec![3], vec![3]],
+        "each singleton triplicates onto its two spare tiles"
+    );
+    assert_eq!(
+        exact.stats.improved, 0,
+        "Algorithm 1 is per-part optimal; B&B must only re-certify it"
+    );
+
+    let greedy_ns = heuristic_cost_ns(&greedy, &chip, PartitionStrategy::Greedy).unwrap();
+    let gap_ns = greedy_ns - exact.cost_ns;
+    assert!(
+        (gap_ns - 2360.0).abs() < 1e-6,
+        "hand-derived greedy gap moved: {gap_ns} ns (greedy {greedy_ns}, exact {})",
+        exact.cost_ns
+    );
+    let gap_pct = 100.0 * gap_ns / exact.cost_ns;
+    assert!(
+        (17.0..18.0).contains(&gap_pct),
+        "relative gap moved: {gap_pct:.3}% (expected ≈17.478%)"
+    );
+
+    // The boundary search must find this optimum — bitwise, because the
+    // oracle keeps the Algorithm-1 dups and prices spans with the same
+    // expression the DP minimizes.
+    let search = search_partition(&greedy, &chip).unwrap();
+    assert_eq!(
+        search.cost_ns.to_bits(),
+        exact.cost_ns.to_bits(),
+        "search {} vs exact {}",
+        search.cost_ns,
+        exact.cost_ns
+    );
+
+    // And the certification layer reports the same story.
+    let cases = certify(&net, &chip, &ExactLimits::default()).unwrap();
+    for c in &cases {
+        match c.strategy {
+            PartitionStrategy::Greedy => {
+                assert!((c.gap_ns() - 2360.0).abs() < 1e-6, "{:?}", c)
+            }
+            PartitionStrategy::Search => {
+                assert_eq!(c.heuristic_ns.to_bits(), c.exact_ns.to_bits(), "{:?}", c)
+            }
+        }
+    }
+}
+
+#[test]
+fn zoo_grid_certifies_search_exactly_and_bounds_greedy() {
+    // Downscaled zoo (≤ 6 weight layers each) × two tile budgets. On
+    // every admitted cell: Search ≡ optimum bitwise, Greedy ≥ optimum.
+    let nets = downscaled_zoo(6);
+    let sweep = gap_sweep(&nets, &[24, 48], &ExactLimits::default());
+    assert!(
+        sweep.points.len() >= 4,
+        "grid too thin: {} points, skipped: {:?}",
+        sweep.points.len(),
+        sweep.skipped
+    );
+    for p in &sweep.points {
+        match p.strategy {
+            PartitionStrategy::Search => assert_eq!(
+                p.heuristic_ns.to_bits(),
+                p.exact_ns.to_bits(),
+                "{}@{}t: DP+DDM lost optimality ({} vs {})",
+                p.network,
+                p.budget_tiles,
+                p.heuristic_ns,
+                p.exact_ns
+            ),
+            PartitionStrategy::Greedy => assert!(
+                p.gap_ns >= -1e-9,
+                "{}@{}t: exact above the greedy heuristic: {:?}",
+                p.network,
+                p.budget_tiles,
+                p
+            ),
+        }
+    }
+    // Search certifies exactly on every cell, so at least half the
+    // points are bitwise-zero-gap.
+    assert!(sweep.zero_gap_points() * 2 >= sweep.points.len());
+}
+
+#[test]
+fn prop_exact_lower_bounds_heuristics_on_random_small_instances() {
+    let names = zoo::names();
+    pimflow::testing::check(
+        "exact_lower_bounds_heuristics",
+        |rng| {
+            let name = names[rng.range_u64(0, names.len() as u64 - 1) as usize];
+            let layers = rng.range_u64(2, 6) as usize;
+            let tiles = rng.range_u64(16, 48) as u32;
+            (name.to_string(), layers, tiles)
+        },
+        |(name, layers, tiles)| {
+            let net = downscale(&zoo::by_name(name, 100).unwrap(), *layers);
+            let chip = small_chip(*tiles).map_err(|e| e.to_string())?;
+            let Ok(greedy) = partition(&net, &chip) else {
+                return Ok(()); // a unit wider than the chip: nothing to plan
+            };
+            let Ok(exact) = exact_plan(&greedy, &chip, &ExactLimits::default()) else {
+                return Ok(()); // channel splitting pushed it past admission
+            };
+            prop_assert!(
+                exact.stats.improved == 0,
+                "{}@{tiles}t: B&B beat Algorithm 1 on a span",
+                net.name
+            );
+            for strategy in [PartitionStrategy::Greedy, PartitionStrategy::Search] {
+                let h = heuristic_cost_ns(&greedy, &chip, strategy).map_err(|e| e.to_string())?;
+                prop_assert!(
+                    h >= exact.cost_ns - 1e-6,
+                    "{}@{tiles}t: {strategy:?} heuristic {h} below the optimum {}",
+                    net.name,
+                    exact.cost_ns
+                );
+            }
+            let search = search_partition(&greedy, &chip).map_err(|e| e.to_string())?;
+            prop_assert!(
+                search.cost_ns.to_bits() == exact.cost_ns.to_bits(),
+                "{}@{tiles}t: search {} vs exact {}",
+                net.name,
+                search.cost_ns,
+                exact.cost_ns
+            );
+            // Cross-check the B&B against blind exhaustive enumeration
+            // on the optimum's small parts.
+            for part in exact.plan.parts.iter().filter(|p| p.units.len() <= 3) {
+                let bf = brute_force_span_mvms(part, &chip, 5_000_000)
+                    .map_err(|e| e.to_string())?
+                    .ok_or("admitted part overflowed the chip")?;
+                let ex = exact_part(part, &chip, &ExactLimits::default())
+                    .map_err(|e| e.to_string())?
+                    .ok_or("admitted part overflowed the chip")?;
+                prop_assert!(
+                    bf == ex.bottleneck_mvms,
+                    "{}@{tiles}t: brute force {} vs B&B {}",
+                    net.name,
+                    bf,
+                    ex.bottleneck_mvms
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn oversize_instances_are_rejected_with_bounds_not_hung() {
+    // Full ResNet-34 flattens to far more than 12 units: the oracle must
+    // refuse immediately, naming the instance and the bounds.
+    let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+    let net = zoo::by_name("resnet34", 100).unwrap();
+    let greedy = partition(&net, &chip).unwrap();
+    let msg = format!("{:#}", exact_plan(&greedy, &chip, &ExactLimits::default()).unwrap_err());
+    assert!(msg.contains("exact search bounded to"), "{msg}");
+    assert!(msg.contains("resnet34"), "{msg}");
+
+    // The refusal propagates through the certification layer.
+    let msg = format!("{:#}", certify(&net, &chip, &ExactLimits::default()).unwrap_err());
+    assert!(msg.contains("exact search bounded to"), "{msg}");
+
+    // The tile-budget bound fires independently of the unit bound.
+    let tight = ExactLimits {
+        max_tiles: 64,
+        ..ExactLimits::default()
+    };
+    let small = downscale(&net, 3);
+    let chip128 = small_chip(128).unwrap();
+    let greedy = partition(&small, &chip128).unwrap();
+    let msg = format!("{:#}", exact_plan(&greedy, &chip128, &tight).unwrap_err());
+    assert!(msg.contains("exact search bounded to"), "{msg}");
+    assert!(msg.contains("128-tile"), "{msg}");
+}
+
+#[test]
+fn largest_admitted_instance_finishes_under_budget() {
+    // Stress the admission ceiling: 12 one-tile convolutions on the full
+    // 320-tile bound, 4096 output pixels each — hundreds of duplication
+    // levels per unit per span. The feasibility cut must close every
+    // span at the root (the Algorithm-1 incumbent is provably optimal,
+    // so no strictly-improving assignment can fit the budget), keeping
+    // the whole 78-span run near-instant rather than exponential.
+    let chip = small_chip(320).unwrap();
+    let mut net = Network::new("wall12", 64, 14);
+    for i in 0..12 {
+        net.push(Layer::conv(format!("c{i}"), 64, 14, 14, 3, 1, 1));
+    }
+    let greedy = partition(&net, &chip).unwrap();
+
+    let start = Instant::now();
+    let exact = exact_plan(&greedy, &chip, &ExactLimits::default()).unwrap();
+    let elapsed = start.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "exact plan on the largest admitted instance took {elapsed:?}"
+    );
+
+    assert_eq!(exact.stats.spans, 78, "all 12·13/2 spans must be solved");
+    assert_eq!(exact.stats.improved, 0);
+    let search = search_partition(&greedy, &chip).unwrap();
+    assert_eq!(search.cost_ns.to_bits(), exact.cost_ns.to_bits());
+}

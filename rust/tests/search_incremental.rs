@@ -1,0 +1,183 @@
+//! Regression net over the incremental (ladder-heap) span evaluator: the
+//! evaluator must change the *work*, never the *outcome*. Every config in
+//! {memoize} × {incremental} is compared bitwise on the full zoo, and the
+//! DDM-evaluation accounting is pinned: the default path runs *zero*
+//! fresh Algorithm-1 evaluations while covering exactly the same spans.
+
+use pimflow::cfg::presets;
+use pimflow::nn::zoo;
+use pimflow::partition::{
+    partition, search_partition, search_partition_cfg, SearchConfig, SearchOutcome,
+};
+use pimflow::pim::ChipModel;
+use pimflow::prop_assert;
+use pimflow::testing::oracle::downscale;
+
+fn boundaries(o: &SearchOutcome) -> Vec<Vec<String>> {
+    o.plan
+        .parts
+        .iter()
+        .map(|p| p.units.iter().map(|u| u.layer.name.clone()).collect())
+        .collect()
+}
+
+fn full_zoo() -> Vec<pimflow::nn::Network> {
+    let mut nets = vec![zoo::by_name("tiny", 100).unwrap()];
+    nets.extend(zoo::all_sorted());
+    nets
+}
+
+#[test]
+fn incremental_is_bitwise_identical_across_the_zoo() {
+    let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+    let configs = [
+        SearchConfig { memoize: true, incremental: true },
+        SearchConfig { memoize: true, incremental: false },
+        SearchConfig { memoize: false, incremental: true },
+        SearchConfig { memoize: false, incremental: false },
+    ];
+    for net in full_zoo() {
+        let greedy = partition(&net, &chip).unwrap();
+        let outs: Vec<SearchOutcome> = configs
+            .iter()
+            .map(|&cfg| search_partition_cfg(&greedy, &chip, cfg).unwrap())
+            .collect();
+        let reference = &outs[0];
+        for (cfg, out) in configs.iter().zip(&outs).skip(1) {
+            assert_eq!(
+                out.cost_ns.to_bits(),
+                reference.cost_ns.to_bits(),
+                "{} {cfg:?}: search cost moved",
+                net.name
+            );
+            assert_eq!(
+                out.greedy_cost_ns.to_bits(),
+                reference.greedy_cost_ns.to_bits(),
+                "{} {cfg:?}: greedy objective moved",
+                net.name
+            );
+            assert_eq!(
+                boundaries(out),
+                boundaries(reference),
+                "{} {cfg:?}: boundaries moved",
+                net.name
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_runs_zero_fresh_ddm_evaluations() {
+    let chip = ChipModel::new(presets::compact_rram_41mm2()).unwrap();
+    for net in full_zoo() {
+        let greedy = partition(&net, &chip).unwrap();
+        let incr = search_partition(&greedy, &chip).unwrap();
+        let fresh = search_partition_cfg(
+            &greedy,
+            &chip,
+            SearchConfig { memoize: true, incremental: false },
+        )
+        .unwrap();
+
+        // The strict eval-count pin: the fresh path pays one Algorithm-1
+        // run per span; the incremental path pays none at all.
+        assert!(fresh.stats.ddm_evals > 0, "{}", net.name);
+        assert_eq!(incr.stats.ddm_evals, 0, "{}: fresh DDM ran", net.name);
+        // Same spans covered, just through the ladders.
+        assert_eq!(
+            incr.stats.ladder_evals, fresh.stats.ddm_evals,
+            "{}: span coverage moved",
+            net.name
+        );
+        assert_eq!(incr.stats.memo_hits, fresh.stats.memo_hits, "{}", net.name);
+        assert_eq!(
+            incr.stats.spans_evaluated(),
+            fresh.stats.spans_evaluated(),
+            "{}",
+            net.name
+        );
+        assert!(
+            incr.stats.ladder_steps > 0,
+            "{}: the walks must have granted/considered copies",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn incremental_is_identical_on_an_unlimited_chip() {
+    // The replication regime: huge extra-tile budgets, long ladders.
+    let base = presets::compact_rram_41mm2();
+    for name in ["tiny", "resnet18"] {
+        let net = zoo::by_name(name, 100).unwrap();
+        let chip =
+            ChipModel::new(pimflow::baselines::unlimited::unlimited_chip(&base, &net)).unwrap();
+        let greedy = partition(&net, &chip).unwrap();
+        let incr = search_partition(&greedy, &chip).unwrap();
+        let fresh = search_partition_cfg(
+            &greedy,
+            &chip,
+            SearchConfig { memoize: true, incremental: false },
+        )
+        .unwrap();
+        assert_eq!(incr.cost_ns.to_bits(), fresh.cost_ns.to_bits(), "{name}");
+        assert_eq!(
+            incr.greedy_cost_ns.to_bits(),
+            fresh.greedy_cost_ns.to_bits(),
+            "{name}"
+        );
+        assert_eq!(boundaries(&incr), boundaries(&fresh), "{name}");
+        assert_eq!(incr.stats.ddm_evals, 0, "{name}");
+    }
+}
+
+#[test]
+fn prop_incremental_identity_on_random_downscales() {
+    // Random (network, prefix length, tile budget) instances: the
+    // incremental search must stay bitwise identical to the fresh one.
+    let names = zoo::names();
+    pimflow::testing::check(
+        "incremental_identity_on_random_downscales",
+        |rng| {
+            let name = names[rng.range_u64(0, names.len() as u64 - 1) as usize];
+            let layers = rng.range_u64(2, 10) as usize;
+            let tiles = rng.range_u64(16, 205) as u32;
+            (name.to_string(), layers, tiles)
+        },
+        |(name, layers, tiles)| {
+            let net = downscale(&zoo::by_name(name, 100).unwrap(), *layers);
+            let chip = ChipModel::new(
+                presets::compact_rram_41mm2().with_tiles(*tiles),
+            )
+            .map_err(|e| e.to_string())?;
+            let Ok(greedy) = partition(&net, &chip) else {
+                return Ok(()); // a unit wider than the chip: nothing to search
+            };
+            let incr = search_partition(&greedy, &chip).map_err(|e| e.to_string())?;
+            let fresh = search_partition_cfg(
+                &greedy,
+                &chip,
+                SearchConfig { memoize: true, incremental: false },
+            )
+            .map_err(|e| e.to_string())?;
+            prop_assert!(
+                incr.cost_ns.to_bits() == fresh.cost_ns.to_bits(),
+                "{}@{tiles}t: cost {} vs {}",
+                net.name,
+                incr.cost_ns,
+                fresh.cost_ns
+            );
+            prop_assert!(
+                boundaries(&incr) == boundaries(&fresh),
+                "{}@{tiles}t: boundaries moved",
+                net.name
+            );
+            prop_assert!(
+                incr.stats.ddm_evals == 0,
+                "{}@{tiles}t: fresh DDM ran on the incremental path",
+                net.name
+            );
+            Ok(())
+        },
+    );
+}

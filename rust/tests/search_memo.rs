@@ -38,10 +38,15 @@ fn memoized_outcome_is_bitwise_identical() {
         };
         assert_eq!(bounds(&memo), bounds(&plain), "{name}: boundaries moved");
 
-        // the default entry point is the memoized path
+        // the default entry point is memoized too (and incremental: its
+        // spans ride the ladder replay instead of fresh DDM runs — see
+        // tests/search_incremental.rs for the full identity net)
         let default = search_partition(&greedy, &chip).unwrap();
         assert_eq!(default.cost_ns.to_bits(), memo.cost_ns.to_bits());
-        assert_eq!(default.stats, memo.stats);
+        assert_eq!(bounds(&default), bounds(&memo), "{name}");
+        assert_eq!(default.stats.ddm_evals, 0, "{name}: default ran fresh DDM");
+        assert_eq!(default.stats.ladder_evals, memo.stats.ddm_evals, "{name}");
+        assert_eq!(default.stats.memo_hits, memo.stats.memo_hits, "{name}");
     }
 }
 
