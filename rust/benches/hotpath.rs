@@ -1,8 +1,10 @@
 //! Hot-path micro-benchmarks for the §Perf pass: the pieces that run
 //! inside every sweep point (partition, DDM, pipeline simulate), the
-//! substrate primitives they lean on, and the engine-vs-uncached sweep
+//! substrate primitives they lean on, the engine-vs-uncached sweep
 //! comparison (the engine computes each design's plan/DDM once per
-//! network and fans batch points out in parallel).
+//! network and fans batch points out in parallel), the plan-acquisition
+//! ladder (memory hit / warm store / cold store / compute), and
+//! striped-vs-global plan-cache lock pricing.
 
 use pimflow::bench_harness::Bench;
 use pimflow::cfg::presets;
@@ -112,6 +114,67 @@ fn main() {
             .sweep(&r34, &Design::FIG6, &sweep_batches)
             .unwrap()
     });
+
+    // Plan-acquisition ladder: what one plan costs from each tier of the
+    // memory → store → compute lookup path. `warm()` acquires the plan
+    // without pipeline simulation, so the tiers are isolated.
+    let store_root = std::env::temp_dir().join("pimflow_bench_plan_store");
+    let _ = std::fs::remove_dir_all(&store_root);
+    {
+        // Seed the store once so the warm case reads an existing entry.
+        let seeder = Engine::compact(dram.clone()).with_store(&store_root).unwrap();
+        seeder.warm(Design::CompactDdm, &r34).unwrap();
+    }
+    b.case("plan_acquire_mem_hit", || warm.warm(Design::CompactDdm, &r34).unwrap());
+    b.case("plan_acquire_compute_nostore", || {
+        Engine::compact(dram.clone())
+            .warm(Design::CompactDdm, &r34)
+            .unwrap()
+    });
+    b.case("plan_acquire_store_warm", || {
+        Engine::compact(dram.clone())
+            .with_store(&store_root)
+            .unwrap()
+            .warm(Design::CompactDdm, &r34)
+            .unwrap()
+    });
+    // Cold store: compute + write-back (plus the dir reset that empties it).
+    let cold_root = std::env::temp_dir().join("pimflow_bench_plan_store_cold");
+    b.case("plan_acquire_store_cold", || {
+        let _ = std::fs::remove_dir_all(&cold_root);
+        Engine::compact(dram.clone())
+            .with_store(&cold_root)
+            .unwrap()
+            .warm(Design::CompactDdm, &r34)
+            .unwrap()
+    });
+
+    // Striped-vs-global lock pricing. The sweep case prices the whole
+    // grid; the hit storm hammers pure cache hits from 8 threads with no
+    // pipeline work, so the lock discipline is the only variable (striped
+    // hits take a shared read lock; the global cache takes one mutex).
+    let global_eng = Engine::compact(dram.clone()).with_global_lock_cache();
+    for d in Design::FIG6 {
+        global_eng.warm(d, &r34).unwrap();
+    }
+    b.case("fig6_grid_engine_warm_global", || {
+        global_eng.sweep(&r34, &Design::FIG6, &sweep_batches).unwrap()
+    });
+    let hit_storm = |eng: &Engine| {
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..256 {
+                        eng.warm(Design::CompactDdm, &r34).unwrap();
+                    }
+                });
+            }
+        })
+    };
+    b.case("cache_hit_storm_striped", || hit_storm(&warm));
+    b.case("cache_hit_storm_global", || hit_storm(&global_eng));
+    let _ = std::fs::remove_dir_all(&store_root);
+    let _ = std::fs::remove_dir_all(&cold_root);
 
     // Tentpole acceptance: a streaming million-request replay through the
     // event-heap kernel over a 32-worker fleet (100k in quick mode, so CI

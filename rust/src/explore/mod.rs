@@ -10,11 +10,14 @@ pub mod batch_sweep;
 pub mod design_sweep;
 pub mod gap;
 pub mod nn_sweep;
+pub mod shard;
 pub mod trace;
 
 pub use crate::sim::engine::{find, find_net, Design, DesignPoint, Engine};
 
 pub use gap::{gap_sweep, GapPoint, GapSweep};
+
+pub use shard::{merge_shard_points, shard_key, sweep_grid, ShardSpec};
 
 pub use batch_opt::{
     max_batch_for_latency, min_batch_for_throughput, tune_networks, BatchPoint, TunedNetwork,

@@ -1,0 +1,246 @@
+//! Sharded sweep grids: partition a (network × design × batch) explore
+//! grid deterministically across processes by plan-key content hash, and
+//! merge the per-shard outputs back into the canonical unsharded result.
+//!
+//! Shard assignment is per (design, network) — the unit that owns one
+//! plan — so every batch point of a plan lands in the same shard and a
+//! shard's plan computations are exactly its own. The shard key is the
+//! same FNV-1a content hash the plan store addresses entries by
+//! ([`Engine::plan_hash`]); the analytic GPU baseline, which plans
+//! nothing, is sharded by a hash of its design label + network name so it
+//! still distributes. Running every shard of an N-way split therefore
+//! covers every grid point exactly once, shard outputs are disjoint, and
+//! [`merge_shard_points`] reassembles them into the exact row order an
+//! unsharded [`sweep_grid`] produces — bitwise (pinned in
+//! `tests/store_shard.rs`).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::nn::Network;
+use crate::sim::engine::{Design, DesignPoint, Engine};
+use crate::sim::store::fnv1a64;
+
+/// One shard of an N-way grid split: this process owns every
+/// (design, network) whose shard key is `index` modulo `of`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: u64,
+    pub of: u64,
+}
+
+impl ShardSpec {
+    /// The degenerate 1-way split: owns everything (an unsharded sweep).
+    pub fn full() -> ShardSpec {
+        ShardSpec { index: 0, of: 1 }
+    }
+
+    /// Parse `"i/N"` (e.g. `--shard 0/2`), validating `i < N`, `N ≥ 1`.
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        let (i, n) = s
+            .split_once('/')
+            .with_context(|| format!("shard spec `{s}` is not of the form i/N"))?;
+        let index: u64 = i
+            .trim()
+            .parse()
+            .with_context(|| format!("shard index `{i}` is not an integer"))?;
+        let of: u64 = n
+            .trim()
+            .parse()
+            .with_context(|| format!("shard count `{n}` is not an integer"))?;
+        ensure!(of >= 1, "shard count must be at least 1");
+        ensure!(index < of, "shard index {index} out of range for /{of}");
+        Ok(ShardSpec { index, of })
+    }
+
+    pub fn owns(&self, key: u64) -> bool {
+        key % self.of == self.index
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.of == 1
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.of)
+    }
+}
+
+/// Deterministic shard key for one (design, network) grid cell: the plan
+/// store's content hash for planning designs, a label+name hash for the
+/// plan-less GPU baseline.
+pub fn shard_key(engine: &Engine, design: Design, net: &Network) -> u64 {
+    engine
+        .plan_hash(design, net)
+        .unwrap_or_else(|| fnv1a64(format!("{}:{}", design.label(), net.name).as_bytes()))
+}
+
+/// Sweep the (network × design × batch) grid, restricted to this shard's
+/// (design, network) cells, in canonical network-major / design / batch
+/// order. `ShardSpec::full()` gives the plain unsharded grid.
+pub fn sweep_grid(
+    engine: &Engine,
+    nets: &[Network],
+    designs: &[Design],
+    batches: &[u32],
+    shard: ShardSpec,
+) -> Result<Vec<DesignPoint>> {
+    ensure!(!designs.is_empty(), "sweep grid needs at least one design");
+    ensure!(!batches.is_empty(), "sweep grid needs at least one batch");
+    let mut points = Vec::new();
+    for net in nets {
+        let mine: Vec<Design> = designs
+            .iter()
+            .copied()
+            .filter(|&d| shard.owns(shard_key(engine, d, net)))
+            .collect();
+        if mine.is_empty() {
+            continue;
+        }
+        points.extend(engine.sweep(net, &mine, batches)?);
+    }
+    Ok(points)
+}
+
+fn same_bits(a: &DesignPoint, b: &DesignPoint) -> bool {
+    a.design == b.design
+        && a.network == b.network
+        && a.weights == b.weights
+        && a.batch == b.batch
+        && a.throughput_fps.to_bits() == b.throughput_fps.to_bits()
+        && a.tops_per_watt.to_bits() == b.tops_per_watt.to_bits()
+        && a.gops_per_mm2.to_bits() == b.gops_per_mm2.to_bits()
+        && a.area_mm2.to_bits() == b.area_mm2.to_bits()
+        && a.compute_fraction.to_bits() == b.compute_fraction.to_bits()
+        && a.num_parts == b.num_parts
+}
+
+/// Union shard outputs back into the canonical unsharded grid order.
+///
+/// Idempotent and overlap-tolerant: a grid point present in several shard
+/// outputs (e.g. the same shard merged twice, or overlapping shard specs)
+/// is deduplicated after a bitwise-equality check — two points for the
+/// same cell that *disagree* are a hard error, as is a cell no shard
+/// covered. GPU rows carry no `SystemReport`; the first copy seen wins
+/// (all copies are bitwise-equal on every compared field).
+pub fn merge_shard_points(
+    nets: &[Network],
+    designs: &[Design],
+    batches: &[u32],
+    shard_outputs: &[Vec<DesignPoint>],
+) -> Result<Vec<DesignPoint>> {
+    let mut index = std::collections::HashMap::new();
+    let mut slots: Vec<Option<DesignPoint>> = Vec::new();
+    for net in nets {
+        for &d in designs {
+            for &b in batches {
+                index.insert((net.name.clone(), d, b), slots.len());
+                slots.push(None);
+            }
+        }
+    }
+    for points in shard_outputs {
+        for p in points {
+            let slot = index
+                .get(&(p.network.clone(), p.design, p.batch))
+                .with_context(|| {
+                    format!(
+                        "shard output point ({}, {}, b={}) is not on the merge grid",
+                        p.network,
+                        p.design.label(),
+                        p.batch
+                    )
+                })?;
+            match &slots[*slot] {
+                None => slots[*slot] = Some(p.clone()),
+                Some(existing) => ensure!(
+                    same_bits(existing, p),
+                    "shard outputs disagree for ({}, {}, b={})",
+                    p.network,
+                    p.design.label(),
+                    p.batch
+                ),
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(slots.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(p) => out.push(p),
+            None => {
+                let ((net, d, b), _) = index
+                    .iter()
+                    .find(|(_, &s)| s == i)
+                    .expect("every slot is indexed");
+                bail!(
+                    "merged shards do not cover the grid: ({net}, {}, b={b}) missing",
+                    d.label()
+                );
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::nn::resnet;
+
+    #[test]
+    fn parse_accepts_valid_and_rejects_invalid_specs() {
+        assert_eq!(ShardSpec::parse("0/2").unwrap(), ShardSpec { index: 0, of: 2 });
+        assert_eq!(ShardSpec::parse("1/2").unwrap(), ShardSpec { index: 1, of: 2 });
+        assert_eq!(ShardSpec::parse("0/1").unwrap(), ShardSpec::full());
+        assert!(ShardSpec::full().is_full());
+        assert_eq!(ShardSpec::parse("3/8").unwrap().to_string(), "3/8");
+        for bad in ["", "2", "2/2", "3/2", "-1/2", "0/0", "a/b", "1/2/3"] {
+            assert!(ShardSpec::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn every_cell_is_owned_by_exactly_one_shard() {
+        let engine = Engine::compact(presets::lpddr5());
+        let nets = [resnet::resnet18(100), resnet::resnet34(100)];
+        for of in [1u64, 2, 3, 5] {
+            for net in &nets {
+                for d in Design::ALL {
+                    let owners = (0..of)
+                        .filter(|&index| {
+                            ShardSpec { index, of }.owns(shard_key(&engine, d, net))
+                        })
+                        .count();
+                    assert_eq!(owners, 1, "{} {} under /{of}", net.name, d.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_rows_shard_without_a_plan_hash() {
+        let engine = Engine::compact(presets::lpddr5());
+        let net = resnet::resnet18(100);
+        assert_eq!(engine.plan_hash(Design::Gpu, &net), None);
+        let k = shard_key(&engine, Design::Gpu, &net);
+        assert_eq!(k, shard_key(&engine, Design::Gpu, &net));
+        assert_ne!(k, shard_key(&engine, Design::Gpu, &resnet::resnet34(100)));
+    }
+
+    #[test]
+    fn merge_rejects_off_grid_points_and_gaps() {
+        let nets = [resnet::resnet18(100)];
+        let designs = [Design::CompactDdm];
+        let engine = Engine::compact(presets::lpddr5());
+        let full = sweep_grid(&engine, &nets, &designs, &[1, 4], ShardSpec::full()).unwrap();
+        // a gap: only batch 1 provided
+        let partial = vec![vec![full[0].clone()]];
+        let msg = merge_shard_points(&nets, &designs, &[1, 4], &partial).unwrap_err().to_string();
+        assert!(msg.contains("missing"), "unexpected error: {msg}");
+        // off-grid: batch 4 point offered to a batch-1-only grid
+        let off = vec![vec![full[1].clone()]];
+        assert!(merge_shard_points(&nets, &designs, &[1], &off).is_err());
+    }
+}

@@ -34,8 +34,12 @@
 //!   and [`sim::engine::Engine`] — the single entry point every sweep uses
 //!   — which memoizes the batch-invariant planning work (validated chip
 //!   model, partition plan, DDM decision) per (chip, network, strategy,
-//!   ddm) and fans sweep points out across threads, emitting uniform
-//!   [`sim::engine::DesignPoint`] rows.
+//!   ddm) in a lock-striped cache and fans sweep points out across
+//!   threads, emitting uniform [`sim::engine::DesignPoint`] rows.
+//!   [`sim::store`] makes those plans durable: a content-addressed,
+//!   versioned on-disk store (`Engine::with_store`) with memory → disk →
+//!   compute lookup, shard/merge support for multi-process sweeps, and
+//!   warm-started serving at zero fresh plan computations.
 //! * [`explore`] — engine-backed sweeps regenerating Figs. 3/6/7/8, the
 //!   batch auto-tuner, the chip design-space Pareto sweep, and the
 //!   mixed-network serving traces ([`explore::trace`]).

@@ -9,7 +9,11 @@
 //! `serve-sim` (mixed-network trace replay through the Engine-backed
 //! admission controller — no accelerator needed), `serve` (the L3 serving
 //! path over AOT artifacts; `runtime` feature),
-//! `plan` (inspect a partition + DDM decision). Every simulation command
+//! `plan` (inspect a partition + DDM decision),
+//! `sweep` (a generic network × design × batch grid, shardable across
+//! processes with `--shard i/N` and backed by the content-addressed plan
+//! store via `--store`), and `store` (plan-store maintenance: `merge`
+//! unions shard outputs, `ls` lists entries). Every simulation command
 //! goes through the shared `sim::engine::Engine`; every `--network` /
 //! `--networks` option resolves through `nn::zoo`, so each figure
 //! reproduces for any zoo network.
@@ -161,6 +165,37 @@ fn app() -> App {
                 ],
             },
             Command {
+                name: "sweep",
+                about: "sweep a (network × design × batch) grid, shardable and store-backed",
+                opts: vec![
+                    nets_opt(),
+                    Opt::value(
+                        "designs",
+                        Some("fig8"),
+                        "design axis: `all`/`fig6`, `fig8`, or a comma list (gpu,no_ddm,ddm,ddm_search,unlimited)",
+                    ),
+                    Opt::value("batches", Some("64"), "comma list of batch sizes"),
+                    Opt::value(
+                        "shard",
+                        Some("0/1"),
+                        "own only the (design, network) cells hashing to i mod N (`i/N`)",
+                    ),
+                    Opt::value("store", None, "plan store directory (read-through + write-back)"),
+                    Opt::value(
+                        "expect-fresh",
+                        None,
+                        "fail unless exactly this many fresh plan computations happened",
+                    ),
+                    dram_opt(),
+                    csv_flag(),
+                ],
+            },
+            Command {
+                name: "store",
+                about: "plan-store maintenance: `merge --into <dir> <src>...`, `ls <dir>`",
+                opts: vec![Opt::value("into", None, "merge destination store directory")],
+            },
+            Command {
                 name: "serve-sim",
                 about: "replay a mixed-network request trace through the simulated coordinator",
                 opts: vec![
@@ -228,6 +263,11 @@ fn app() -> App {
                         "mix skews for --sweep-replication (network 0's weight vs 1 for the rest)",
                     ),
                     Opt::value("seed", Some("42"), "trace seed (same seed, same trace)"),
+                    Opt::value(
+                        "store",
+                        None,
+                        "warm-start plans from this content-addressed store (created if missing)",
+                    ),
                     Opt::flag("no-admission", "accept everything (shows what admission buys)"),
                     Opt::flag(
                         "feedback",
@@ -604,7 +644,10 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         faults: FaultPlan::parse(p.get_or("faults", "none"))?,
         ..SimServeConfig::default()
     };
-    let engine = Engine::compact(dram_of(p)?);
+    let mut engine = Engine::compact(dram_of(p)?);
+    if let Some(dir) = p.get("store") {
+        engine = engine.with_store(dir)?;
+    }
 
     // Closed loop with service-time feedback: arrivals are generated from
     // realized completions, so the open-loop trace is bypassed entirely.
@@ -842,6 +885,15 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         report.batches(),
         report.plans_computed
     );
+    if engine.store().is_some() {
+        let stats = engine.cache_stats();
+        println!(
+            "plan store: {} disk hits, {} fresh computations, {} store errors survived",
+            stats.store_hits,
+            stats.misses,
+            stats.store_errors
+        );
+    }
     let fleet = report.fleet_hist();
     println!(
         "fleet latency p50/p99/p999: {:.2} / {:.2} / {:.2} ms over {} completions{}",
@@ -893,6 +945,118 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
         println!("wrote {}", figures::write_csv(&csv, "serve_sim.csv")?.display());
     }
     Ok(())
+}
+
+/// Resolve the `--designs` axis: `all`/`fig6` (all five designs), `fig8`
+/// (the three compact planners), or a comma list of design labels.
+fn designs_of(spec: &str) -> Result<Vec<Design>> {
+    Ok(match spec {
+        "all" | "fig6" => Design::ALL.to_vec(),
+        "fig8" => Design::FIG8.to_vec(),
+        list => list
+            .split(',')
+            .map(|s| match s.trim() {
+                "gpu" => Ok(Design::Gpu),
+                "no_ddm" => Ok(Design::CompactNoDdm),
+                "ddm" => Ok(Design::CompactDdm),
+                "ddm_search" => Ok(Design::CompactSearch),
+                "unlimited" => Ok(Design::Unlimited),
+                other => anyhow::bail!(
+                    "unknown design `{other}` (gpu, no_ddm, ddm, ddm_search, unlimited)"
+                ),
+            })
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn cmd_sweep(p: &Parsed) -> Result<()> {
+    let nets = networks_of(p)?;
+    let designs = designs_of(p.get_or("designs", "fig8"))?;
+    let batches = p
+        .get_or("batches", "64")
+        .split(',')
+        .map(|s| {
+            s.trim().parse::<u32>().map_err(|_| {
+                anyhow::anyhow!("--batches expects comma-separated batch sizes, got `{s}`")
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let shard = explore::ShardSpec::parse(p.get_or("shard", "0/1"))?;
+    let mut engine = Engine::compact(dram_of(p)?);
+    if let Some(dir) = p.get("store") {
+        engine = engine.with_store(dir)?;
+    }
+    let pts = explore::sweep_grid(&engine, &nets, &designs, &batches, shard)?;
+    let (t, csv) = figures::grid_table(&pts);
+    print!("{}", t.render());
+    let stats = engine.cache_stats();
+    println!(
+        "shard {shard}: {} grid points, {} fresh plans, {} store hits, {} memory hits",
+        pts.len(),
+        stats.misses,
+        stats.store_hits,
+        stats.hits
+    );
+    if let Some(store) = engine.store() {
+        println!("store {}: {} entries", store.root().display(), store.num_entries()?);
+    }
+    if let Some(expect) = p.get_u64("expect-fresh")? {
+        anyhow::ensure!(
+            stats.misses == expect,
+            "expected {expect} fresh plan computations, measured {}",
+            stats.misses
+        );
+    }
+    if p.flag("csv") {
+        let name = if shard.is_full() {
+            "sweep_grid.csv".to_string()
+        } else {
+            format!("sweep_shard_{}of{}.csv", shard.index, shard.of)
+        };
+        println!("wrote {}", figures::write_csv(&csv, &name)?.display());
+    }
+    Ok(())
+}
+
+fn cmd_store(p: &Parsed) -> Result<()> {
+    use pimflow::sim::PlanStore;
+    match p.positional.first().map(String::as_str) {
+        Some("merge") => {
+            let into = p
+                .get("into")
+                .ok_or_else(|| anyhow::anyhow!("store merge needs --into <dir>"))?;
+            let srcs = &p.positional[1..];
+            anyhow::ensure!(!srcs.is_empty(), "store merge needs at least one source dir");
+            let dst = PlanStore::open(into)?;
+            for src_dir in srcs {
+                let src = PlanStore::open_existing(src_dir)?;
+                let stats = dst.merge_from(&src)?;
+                println!(
+                    "merged {src_dir} -> {into}: {} copied, {} already present",
+                    stats.copied,
+                    stats.identical
+                );
+            }
+            println!("store {into}: {} entries", dst.num_entries()?);
+            Ok(())
+        }
+        Some("ls") => {
+            let dir = p
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("store ls needs a <dir>"))?;
+            let store = PlanStore::open_existing(dir)?;
+            let hashes = store.hashes()?;
+            for h in &hashes {
+                println!("{h:016x}");
+            }
+            println!("store {dir}: {} entries", hashes.len());
+            Ok(())
+        }
+        _ => anyhow::bail!(
+            "store expects an action: `store merge --into <dir> <src>...` or `store ls <dir>`"
+        ),
+    }
 }
 
 fn cmd_certify(p: &Parsed) -> Result<()> {
@@ -1063,6 +1227,8 @@ fn dispatch(p: Parsed) -> Result<()> {
         "fig7" => cmd_fig7(&p),
         "fig8" => cmd_fig8(&p),
         "explore" => cmd_explore(&p),
+        "sweep" => cmd_sweep(&p),
+        "store" => cmd_store(&p),
         "certify" => cmd_certify(&p),
         "zoo" => cmd_zoo(&p),
         "serve-sim" => cmd_serve_sim(&p),

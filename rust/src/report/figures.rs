@@ -321,6 +321,54 @@ pub fn fig8_table(points: &[DesignPoint]) -> anyhow::Result<(Table, Csv)> {
     Ok((t, csv))
 }
 
+/// Generic sweep-grid emitter for the `sweep` CLI command: one row per
+/// [`DesignPoint`], in the grid's canonical order. The CSV renders floats
+/// with `{}` (shortest round-trip representation), so two bitwise-equal
+/// grids — e.g. a merged sharded sweep vs. the unsharded one, or a
+/// warm-store replay vs. the computed path — produce byte-identical
+/// files; CI diffs them directly.
+pub fn grid_table(points: &[DesignPoint]) -> (Table, Csv) {
+    let mut t = Table::new(
+        "Sweep grid (network × design × batch)",
+        vec!["network", "design", "batch", "fps", "tops_per_w", "gops_per_mm2"],
+    );
+    let mut csv = Csv::new(vec![
+        "network",
+        "design",
+        "batch",
+        "weights",
+        "throughput_fps",
+        "tops_per_watt",
+        "gops_per_mm2",
+        "area_mm2",
+        "compute_fraction",
+        "num_parts",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.network.clone(),
+            p.design.label().to_string(),
+            p.batch.to_string(),
+            format!("{:.0}", p.throughput_fps),
+            format!("{:.2}", p.tops_per_watt),
+            format!("{:.1}", p.gops_per_mm2),
+        ]);
+        csv.row(vec![
+            p.network.clone(),
+            p.design.label().to_string(),
+            p.batch.to_string(),
+            p.weights.to_string(),
+            format!("{}", p.throughput_fps),
+            format!("{}", p.tops_per_watt),
+            format!("{}", p.gops_per_mm2),
+            format!("{}", p.area_mm2),
+            format!("{}", p.compute_fraction),
+            p.num_parts.to_string(),
+        ]);
+    }
+    (t, csv)
+}
+
 /// Model-zoo summary: one row per registered network (name, parameters,
 /// crossbar-mapped layers, MACs) — the CLI `zoo` command and the README
 /// quickstart table.

@@ -14,10 +14,18 @@
 //! variants, the area-unlimited baseline, and the GPU comparison model —
 //! so sweeps iterate a `&[Design]` and return uniform [`DesignPoint`] rows
 //! instead of per-figure bespoke structs.
+//!
+//! The in-memory cache is lock-striped (16 `RwLock`ed shards addressed
+//! by the key's content hash), so parallel sweeps don't
+//! serialize on one global mutex for cache hits, and it can be layered
+//! over a persistent [`PlanStore`] ([`Engine::with_store`]): lookups go
+//! memory → store → compute, fresh computations are written back, and a
+//! warmed store makes K networks cost zero fresh plan computations.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::Result;
 
@@ -31,6 +39,7 @@ use crate::nn::Network;
 use crate::partition::{partition, search_partition, PartitionPlan};
 use crate::pim::ChipModel;
 
+use super::store::{self, PlanStore};
 use super::{compose_report, PartitionStrategy, SystemReport};
 
 /// One of the paper's evaluated designs (Figs. 3/6/7/8).
@@ -130,10 +139,19 @@ pub fn find_net<'a>(
 }
 
 /// Cache hit/miss counters for the plan cache.
+///
+/// `misses` counts *fresh plan computations* only: a plan served from the
+/// attached [`PlanStore`] is a `store_hits`, not a miss, so "K networks →
+/// 0 fresh plans on a warmed store" is directly visible here (and in
+/// every report derived from `misses`, e.g. `plans_computed`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Plans rebuilt from the on-disk store instead of computed.
+    pub store_hits: u64,
+    /// Store read/write failures survived by recomputing (never fatal).
+    pub store_errors: u64,
 }
 
 /// Batch-invariant plan ingredients for one (chip, network, strategy, ddm).
@@ -151,9 +169,13 @@ struct PlanEntry {
 /// Exactness over a fingerprint is deliberate: a hash collision would
 /// silently return the wrong plan, while building this key costs one
 /// layer-list clone + one config format per cache access — noise next to
-/// the pipeline simulation each access precedes.
-#[derive(PartialEq, Eq, Hash)]
+/// the pipeline simulation each access precedes. `hash` is the store's
+/// canonical content hash ([`store::plan_key_hash`]), precomputed once per
+/// key: it picks the cache stripe and the on-disk address, while equality
+/// stays fully structural.
+#[derive(PartialEq, Eq)]
 struct PlanKey {
+    hash: u64,
     chip: String,
     net_name: String,
     input_hw: u32,
@@ -163,9 +185,19 @@ struct PlanKey {
     ddm: bool,
 }
 
+impl std::hash::Hash for PlanKey {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        // The content hash already covers every structural field; Eq still
+        // compares them all, so a (never-observed) FNV collision costs one
+        // extra probe, never a wrong entry.
+        state.write_u64(self.hash);
+    }
+}
+
 impl PlanKey {
     fn new(cfg: &ChipConfig, net: &Network, strategy: PartitionStrategy, ddm: bool) -> Self {
         PlanKey {
+            hash: store::plan_key_hash(cfg, net, strategy, ddm),
             chip: format!("{cfg:?}"),
             net_name: net.name.clone(),
             input_hw: net.input_hw,
@@ -177,16 +209,96 @@ impl PlanKey {
     }
 }
 
+/// Number of lock stripes in the default cache. Sweeps fan out over at
+/// most `available_parallelism` workers; 16 stripes keeps the collision
+/// probability of two concurrent *distinct*-key accesses low while the
+/// read path (cache hits) takes only a shared `RwLock` read lock.
+const CACHE_STRIPES: usize = 16;
+
+/// The plan cache behind [`Engine`]: lock-striped by default so parallel
+/// sweeps don't serialize on a single global mutex for cache hits; a
+/// single-`Mutex` mode is kept for before/after pricing in
+/// `benches/hotpath.rs`.
+enum PlanCache {
+    Global(Mutex<HashMap<PlanKey, Arc<PlanEntry>>>),
+    Striped(Vec<RwLock<HashMap<PlanKey, Arc<PlanEntry>>>>),
+}
+
+impl PlanCache {
+    fn striped() -> Self {
+        PlanCache::Striped((0..CACHE_STRIPES).map(|_| RwLock::new(HashMap::new())).collect())
+    }
+
+    fn global() -> Self {
+        PlanCache::Global(Mutex::new(HashMap::new()))
+    }
+
+    fn stripe_of(key: &PlanKey) -> usize {
+        (key.hash % CACHE_STRIPES as u64) as usize
+    }
+
+    fn get(&self, key: &PlanKey) -> Option<Arc<PlanEntry>> {
+        match self {
+            PlanCache::Global(m) => m.lock().unwrap().get(key).cloned(),
+            PlanCache::Striped(s) => s[Self::stripe_of(key)].read().unwrap().get(key).cloned(),
+        }
+    }
+
+    /// First insert wins (concurrent planners of the same key produce
+    /// identical entries; see [`Engine::entry`]).
+    fn insert(&self, key: PlanKey, entry: Arc<PlanEntry>) -> Arc<PlanEntry> {
+        match self {
+            PlanCache::Global(m) => Arc::clone(m.lock().unwrap().entry(key).or_insert(entry)),
+            PlanCache::Striped(s) => {
+                let i = Self::stripe_of(&key);
+                Arc::clone(s[i].write().unwrap().entry(key).or_insert(entry))
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            PlanCache::Global(m) => m.lock().unwrap().len(),
+            PlanCache::Striped(s) => s.iter().map(|m| m.read().unwrap().len()).sum(),
+        }
+    }
+
+    fn clear(&self) {
+        match self {
+            PlanCache::Global(m) => m.lock().unwrap().clear(),
+            PlanCache::Striped(s) => {
+                for m in s {
+                    m.write().unwrap().clear();
+                }
+            }
+        }
+    }
+
+    fn map_keys<T>(&self, mut f: impl FnMut(&PlanKey) -> T) -> Vec<T> {
+        match self {
+            PlanCache::Global(m) => m.lock().unwrap().keys().map(&mut f).collect(),
+            PlanCache::Striped(s) => s
+                .iter()
+                .flat_map(|m| m.read().unwrap().keys().map(&mut f).collect::<Vec<T>>())
+                .collect(),
+        }
+    }
+}
+
 /// The single entry point for all simulation: a compact base chip + DRAM
-/// config, a plan cache, and sweep fan-out. Shareable across threads
-/// (`&Engine` is all a worker needs).
+/// config, a plan cache (optionally backed by an on-disk [`PlanStore`]),
+/// and sweep fan-out. Shareable across threads (`&Engine` is all a worker
+/// needs). Plan lookup order: memory → store → compute (+ write-back).
 pub struct Engine {
     base: ChipConfig,
     dram: DramConfig,
     case: PipelineCase,
-    cache: Mutex<HashMap<PlanKey, Arc<PlanEntry>>>,
+    cache: PlanCache,
+    store: Option<PlanStore>,
     hits: AtomicU64,
     misses: AtomicU64,
+    store_hits: AtomicU64,
+    store_errors: AtomicU64,
 }
 
 impl Engine {
@@ -196,9 +308,12 @@ impl Engine {
             base,
             dram,
             case: PipelineCase::Auto,
-            cache: Mutex::new(HashMap::new()),
+            cache: PlanCache::striped(),
+            store: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            store_hits: AtomicU64::new(0),
+            store_errors: AtomicU64::new(0),
         }
     }
 
@@ -213,6 +328,39 @@ impl Engine {
         self
     }
 
+    /// Attach a content-addressed on-disk [`PlanStore`] (created if
+    /// missing). Lookups then go memory → store → compute, and every
+    /// fresh computation is written back, so a second process (or a
+    /// restarted coordinator) warm-starts with zero fresh plans.
+    pub fn with_store(mut self, root: impl AsRef<Path>) -> Result<Self> {
+        self.store = Some(PlanStore::open(root)?);
+        Ok(self)
+    }
+
+    /// Use the pre-striping single global `Mutex` cache. Only interesting
+    /// for pricing the striped cache against it in `benches/hotpath.rs`;
+    /// results are bitwise-identical either way.
+    pub fn with_global_lock_cache(mut self) -> Self {
+        self.cache = PlanCache::global();
+        self
+    }
+
+    /// The attached plan store, if any.
+    pub fn store(&self) -> Option<&PlanStore> {
+        self.store.as_ref()
+    }
+
+    /// Canonical content hash of the plan identity `design` resolves to
+    /// for `net` — the store address and the deterministic shard key.
+    /// `None` for the analytic GPU baseline, which plans nothing.
+    pub fn plan_hash(&self, design: Design, net: &Network) -> Option<u64> {
+        if design == Design::Gpu {
+            return None;
+        }
+        let (cfg, ddm_on, strategy) = self.resolve(design, net);
+        Some(store::plan_key_hash(&cfg, net, strategy, ddm_on))
+    }
+
     pub fn base_chip(&self) -> &ChipConfig {
         &self.base
     }
@@ -221,17 +369,21 @@ impl Engine {
         &self.dram
     }
 
-    /// Plan-cache counters so far (hits = plan reuses across batch points).
+    /// Plan-cache counters so far (hits = plan reuses across batch points;
+    /// misses = fresh plan computations; store_hits = plans rebuilt from
+    /// the attached store).
     pub fn cache_stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            store_hits: self.store_hits.load(Ordering::Relaxed),
+            store_errors: self.store_errors.load(Ordering::Relaxed),
         }
     }
 
     /// Number of memoized plan entries.
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.len()
     }
 
     /// Cross-network cache accounting for long-lived engines: the distinct
@@ -241,30 +393,38 @@ impl Engine {
     /// name; > 1 only when the same name is planned under several designs
     /// or chip configs).
     pub fn planned_networks(&self) -> Vec<String> {
-        let cache = self.cache.lock().unwrap();
-        let mut names: Vec<String> = cache.keys().map(|k| k.net_name.clone()).collect();
+        let mut names = self.cache.map_keys(|k| k.net_name.clone());
         names.sort();
         names.dedup();
         names
+    }
+
+    /// Deterministic accounting of every memoized plan: sorted
+    /// (network, content-hash) pairs, independent of stripe layout and
+    /// `HashMap` iteration order (pinned in `tests/engine_cache.rs`).
+    pub fn plan_manifest(&self) -> Vec<(String, u64)> {
+        let mut rows = self.cache.map_keys(|k| (k.net_name.clone(), k.hash));
+        rows.sort();
+        rows
     }
 
     /// Number of memoized plan entries for one network name (across all
     /// designs/strategies/chips it was planned under).
     pub fn plans_for(&self, net_name: &str) -> usize {
         self.cache
-            .lock()
-            .unwrap()
-            .keys()
-            .filter(|k| k.net_name == net_name)
+            .map_keys(|k| k.net_name == net_name)
+            .into_iter()
+            .filter(|&m| m)
             .count()
     }
 
-    /// Drop every memoized plan (counters keep running). The cache is
-    /// otherwise unbounded — a long-lived engine fed a stream of distinct
-    /// chip configs (e.g. repeated design-space sweeps) should clear it
-    /// between campaigns.
+    /// Drop every memoized plan (counters keep running; an attached store
+    /// keeps its entries — the next access reloads from disk). The cache
+    /// is otherwise unbounded — a long-lived engine fed a stream of
+    /// distinct chip configs (e.g. repeated design-space sweeps) should
+    /// clear it between campaigns.
     pub fn clear_cache(&self) {
-        self.cache.lock().unwrap().clear();
+        self.cache.clear();
     }
 
     /// Map a design onto concrete simulator inputs. GPU has none.
@@ -278,12 +438,18 @@ impl Engine {
         }
     }
 
-    /// Fetch-or-compute the batch-invariant plan ingredients. Planning
-    /// happens *outside* the cache lock, so distinct keys plan
-    /// concurrently under a parallel sweep. A concurrent first touch of
-    /// the same key may plan twice (both counted as misses; first insert
-    /// wins, results are deterministic and identical) — [`Engine::sweep`]
-    /// warms each design once up front, so grid sweeps plan exactly once.
+    /// Fetch-or-compute the batch-invariant plan ingredients: memory →
+    /// store → compute (+ write-back). Planning happens *outside* any
+    /// cache lock, so distinct keys plan concurrently under a parallel
+    /// sweep. A concurrent first touch of the same key may plan twice
+    /// (both counted as misses; first insert wins, results are
+    /// deterministic and identical) — [`Engine::sweep`] warms each design
+    /// once up front, so grid sweeps plan exactly once.
+    ///
+    /// Store failures are never fatal on this path: an unreadable or
+    /// corrupt entry is counted in `store_errors`, logged, and recomputed
+    /// (the write-back then replaces the bad file); a failed write-back
+    /// only loses persistence, not the result.
     fn entry(
         &self,
         cfg: &ChipConfig,
@@ -292,9 +458,28 @@ impl Engine {
         ddm_on: bool,
     ) -> Result<Arc<PlanEntry>> {
         let key = PlanKey::new(cfg, net, strategy, ddm_on);
-        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+        if let Some(e) = self.cache.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::clone(e));
+            return Ok(e);
+        }
+        if let Some(plan_store) = &self.store {
+            match plan_store.load(cfg, net, strategy, ddm_on) {
+                Ok(Some(stored)) => {
+                    let chip = ChipModel::new(stored.chip)?;
+                    self.store_hits.fetch_add(1, Ordering::Relaxed);
+                    let entry = Arc::new(PlanEntry {
+                        chip,
+                        plan: stored.plan,
+                        ddm: stored.ddm,
+                    });
+                    return Ok(self.cache.insert(key, entry));
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    self.store_errors.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("plan store read failed ({e:#}); recomputing");
+                }
+            }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let chip = ChipModel::new(cfg.clone())?;
@@ -308,14 +493,18 @@ impl Engine {
         } else {
             DdmResult::disabled(&plan)
         };
+        if let Some(plan_store) = &self.store {
+            if let Err(e) = plan_store.save(cfg, net, strategy, ddm_on, &plan, &dd) {
+                self.store_errors.fetch_add(1, Ordering::Relaxed);
+                log::warn!("plan store write-back failed ({e:#})");
+            }
+        }
         let entry = Arc::new(PlanEntry {
             chip,
             plan,
             ddm: dd,
         });
-        let mut cache = self.cache.lock().unwrap();
-        let winner = cache.entry(key).or_insert(entry);
-        Ok(Arc::clone(winner))
+        Ok(self.cache.insert(key, entry))
     }
 
     /// Pre-plan a design for a network (one cache miss; later runs hit).
@@ -470,9 +659,7 @@ mod tests {
     #[test]
     fn sweep_grid_is_ordered_and_complete() {
         let net = resnet::resnet18(100);
-        let pts = engine()
-            .sweep(&net, &Design::FIG6, &[1, 16])
-            .unwrap();
+        let pts = engine().sweep(&net, &Design::FIG6, &[1, 16]).unwrap();
         assert_eq!(pts.len(), Design::FIG6.len() * 2);
         let mut i = 0;
         for d in Design::FIG6 {
@@ -572,9 +759,34 @@ mod tests {
         let mut cfg = presets::compact_rram_41mm2();
         cfg.num_tiles = 0;
         let eng = Engine::new(cfg, presets::lpddr5());
-        assert!(eng
-            .run(Design::CompactDdm, &resnet::resnet18(100), 4)
-            .is_err());
+        assert!(eng.run(Design::CompactDdm, &resnet::resnet18(100), 4).is_err());
+    }
+
+    #[test]
+    fn global_lock_cache_mode_is_bitwise_identical() {
+        let net = resnet::resnet18(100);
+        let striped = engine();
+        let global = engine().with_global_lock_cache();
+        let a = striped.sweep(&net, &Design::FIG8, &[1, 16]).unwrap();
+        let b = global.sweep(&net, &Design::FIG8, &[1, 16]).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.throughput_fps.to_bits(), y.throughput_fps.to_bits());
+            assert_eq!(x.tops_per_watt.to_bits(), y.tops_per_watt.to_bits());
+        }
+        assert_eq!(striped.cache_stats(), global.cache_stats());
+        assert_eq!(striped.cache_len(), global.cache_len());
+    }
+
+    #[test]
+    fn plan_hash_is_stable_and_separates_designs() {
+        let eng = engine();
+        let net = resnet::resnet18(100);
+        assert_eq!(eng.plan_hash(Design::Gpu, &net), None);
+        let h = eng.plan_hash(Design::CompactDdm, &net).unwrap();
+        assert_eq!(eng.plan_hash(Design::CompactDdm, &net), Some(h));
+        assert_ne!(eng.plan_hash(Design::CompactNoDdm, &net), Some(h));
+        assert_ne!(eng.plan_hash(Design::Unlimited, &net), Some(h));
     }
 
     #[test]

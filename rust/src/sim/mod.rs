@@ -12,8 +12,10 @@
 //!   points out across threads. All of [`crate::explore`] runs through it.
 
 pub mod engine;
+pub mod store;
 
-pub use engine::{find, find_net, Design, DesignPoint, Engine};
+pub use engine::{find, find_net, CacheStats, Design, DesignPoint, Engine};
+pub use store::{MergeStats, PlanStore};
 
 use crate::cfg::chip::ChipConfig;
 use crate::cfg::dram::DramConfig;

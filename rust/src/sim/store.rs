@@ -1,0 +1,844 @@
+//! Content-addressed on-disk plan store.
+//!
+//! The engine's plan cache memoizes the batch-invariant triple
+//! ([`ChipConfig`] → [`crate::pim::ChipModel`], [`PartitionPlan`],
+//! [`DdmResult`]) per (chip, network, strategy, ddm). This module makes
+//! that triple a durable asset: entries are serialized with a hand-rolled
+//! canonical byte encoding (no serde — the same precedent as
+//! `bench_harness`'s hand-rolled JSON) into versioned files addressed by
+//! the FNV-1a 64-bit hash of the canonical *key* encoding.
+//!
+//! Exactness over a fingerprint, still: every entry stores its full key
+//! bytes, and [`PlanStore::load`] byte-compares them against the requested
+//! key. A hash collision is therefore detected and reported, never a
+//! silently wrong plan. Payload integrity is a trailing FNV checksum over
+//! key + payload; files are written to a temp name and atomically renamed
+//! into place, so concurrent writers of the same (deterministic) entry
+//! race benignly and readers never observe a half-written file.
+//!
+//! On-disk layout under a store root:
+//!
+//! ```text
+//! <root>/<hh>/<hash:016x>.plan     hh = top byte of the key hash, hex
+//! ```
+//!
+//! File format v1 (all integers little-endian):
+//!
+//! ```text
+//! magic "PIMSTORE" | version u16 | key_hash u64 | key_len u64 | key bytes
+//! | payload_len u64 | payload bytes | fnv1a64(key ++ payload) u64
+//! ```
+
+use std::fs;
+use std::io::ErrorKind;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cfg::chip::{CellTech, ChipConfig};
+use crate::ddm::DdmResult;
+use crate::nn::{Layer, LayerKind, Network};
+use crate::partition::{MapUnit, Part, PartitionPlan};
+
+use super::PartitionStrategy;
+
+/// Store file format version this build reads and writes.
+pub const STORE_VERSION: u16 = 1;
+
+const MAGIC: &[u8; 8] = b"PIMSTORE";
+/// magic + version + key_hash + key_len.
+const HEADER_LEN: usize = 8 + 2 + 8 + 8;
+/// Domain prefix of the key encoding; bump alongside [`STORE_VERSION`]
+/// whenever the key schema changes, so old and new keys can never alias.
+const KEY_DOMAIN: &str = "pimflow.plan-key.v1";
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit hash of a byte string.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv_update(FNV_OFFSET, bytes)
+}
+
+fn checksum(key: &[u8], payload: &[u8]) -> u64 {
+    fnv_update(fnv_update(FNV_OFFSET, key), payload)
+}
+
+// ---------------------------------------------------------------------------
+// Canonical byte encoding
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Lossless: the bit pattern, not a decimal rendering.
+    fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Dec<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Dec { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .with_context(|| format!("truncated while reading {what}"))?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn take_u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn take_u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn take_u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn take_f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.take_u64(what)?))
+    }
+
+    fn take_bool(&mut self, what: &str) -> Result<bool> {
+        match self.take_u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("invalid bool byte {other} in {what}"),
+        }
+    }
+
+    fn take_len(&mut self, what: &str) -> Result<usize> {
+        let n = self.take_u64(what)?;
+        usize::try_from(n).with_context(|| format!("{what} length {n} overflows usize"))
+    }
+
+    fn take_str(&mut self, what: &str) -> Result<String> {
+        let n = self.take_len(what)?;
+        let raw = self.take(n, what)?;
+        Ok(std::str::from_utf8(raw)
+            .with_context(|| format!("{what} is not valid UTF-8"))?
+            .to_string())
+    }
+
+    fn finish(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.bytes.len(),
+            "{} trailing bytes after decoded value",
+            self.bytes.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn enc_chip(e: &mut Enc, cfg: &ChipConfig) {
+    e.put_str(&cfg.name);
+    match cfg.cell {
+        CellTech::Rram { bits_per_cell } => {
+            e.put_u8(0);
+            e.put_u32(bits_per_cell);
+        }
+        CellTech::Sram => e.put_u8(1),
+    }
+    e.put_u32(cfg.subarray_rows);
+    e.put_u32(cfg.subarray_cols);
+    e.put_u32(cfg.subarrays_per_pe);
+    e.put_u32(cfg.pes_per_tile);
+    e.put_u32(cfg.num_tiles);
+    e.put_u32(cfg.weight_bits);
+    e.put_u32(cfg.act_bits);
+    e.put_f64(cfg.t_read_ns);
+    e.put_f64(cfg.e_read_pj);
+    e.put_f64(cfg.e_buf_pj_per_byte);
+    e.put_f64(cfg.e_noc_pj_per_byte);
+    e.put_f64(cfg.p_leak_mw_per_tile);
+}
+
+fn dec_chip(d: &mut Dec) -> Result<ChipConfig> {
+    let name = d.take_str("chip name")?;
+    let cell = match d.take_u8("cell tag")? {
+        0 => CellTech::Rram {
+            bits_per_cell: d.take_u32("bits_per_cell")?,
+        },
+        1 => CellTech::Sram,
+        other => bail!("unknown cell tag {other}"),
+    };
+    Ok(ChipConfig {
+        name,
+        cell,
+        subarray_rows: d.take_u32("subarray_rows")?,
+        subarray_cols: d.take_u32("subarray_cols")?,
+        subarrays_per_pe: d.take_u32("subarrays_per_pe")?,
+        pes_per_tile: d.take_u32("pes_per_tile")?,
+        num_tiles: d.take_u32("num_tiles")?,
+        weight_bits: d.take_u32("weight_bits")?,
+        act_bits: d.take_u32("act_bits")?,
+        t_read_ns: d.take_f64("t_read_ns")?,
+        e_read_pj: d.take_f64("e_read_pj")?,
+        e_buf_pj_per_byte: d.take_f64("e_buf_pj_per_byte")?,
+        e_noc_pj_per_byte: d.take_f64("e_noc_pj_per_byte")?,
+        p_leak_mw_per_tile: d.take_f64("p_leak_mw_per_tile")?,
+    })
+}
+
+fn enc_layer(e: &mut Enc, l: &Layer) {
+    e.put_str(&l.name);
+    e.put_u32(l.in_hw);
+    match l.kind {
+        LayerKind::Conv {
+            in_ch,
+            out_ch,
+            kernel,
+            stride,
+            pad,
+        } => {
+            e.put_u8(0);
+            e.put_u32(in_ch);
+            e.put_u32(out_ch);
+            e.put_u32(kernel);
+            e.put_u32(stride);
+            e.put_u32(pad);
+        }
+        LayerKind::DepthwiseConv {
+            ch,
+            kernel,
+            stride,
+            pad,
+        } => {
+            e.put_u8(1);
+            e.put_u32(ch);
+            e.put_u32(kernel);
+            e.put_u32(stride);
+            e.put_u32(pad);
+        }
+        LayerKind::Fc {
+            in_features,
+            out_features,
+        } => {
+            e.put_u8(2);
+            e.put_u32(in_features);
+            e.put_u32(out_features);
+        }
+        LayerKind::MaxPool { kernel, stride } => {
+            e.put_u8(3);
+            e.put_u32(kernel);
+            e.put_u32(stride);
+        }
+        LayerKind::GlobalAvgPool => e.put_u8(4),
+        LayerKind::Add => e.put_u8(5),
+    }
+}
+
+fn dec_layer(d: &mut Dec) -> Result<Layer> {
+    let name = d.take_str("layer name")?;
+    let in_hw = d.take_u32("layer in_hw")?;
+    let kind = match d.take_u8("layer kind tag")? {
+        0 => LayerKind::Conv {
+            in_ch: d.take_u32("conv in_ch")?,
+            out_ch: d.take_u32("conv out_ch")?,
+            kernel: d.take_u32("conv kernel")?,
+            stride: d.take_u32("conv stride")?,
+            pad: d.take_u32("conv pad")?,
+        },
+        1 => LayerKind::DepthwiseConv {
+            ch: d.take_u32("dw ch")?,
+            kernel: d.take_u32("dw kernel")?,
+            stride: d.take_u32("dw stride")?,
+            pad: d.take_u32("dw pad")?,
+        },
+        2 => LayerKind::Fc {
+            in_features: d.take_u32("fc in_features")?,
+            out_features: d.take_u32("fc out_features")?,
+        },
+        3 => LayerKind::MaxPool {
+            kernel: d.take_u32("pool kernel")?,
+            stride: d.take_u32("pool stride")?,
+        },
+        4 => LayerKind::GlobalAvgPool,
+        5 => LayerKind::Add,
+        other => bail!("unknown layer kind tag {other}"),
+    };
+    Ok(Layer { name, kind, in_hw })
+}
+
+fn enc_unit(e: &mut Enc, u: &MapUnit) {
+    enc_layer(e, &u.layer);
+    e.put_str(&u.origin);
+    match u.split {
+        Some((piece, of)) => {
+            e.put_u8(1);
+            e.put_u32(piece);
+            e.put_u32(of);
+        }
+        None => e.put_u8(0),
+    }
+    e.put_u32(u.tiles);
+    e.put_u64(u.subarrays);
+    e.put_bool(u.is_fc);
+}
+
+fn dec_unit(d: &mut Dec) -> Result<MapUnit> {
+    let layer = dec_layer(d)?;
+    let origin = d.take_str("unit origin")?;
+    let split = match d.take_u8("unit split tag")? {
+        0 => None,
+        1 => Some((d.take_u32("split piece")?, d.take_u32("split of")?)),
+        other => bail!("unknown split tag {other}"),
+    };
+    Ok(MapUnit {
+        layer,
+        origin,
+        split,
+        tiles: d.take_u32("unit tiles")?,
+        subarrays: d.take_u64("unit subarrays")?,
+        is_fc: d.take_bool("unit is_fc")?,
+    })
+}
+
+/// Canonical key bytes for one (chip, network, strategy, ddm) plan
+/// identity — the same structural fields the in-memory `PlanKey` compares.
+pub fn encode_key(
+    cfg: &ChipConfig,
+    net: &Network,
+    strategy: PartitionStrategy,
+    ddm: bool,
+) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.put_str(KEY_DOMAIN);
+    enc_chip(&mut e, cfg);
+    e.put_str(&net.name);
+    e.put_u32(net.input_hw);
+    e.put_u32(net.input_ch);
+    e.put_u64(net.layers.len() as u64);
+    for l in &net.layers {
+        enc_layer(&mut e, l);
+    }
+    e.put_u8(match strategy {
+        PartitionStrategy::Greedy => 0,
+        PartitionStrategy::Search => 1,
+    });
+    e.put_bool(ddm);
+    e.buf
+}
+
+/// Content hash a plan identity is addressed by (on disk and for shard
+/// assignment): FNV-1a 64 over [`encode_key`].
+pub fn plan_key_hash(
+    cfg: &ChipConfig,
+    net: &Network,
+    strategy: PartitionStrategy,
+    ddm: bool,
+) -> u64 {
+    fnv1a64(&encode_key(cfg, net, strategy, ddm))
+}
+
+fn encode_payload(cfg: &ChipConfig, plan: &PartitionPlan, dups: &DdmResult) -> Vec<u8> {
+    let mut e = Enc::default();
+    enc_chip(&mut e, cfg);
+    e.put_str(&plan.network);
+    e.put_u64(plan.parts.len() as u64);
+    for part in &plan.parts {
+        e.put_u64(part.units.len() as u64);
+        for u in &part.units {
+            enc_unit(&mut e, u);
+        }
+    }
+    e.put_u64(dups.dup_per_part.len() as u64);
+    for part in &dups.dup_per_part {
+        e.put_u64(part.len() as u64);
+        for &dup in part {
+            e.put_u32(dup);
+        }
+    }
+    e.buf
+}
+
+/// One decoded store entry: everything the engine needs to rebuild its
+/// in-memory plan entry without recomputing.
+pub struct StoredPlan {
+    pub chip: ChipConfig,
+    pub plan: PartitionPlan,
+    pub ddm: DdmResult,
+}
+
+fn decode_payload(payload: &[u8]) -> Result<StoredPlan> {
+    let mut d = Dec::new(payload);
+    let chip = dec_chip(&mut d).context("entry chip config")?;
+    let network = d.take_str("plan network")?;
+    let num_parts = d.take_len("part count")?;
+    let mut parts = Vec::with_capacity(num_parts.min(1 << 16));
+    for _ in 0..num_parts {
+        let num_units = d.take_len("unit count")?;
+        let mut units = Vec::with_capacity(num_units.min(1 << 16));
+        for _ in 0..num_units {
+            units.push(dec_unit(&mut d)?);
+        }
+        parts.push(Part { units });
+    }
+    let num_dup_parts = d.take_len("ddm part count")?;
+    let mut dup_per_part = Vec::with_capacity(num_dup_parts.min(1 << 16));
+    for _ in 0..num_dup_parts {
+        let n = d.take_len("ddm dup count")?;
+        let mut dups = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            dups.push(d.take_u32("dup factor")?);
+        }
+        dup_per_part.push(dups);
+    }
+    d.finish()?;
+    ensure!(
+        dup_per_part.len() == parts.len(),
+        "ddm table covers {} parts but plan has {}",
+        dup_per_part.len(),
+        parts.len()
+    );
+    Ok(StoredPlan {
+        chip,
+        plan: PartitionPlan { parts, network },
+        ddm: DdmResult { dup_per_part },
+    })
+}
+
+fn encode_file(key: &[u8], payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + key.len() + 8 + payload.len() + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&STORE_VERSION.to_le_bytes());
+    out.extend_from_slice(&fnv1a64(key).to_le_bytes());
+    out.extend_from_slice(&(key.len() as u64).to_le_bytes());
+    out.extend_from_slice(key);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&checksum(key, payload).to_le_bytes());
+    out
+}
+
+/// Validate a store file's framing and integrity; return (key, payload).
+/// `addressed_as` is the hash the caller derived the file's location from.
+fn split_file(bytes: &[u8], addressed_as: Option<u64>) -> Result<(&[u8], &[u8])> {
+    ensure!(bytes.len() >= HEADER_LEN, "truncated header");
+    ensure!(&bytes[0..8] == MAGIC, "bad magic (not a plan store entry)");
+    let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+    ensure!(
+        version == STORE_VERSION,
+        "unsupported plan store version {version} (this build reads v{STORE_VERSION})"
+    );
+    let key_hash = u64::from_le_bytes(bytes[10..18].try_into().unwrap());
+    if let Some(expect) = addressed_as {
+        ensure!(
+            key_hash == expect,
+            "entry is keyed {key_hash:016x} but addressed as {expect:016x}"
+        );
+    }
+    let mut d = Dec::new(&bytes[HEADER_LEN - 8..]);
+    let key_len = d.take_len("key length")?;
+    let key = d.take(key_len, "key bytes")?;
+    let payload_len = d.take_len("payload length")?;
+    let payload = d.take(payload_len, "payload bytes")?;
+    let stored_sum = d.take_u64("checksum")?;
+    d.finish()
+        .context("trailing bytes after plan store entry checksum")?;
+    ensure!(
+        fnv1a64(key) == key_hash,
+        "key bytes do not hash to the entry's declared key hash"
+    );
+    ensure!(
+        checksum(key, payload) == stored_sum,
+        "checksum mismatch (corrupted entry)"
+    );
+    Ok((key, payload))
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+/// Counts from [`PlanStore::merge_from`]: entries copied into the
+/// destination vs. entries that already existed byte-identically.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    pub copied: usize,
+    pub identical: usize,
+}
+
+/// A content-addressed plan store rooted at one directory.
+#[derive(Debug, Clone)]
+pub struct PlanStore {
+    root: PathBuf,
+}
+
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path
+        .parent()
+        .with_context(|| format!("store entry path {} has no parent", path.display()))?;
+    fs::create_dir_all(dir)
+        .with_context(|| format!("cannot create store directory {}", dir.display()))?;
+    let tmp = dir.join(format!(
+        ".tmp-{}-{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    fs::write(&tmp, bytes).with_context(|| format!("cannot write {}", tmp.display()))?;
+    if let Err(e) = fs::rename(&tmp, path) {
+        let _ = fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("cannot publish store entry {}", path.display()));
+    }
+    Ok(())
+}
+
+impl PlanStore {
+    /// Open a store root, creating the directory if needed.
+    pub fn open(root: impl AsRef<Path>) -> Result<PlanStore> {
+        let root = root.as_ref().to_path_buf();
+        if root.exists() && !root.is_dir() {
+            bail!(
+                "plan store root {} exists but is not a directory",
+                root.display()
+            );
+        }
+        fs::create_dir_all(&root)
+            .with_context(|| format!("cannot create plan store root {}", root.display()))?;
+        Ok(PlanStore { root })
+    }
+
+    /// Open a store that must already exist (merge sources, `store ls`).
+    pub fn open_existing(root: impl AsRef<Path>) -> Result<PlanStore> {
+        let root = root.as_ref().to_path_buf();
+        ensure!(
+            root.is_dir(),
+            "plan store root {} is not an existing directory",
+            root.display()
+        );
+        Ok(PlanStore { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path an entry with this key hash lives at.
+    pub fn path_for(&self, hash: u64) -> PathBuf {
+        self.root.join(format!("{:02x}", (hash >> 56) as u8)).join(format!("{hash:016x}.plan"))
+    }
+
+    /// Load the entry for a plan identity.
+    ///
+    /// `Ok(None)` when absent; `Err` on an unreadable or invalid file (the
+    /// engine treats that as "recompute and overwrite", never as a plan).
+    pub fn load(
+        &self,
+        cfg: &ChipConfig,
+        net: &Network,
+        strategy: PartitionStrategy,
+        ddm: bool,
+    ) -> Result<Option<StoredPlan>> {
+        let key = encode_key(cfg, net, strategy, ddm);
+        let hash = fnv1a64(&key);
+        let path = self.path_for(hash);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("cannot read plan store entry {}", path.display()))
+            }
+        };
+        let (stored_key, payload) = split_file(&bytes, Some(hash))
+            .with_context(|| format!("invalid plan store entry {}", path.display()))?;
+        ensure!(
+            stored_key == &key[..],
+            "plan store entry {} holds a different key with the same content \
+             hash (FNV collision); refusing to reuse it",
+            path.display()
+        );
+        let stored = decode_payload(payload)
+            .with_context(|| format!("invalid plan store entry {}", path.display()))?;
+        Ok(Some(stored))
+    }
+
+    /// Persist one plan identity's entry. Deterministic content + atomic
+    /// rename make this idempotent and safe under concurrent writers.
+    pub fn save(
+        &self,
+        cfg: &ChipConfig,
+        net: &Network,
+        strategy: PartitionStrategy,
+        ddm: bool,
+        plan: &PartitionPlan,
+        dups: &DdmResult,
+    ) -> Result<PathBuf> {
+        let key = encode_key(cfg, net, strategy, ddm);
+        let payload = encode_payload(cfg, plan, dups);
+        let path = self.path_for(fnv1a64(&key));
+        write_atomic(&path, &encode_file(&key, &payload))?;
+        Ok(path)
+    }
+
+    /// All entry hashes in the store, sorted ascending (deterministic).
+    pub fn hashes(&self) -> Result<Vec<u64>> {
+        let mut out = Vec::new();
+        let rd = fs::read_dir(&self.root)
+            .with_context(|| format!("cannot list plan store root {}", self.root.display()))?;
+        for sub in rd {
+            let sub = sub?;
+            if !sub.file_type()?.is_dir() {
+                continue;
+            }
+            for entry in fs::read_dir(sub.path())? {
+                let path = entry?.path();
+                if path.extension().and_then(|s| s.to_str()) != Some("plan") {
+                    continue;
+                }
+                let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else {
+                    continue;
+                };
+                if let Ok(h) = u64::from_str_radix(stem, 16) {
+                    out.push(h);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        Ok(out)
+    }
+
+    /// Number of entries in the store.
+    pub fn num_entries(&self) -> Result<usize> {
+        Ok(self.hashes()?.len())
+    }
+
+    /// Union `src`'s entries into this store. Idempotent: entries already
+    /// present byte-identically are counted, not rewritten. Every source
+    /// entry is validated first, and a destination entry that exists with
+    /// *different* bytes is a hard error (collision or corruption — the
+    /// caller must inspect, because silently picking one could serve a
+    /// wrong plan).
+    pub fn merge_from(&self, src: &PlanStore) -> Result<MergeStats> {
+        let mut stats = MergeStats::default();
+        for hash in src.hashes()? {
+            let spath = src.path_for(hash);
+            let bytes = fs::read(&spath)
+                .with_context(|| format!("cannot read merge source {}", spath.display()))?;
+            split_file(&bytes, Some(hash))
+                .with_context(|| format!("refusing to merge invalid entry {}", spath.display()))?;
+            let dpath = self.path_for(hash);
+            match fs::read(&dpath) {
+                Ok(existing) if existing == bytes => stats.identical += 1,
+                Ok(_) => bail!(
+                    "merge collision for key {hash:016x}: {} and {} disagree",
+                    spath.display(),
+                    dpath.display()
+                ),
+                Err(e) if e.kind() == ErrorKind::NotFound => {
+                    write_atomic(&dpath, &bytes)?;
+                    stats.copied += 1;
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("cannot read merge destination {}", dpath.display())
+                    })
+                }
+            }
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::presets;
+    use crate::ddm;
+    use crate::nn::resnet;
+    use crate::partition::partition;
+    use crate::pim::ChipModel;
+
+    fn tmp_root(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pimflow_store_unit_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample() -> (ChipConfig, Network, PartitionPlan, DdmResult) {
+        let cfg = presets::compact_rram_41mm2();
+        let net = resnet::resnet18(100);
+        let chip = ChipModel::new(cfg.clone()).unwrap();
+        let plan = partition(&net, &chip).unwrap();
+        let dups = ddm::run(&plan, &chip);
+        (cfg, net, plan, dups)
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn key_hash_separates_every_identity_axis() {
+        let (cfg, net, ..) = sample();
+        let base = plan_key_hash(&cfg, &net, PartitionStrategy::Greedy, true);
+        assert_eq!(
+            base,
+            plan_key_hash(&cfg.clone(), &net.clone(), PartitionStrategy::Greedy, true),
+            "hash is a pure function of the structural key"
+        );
+        assert_ne!(base, plan_key_hash(&cfg, &net, PartitionStrategy::Greedy, false));
+        assert_ne!(base, plan_key_hash(&cfg, &net, PartitionStrategy::Search, true));
+        let bigger = cfg.with_tiles(cfg.num_tiles + 1);
+        assert_ne!(base, plan_key_hash(&bigger, &net, PartitionStrategy::Greedy, true));
+        let other = resnet::resnet34(100);
+        assert_ne!(base, plan_key_hash(&cfg, &other, PartitionStrategy::Greedy, true));
+    }
+
+    #[test]
+    fn payload_roundtrip_reencodes_to_identical_bytes() {
+        let (cfg, _net, plan, dups) = sample();
+        let bytes = encode_payload(&cfg, &plan, &dups);
+        let back = decode_payload(&bytes).unwrap();
+        assert_eq!(encode_payload(&back.chip, &back.plan, &back.ddm), bytes);
+        assert_eq!(back.plan.num_parts(), plan.num_parts());
+        assert_eq!(back.ddm.dup_per_part, dups.dup_per_part);
+    }
+
+    #[test]
+    fn save_then_load_roundtrips_and_relists() {
+        let root = tmp_root("roundtrip");
+        let (cfg, net, plan, dups) = sample();
+        let store = PlanStore::open(&root).unwrap();
+        assert_eq!(store.num_entries().unwrap(), 0);
+        let path = store.save(&cfg, &net, PartitionStrategy::Greedy, true, &plan, &dups).unwrap();
+        assert!(path.starts_with(&root));
+        let got = store
+            .load(&cfg, &net, PartitionStrategy::Greedy, true)
+            .unwrap()
+            .expect("entry present");
+        assert_eq!(
+            encode_payload(&got.chip, &got.plan, &got.ddm),
+            encode_payload(&cfg, &plan, &dups)
+        );
+        // a different identity is absent, not an error
+        assert!(store.load(&cfg, &net, PartitionStrategy::Greedy, false).unwrap().is_none());
+        assert_eq!(
+            store.hashes().unwrap(),
+            vec![plan_key_hash(&cfg, &net, PartitionStrategy::Greedy, true)]
+        );
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn split_file_rejects_every_corruption_mode() {
+        let (cfg, net, plan, dups) = sample();
+        let key = encode_key(&cfg, &net, PartitionStrategy::Greedy, true);
+        let payload = encode_payload(&cfg, &plan, &dups);
+        let good = encode_file(&key, &payload);
+        let hash = fnv1a64(&key);
+        assert!(split_file(&good, Some(hash)).is_ok());
+
+        let err = |bytes: &[u8]| split_file(bytes, Some(hash)).unwrap_err().to_string();
+        assert!(err(&good[..10]).contains("truncated"));
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(err(&bad_magic).contains("magic"));
+        let mut bad_version = good.clone();
+        bad_version[8] = 0xfe;
+        assert!(err(&bad_version).contains("version"));
+        let mut bad_payload = good.clone();
+        let n = bad_payload.len();
+        bad_payload[n - 12] ^= 0xff; // inside the payload bytes
+        assert!(err(&bad_payload).contains("checksum"));
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(err(&trailing).contains("trailing"));
+        assert!(split_file(&good, Some(hash ^ 1)).is_err(), "wrong address");
+    }
+
+    #[test]
+    fn merge_is_idempotent_and_collision_checked() {
+        let (cfg, net, plan, dups) = sample();
+        let src_root = tmp_root("merge_src");
+        let dst_root = tmp_root("merge_dst");
+        let src = PlanStore::open(&src_root).unwrap();
+        let dst = PlanStore::open(&dst_root).unwrap();
+        src.save(&cfg, &net, PartitionStrategy::Greedy, true, &plan, &dups).unwrap();
+        src.save(&cfg, &net, PartitionStrategy::Greedy, false, &plan, &dups).unwrap();
+        let first = dst.merge_from(&src).unwrap();
+        assert_eq!(first, MergeStats { copied: 2, identical: 0 });
+        let second = dst.merge_from(&src).unwrap();
+        assert_eq!(second, MergeStats { copied: 0, identical: 2 });
+        assert_eq!(dst.hashes().unwrap(), src.hashes().unwrap());
+
+        // flip a payload byte in one destination entry: the next merge of
+        // that key must refuse, not silently pick a side
+        let victim = dst.path_for(src.hashes().unwrap()[0]);
+        let mut bytes = fs::read(&victim).unwrap();
+        let n = bytes.len();
+        bytes[n - 12] ^= 0xff;
+        fs::write(&victim, &bytes).unwrap();
+        let msg = format!("{:#}", dst.merge_from(&src).unwrap_err());
+        assert!(msg.contains("disagree"), "unexpected error: {msg}");
+        let _ = fs::remove_dir_all(&src_root);
+        let _ = fs::remove_dir_all(&dst_root);
+    }
+
+    #[test]
+    fn open_rejects_a_file_as_root() {
+        let root = tmp_root("file_root");
+        fs::create_dir_all(root.parent().unwrap()).unwrap();
+        fs::write(&root, b"not a directory").unwrap();
+        let msg = PlanStore::open(&root).unwrap_err().to_string();
+        assert!(msg.contains("not a directory"), "unexpected error: {msg}");
+        assert!(PlanStore::open_existing(&root).is_err());
+        assert!(PlanStore::open_existing(root.join("missing")).is_err());
+        let _ = fs::remove_file(&root);
+    }
+}

@@ -111,3 +111,53 @@ fn engine_distinguishes_dram_generations() {
     let r3 = e3.system_report(Design::CompactDdm, &net, 64).unwrap();
     assert!(r3.energy.dram_j > r5.energy.dram_j);
 }
+
+#[test]
+fn plan_accounting_is_insertion_order_independent() {
+    let r18 = resnet::resnet18(100);
+    let r34 = resnet::resnet34(100);
+    let a = engine();
+    a.warm(Design::CompactDdm, &r34).unwrap();
+    a.warm(Design::CompactDdm, &r18).unwrap();
+    a.warm(Design::CompactNoDdm, &r18).unwrap();
+    let b = engine();
+    b.warm(Design::CompactNoDdm, &r18).unwrap();
+    b.warm(Design::CompactDdm, &r18).unwrap();
+    b.warm(Design::CompactDdm, &r34).unwrap();
+
+    assert_eq!(a.planned_networks(), vec!["resnet18", "resnet34"]);
+    assert_eq!(a.planned_networks(), b.planned_networks());
+    assert_eq!(a.plan_manifest(), b.plan_manifest());
+    assert_eq!(a.plans_for("resnet18"), 2);
+    assert_eq!(a.plans_for("resnet34"), 1);
+
+    // The manifest is sorted and holds exactly the content hashes the
+    // store/shard layer addresses these plans by.
+    let manifest = a.plan_manifest();
+    assert!(manifest.windows(2).all(|w| w[0] <= w[1]), "sorted: {manifest:?}");
+    let mut expect = vec![
+        ("resnet18".to_string(), a.plan_hash(Design::CompactDdm, &r18).unwrap()),
+        ("resnet18".to_string(), a.plan_hash(Design::CompactNoDdm, &r18).unwrap()),
+        ("resnet34".to_string(), a.plan_hash(Design::CompactDdm, &r34).unwrap()),
+    ];
+    expect.sort();
+    assert_eq!(manifest, expect);
+}
+
+#[test]
+fn global_lock_cache_sweep_is_bitwise_identical_to_striped() {
+    let net = resnet::resnet34(100);
+    let striped = engine();
+    let global = engine().with_global_lock_cache();
+    let a = striped.sweep(&net, &Design::FIG6, &[1, 16, 256]).unwrap();
+    let b = global.sweep(&net, &Design::FIG6, &[1, 16, 256]).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.throughput_fps.to_bits(), y.throughput_fps.to_bits());
+        assert_eq!(x.tops_per_watt.to_bits(), y.tops_per_watt.to_bits());
+        assert_eq!(x.gops_per_mm2.to_bits(), y.gops_per_mm2.to_bits());
+        assert_eq!(x.num_parts, y.num_parts);
+    }
+    assert_eq!(striped.cache_stats(), global.cache_stats());
+    assert_eq!(striped.plan_manifest(), global.plan_manifest());
+}

@@ -235,3 +235,140 @@ fn fault_plans_naming_absent_workers_are_rejected_at_build() {
         assert!(err.contains("worker"), "spec `{spec}` gave: {err}");
     }
 }
+
+// ---------- plan-store failures: hostile on-disk inputs ----------
+//
+// The store must degrade to a clean `anyhow` error or a safe recompute —
+// never a panic, never a wrong plan.
+
+mod plan_store_failures {
+    use std::path::{Path, PathBuf};
+
+    use pimflow::cfg::presets;
+    use pimflow::nn::resnet;
+    use pimflow::sim::{store, Design, Engine, PartitionStrategy, PlanStore};
+
+    fn tmp_store(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pimflow_fail_store_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn engine() -> Engine {
+        Engine::compact(presets::lpddr5())
+    }
+
+    /// Warm a store with resnet18's CompactDdm plan; return the entry path.
+    fn warmed(root: &Path) -> PathBuf {
+        let eng = engine().with_store(root).unwrap();
+        eng.run(Design::CompactDdm, &resnet::resnet18(100), 8).unwrap();
+        let hash = store::plan_key_hash(
+            eng.base_chip(),
+            &resnet::resnet18(100),
+            PartitionStrategy::Greedy,
+            true,
+        );
+        let path = eng.store().unwrap().path_for(hash);
+        assert!(path.is_file(), "warm-up must have written {}", path.display());
+        path
+    }
+
+    /// Corrupting an entry must surface as a clean load error whose
+    /// message names the failure, and the engine must recompute the same
+    /// numbers while counting the error — then heal the file on write-back.
+    fn assert_recovers(name: &str, corrupt: impl Fn(&Path), expect_msg: &str) {
+        let root = tmp_store(name);
+        let net = resnet::resnet18(100);
+        let baseline = engine().run(Design::CompactDdm, &net, 8).unwrap();
+        let path = warmed(&root);
+        corrupt(&path);
+
+        let store = PlanStore::open_existing(&root).unwrap();
+        let err = store
+            .load(&presets::compact_rram_41mm2(), &net, PartitionStrategy::Greedy, true)
+            .expect_err("corrupted entry must not load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains(expect_msg), "`{name}` gave: {msg}");
+
+        let eng = engine().with_store(&root).unwrap();
+        let pt = eng.run(Design::CompactDdm, &net, 8).unwrap();
+        assert_eq!(
+            pt.throughput_fps.to_bits(),
+            baseline.throughput_fps.to_bits(),
+            "recompute after `{name}` must be bitwise clean"
+        );
+        let stats = eng.cache_stats();
+        assert_eq!(stats.store_errors, 1, "{name}: {stats:?}");
+        assert_eq!(stats.misses, 1, "{name}: {stats:?}");
+
+        // The recompute's write-back healed the entry.
+        assert!(
+            store
+                .load(&presets::compact_rram_41mm2(), &net, PartitionStrategy::Greedy, true)
+                .unwrap()
+                .is_some(),
+            "`{name}` entry not healed"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn truncated_entry_recomputes_cleanly() {
+        assert_recovers(
+            "truncated",
+            |path| {
+                let bytes = std::fs::read(path).unwrap();
+                std::fs::write(path, &bytes[..bytes.len() / 2]).unwrap();
+            },
+            "truncated",
+        );
+    }
+
+    #[test]
+    fn wrong_version_byte_recomputes_cleanly() {
+        assert_recovers(
+            "version",
+            |path| {
+                let mut bytes = std::fs::read(path).unwrap();
+                bytes[8] = 0xfe; // version word, little-endian low byte
+                std::fs::write(path, &bytes).unwrap();
+            },
+            "unsupported plan store version",
+        );
+    }
+
+    #[test]
+    fn corrupted_payload_fails_the_checksum_and_recomputes() {
+        assert_recovers(
+            "payload",
+            |path| {
+                let mut bytes = std::fs::read(path).unwrap();
+                let n = bytes.len();
+                bytes[n - 12] ^= 0xff; // payload byte; checksum now disagrees
+                std::fs::write(path, &bytes).unwrap();
+            },
+            "checksum mismatch",
+        );
+    }
+
+    #[test]
+    fn foreign_file_is_rejected_as_bad_magic() {
+        assert_recovers(
+            "magic",
+            |path| std::fs::write(path, b"definitely not a plan store entry").unwrap(),
+            "bad magic",
+        );
+    }
+
+    #[test]
+    fn unreadable_store_root_is_a_clean_error() {
+        let root = tmp_store("file_root");
+        std::fs::create_dir_all(root.parent().unwrap()).unwrap();
+        std::fs::write(&root, b"a file, not a directory").unwrap();
+        let err = Engine::compact(presets::lpddr5())
+            .with_store(&root)
+            .expect_err("a file cannot be a store root");
+        assert!(format!("{err:#}").contains("not a directory"), "unexpected: {err:#}");
+        let _ = std::fs::remove_file(&root);
+    }
+}

@@ -1,0 +1,134 @@
+//! Persistent plan store integration: a store-backed engine must be
+//! bitwise-invisible in the numbers, visible only in the accounting
+//! (store hits instead of fresh computations), and safe under concurrent
+//! writers of the same deterministic entry.
+
+use std::path::PathBuf;
+
+use pimflow::cfg::presets;
+use pimflow::coordinator::{Arrival, SimServeConfig};
+use pimflow::explore;
+use pimflow::nn::resnet;
+use pimflow::sim::{Design, DesignPoint, Engine, PlanStore};
+
+fn tmp_store(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pimflow_plan_store_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn engine() -> Engine {
+    Engine::compact(presets::lpddr5())
+}
+
+fn assert_same_bits(a: &DesignPoint, b: &DesignPoint) {
+    let ctx = format!("({}, {}, b={})", a.network, a.design.label(), a.batch);
+    assert_eq!(a.design, b.design, "{ctx}");
+    assert_eq!(a.network, b.network, "{ctx}");
+    assert_eq!(a.weights, b.weights, "{ctx}");
+    assert_eq!(a.batch, b.batch, "{ctx}");
+    assert_eq!(a.throughput_fps.to_bits(), b.throughput_fps.to_bits(), "{ctx}");
+    assert_eq!(a.tops_per_watt.to_bits(), b.tops_per_watt.to_bits(), "{ctx}");
+    assert_eq!(a.gops_per_mm2.to_bits(), b.gops_per_mm2.to_bits(), "{ctx}");
+    assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits(), "{ctx}");
+    assert_eq!(a.compute_fraction.to_bits(), b.compute_fraction.to_bits(), "{ctx}");
+    assert_eq!(a.num_parts, b.num_parts, "{ctx}");
+}
+
+#[test]
+fn store_backed_sweep_is_bitwise_identical_to_memory() {
+    let root = tmp_store("bitwise");
+    let net = resnet::resnet18(100);
+    let batches = [1u32, 16, 64];
+
+    let plain = engine().sweep(&net, &Design::FIG8, &batches).unwrap();
+
+    // Cold store: every plan is a fresh computation, written back to disk.
+    let cold = engine().with_store(&root).unwrap();
+    let cold_pts = cold.sweep(&net, &Design::FIG8, &batches).unwrap();
+    let cs = cold.cache_stats();
+    assert_eq!(cs.misses, Design::FIG8.len() as u64, "{cs:?}");
+    assert_eq!(cs.store_hits, 0, "{cs:?}");
+    assert_eq!(cs.store_errors, 0, "{cs:?}");
+    assert_eq!(cold.store().unwrap().num_entries().unwrap(), Design::FIG8.len());
+
+    // Warm store, fresh process (modeled by a fresh engine): zero fresh
+    // plan computations — every plan loads from disk.
+    let warm = engine().with_store(&root).unwrap();
+    let warm_pts = warm.sweep(&net, &Design::FIG8, &batches).unwrap();
+    let ws = warm.cache_stats();
+    assert_eq!(ws.misses, 0, "warm store must compute nothing fresh: {ws:?}");
+    assert_eq!(ws.store_hits, Design::FIG8.len() as u64, "{ws:?}");
+    assert_eq!(ws.store_errors, 0, "{ws:?}");
+
+    assert_eq!(plain.len(), cold_pts.len());
+    assert_eq!(plain.len(), warm_pts.len());
+    for ((a, b), c) in plain.iter().zip(&cold_pts).zip(&warm_pts) {
+        assert_same_bits(a, b);
+        assert_same_bits(a, c);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn warm_store_serving_replays_with_zero_fresh_plans() {
+    let root = tmp_store("serving");
+    let names = ["mobilenetv1", "resnet18", "vgg11"];
+    let (nets, trace) = explore::mixed_trace(&names, 64, Arrival::Burst, 17).unwrap();
+    let cfg = SimServeConfig::default();
+
+    let cold = engine().with_store(&root).unwrap();
+    let cold_rep = explore::replay(&cold, &nets, &trace, cfg.clone()).unwrap();
+    assert_eq!(
+        cold_rep.plans_computed,
+        names.len() as u64,
+        "cold store pays one fresh plan per distinct network"
+    );
+
+    let warm = engine().with_store(&root).unwrap();
+    let warm_rep = explore::replay(&warm, &nets, &trace, cfg).unwrap();
+    assert_eq!(warm_rep.plans_computed, 0, "warm store must serve K networks for free");
+    let ws = warm.cache_stats();
+    assert_eq!(ws.store_hits, names.len() as u64, "{ws:?}");
+    assert_eq!(ws.misses, 0, "{ws:?}");
+
+    // The replayed numbers are bitwise identical to the cold run.
+    assert_eq!(cold_rep.span_s.to_bits(), warm_rep.span_s.to_bits());
+    assert_eq!(cold_rep.slo_attainment().to_bits(), warm_rep.slo_attainment().to_bits());
+    assert_eq!(cold_rep.offered(), warm_rep.offered());
+    assert_eq!(cold_rep.batches(), warm_rep.batches());
+    assert_eq!(cold_rep.reloads(), warm_rep.reloads());
+    for (a, b) in cold_rep.per_net.iter().zip(&warm_rep.per_net) {
+        assert_eq!(a.network, b.network);
+        assert_eq!(a.completed, b.completed);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn concurrent_double_writes_converge_on_one_entry() {
+    let root = tmp_store("race");
+    let net = resnet::resnet18(100);
+    let baseline = engine().run(Design::CompactDdm, &net, 8).unwrap();
+
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                let eng = engine().with_store(&root).unwrap();
+                let pt = eng.run(Design::CompactDdm, &net, 8).unwrap();
+                assert_eq!(pt.throughput_fps.to_bits(), baseline.throughput_fps.to_bits());
+            });
+        }
+    });
+
+    // All racers wrote the same deterministic bytes: one valid entry.
+    let store = PlanStore::open_existing(&root).unwrap();
+    assert_eq!(store.num_entries().unwrap(), 1);
+    let reader = engine().with_store(&root).unwrap();
+    let pt = reader.run(Design::CompactDdm, &net, 8).unwrap();
+    assert_eq!(pt.throughput_fps.to_bits(), baseline.throughput_fps.to_bits());
+    let stats = reader.cache_stats();
+    assert_eq!(stats.misses, 0, "{stats:?}");
+    assert_eq!(stats.store_hits, 1, "{stats:?}");
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,125 @@
+//! Shard/merge semantics: an N-way sharded sweep, merged, must equal the
+//! unsharded sweep bitwise; merging is idempotent and overlap-tolerant;
+//! and merged shard *stores* warm-start an engine to zero fresh plans.
+
+use std::path::PathBuf;
+
+use pimflow::cfg::presets;
+use pimflow::explore::{merge_shard_points, sweep_grid, ShardSpec};
+use pimflow::nn::{zoo, Network};
+use pimflow::sim::{Design, DesignPoint, Engine, PlanStore};
+
+fn tmp_store(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pimflow_store_shard_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn engine() -> Engine {
+    Engine::compact(presets::lpddr5())
+}
+
+/// A small zoo grid: three networks x the Fig-8 designs x two batches.
+fn grid() -> (Vec<Network>, Vec<Design>, Vec<u32>) {
+    let nets = ["mobilenetv1", "resnet18", "vgg11"]
+        .iter()
+        .map(|n| zoo::by_name(n, 100).unwrap())
+        .collect();
+    (nets, Design::FIG8.to_vec(), vec![1, 16])
+}
+
+fn assert_same_bits(a: &DesignPoint, b: &DesignPoint) {
+    let ctx = format!("({}, {}, b={})", a.network, a.design.label(), a.batch);
+    assert_eq!(a.design, b.design, "{ctx}");
+    assert_eq!(a.network, b.network, "{ctx}");
+    assert_eq!(a.weights, b.weights, "{ctx}");
+    assert_eq!(a.batch, b.batch, "{ctx}");
+    assert_eq!(a.throughput_fps.to_bits(), b.throughput_fps.to_bits(), "{ctx}");
+    assert_eq!(a.tops_per_watt.to_bits(), b.tops_per_watt.to_bits(), "{ctx}");
+    assert_eq!(a.gops_per_mm2.to_bits(), b.gops_per_mm2.to_bits(), "{ctx}");
+    assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits(), "{ctx}");
+    assert_eq!(a.compute_fraction.to_bits(), b.compute_fraction.to_bits(), "{ctx}");
+    assert_eq!(a.num_parts, b.num_parts, "{ctx}");
+}
+
+#[test]
+fn two_shards_merge_to_the_unsharded_grid_bitwise() {
+    let (nets, designs, batches) = grid();
+    let full = sweep_grid(&engine(), &nets, &designs, &batches, ShardSpec::full()).unwrap();
+    assert_eq!(full.len(), nets.len() * designs.len() * batches.len());
+
+    // Each shard runs on its own fresh engine — separate processes in CI.
+    let s0 = sweep_grid(&engine(), &nets, &designs, &batches, ShardSpec::parse("0/2").unwrap())
+        .unwrap();
+    let s1 = sweep_grid(&engine(), &nets, &designs, &batches, ShardSpec::parse("1/2").unwrap())
+        .unwrap();
+    assert_eq!(s0.len() + s1.len(), full.len(), "shards partition the grid");
+
+    let merged = merge_shard_points(&nets, &designs, &batches, &[s0, s1]).unwrap();
+    assert_eq!(merged.len(), full.len());
+    for (a, b) in full.iter().zip(&merged) {
+        assert_same_bits(a, b);
+    }
+}
+
+#[test]
+fn merge_is_idempotent_and_dedupes_overlapping_shards() {
+    let (nets, designs, batches) = grid();
+    let full = sweep_grid(&engine(), &nets, &designs, &batches, ShardSpec::full()).unwrap();
+    let s0 = sweep_grid(&engine(), &nets, &designs, &batches, ShardSpec::parse("0/2").unwrap())
+        .unwrap();
+    let s1 = sweep_grid(&engine(), &nets, &designs, &batches, ShardSpec::parse("1/2").unwrap())
+        .unwrap();
+
+    // The same shard offered twice, plus a full overlap with the
+    // unsharded output: every duplicate deduplicates after the bitwise
+    // equality check.
+    let shards = [s0.clone(), s0, s1, full.clone()];
+    let merged = merge_shard_points(&nets, &designs, &batches, &shards).unwrap();
+    assert_eq!(merged.len(), full.len());
+    for (a, b) in full.iter().zip(&merged) {
+        assert_same_bits(a, b);
+    }
+}
+
+#[test]
+fn merged_shard_stores_warm_start_to_zero_fresh_plans() {
+    let (nets, designs, batches) = grid();
+    let root0 = tmp_store("s0");
+    let root1 = tmp_store("s1");
+    let merged_root = tmp_store("merged");
+
+    let e0 = engine().with_store(&root0).unwrap();
+    let s0 = sweep_grid(&e0, &nets, &designs, &batches, ShardSpec::parse("0/2").unwrap()).unwrap();
+    let e1 = engine().with_store(&root1).unwrap();
+    let s1 = sweep_grid(&e1, &nets, &designs, &batches, ShardSpec::parse("1/2").unwrap()).unwrap();
+    // Each shard's store holds exactly its own fresh plans.
+    assert_eq!(e0.store().unwrap().num_entries().unwrap() as u64, e0.cache_stats().misses);
+    assert_eq!(e1.store().unwrap().num_entries().unwrap() as u64, e1.cache_stats().misses);
+
+    let merged = PlanStore::open(&merged_root).unwrap();
+    let m0 = merged.merge_from(&PlanStore::open_existing(&root0).unwrap()).unwrap();
+    let m1 = merged.merge_from(&PlanStore::open_existing(&root1).unwrap()).unwrap();
+    assert_eq!(m0.identical + m1.identical, 0, "shard stores are disjoint");
+    assert_eq!(merged.num_entries().unwrap(), m0.copied + m1.copied);
+    // Merging again copies nothing and changes nothing.
+    let again = merged.merge_from(&PlanStore::open_existing(&root0).unwrap()).unwrap();
+    assert_eq!(again.copied, 0);
+    assert_eq!(again.identical, m0.copied);
+
+    // A fresh engine over the merged store sweeps the whole grid with
+    // zero fresh plan computations, bitwise equal to the merged points.
+    let warm = engine().with_store(&merged_root).unwrap();
+    let full = sweep_grid(&warm, &nets, &designs, &batches, ShardSpec::full()).unwrap();
+    let stats = warm.cache_stats();
+    assert_eq!(stats.misses, 0, "merged store covers every plan: {stats:?}");
+    assert_eq!(stats.store_hits, (m0.copied + m1.copied) as u64, "{stats:?}");
+    let reassembled = merge_shard_points(&nets, &designs, &batches, &[s0, s1]).unwrap();
+    for (a, b) in full.iter().zip(&reassembled) {
+        assert_same_bits(a, b);
+    }
+
+    for root in [&root0, &root1, &merged_root] {
+        let _ = std::fs::remove_dir_all(root);
+    }
+}
