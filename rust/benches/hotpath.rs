@@ -14,8 +14,11 @@ use pimflow::coordinator::{
     SimServeConfig, SimServer,
 };
 use pimflow::ddm;
-use pimflow::explore::{fig6_sweep, mixed_trace, replay, replay_stream, stream_trace, BATCHES};
+use pimflow::explore::{
+    fig6_sweep, mixed_trace, replay, replay_stream, replay_stream_obs, stream_trace, BATCHES,
+};
 use pimflow::nn::{resnet, zoo};
+use pimflow::obs::TraceSink;
 use pimflow::partition::{
     exact_plan, partition, search_partition, search_partition_with, ExactLimits,
 };
@@ -243,6 +246,56 @@ fn main() {
             "streaming replay blew the wall-clock budget: {stream_median:.3} s for {stream_n} requests"
         );
     }
+
+    // Observability overhead: the identical streaming replay with a
+    // Chrome trace_event sink writing straight to disk. The sink never
+    // buffers (events stream to the file as they happen), so the delta
+    // against serve_stream_* prices pure emission + serialization, and
+    // the high-water assert pins the O(1)-memory contract even at 1M
+    // requests.
+    let trace_path = std::env::temp_dir().join("pimflow_bench_stream_trace.json");
+    let traced_label = if quick {
+        "serve_stream_100k_32w_traced"
+    } else {
+        "serve_stream_1m_32w_traced"
+    };
+    let traced_median = b
+        .case(traced_label, || {
+            let stream = stream_trace(
+                stream_nets.len(),
+                None,
+                Arrival::Poisson(2000.0),
+                RateSchedule::default(),
+                11,
+            )
+            .take(stream_n);
+            let sink = TraceSink::streaming(&trace_path).unwrap();
+            let report = replay_stream_obs(
+                &stream_engine,
+                &stream_nets,
+                stream,
+                stream_cfg.clone(),
+                Some(sink),
+                false,
+            )
+            .unwrap();
+            let done = report.trace.as_ref().expect("traced replay must return TraceDone");
+            assert_eq!(
+                done.high_water, 0,
+                "streaming sink must never buffer events in memory"
+            );
+            assert!(done.events > 0, "traced replay must emit timeline events");
+            report
+        })
+        .median
+        .as_secs_f64();
+    println!(
+        "traced streaming replay: {stream_n} requests in {:.3} s median \
+         (sink overhead {:+.1}% vs untraced)",
+        traced_median,
+        100.0 * (traced_median / stream_median - 1.0)
+    );
+    let _ = std::fs::remove_file(&trace_path);
 
     b.report();
 
@@ -504,9 +557,11 @@ fn main() {
     // BENCH_hotpath.json is regenerated by every bench run, so perf
     // regressions show up as a diff.
     let note = if quick {
-        "quick-mode baseline (PIMFLOW_BENCH_QUICK=1); regenerate with `cargo bench --bench hotpath`"
+        "quick-mode baseline (PIMFLOW_BENCH_QUICK=1); regenerate with `cargo bench --bench hotpath`. \
+         serve_stream_*_traced vs serve_stream_* prices the streaming trace-sink overhead."
     } else {
-        "regenerated by `cargo bench --bench hotpath`"
+        "regenerated by `cargo bench --bench hotpath`. \
+         serve_stream_*_traced vs serve_stream_* prices the streaming trace-sink overhead."
     };
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
     pimflow::bench_harness::write_bench_json(b.results(), note, &out).unwrap();

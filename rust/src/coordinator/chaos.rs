@@ -356,6 +356,16 @@ impl ChaosStats {
     pub fn max_repair_s(&self) -> f64 {
         self.repairs_s.iter().fold(0.0, |a, &b| a.max(b))
     }
+
+    /// Register fault accounting under `chaos.*`.
+    pub fn register(&self, reg: &mut crate::obs::Registry) {
+        reg.counter("chaos.crashes_total", self.crashes);
+        reg.counter("chaos.recoveries_total", self.recoveries);
+        reg.counter("chaos.repairs_total", self.repaired() as u64);
+        reg.gauge("chaos.downtime_s", self.downtime_s);
+        reg.gauge("chaos.mean_repair_s", self.mean_repair_s());
+        reg.gauge("chaos.max_repair_s", self.max_repair_s());
+    }
 }
 
 #[cfg(test)]

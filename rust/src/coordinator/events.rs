@@ -11,15 +11,15 @@
 //! Events pop in ascending `(t_s, kind rank, worker, push sequence)` order.
 //! The kind ranks break ties at equal timestamps:
 //!
-//! | rank | kind              | meaning                                      |
-//! |------|-------------------|----------------------------------------------|
-//! | 0    | `Completion`      | a worker's in-flight work finishes           |
-//! | 1    | `Crash`           | a scheduled fault takes a worker down        |
-//! | 2    | `Recover`         | a crashed worker comes back                  |
-//! | 3    | `FlushDeadline`   | an open batch's max-wait deadline expires    |
-//! | 4    | `PrewarmDone`     | a controller pre-warm weight stream finishes |
-//! | 5    | `ControllerTick`  | the replica controller runs a planning step  |
-//! | 6    | `Arrival`         | a request arrives (delivered by the caller)  |
+//! | rank | kind              | meaning                                      | timeline emission (when a [`TraceSink`] is attached) |
+//! |------|-------------------|----------------------------------------------|------------------------------------------------------|
+//! | 0    | `Completion`      | a worker's in-flight work finishes           | end of the `exec` span the flush drew                |
+//! | 1    | `Crash`           | a scheduled fault takes a worker down        | `crash` instant + `down` span on the worker lane     |
+//! | 2    | `Recover`         | a crashed worker comes back                  | `recover` instant on the worker lane                 |
+//! | 3    | `FlushDeadline`   | an open batch's max-wait deadline expires    | `reload`/`exec` spans drawn by the flush             |
+//! | 4    | `PrewarmDone`     | a controller pre-warm weight stream finishes | end of the `prewarm` span drawn at issue             |
+//! | 5    | `ControllerTick`  | the replica controller runs a planning step  | `controller_tick` instant on the controller lane     |
+//! | 6    | `Arrival`         | a request arrives (delivered by the caller)  | `batch_open` instant when it opens a fresh batch     |
 //!
 //! Completions settle before faults land (work that finished by `t` is
 //! already committed when the crash at `t` hits), a crash at exactly a
@@ -42,6 +42,7 @@
 //!
 //! [`SimServer`]: super::SimServer
 //! [`FaultPlan`]: super::chaos::FaultPlan
+//! [`TraceSink`]: crate::obs::TraceSink
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

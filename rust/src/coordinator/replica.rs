@@ -148,6 +148,16 @@ pub enum ResidencyChange {
     Evict,
 }
 
+impl ResidencyChange {
+    /// Stable lowercase name (timeline event names, CSV cells).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ResidencyChange::Load => "load",
+            ResidencyChange::Evict => "evict",
+        }
+    }
+}
+
 /// Why a residency event happened.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ResidencyCause {
@@ -162,6 +172,18 @@ pub enum ResidencyCause {
     /// (see `coordinator::chaos`). Always an evict; the repair shows up
     /// as a later `Batch` or `Prewarm` load somewhere in the fleet.
     Crash,
+}
+
+impl ResidencyCause {
+    /// Stable lowercase name (timeline event args, CSV cells).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ResidencyCause::Batch => "batch",
+            ResidencyCause::Prewarm => "prewarm",
+            ResidencyCause::Drain => "drain",
+            ResidencyCause::Crash => "crash",
+        }
+    }
 }
 
 /// One residency change, as logged by the serving simulator. The full log

@@ -86,6 +86,8 @@ use anyhow::Result;
 
 use crate::explore::batch_opt::max_batch_for_latency;
 use crate::nn::Network;
+use crate::obs::{Arg, MoveCause, MovementLedger, Registry, TraceDone, TraceSink};
+use crate::pim::EnergyLedger;
 use crate::sim::engine::{Design, Engine};
 use crate::util::LatencyHist;
 
@@ -264,6 +266,28 @@ impl NetStats {
             self.latency_sum_s / self.completed as f64
         }
     }
+
+    /// Register this network's counters under `net.<name>.*`.
+    pub fn register(&self, reg: &mut Registry) {
+        let p = |k: &str| format!("net.{}.{k}", self.network);
+        reg.counter(p("offered_total"), self.offered);
+        reg.counter(p("accepted_total"), self.accepted);
+        reg.counter(p("coalesced_total"), self.coalesced);
+        reg.counter(p("rejected_total"), self.rejected);
+        reg.counter(p("completed_total"), self.completed);
+        reg.counter(p("batches_total"), self.batches);
+        reg.counter(p("reloads_total"), self.reloads);
+        reg.counter(p("prewarms_total"), self.prewarms);
+        reg.counter(p("drains_total"), self.drains);
+        reg.counter(p("within_slo_total"), self.within_slo);
+        reg.counter(p("missed_by_fault_total"), self.missed_by_fault);
+        reg.counter(p("missed_bug_total"), self.missed_bug);
+        reg.counter(p("lost_to_crash_total"), self.lost_to_crash);
+        reg.gauge(p("mean_batch"), self.mean_batch());
+        reg.gauge(p("slo_attainment"), self.slo_attainment());
+        reg.gauge(p("mean_latency_s"), self.mean_latency_s());
+        reg.hist(&p("latency"), &self.hist);
+    }
 }
 
 /// End-of-trace report: per-network rows, per-worker rows, residency
@@ -295,6 +319,14 @@ pub struct SimServeReport {
     /// Fleet-wide fault-injection accounting (crashes, recoveries,
     /// downtime, residency-repair times). Default-zero on fault-free runs.
     pub chaos: ChaosStats,
+    /// Timeline summary when a [`TraceSink`] was attached
+    /// ([`SimServer::attach_trace`]); `None` otherwise — and with no sink
+    /// the replay is bitwise identical to the pre-observability path
+    /// (pinned in `tests/obs_trace.rs`).
+    pub trace: Option<TraceDone>,
+    /// Fleet energy/data-movement attribution when enabled
+    /// ([`SimServer::attach_movement`]); `None` otherwise.
+    pub movement: Option<MovementLedger>,
 }
 
 impl SimServeReport {
@@ -405,6 +437,47 @@ impl SimServeReport {
         }
         h
     }
+
+    /// Register the whole report into a [`Registry`]: trace-wide `serve.*`
+    /// aggregates, `net.<name>.*` per network, `worker.<id>.*` per worker,
+    /// `chaos.*`, and `movement.*` when attribution ran. The CLI composes
+    /// this with `plan_cache.*` / `store.*` (engine-owned) and `log.*`
+    /// into the `--metrics-out` snapshot.
+    pub fn register_metrics(&self, reg: &mut Registry) {
+        reg.counter("serve.offered_total", self.offered());
+        reg.counter("serve.accepted_total", self.accepted());
+        reg.counter("serve.coalesced_total", self.coalesced());
+        reg.counter("serve.rejected_total", self.rejected());
+        reg.counter("serve.completed_total", self.completed());
+        reg.counter("serve.batches_total", self.batches());
+        reg.counter("serve.reloads_total", self.reloads());
+        reg.counter("serve.prewarms_total", self.prewarms());
+        reg.counter("serve.drains_total", self.drains());
+        reg.counter("serve.goodput_total", self.goodput());
+        reg.counter("serve.missed_by_fault_total", self.missed_by_fault());
+        reg.counter("serve.missed_bug_total", self.missed_bug());
+        reg.counter("serve.lost_to_crash_total", self.lost_to_crash());
+        reg.counter("serve.plans_computed_total", self.plans_computed);
+        reg.counter("serve.workers", self.workers() as u64);
+        reg.gauge("serve.span_s", self.span_s);
+        reg.gauge("serve.slo_attainment", self.slo_attainment());
+        reg.gauge("serve.mean_utilization", self.mean_utilization());
+        reg.gauge("serve.throughput_rps", self.throughput_rps());
+        reg.hist("serve.latency", &self.fleet_hist());
+        for n in &self.per_net {
+            n.register(reg);
+        }
+        for w in &self.per_worker {
+            w.register(reg);
+        }
+        self.chaos.register(reg);
+        if let Some(m) = &self.movement {
+            m.register(reg);
+        }
+        if let Some(t) = &self.trace {
+            reg.counter("trace.events_total", t.events);
+        }
+    }
 }
 
 /// The simulated serving coordinator. Borrows a shared [`Engine`]; all
@@ -465,6 +538,21 @@ pub struct SimServer<'e> {
     /// ticks plus fault events are quiesced so post-trace events cannot
     /// perturb the report (the legacy end-of-trace scan never saw them).
     finishing: bool,
+    /// Timeline sink ([`Self::attach_trace`]). `None` (the default) keeps
+    /// every replay bitwise identical to the pre-observability path: all
+    /// emission sites are `if let Some` guards around the existing
+    /// arithmetic, never inside it.
+    trace: Option<TraceSink>,
+    /// Energy/data-movement ledger ([`Self::attach_movement`]); same
+    /// inertness contract as `trace`.
+    movement: Option<MovementLedger>,
+    /// Per-(net, batch) energy + DRAM bytes, filled alongside `makespans`
+    /// from the *same* memoized `system_report` call — attribution costs
+    /// zero extra plan work and cannot perturb timing.
+    batch_cost: HashMap<(usize, u32), (EnergyLedger, u64)>,
+    /// Per-network reload price for attribution: `(weight bytes, DRAM
+    /// read joules)`. Filled by `attach_movement`; empty otherwise.
+    reload_cost: Vec<(u64, f64)>,
 }
 
 impl<'e> SimServer<'e> {
@@ -551,7 +639,60 @@ impl<'e> SimServer<'e> {
             chaos: ChaosStats::default(),
             repairs_pending: Vec::new(),
             finishing: false,
+            trace: None,
+            movement: None,
+            batch_cost: HashMap::new(),
+            reload_cost: Vec::new(),
         })
+    }
+
+    /// Attach a timeline sink: lanes are named (`worker <i>`, then
+    /// `controller` / `faults` / `plan` synthetic lanes), the fault plan's
+    /// DRAM brownout windows are drawn up front, and every subsequent
+    /// batch open/exec/reload, pre-warm, residency change, crash/recover,
+    /// and controller tick lands in the trace. Without a sink none of
+    /// those sites allocate or emit.
+    pub fn attach_trace(&mut self, mut sink: TraceSink) {
+        let w = self.workers.len() as u64;
+        for i in 0..self.workers.len() {
+            sink.name_lane(i as u64, &format!("worker {i}"));
+        }
+        sink.name_lane(w, "controller");
+        sink.name_lane(w + 1, "faults");
+        sink.name_lane(w + 2, "plan");
+        for d in &self.cfg.faults.dram_slow {
+            sink.span(
+                "dram_brownout",
+                "fault",
+                w + 1,
+                d.from_s,
+                d.to_s - d.from_s,
+                vec![("factor", Arg::F64(d.factor))],
+            );
+        }
+        self.trace = Some(sink);
+    }
+
+    /// Enable energy/data-movement attribution: every batch completion,
+    /// blocking reload, and pre-warm charges a `(worker, network, cause)`
+    /// cell (see [`crate::obs::movement`]). Reload/pre-warm streams are
+    /// priced once here as pure DRAM movement (the network's weight bytes
+    /// and their read energy over the engine's channel).
+    pub fn attach_movement(&mut self) {
+        self.reload_cost = self
+            .nets
+            .iter()
+            .map(|n| {
+                let bytes = n.weight_bytes();
+                (bytes, self.engine.dram().read_energy_j(bytes))
+            })
+            .collect();
+        self.movement = Some(MovementLedger::new());
+    }
+
+    /// Synthetic lane ids after the per-worker lanes.
+    fn controller_lane(&self) -> u64 {
+        self.workers.len() as u64
     }
 
     /// The tuned per-network batch caps (index-aligned with the networks
@@ -624,6 +765,10 @@ impl<'e> SimServer<'e> {
             .engine
             .system_report(self.cfg.design, &self.nets[net], k)?;
         let m = r.pipeline.makespan_ns * 1e-9;
+        // Attribution rides the same report: per-batch energy and DRAM
+        // transaction bytes, memoized next to the makespan.
+        self.batch_cost
+            .insert((net, k), (r.energy, r.pipeline.trace.total_bytes()));
         self.makespans.insert((net, k), m);
         Ok(m)
     }
@@ -676,6 +821,59 @@ impl<'e> SimServer<'e> {
             };
             start + switch + makespan * self.cfg.faults.straggle_factor(w)
         };
+        // Observability taps: guarded so a sink-less replay does none of
+        // this work (no allocation, no extra arithmetic on the hot path).
+        if self.trace.is_some() || self.movement.is_some() {
+            let switch_actual = if !reloaded {
+                0.0
+            } else if self.cfg.faults.is_off() {
+                self.switch_s[batch.net]
+            } else {
+                self.switch_s[batch.net] / self.cfg.faults.dram_factor(start)
+            };
+            if let Some(tr) = &mut self.trace {
+                let name = &self.nets[batch.net].name;
+                if reloaded {
+                    tr.span(
+                        "reload",
+                        "weights",
+                        w as u64,
+                        start,
+                        switch_actual,
+                        vec![("net", Arg::Str(name.clone()))],
+                    );
+                }
+                tr.span(
+                    "exec",
+                    "batch",
+                    w as u64,
+                    start + switch_actual,
+                    done - start - switch_actual,
+                    vec![
+                        ("net", Arg::Str(name.clone())),
+                        ("k", Arg::U64(k as u64)),
+                        ("reloaded", Arg::Bool(reloaded)),
+                    ],
+                );
+            }
+            if let Some(mv) = &mut self.movement {
+                let (energy, bytes) = self.batch_cost[&(batch.net, k)];
+                mv.charge(w, batch.net, MoveCause::Batch, bytes, &energy);
+                if reloaded {
+                    let (rb, rj) = self.reload_cost[batch.net];
+                    mv.charge(
+                        w,
+                        batch.net,
+                        MoveCause::Reload,
+                        rb,
+                        &EnergyLedger {
+                            dram_j: rj,
+                            ..EnergyLedger::default()
+                        },
+                    );
+                }
+            }
+        }
         if reloaded {
             if let Some(old) = self.replicas.resident(w) {
                 self.log_residency(ResidencyEvent {
@@ -769,7 +967,22 @@ impl<'e> SimServer<'e> {
     }
 
     /// Append to the residency log unless per-request retention is off.
+    /// A residency instant also reaches the timeline (when one is
+    /// attached) — *not* gated by retention, so streaming replays still
+    /// trace residency churn.
     fn log_residency(&mut self, ev: ResidencyEvent) {
+        if let Some(tr) = &mut self.trace {
+            tr.instant(
+                ev.change.label(),
+                "residency",
+                ev.worker as u64,
+                ev.t_s,
+                vec![
+                    ("net", Arg::Str(self.nets[ev.net].name.clone())),
+                    ("cause", Arg::Str(ev.cause.label().to_string())),
+                ],
+            );
+        }
         if self.cfg.retain_per_request {
             self.residency_log.push(ev);
         }
@@ -799,6 +1012,10 @@ impl<'e> SimServer<'e> {
         let w = c.worker;
         self.chaos.crashes += 1;
         self.chaos.downtime_s += c.down_s;
+        if let Some(tr) = &mut self.trace {
+            tr.instant("crash", "fault", w as u64, t, vec![]);
+            tr.span("down", "fault", w as u64, t, c.down_s, vec![]);
+        }
         if let Some(b) = self.workers[w].open.take() {
             // The pending FlushDeadline event goes stale automatically:
             // its liveness check requires an open batch.
@@ -893,6 +1110,10 @@ impl<'e> SimServer<'e> {
                         // within the same offer), but the guard keeps the
                         // end-of-trace drain provably inert.
                         if !self.finishing {
+                            if let Some(tr) = &mut self.trace {
+                                let lane = self.workers.len() as u64;
+                                tr.instant("controller_tick", "controller", lane, ev.t_s, vec![]);
+                            }
                             self.run_controller(ev.t_s);
                         }
                     }
@@ -912,6 +1133,9 @@ impl<'e> SimServer<'e> {
                     EventKind::Recover => {
                         if !self.finishing {
                             self.chaos.recoveries += 1;
+                            if let Some(tr) = &mut self.trace {
+                                tr.instant("recover", "fault", ev.worker as u64, ev.t_s, vec![]);
+                            }
                         }
                     }
                     // Arrivals are delivered by the caller via `offer`.
@@ -968,7 +1192,7 @@ impl<'e> SimServer<'e> {
         if !self.cfg.faults.is_off() {
             self.note_residency_restored(net, now);
         }
-        let done = {
+        let (start, cost, done) = {
             let wk = &mut self.workers[w];
             let start = wk.busy_until_s.max(now);
             // Pre-warms stream over the same DRAM channel reloads use, so
@@ -983,8 +1207,31 @@ impl<'e> SimServer<'e> {
             wk.busy_s += cost;
             wk.prewarms += 1;
             wk.loaded = Some(net);
-            wk.busy_until_s
+            (start, cost, wk.busy_until_s)
         };
+        if let Some(tr) = &mut self.trace {
+            tr.span(
+                "prewarm",
+                "weights",
+                w as u64,
+                start,
+                cost,
+                vec![("net", Arg::Str(self.nets[net].name.clone()))],
+            );
+        }
+        if let Some(mv) = &mut self.movement {
+            let (rb, rj) = self.reload_cost[net];
+            mv.charge(
+                w,
+                net,
+                MoveCause::Prewarm,
+                rb,
+                &EnergyLedger {
+                    dram_j: rj,
+                    ..EnergyLedger::default()
+                },
+            );
+        }
         self.prewarms_pending += 1;
         self.events.push(Event {
             t_s: done,
@@ -1169,6 +1416,15 @@ impl<'e> SimServer<'e> {
             deadline_s: t + self.cfg.max_wait_s,
             members: vec![(req.id, t)],
         });
+        if let Some(tr) = &mut self.trace {
+            tr.instant(
+                "batch_open",
+                "batch",
+                w as u64,
+                t,
+                vec![("net", Arg::Str(self.nets[req.net].name.clone()))],
+            );
+        }
         self.stats[req.net].accepted += 1;
         if cap == 1 {
             // Full on arrival: flushes right here, so no deadline event
@@ -1203,6 +1459,30 @@ impl<'e> SimServer<'e> {
             .iter()
             .map(|w| w.busy_until_s)
             .fold(0.0, f64::max);
+        let trace = match self.trace.take() {
+            Some(mut tr) => {
+                // Plan-ladder activity (recorded only when the engine was
+                // built `with_plan_events`) lands on the synthetic plan
+                // lane as sequenced instants at t = 0 — plan lookups are
+                // priced outside virtual time.
+                let lane = self.controller_lane() + 2;
+                for (i, e) in self.engine.take_plan_events().into_iter().enumerate() {
+                    tr.instant(
+                        e.kind.label(),
+                        "plan",
+                        lane,
+                        0.0,
+                        vec![
+                            ("net", Arg::Str(e.net)),
+                            ("ddm", Arg::Bool(e.ddm)),
+                            ("seq", Arg::U64(i as u64)),
+                        ],
+                    );
+                }
+                Some(tr.finish()?)
+            }
+            None => None,
+        };
         Ok(SimServeReport {
             per_net: self.stats,
             per_worker: self.workers.iter().map(VWorker::stats).collect(),
@@ -1212,6 +1492,8 @@ impl<'e> SimServer<'e> {
             residency_log: self.residency_log,
             replica_holders: self.replicas.snapshot(),
             chaos: self.chaos,
+            trace,
+            movement: self.movement,
         })
     }
 }
@@ -1344,6 +1626,8 @@ mod tests {
             residency_log: Vec::new(),
             replica_holders: Vec::new(),
             chaos: ChaosStats::default(),
+            trace: None,
+            movement: None,
         };
         assert_eq!(r.mean_utilization(), 0.0);
         assert_eq!(r.throughput_rps(), 0.0);
@@ -1835,6 +2119,54 @@ mod tests {
         assert_eq!(r.missed_bug(), 0, "and the miss is fully attributed");
         assert_eq!(r.goodput(), 0);
         assert!(r.span_s > clean.span_s * 10.0, "execution really slowed");
+    }
+
+    #[test]
+    fn attached_trace_and_movement_reach_the_report() {
+        let eng = engine().with_plan_events();
+        let nets = [
+            zoo::by_name("mobilenetv1", 100).unwrap(),
+            zoo::by_name("vgg11", 100).unwrap(),
+        ];
+        let cfg = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 2,
+            max_wait_s: 0.0,
+            ..SimServeConfig::default()
+        };
+        let mut sv = SimServer::new(&eng, &nets, cfg).unwrap();
+        sv.attach_trace(TraceSink::buffered());
+        sv.attach_movement();
+        run(&mut sv, &reqs(&[(0, 0.0), (1, 0.0), (0, 0.0)]));
+        let r = sv.finish().unwrap();
+        let done = r.trace.as_ref().expect("sink was attached");
+        let doc = done.json.as_ref().expect("buffered sink renders inline");
+        let n = crate::obs::validate_chrome_trace(doc).unwrap();
+        assert_eq!(n as u64, done.events);
+        let counts = crate::obs::event_counts(doc).unwrap();
+        assert_eq!(counts[&("batch".to_string(), "exec".to_string())], 3);
+        assert_eq!(counts[&("weights".to_string(), "reload".to_string())], 3);
+        assert!(
+            counts.contains_key(&("plan".to_string(), "computed".to_string())),
+            "plan lane carries the engine's lookup ladder: {counts:?}"
+        );
+        let mv = r.movement.as_ref().expect("attribution was attached");
+        assert!(mv.total_bytes() > 0);
+        assert_eq!(mv.by_cause(MoveCause::Batch).events, r.batches());
+        assert_eq!(mv.by_cause(MoveCause::Reload).events, r.reloads());
+        let share = mv.movement_fraction();
+        assert!(share > 0.0 && share < 1.0, "movement share {share}");
+        // The whole report registers into one deterministic snapshot.
+        let mut reg = Registry::new();
+        r.register_metrics(&mut reg);
+        assert_eq!(reg.get_counter("serve.completed_total"), Some(r.completed()));
+        assert_eq!(reg.get_counter("trace.events_total"), Some(done.events));
+        assert_eq!(
+            reg.get_counter("net.vgg11.batches_total"),
+            Some(r.per_net[1].batches)
+        );
+        assert_eq!(reg.get_gauge("movement.fraction"), Some(share));
+        assert!(reg.get_counter("worker.0.batches_total").is_some());
     }
 
     #[test]

@@ -73,6 +73,20 @@ impl WorkerStats {
             self.busy_s / fleet_span_s
         }
     }
+
+    /// Register this worker's counters under `worker.<id>.*`.
+    pub fn register(&self, reg: &mut crate::obs::Registry) {
+        let p = |k: &str| format!("worker.{}.{k}", self.id);
+        reg.counter(p("batches_total"), self.batches);
+        reg.counter(p("completed_total"), self.completed);
+        reg.counter(p("reloads_total"), self.reloads);
+        reg.counter(p("prewarms_total"), self.prewarms);
+        reg.counter(p("crashes_total"), self.crashes);
+        reg.gauge(p("busy_s"), self.busy_s);
+        reg.gauge(p("down_s"), self.down_s);
+        reg.gauge(p("idle_at_s"), self.idle_at_s);
+        reg.hist(&p("latency"), &self.hist);
+    }
 }
 
 /// One virtual worker: FIFO over its own batches, one open batch at a

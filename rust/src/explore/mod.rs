@@ -31,7 +31,8 @@ pub use nn_sweep::{
 };
 pub use trace::{
     chaos_sweep, closed_loop_replay, fault_ladder, gen_trace, gen_trace_mix, mixed_trace,
-    mixed_trace_mix, mixed_trace_stream, placement_sweep, replay, replay_stream,
-    replication_sweep, slo_sweep, stream_trace, ChaosGrid, ChaosPoint, ClosedLoopArrival,
-    PlacementPoint, ReplicationGrid, ReplicationPoint, TraceStream, DEFAULT_NUM_CLASSES,
+    mixed_trace_mix, mixed_trace_stream, movement_sweep, placement_sweep, replay, replay_obs,
+    replay_stream, replay_stream_obs, replication_sweep, slo_sweep, stream_trace, ChaosGrid,
+    ChaosPoint, ClosedLoopArrival, MovementPoint, PlacementPoint, ReplicationGrid,
+    ReplicationPoint, TraceStream, DEFAULT_NUM_CLASSES,
 };

@@ -43,6 +43,7 @@ use crate::coordinator::sim_serve::{
     SimRequest, SimServeConfig, SimServeReport, SimServer, Verdict,
 };
 use crate::nn::{zoo, Network};
+use crate::obs::TraceSink;
 use crate::sim::engine::Engine;
 use crate::util::Rng;
 
@@ -287,6 +288,122 @@ pub fn replay_stream(
         server.offer(req)?;
     }
     server.finish()
+}
+
+/// [`replay`] with observability attached: an optional [`TraceSink`]
+/// draws the fleet timeline (the report's `trace` carries the finished
+/// export) and, when `movement` is set, a
+/// [`MovementLedger`](crate::obs::MovementLedger) attributes every byte
+/// and joule by `(worker, network, cause)` (the report's `movement`).
+/// With `sink: None` and `movement: false` this is [`replay`] exactly —
+/// same construction, same arithmetic, bitwise-identical report.
+pub fn replay_obs(
+    engine: &Engine,
+    nets: &[Network],
+    trace: &[SimRequest],
+    cfg: SimServeConfig,
+    sink: Option<TraceSink>,
+    movement: bool,
+) -> Result<SimServeReport> {
+    let mut server = SimServer::new(engine, nets, cfg)?;
+    if let Some(sink) = sink {
+        server.attach_trace(sink);
+    }
+    if movement {
+        server.attach_movement();
+    }
+    for req in trace {
+        server.offer(*req)?;
+    }
+    server.finish()
+}
+
+/// Streaming [`replay_stream`] with observability attached (see
+/// [`replay_obs`]). Per-request retention stays **off**; pair it with
+/// [`TraceSink::streaming`] so the timeline goes straight to disk and the
+/// replay keeps O(workers + open batches) memory however long the trace
+/// runs.
+pub fn replay_stream_obs(
+    engine: &Engine,
+    nets: &[Network],
+    trace: impl IntoIterator<Item = SimRequest>,
+    cfg: SimServeConfig,
+    sink: Option<TraceSink>,
+    movement: bool,
+) -> Result<SimServeReport> {
+    let cfg = SimServeConfig {
+        retain_per_request: false,
+        ..cfg
+    };
+    let mut server = SimServer::new(engine, nets, cfg)?;
+    if let Some(sink) = sink {
+        server.attach_trace(sink);
+    }
+    if movement {
+        server.attach_movement();
+    }
+    for req in trace {
+        server.offer(req)?;
+    }
+    server.finish()
+}
+
+/// One rung of a [`movement_sweep`] ladder: the same trace replayed at
+/// one `max_batch` ceiling with movement attribution attached.
+#[derive(Debug, Clone)]
+pub struct MovementPoint {
+    pub max_batch: u32,
+    /// Off-chip DRAM (data-movement) share of total fleet energy — the
+    /// paper's Fig. 7 complement at fleet scale.
+    pub movement_fraction: f64,
+    pub compute_fraction: f64,
+    /// DRAM bytes charged across the whole replay.
+    pub bytes: u64,
+    pub fleet_energy_j: f64,
+    /// Blocking weight reloads the replay paid at this ceiling.
+    pub reloads: u64,
+    pub report: SimServeReport,
+}
+
+/// The fleet-scale data-movement curve: replay one trace across a
+/// `max_batch` ladder with a [`MovementLedger`](crate::obs::MovementLedger)
+/// attached and report each rung's movement share. Growing the ceiling
+/// amortizes both per-batch DRAM traffic and the reload rate, so the
+/// share falls as batch grows — the paper's Fig. 7 argument lifted to the
+/// fleet (`tests/obs_trace.rs` pins the monotone decrease;
+/// `figures::movement_table` exports `results/movement_sweep.csv`). The
+/// engine is shared: the whole ladder costs one plan per distinct
+/// `(network, batch)` pair, nothing per rung beyond that.
+pub fn movement_sweep(
+    engine: &Engine,
+    nets: &[Network],
+    trace: &[SimRequest],
+    base: &SimServeConfig,
+    batches: &[u32],
+) -> Result<Vec<MovementPoint>> {
+    let mut rows = Vec::with_capacity(batches.len());
+    for &max_batch in batches {
+        anyhow::ensure!(max_batch >= 1, "max_batch must be positive, got {max_batch}");
+        let cfg = SimServeConfig {
+            max_batch,
+            ..base.clone()
+        };
+        let report = replay_obs(engine, nets, trace, cfg, None, true)?;
+        let m = report
+            .movement
+            .as_ref()
+            .expect("replay_obs(movement: true) always attaches a ledger");
+        rows.push(MovementPoint {
+            max_batch,
+            movement_fraction: m.movement_fraction(),
+            compute_fraction: m.compute_fraction(),
+            bytes: m.total_bytes(),
+            fleet_energy_j: m.fleet_energy().total_j(),
+            reloads: report.reloads(),
+            report,
+        });
+    }
+    Ok(rows)
 }
 
 /// One cell of the chaos grid: a full replay of the same trace under one
@@ -1001,6 +1118,54 @@ mod tests {
             assert_eq!(a.hist, b.hist);
         }
         assert_eq!(full.fleet_hist(), lean.fleet_hist());
+    }
+
+    #[test]
+    fn movement_sweep_amortizes_the_share_and_disabled_obs_is_inert() {
+        let engine = Engine::compact(presets::lpddr5());
+        let (nets, trace) =
+            mixed_trace(&["mobilenetv1", "vgg11"], 64, Arrival::Poisson(2000.0), 7).unwrap();
+        let base = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 8,
+            max_wait_s: 0.001,
+            workers: 2,
+            ..SimServeConfig::default()
+        };
+        // No sink, no ledger → replay_obs IS replay, bit for bit.
+        let plain = replay(&engine, &nets, &trace, base.clone()).unwrap();
+        let inert = replay_obs(&engine, &nets, &trace, base.clone(), None, false).unwrap();
+        assert!(inert.trace.is_none() && inert.movement.is_none());
+        assert_eq!(inert.span_s.to_bits(), plain.span_s.to_bits());
+        assert_eq!(inert.completed(), plain.completed());
+        // The ladder attributes real energy at every rung and the
+        // movement share falls as the batch ceiling grows (Fig. 7 at
+        // fleet scale: reload streams and per-batch DRAM amortize).
+        let rows = movement_sweep(&engine, &nets, &trace, &base, &[1, 4, 8]).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.bytes > 0);
+            assert!(r.fleet_energy_j > 0.0);
+            assert!(
+                r.movement_fraction > 0.0 && r.movement_fraction < 1.0,
+                "share {} at max_batch {}",
+                r.movement_fraction,
+                r.max_batch
+            );
+            assert!((r.movement_fraction + r.compute_fraction - 1.0).abs() < 1e-9);
+        }
+        assert!(
+            rows[2].movement_fraction < rows[0].movement_fraction,
+            "movement share must fall as batch grows: {} !< {}",
+            rows[2].movement_fraction,
+            rows[0].movement_fraction
+        );
+        assert!(
+            rows[0].reloads >= rows[2].reloads,
+            "bigger batches cannot reload more often"
+        );
+        // Degenerate ladders are rejected.
+        assert!(movement_sweep(&engine, &nets, &trace, &base, &[0]).is_err());
     }
 
     #[test]

@@ -52,6 +52,13 @@
 //!   static pinning, adaptive pre-warm/drain), pricing every request
 //!   from cached plans, so the request path runs (and is tested) without
 //!   any accelerator present.
+//! * [`obs`] — the observability layer over the serving stack: a
+//!   deterministic Chrome-`trace_event` timeline sink
+//!   ([`obs::trace::TraceSink`], Perfetto-viewable), a unified metrics
+//!   registry ([`obs::metrics::Registry`]) the per-subsystem counters
+//!   register into, and fleet-scale energy/data-movement attribution
+//!   ([`obs::movement::MovementLedger`]) — all bitwise-inert when no
+//!   sink is attached, and byte-identical across double runs when one is.
 //! * `runtime` + the coordinator's `coordinator::server` *(feature
 //!   `runtime`, on by default)* — the real serving path: a PJRT executor
 //!   for AOT-compiled XLA artifacts and a threaded request router, with
@@ -104,6 +111,7 @@ pub mod explore;
 pub mod mapping;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod partition;
 pub mod pim;
 pub mod pipeline;

@@ -31,6 +31,7 @@ use pimflow::coordinator::{
 use pimflow::coordinator::{BatchPolicy, Server, ServerConfig, IMAGE_ELEMENTS};
 use pimflow::explore;
 use pimflow::nn::{zoo, Network};
+use pimflow::obs::{Registry, TraceSink};
 use pimflow::report::figures;
 use pimflow::report::Table;
 use pimflow::sim::{Design, Engine, PartitionStrategy};
@@ -261,6 +262,21 @@ fn app() -> App {
                         "skews",
                         Some("1,4,16"),
                         "mix skews for --sweep-replication (network 0's weight vs 1 for the rest)",
+                    ),
+                    Opt::value(
+                        "sweep-movement",
+                        None,
+                        "comma list of max-batch ceilings: replay the data-movement attribution ladder instead",
+                    ),
+                    Opt::value(
+                        "trace-out",
+                        None,
+                        "stream a Chrome trace_event timeline of the replay to this JSON file (open in Perfetto)",
+                    ),
+                    Opt::value(
+                        "metrics-out",
+                        None,
+                        "write the unified metrics registry after the replay (`.csv` extension selects CSV, else sorted text)",
                     ),
                     Opt::value("seed", Some("42"), "trace seed (same seed, same trace)"),
                     Opt::value(
@@ -648,6 +664,78 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
     if let Some(dir) = p.get("store") {
         engine = engine.with_store(dir)?;
     }
+    // Timeline + metrics export instrument a single replay; the grid
+    // sweeps replay many configurations and have no single timeline.
+    let observing = p.get("trace-out").is_some() || p.get("metrics-out").is_some();
+    let sweeping = p.flag("sweep-faults")
+        || p.get("sweep-workers").is_some()
+        || p.get("sweep-replication").is_some()
+        || p.get("sweep-movement").is_some()
+        || p.flag("feedback");
+    anyhow::ensure!(
+        !(observing && sweeping),
+        "--trace-out/--metrics-out instrument a single replay; drop the --sweep-*/--feedback options"
+    );
+
+    // The movement-attribution ladder: the same trace replayed across a
+    // max-batch ladder with the byte/joule ledger attached — the paper's
+    // Fig. 7 data-movement argument at fleet scale.
+    if let Some(list) = p.get("sweep-movement") {
+        anyhow::ensure!(
+            p.get("sweep-workers").is_none()
+                && p.get("sweep-replication").is_none()
+                && !p.flag("sweep-faults")
+                && !p.flag("feedback"),
+            "--sweep-movement is its own ladder; drop the other --sweep-*/--feedback options"
+        );
+        anyhow::ensure!(
+            schedule.is_constant(),
+            "--sweep-movement replays the constant-rate trace; drop --schedule"
+        );
+        let batches = list
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<u32>().map_err(|_| {
+                    anyhow::anyhow!("--sweep-movement expects comma-separated batch sizes, got `{s}`")
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let trace = explore::gen_trace_mix(nets.len(), mix.as_deref(), n, arrival, seed);
+        let rows = explore::movement_sweep(&engine, &nets, &trace, &cfg, &batches)?;
+        let (t, csv) = figures::movement_table(&rows);
+        print!("{}", t.render());
+        // Sanity pin (paper §III-C semantics): along an increasing batch
+        // ladder the data-movement share must not grow — batching
+        // amortizes weight streams and per-batch DRAM traffic.
+        for w in rows.windows(2) {
+            if w[1].max_batch > w[0].max_batch {
+                anyhow::ensure!(
+                    w[1].movement_fraction <= w[0].movement_fraction,
+                    "movement share grew with batch: {} @ b={} -> {} @ b={}",
+                    w[0].movement_fraction,
+                    w[0].max_batch,
+                    w[1].movement_fraction,
+                    w[1].max_batch
+                );
+            }
+        }
+        if let Some(last) = rows.last() {
+            println!(
+                "{} rungs over one engine; movement share {:.1}% at max_batch {} \
+                 (paper headline: <20% at serving batch sizes)",
+                rows.len(),
+                100.0 * last.movement_fraction,
+                last.max_batch
+            );
+        }
+        if p.flag("csv") {
+            println!(
+                "wrote {}",
+                figures::write_csv(&csv, "movement_sweep.csv")?.display()
+            );
+        }
+        return Ok(());
+    }
 
     // Closed loop with service-time feedback: arrivals are generated from
     // realized completions, so the open-loop trace is bypassed entirely.
@@ -853,6 +941,21 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
     let workers = cfg.workers;
     let replicated = cfg.replication != ReplicationPolicy::None;
     let faulted = !cfg.faults.is_off();
+    // Observability attachments: a streaming Chrome-trace sink (events go
+    // straight to disk, O(1) sink memory) and/or the movement ledger
+    // feeding the metrics registry. Neither changes a single simulated
+    // number — `tests/obs_trace.rs` pins the disabled path bitwise.
+    let sink = match p.get("trace-out") {
+        Some(path) => {
+            // Plan-ladder provenance (cache/store hits vs fresh computes)
+            // rides the trace's plan lane.
+            engine = engine.with_plan_events();
+            Some(TraceSink::streaming(Path::new(path))?)
+        }
+        None => None,
+    };
+    let movement = p.get("metrics-out").is_some();
+    let (warn0, err0) = logger::counts();
     // Streaming path: requests are generated and offered one at a time
     // (O(workers) memory, no per-request logs). Any non-constant schedule
     // implies it, since only the stream generator shapes the rate.
@@ -860,10 +963,10 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
     let report = if streaming {
         let stream =
             explore::stream_trace(nets.len(), mix.as_deref(), arrival, schedule, seed).take(n);
-        explore::replay_stream(&engine, &nets, stream, cfg)?
+        explore::replay_stream_obs(&engine, &nets, stream, cfg, sink, movement)?
     } else {
         let trace = explore::gen_trace_mix(nets.len(), mix.as_deref(), n, arrival, seed);
-        explore::replay(&engine, &nets, &trace, cfg)?
+        explore::replay_obs(&engine, &nets, &trace, cfg, sink, movement)?
     };
     let (t, csv) = figures::trace_table(&report);
     print!("{}", t.render());
@@ -940,6 +1043,30 @@ fn cmd_serve_sim(p: &Parsed) -> Result<()> {
                 .collect::<Vec<_>>()
                 .join(", ")
         );
+    }
+    if let Some(done) = &report.trace {
+        match &done.path {
+            Some(path) => println!(
+                "wrote {} ({} timeline events; open in Perfetto / chrome://tracing)",
+                path.display(),
+                done.events
+            ),
+            None => println!("trace: {} timeline events buffered", done.events),
+        }
+    }
+    if let Some(mpath) = p.get("metrics-out") {
+        let mut reg = Registry::new();
+        report.register_metrics(&mut reg);
+        engine.cache_stats().register(&mut reg);
+        if let Some(store) = engine.store() {
+            store.io_stats().register(&mut reg);
+        }
+        let (warn1, err1) = logger::counts();
+        reg.counter("log.warn_total", warn1 - warn0);
+        reg.counter("log.error_total", err1 - err0);
+        let mpath = Path::new(mpath);
+        reg.write(mpath)?;
+        println!("wrote {} ({} metrics)", mpath.display(), reg.len());
     }
     if p.flag("csv") {
         println!("wrote {}", figures::write_csv(&csv, "serve_sim.csv")?.display());

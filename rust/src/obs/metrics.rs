@@ -1,0 +1,243 @@
+//! Unified metrics registry: one sorted, deterministic name → value
+//! surface per run.
+//!
+//! The serving stack accumulates counters in many places —
+//! [`CacheStats`] on the engine, [`WorkerStats`] per worker,
+//! [`ChaosStats`] on the fault layer, per-network `NetStats`, the
+//! logger's warn/error totals — and each previously surfaced only in its
+//! own report struct or printed table. A [`Registry`] collects them all
+//! under stable dotted names (`serve.*`, `net.<name>.*`, `worker.<id>.*`,
+//! `chaos.*`, `plan_cache.*`, `store.*`, `movement.*`, `log.*`) and
+//! exports one machine-readable snapshot: sorted `name value` text or
+//! CSV (`serve-sim --metrics-out`). Iteration order is the `BTreeMap`'s,
+//! so two identical runs export byte-identical files — the determinism
+//! CI lane `cmp`s them.
+//!
+//! Counters are integers (monotone totals, named `*_total` or plain
+//! counts); gauges are floats rendered shortest-roundtrip via
+//! [`crate::util::csv::fnum`]. Histograms register as their scalar
+//! projections (`.count`, `.mean_s`, `.p50_s`, `.p99_s`, `.p999_s`,
+//! `.max_s`) so the export stays flat.
+//!
+//! [`CacheStats`]: crate::sim::engine::CacheStats
+//! [`WorkerStats`]: crate::coordinator::vworker::WorkerStats
+//! [`ChaosStats`]: crate::coordinator::chaos::ChaosStats
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+use crate::util::csv::{fnum, Csv};
+use crate::util::LatencyHist;
+
+/// One registered value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    /// Monotone integer total.
+    Counter(u64),
+    /// Point-in-time float.
+    Gauge(f64),
+}
+
+impl Value {
+    /// Render the value the way both exporters print it.
+    pub fn render(&self) -> String {
+        match self {
+            Value::Counter(n) => format!("{n}"),
+            Value::Gauge(x) => fnum(*x),
+        }
+    }
+
+    /// `counter` or `gauge` — the CSV type column.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Counter(_) => "counter",
+            Value::Gauge(_) => "gauge",
+        }
+    }
+}
+
+/// Sorted name → value registry with deterministic exporters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Set (or overwrite) a counter.
+    pub fn counter(&mut self, name: impl Into<String>, v: u64) {
+        self.entries.insert(name.into(), Value::Counter(v));
+    }
+
+    /// Add to a counter, creating it at 0.
+    pub fn add_counter(&mut self, name: impl Into<String>, v: u64) {
+        let name = name.into();
+        let cur = match self.entries.get(&name) {
+            Some(Value::Counter(n)) => *n,
+            _ => 0,
+        };
+        self.entries.insert(name, Value::Counter(cur + v));
+    }
+
+    /// Set (or overwrite) a gauge.
+    pub fn gauge(&mut self, name: impl Into<String>, v: f64) {
+        self.entries.insert(name.into(), Value::Gauge(v));
+    }
+
+    /// Register a latency histogram's scalar projections under `prefix`.
+    /// Quantiles are only emitted for non-empty histograms (they would
+    /// otherwise be meaningless zeros).
+    pub fn hist(&mut self, prefix: &str, h: &LatencyHist) {
+        self.counter(format!("{prefix}.count"), h.count());
+        if h.count() > 0 {
+            self.gauge(format!("{prefix}.mean_s"), h.mean_s());
+            self.gauge(format!("{prefix}.p50_s"), h.p50());
+            self.gauge(format!("{prefix}.p99_s"), h.p99());
+            self.gauge(format!("{prefix}.p999_s"), h.p999());
+            self.gauge(format!("{prefix}.max_s"), h.max_s());
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.entries.get(name)
+    }
+
+    /// Counter value, if `name` is a registered counter.
+    pub fn get_counter(&self, name: &str) -> Option<u64> {
+        match self.entries.get(name) {
+            Some(Value::Counter(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Gauge value, if `name` is a registered gauge.
+    pub fn get_gauge(&self, name: &str) -> Option<f64> {
+        match self.entries.get(name) {
+            Some(Value::Gauge(x)) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate entries in sorted name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Value)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Names matching a dotted prefix (`worker.` etc.), sorted.
+    pub fn with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = (&'a str, &'a Value)> {
+        self.iter().filter(move |(k, _)| k.starts_with(prefix))
+    }
+
+    /// Sorted `name value` lines, one per entry.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in self.iter() {
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(&v.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// `metric,type,value` CSV in sorted name order.
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(vec!["metric", "type", "value"]);
+        for (name, v) in self.iter() {
+            csv.row(vec![name.to_string(), v.kind().to_string(), v.render()]);
+        }
+        csv
+    }
+
+    /// Write the snapshot to `path`: CSV when the extension is `.csv`,
+    /// sorted text otherwise. Parent directories are created.
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        if path.extension().is_some_and(|e| e == "csv") {
+            self.to_csv().write(path)
+        } else {
+            if let Some(parent) = path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            std::fs::write(path, self.to_text())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_export_is_sorted_and_deterministic() {
+        let mut r = Registry::new();
+        r.gauge("serve.span_s", 1.5);
+        r.counter("serve.accepted_total", 10);
+        r.counter("chaos.crashes_total", 1);
+        assert_eq!(
+            r.to_text(),
+            "chaos.crashes_total 1\nserve.accepted_total 10\nserve.span_s 1.5\n"
+        );
+        let again = r.clone();
+        assert_eq!(r.to_text(), again.to_text());
+    }
+
+    #[test]
+    fn csv_export_carries_types() {
+        let mut r = Registry::new();
+        r.counter("a.total", 3);
+        r.gauge("b.frac", 0.25);
+        assert_eq!(
+            r.to_csv().to_string(),
+            "metric,type,value\na.total,counter,3\nb.frac,gauge,0.25\n"
+        );
+    }
+
+    #[test]
+    fn add_counter_accumulates() {
+        let mut r = Registry::new();
+        r.add_counter("log.warn_total", 2);
+        r.add_counter("log.warn_total", 3);
+        assert_eq!(r.get_counter("log.warn_total"), Some(5));
+        assert_eq!(r.get_gauge("log.warn_total"), None);
+    }
+
+    #[test]
+    fn hist_registers_scalar_projections_only_when_nonempty() {
+        let mut r = Registry::new();
+        let empty = LatencyHist::new();
+        r.hist("fleet.latency", &empty);
+        assert_eq!(r.get_counter("fleet.latency.count"), Some(0));
+        assert!(r.get("fleet.latency.p99_s").is_none());
+
+        let mut h = LatencyHist::new();
+        h.record(0.010);
+        h.record(0.020);
+        r.hist("fleet.latency", &h);
+        assert_eq!(r.get_counter("fleet.latency.count"), Some(2));
+        assert!(r.get_gauge("fleet.latency.mean_s").unwrap() > 0.0);
+        assert!(r.get_gauge("fleet.latency.p99_s").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn prefix_scan_finds_worker_lanes() {
+        let mut r = Registry::new();
+        r.counter("worker.0.batches_total", 4);
+        r.counter("worker.1.batches_total", 5);
+        r.counter("serve.batches_total", 9);
+        assert_eq!(r.with_prefix("worker.").count(), 2);
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability: deterministic tracing, metrics, and energy/data-
+//! movement attribution for the serving stack.
+//!
+//! Three pieces, all zero-dependency and all **bitwise-inert when
+//! disabled** — a [`SimServer`] with no sinks attached replays exactly
+//! as before (pinned in `tests/obs_trace.rs`):
+//!
+//! * [`trace`] — a Chrome-`trace_event` timeline sink
+//!   ([`trace::TraceSink`]): per-worker span lanes for batch execution,
+//!   weight reloads, and pre-warms; instants for batch opens, crashes,
+//!   recoveries, and controller ticks; synthetic lanes for DRAM brownout
+//!   windows and plan-cache activity. `serve-sim --trace-out <path>`
+//!   writes a file Perfetto opens directly.
+//! * [`metrics`] — a sorted name → counter/gauge [`metrics::Registry`]
+//!   the scattered per-subsystem counters register into, exported as
+//!   deterministic text or CSV (`serve-sim --metrics-out <path>`).
+//! * [`movement`] — a fleet-scale byte-and-joule
+//!   [`movement::MovementLedger`] charged per (worker, network, cause)
+//!   on every completion / reload / pre-warm, reproducing the paper's
+//!   data-movement-share-vs-batch-size curve at fleet scale
+//!   (`serve-sim --sweep-movement` → `results/movement_sweep.csv`).
+//!
+//! Determinism contract: no wall-clock, no RNG, sorted iteration
+//! everywhere — double runs produce byte-identical trace and metrics
+//! files, and the CI observability lane `cmp`s them.
+//!
+//! [`SimServer`]: crate::coordinator::sim_serve::SimServer
+
+pub mod metrics;
+pub mod movement;
+pub mod trace;
+
+pub use metrics::{Registry, Value};
+pub use movement::{MoveCause, MoveCell, MovementLedger};
+pub use trace::{event_counts, validate_chrome_trace, Arg, TraceDone, TraceEvent, TraceSink};

@@ -1,0 +1,272 @@
+//! Energy / data-movement attribution for the serving fleet.
+//!
+//! The paper's Fig. 7 argument — data movement's share of system energy
+//! shrinks as batch size grows, staying under ~20% at serving batch
+//! sizes — is a *per-chip* result. [`MovementLedger`] lifts it to fleet
+//! scale: the simulated server charges a byte-and-joule cell per
+//! `(worker, network, cause)` on every batch completion, blocking weight
+//! reload, and replication pre-warm, so a replay can answer *where the
+//! energy and bytes went* rather than just how long things took.
+//!
+//! Causes:
+//!
+//! * [`MoveCause::Batch`] — one executed batch: the full per-batch
+//!   [`EnergyLedger`] from the pipeline simulation (on-chip compute +
+//!   activation DRAM traffic) and the batch's DRAM transaction bytes.
+//!   Both come from the same memoized `system_report` call that prices
+//!   the batch's makespan, so attribution costs zero extra plan work.
+//! * [`MoveCause::Reload`] — a blocking weight stream before a batch
+//!   (wrong network resident): pure data movement — the network's weight
+//!   bytes and their DRAM read energy.
+//! * [`MoveCause::Prewarm`] — the same stream issued ahead of demand by
+//!   the replication controller.
+//!
+//! The fleet-level movement share is then
+//! `dram_j / total_j` over the summed ledger — reloads and pre-warms are
+//! all-DRAM, so a fleet that reloads often has a high movement share, and
+//! growing `max_batch` amortizes both the per-batch DRAM traffic and the
+//! reload rate. `explore::trace::movement_sweep` replays one trace across
+//! a `max_batch` ladder and `figures::movement_table` exports the curve
+//! (`results/movement_sweep.csv`); `tests/obs_trace.rs` pins that the
+//! movement share decreases monotonically along it.
+//!
+//! [`EnergyLedger`]: crate::pim::EnergyLedger
+
+use std::collections::BTreeMap;
+
+use crate::pim::EnergyLedger;
+
+/// Why bytes moved / joules were spent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MoveCause {
+    /// An executed batch (compute + activation DRAM traffic).
+    Batch,
+    /// A blocking weight reload on the batch critical path.
+    Reload,
+    /// A replication pre-warm, off the critical path.
+    Prewarm,
+}
+
+impl MoveCause {
+    pub const ALL: [MoveCause; 3] = [MoveCause::Batch, MoveCause::Reload, MoveCause::Prewarm];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MoveCause::Batch => "batch",
+            MoveCause::Reload => "reload",
+            MoveCause::Prewarm => "prewarm",
+        }
+    }
+}
+
+/// Accumulated charges for one `(worker, network, cause)` cell.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MoveCell {
+    /// DRAM bytes moved.
+    pub bytes: u64,
+    /// Energy charged, itemized by component.
+    pub energy: EnergyLedger,
+    /// Number of charge events folded into this cell.
+    pub events: u64,
+}
+
+impl MoveCell {
+    fn charge(&mut self, bytes: u64, energy: &EnergyLedger) {
+        self.bytes += bytes;
+        self.energy.add(energy);
+        self.events += 1;
+    }
+}
+
+/// Deterministic fleet-scale byte/joule ledger, keyed
+/// `(worker, network index, cause)` in sorted order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MovementLedger {
+    cells: BTreeMap<(usize, usize, MoveCause), MoveCell>,
+}
+
+impl MovementLedger {
+    pub fn new() -> Self {
+        MovementLedger::default()
+    }
+
+    /// Fold one charge into its cell.
+    pub fn charge(
+        &mut self,
+        worker: usize,
+        net: usize,
+        cause: MoveCause,
+        bytes: u64,
+        energy: &EnergyLedger,
+    ) {
+        self.cells
+            .entry((worker, net, cause))
+            .or_default()
+            .charge(bytes, energy);
+    }
+
+    /// Cells in sorted key order.
+    pub fn cells(&self) -> impl Iterator<Item = (&(usize, usize, MoveCause), &MoveCell)> {
+        self.cells.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Sum of every cell's energy.
+    pub fn fleet_energy(&self) -> EnergyLedger {
+        let mut total = EnergyLedger::default();
+        for cell in self.cells.values() {
+            total.add(&cell.energy);
+        }
+        total
+    }
+
+    /// Sum of every cell's bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.cells.values().map(|c| c.bytes).sum()
+    }
+
+    /// All charges with `cause`, summed.
+    pub fn by_cause(&self, cause: MoveCause) -> MoveCell {
+        let mut total = MoveCell::default();
+        for ((_, _, c), cell) in &self.cells {
+            if *c == cause {
+                total.bytes += cell.bytes;
+                total.energy.add(&cell.energy);
+                total.events += cell.events;
+            }
+        }
+        total
+    }
+
+    /// All charges on `worker`, summed.
+    pub fn by_worker(&self, worker: usize) -> MoveCell {
+        let mut total = MoveCell::default();
+        for ((w, _, _), cell) in &self.cells {
+            if *w == worker {
+                total.bytes += cell.bytes;
+                total.energy.add(&cell.energy);
+                total.events += cell.events;
+            }
+        }
+        total
+    }
+
+    /// Fig. 7's complement at fleet scale: off-chip DRAM (data-movement)
+    /// share of total fleet energy. 0 when nothing has been charged.
+    pub fn movement_fraction(&self) -> f64 {
+        let e = self.fleet_energy();
+        let total = e.total_j();
+        if total == 0.0 {
+            0.0
+        } else {
+            e.dram_j / total
+        }
+    }
+
+    /// On-chip computation share (`1 - movement_fraction` when any energy
+    /// was charged).
+    pub fn compute_fraction(&self) -> f64 {
+        self.fleet_energy().compute_fraction()
+    }
+
+    /// Register fleet attribution under `movement.*`: totals, the Fig.-7
+    /// fractions, and per-cause bytes/events/energy.
+    pub fn register(&self, reg: &mut super::metrics::Registry) {
+        reg.counter("movement.bytes_total", self.total_bytes());
+        reg.counter("movement.cells", self.len() as u64);
+        reg.gauge("movement.fraction", self.movement_fraction());
+        reg.gauge("movement.compute_fraction", self.compute_fraction());
+        reg.gauge("movement.fleet_energy_j", self.fleet_energy().total_j());
+        for cause in MoveCause::ALL {
+            let cell = self.by_cause(cause);
+            let p = |k: &str| format!("movement.{}.{k}", cause.label());
+            reg.counter(p("bytes_total"), cell.bytes);
+            reg.counter(p("events_total"), cell.events);
+            reg.gauge(p("energy_j"), cell.energy.total_j());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch_energy() -> EnergyLedger {
+        EnergyLedger {
+            compute_j: 6.0,
+            buffer_j: 1.0,
+            noc_j: 0.5,
+            wprog_j: 0.5,
+            leakage_j: 0.0,
+            dram_j: 2.0,
+        }
+    }
+
+    fn reload_energy(j: f64) -> EnergyLedger {
+        EnergyLedger {
+            dram_j: j,
+            ..EnergyLedger::default()
+        }
+    }
+
+    #[test]
+    fn charges_accumulate_per_cell() {
+        let mut m = MovementLedger::new();
+        m.charge(0, 1, MoveCause::Batch, 100, &batch_energy());
+        m.charge(0, 1, MoveCause::Batch, 100, &batch_energy());
+        m.charge(0, 1, MoveCause::Reload, 50, &reload_energy(1.0));
+        assert_eq!(m.len(), 2);
+        let cell = m.cells().next().unwrap().1;
+        assert_eq!(cell.events, 2);
+        assert_eq!(cell.bytes, 200);
+        assert_eq!(m.total_bytes(), 250);
+        assert_eq!(m.by_cause(MoveCause::Batch).events, 2);
+        assert_eq!(m.by_cause(MoveCause::Reload).bytes, 50);
+        assert_eq!(m.by_worker(0).events, 3);
+        assert_eq!(m.by_worker(1).events, 0);
+    }
+
+    #[test]
+    fn movement_fraction_counts_reload_streams_as_pure_movement() {
+        let mut m = MovementLedger::new();
+        m.charge(0, 0, MoveCause::Batch, 0, &batch_energy());
+        // batch alone: dram 2 of 10 total → 20% movement
+        assert!((m.movement_fraction() - 0.2).abs() < 1e-12);
+        m.charge(0, 0, MoveCause::Reload, 64, &reload_energy(10.0));
+        // +10 J of pure DRAM: 12 of 20 → 60% movement
+        assert!((m.movement_fraction() - 0.6).abs() < 1e-12);
+        assert!((m.compute_fraction() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_ledger_has_zero_fractions() {
+        let m = MovementLedger::new();
+        assert_eq!(m.movement_fraction(), 0.0);
+        assert_eq!(m.compute_fraction(), 0.0);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn cells_iterate_in_sorted_key_order() {
+        let mut m = MovementLedger::new();
+        m.charge(1, 0, MoveCause::Prewarm, 1, &reload_energy(0.1));
+        m.charge(0, 1, MoveCause::Batch, 1, &batch_energy());
+        m.charge(0, 0, MoveCause::Reload, 1, &reload_energy(0.1));
+        let keys: Vec<_> = m.cells().map(|(k, _)| *k).collect();
+        assert_eq!(
+            keys,
+            vec![
+                (0, 0, MoveCause::Reload),
+                (0, 1, MoveCause::Batch),
+                (1, 0, MoveCause::Prewarm),
+            ]
+        );
+    }
+}

@@ -1,0 +1,442 @@
+//! Deterministic Chrome-`trace_event` timeline sink.
+//!
+//! [`TraceSink`] records typed spans (`ph: "X"`) and instants (`ph: "i"`)
+//! stamped in **virtual** microseconds and renders them as a Chrome
+//! trace JSON array — load the file in Perfetto (<https://ui.perfetto.dev>)
+//! or `chrome://tracing` to see the fleet timeline: one row ("thread
+//! lane") per worker plus synthetic lanes for the replication controller,
+//! fault windows, and plan-cache activity.
+//!
+//! Two modes share one byte format:
+//!
+//! * [`TraceSink::buffered`] keeps events in memory and returns the
+//!   rendered JSON from [`TraceSink::finish`] — for tests and small runs;
+//! * [`TraceSink::streaming`] opens the output file up front and writes
+//!   each event as it is emitted, so a million-request replay holds O(1)
+//!   trace memory ([`TraceSink::high_water`] stays 0; the hot-path bench
+//!   asserts it).
+//!
+//! Determinism: nothing here reads the clock or any RNG — timestamps are
+//! the simulator's virtual times, floats render shortest-roundtrip, and
+//! strings are escaped by [`crate::util::json::escape_into`], which emits
+//! exactly what the in-repo parser accepts. Two runs of the same replay
+//! produce byte-identical files (`tests/obs_trace.rs` pins this).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+
+/// One argument value attached to a trace event (`args: {...}`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    U64(u64),
+    F64(f64),
+    Str(String),
+    Bool(bool),
+}
+
+/// One Chrome trace event. `ts`/`dur` are virtual microseconds; `pid` is
+/// always 0 (one simulated fleet per file) and `tid` selects the lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Category tag (`batch`, `weights`, `fault`, `controller`, `plan`).
+    pub cat: &'static str,
+    /// `'X'` complete span, `'i'` instant, `'M'` metadata.
+    pub ph: char,
+    pub ts_us: f64,
+    /// Span duration; ignored for instants and metadata.
+    pub dur_us: f64,
+    pub tid: u64,
+    pub args: Vec<(&'static str, Arg)>,
+}
+
+impl TraceEvent {
+    fn render_into(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        out.push_str("{\"name\":");
+        json::escape_into(out, &self.name);
+        let _ = write!(out, ",\"cat\":\"{}\",\"ph\":\"{}\"", self.cat, self.ph);
+        let _ = write!(out, ",\"ts\":{}", self.ts_us);
+        if self.ph == 'X' {
+            let _ = write!(out, ",\"dur\":{}", self.dur_us);
+        }
+        let _ = write!(out, ",\"pid\":0,\"tid\":{}", self.tid);
+        if self.ph == 'i' {
+            // Chrome requires a scope on instants; "t" = thread-scoped.
+            out.push_str(",\"s\":\"t\"");
+        }
+        if !self.args.is_empty() {
+            out.push_str(",\"args\":{");
+            for (i, (k, v)) in self.args.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                json::escape_into(out, k);
+                out.push(':');
+                match v {
+                    Arg::U64(n) => {
+                        let _ = write!(out, "{n}");
+                    }
+                    Arg::F64(x) => {
+                        let _ = write!(out, "{x}");
+                    }
+                    Arg::Str(s) => json::escape_into(out, s),
+                    Arg::Bool(b) => {
+                        let _ = write!(out, "{b}");
+                    }
+                }
+            }
+            out.push('}');
+        }
+        out.push('}');
+    }
+}
+
+#[derive(Debug)]
+enum Out {
+    Buffer(Vec<TraceEvent>),
+    Stream {
+        w: BufWriter<fs::File>,
+        path: PathBuf,
+        scratch: String,
+    },
+}
+
+/// Summary handed back by [`TraceSink::finish`] (and carried on
+/// [`SimServeReport`] when a sink was attached).
+///
+/// [`SimServeReport`]: crate::coordinator::sim_serve::SimServeReport
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceDone {
+    /// Events emitted over the sink's lifetime.
+    pub events: u64,
+    /// Maximum simultaneously buffered events (0 in streaming mode — the
+    /// memory bound the streaming bench asserts).
+    pub high_water: usize,
+    /// The rendered JSON document (buffered mode only).
+    pub json: Option<String>,
+    /// The output file (streaming mode only; closed and flushed).
+    pub path: Option<PathBuf>,
+}
+
+/// Buffered or streaming trace collector. Emission is infallible —
+/// streaming I/O errors are deferred and surfaced by [`finish`]
+/// (`io_error` latches), so the hot path never branches on `Result`.
+///
+/// [`finish`]: TraceSink::finish
+#[derive(Debug)]
+pub struct TraceSink {
+    out: Out,
+    events: u64,
+    high_water: usize,
+    io_error: Option<io::Error>,
+}
+
+impl TraceSink {
+    /// In-memory sink; [`finish`] renders and returns the JSON document.
+    ///
+    /// [`finish`]: TraceSink::finish
+    pub fn buffered() -> Self {
+        TraceSink {
+            out: Out::Buffer(Vec::new()),
+            events: 0,
+            high_water: 0,
+            io_error: None,
+        }
+    }
+
+    /// Streaming sink: opens `path` (creating parent directories) and
+    /// writes each event as it is emitted. O(1) memory regardless of
+    /// trace length.
+    pub fn streaming(path: &Path) -> io::Result<Self> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        let mut w = BufWriter::new(fs::File::create(path)?);
+        w.write_all(b"[")?;
+        Ok(TraceSink {
+            out: Out::Stream {
+                w,
+                path: path.to_path_buf(),
+                scratch: String::new(),
+            },
+            events: 0,
+            high_water: 0,
+            io_error: None,
+        })
+    }
+
+    /// Emit a complete span: `[ts_s, ts_s + dur_s)` on lane `tid`.
+    pub fn span(
+        &mut self,
+        name: impl Into<String>,
+        cat: &'static str,
+        tid: u64,
+        ts_s: f64,
+        dur_s: f64,
+        args: Vec<(&'static str, Arg)>,
+    ) {
+        self.emit(TraceEvent {
+            name: name.into(),
+            cat,
+            ph: 'X',
+            ts_us: ts_s * 1e6,
+            dur_us: dur_s * 1e6,
+            tid,
+            args,
+        });
+    }
+
+    /// Emit a thread-scoped instant at `ts_s` on lane `tid`.
+    pub fn instant(
+        &mut self,
+        name: impl Into<String>,
+        cat: &'static str,
+        tid: u64,
+        ts_s: f64,
+        args: Vec<(&'static str, Arg)>,
+    ) {
+        self.emit(TraceEvent {
+            name: name.into(),
+            cat,
+            ph: 'i',
+            ts_us: ts_s * 1e6,
+            dur_us: 0.0,
+            tid,
+            args,
+        });
+    }
+
+    /// Name a lane in the viewer (Chrome `thread_name` metadata event).
+    pub fn name_lane(&mut self, tid: u64, name: &str) {
+        self.emit(TraceEvent {
+            name: "thread_name".to_string(),
+            cat: "__metadata",
+            ph: 'M',
+            ts_us: 0.0,
+            dur_us: 0.0,
+            tid,
+            args: vec![("name", Arg::Str(name.to_string()))],
+        });
+    }
+
+    /// Emit a pre-built event.
+    pub fn emit(&mut self, ev: TraceEvent) {
+        match &mut self.out {
+            Out::Buffer(buf) => {
+                buf.push(ev);
+                self.high_water = self.high_water.max(buf.len());
+            }
+            Out::Stream { w, scratch, .. } => {
+                scratch.clear();
+                if self.events == 0 {
+                    scratch.push('\n');
+                } else {
+                    scratch.push_str(",\n");
+                }
+                ev.render_into(scratch);
+                if self.io_error.is_none() {
+                    if let Err(e) = w.write_all(scratch.as_bytes()) {
+                        self.io_error = Some(e);
+                    }
+                }
+            }
+        }
+        self.events += 1;
+    }
+
+    /// Events emitted so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Maximum simultaneously buffered events so far (0 while streaming).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Close the sink: buffered mode renders the JSON document, streaming
+    /// mode writes the closing bracket and flushes the file. Any deferred
+    /// streaming I/O error surfaces here.
+    pub fn finish(self) -> io::Result<TraceDone> {
+        let TraceSink {
+            out,
+            events,
+            high_water,
+            io_error,
+        } = self;
+        if let Some(e) = io_error {
+            return Err(e);
+        }
+        match out {
+            Out::Buffer(buf) => {
+                let mut doc = String::from("[");
+                for (i, ev) in buf.iter().enumerate() {
+                    doc.push_str(if i == 0 { "\n" } else { ",\n" });
+                    ev.render_into(&mut doc);
+                }
+                doc.push_str("\n]\n");
+                Ok(TraceDone {
+                    events,
+                    high_water,
+                    json: Some(doc),
+                    path: None,
+                })
+            }
+            Out::Stream { mut w, path, .. } => {
+                w.write_all(b"\n]\n")?;
+                w.flush()?;
+                Ok(TraceDone {
+                    events,
+                    high_water,
+                    json: None,
+                    path: Some(path),
+                })
+            }
+        }
+    }
+}
+
+/// Structural check on a rendered trace document, used by tests and the
+/// CLI after writing a file: parses with the in-repo JSON parser and
+/// verifies the Chrome `trace_event` array shape (every element an object
+/// with `name`/`cat`/`ph`/`ts`/`pid`/`tid`; spans carry `dur`, instants a
+/// scope). Returns the number of events.
+pub fn validate_chrome_trace(doc: &str) -> Result<usize, String> {
+    let parsed = json::parse(doc).map_err(|e| e.to_string())?;
+    let arr = parsed.as_arr().ok_or("trace document must be a JSON array")?;
+    for (i, ev) in arr.iter().enumerate() {
+        let obj = ev
+            .as_obj()
+            .ok_or_else(|| format!("event {i} is not an object"))?;
+        for key in ["name", "cat", "ph", "ts", "pid", "tid"] {
+            if !obj.contains_key(key) {
+                return Err(format!("event {i} is missing `{key}`"));
+            }
+        }
+        let ph = obj["ph"].as_str().unwrap_or("");
+        match ph {
+            "X" => {
+                if !obj.contains_key("dur") {
+                    return Err(format!("span event {i} is missing `dur`"));
+                }
+            }
+            "i" => {
+                if !obj.contains_key("s") {
+                    return Err(format!("instant event {i} is missing scope `s`"));
+                }
+            }
+            "M" => {}
+            other => return Err(format!("event {i} has unknown phase `{other}`")),
+        }
+        if obj["ts"].as_f64().is_none() {
+            return Err(format!("event {i} has a non-numeric `ts`"));
+        }
+    }
+    Ok(arr.len())
+}
+
+/// Count events per `(cat, name)` in a rendered document — convenience
+/// for shape assertions in tests.
+pub fn event_counts(doc: &str) -> Result<BTreeMap<(String, String), usize>, String> {
+    let parsed = json::parse(doc).map_err(|e| e.to_string())?;
+    let arr = parsed.as_arr().ok_or("trace document must be a JSON array")?;
+    let mut counts = BTreeMap::new();
+    for ev in arr {
+        let cat = ev.get("cat").and_then(|c| c.as_str()).unwrap_or("").to_string();
+        let name = ev.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+        *counts.entry((cat, name)).or_insert(0) += 1;
+    }
+    Ok(counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(sink: &mut TraceSink) {
+        sink.name_lane(0, "worker 0");
+        sink.instant("batch_open", "batch", 0, 0.001, vec![("net", Arg::U64(1))]);
+        sink.span(
+            "exec",
+            "batch",
+            0,
+            0.002,
+            0.0105,
+            vec![
+                ("k", Arg::U64(4)),
+                ("reloaded", Arg::Bool(true)),
+                ("net", Arg::Str("vgg11".to_string())),
+            ],
+        );
+    }
+
+    #[test]
+    fn buffered_renders_a_valid_chrome_trace() {
+        let mut sink = TraceSink::buffered();
+        sample(&mut sink);
+        assert_eq!(sink.events(), 3);
+        assert_eq!(sink.high_water(), 3);
+        let done = sink.finish().unwrap();
+        let doc = done.json.unwrap();
+        assert_eq!(validate_chrome_trace(&doc).unwrap(), 3);
+        let counts = event_counts(&doc).unwrap();
+        assert_eq!(counts[&("batch".to_string(), "exec".to_string())], 1);
+    }
+
+    #[test]
+    fn streaming_writes_the_same_bytes_as_buffered() {
+        let dir = std::env::temp_dir().join("pimflow_trace_sink_test");
+        let path = dir.join("t.json");
+        let mut stream = TraceSink::streaming(&path).unwrap();
+        sample(&mut stream);
+        assert_eq!(stream.high_water(), 0, "streaming never buffers");
+        let done = stream.finish().unwrap();
+        assert_eq!(done.path.as_deref(), Some(path.as_path()));
+        let streamed = std::fs::read_to_string(&path).unwrap();
+
+        let mut buf = TraceSink::buffered();
+        sample(&mut buf);
+        let buffered = buf.finish().unwrap().json.unwrap();
+        assert_eq!(streamed, buffered);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_sink_renders_an_empty_array() {
+        let doc = TraceSink::buffered().finish().unwrap().json.unwrap();
+        assert_eq!(validate_chrome_trace(&doc).unwrap(), 0);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_shapes() {
+        assert!(validate_chrome_trace("{}").is_err(), "not an array");
+        assert!(
+            validate_chrome_trace(r#"[{"name":"x"}]"#).is_err(),
+            "missing required keys"
+        );
+        assert!(
+            validate_chrome_trace(
+                r#"[{"name":"x","cat":"c","ph":"X","ts":1,"pid":0,"tid":0}]"#
+            )
+            .is_err(),
+            "span without dur"
+        );
+        assert!(validate_chrome_trace("[").is_err(), "parse error");
+    }
+
+    #[test]
+    fn timestamps_render_shortest_roundtrip() {
+        let mut sink = TraceSink::buffered();
+        sink.instant("t", "batch", 7, 0.25, vec![]);
+        let doc = sink.finish().unwrap().json.unwrap();
+        assert!(doc.contains("\"ts\":250000"), "0.25 s is 250000 µs: {doc}");
+        assert!(doc.contains("\"tid\":7"));
+    }
+}

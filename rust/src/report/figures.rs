@@ -13,7 +13,7 @@ use crate::explore::{Fig3Point, Fig7Point};
 use crate::nn::resnet;
 use crate::pim::area;
 use crate::sim::engine::{find, find_net, Design, DesignPoint};
-use crate::util::csv::Csv;
+use crate::util::csv::{fnum, Csv};
 
 use super::table::Table;
 
@@ -82,8 +82,8 @@ pub fn fig1_table() -> (Table, Csv) {
         csv.row(vec![
             net.name.clone(),
             w.to_string(),
-            format!("{a_r:.2}"),
-            format!("{a_s:.2}"),
+            fnum(a_r),
+            fnum(a_s),
         ]);
     }
     (t, csv)
@@ -107,7 +107,7 @@ pub fn fig3_table(points: &[Fig3Point]) -> (Table, Csv) {
             p.batch.to_string(),
             p.compact_txns.to_string(),
             p.unlimited_txns.to_string(),
-            format!("{:.3}", p.ratio),
+            fnum(p.ratio),
         ]);
     }
     (t, csv)
@@ -162,16 +162,16 @@ pub fn fig6_tables(points: &[DesignPoint]) -> anyhow::Result<(Table, Table, Csv)
         ]);
         csv.row(vec![
             b.to_string(),
-            format!("{:.2}", gpu.throughput_fps),
-            format!("{:.2}", no_ddm.throughput_fps),
-            format!("{:.2}", ddm.throughput_fps),
-            format!("{:.2}", search.throughput_fps),
-            format!("{:.2}", unlim.throughput_fps),
-            format!("{:.5}", gpu.tops_per_watt),
-            format!("{:.3}", no_ddm.tops_per_watt),
-            format!("{:.3}", ddm.tops_per_watt),
-            format!("{:.3}", search.tops_per_watt),
-            format!("{:.3}", unlim.tops_per_watt),
+            fnum(gpu.throughput_fps),
+            fnum(no_ddm.throughput_fps),
+            fnum(ddm.throughput_fps),
+            fnum(search.throughput_fps),
+            fnum(unlim.throughput_fps),
+            fnum(gpu.tops_per_watt),
+            fnum(no_ddm.tops_per_watt),
+            fnum(ddm.tops_per_watt),
+            fnum(search.tops_per_watt),
+            fnum(unlim.tops_per_watt),
         ]);
     }
     Ok((thr, eff, csv))
@@ -260,8 +260,8 @@ pub fn fig7_table(points: &[Fig7Point]) -> (Table, Csv) {
         ]);
         csv.row(vec![
             p.batch.to_string(),
-            format!("{:.4}", p.compact_fraction),
-            format!("{:.4}", p.unlimited_fraction),
+            fnum(p.compact_fraction),
+            fnum(p.unlimited_fraction),
         ]);
     }
     (t, csv)
@@ -310,12 +310,12 @@ pub fn fig8_table(points: &[DesignPoint]) -> anyhow::Result<(Table, Csv)> {
         csv.row(vec![
             name.clone(),
             ddm.weights.to_string(),
-            format!("{:.2}", no_ddm.throughput_fps),
-            format!("{:.2}", ddm.throughput_fps),
-            format!("{:.2}", unlim.throughput_fps),
-            format!("{:.3}", no_ddm.tops_per_watt),
-            format!("{:.3}", ddm.tops_per_watt),
-            format!("{:.3}", unlim.tops_per_watt),
+            fnum(no_ddm.throughput_fps),
+            fnum(ddm.throughput_fps),
+            fnum(unlim.throughput_fps),
+            fnum(no_ddm.tops_per_watt),
+            fnum(ddm.tops_per_watt),
+            fnum(unlim.tops_per_watt),
         ]);
     }
     Ok((t, csv))
@@ -323,10 +323,11 @@ pub fn fig8_table(points: &[DesignPoint]) -> anyhow::Result<(Table, Csv)> {
 
 /// Generic sweep-grid emitter for the `sweep` CLI command: one row per
 /// [`DesignPoint`], in the grid's canonical order. The CSV renders floats
-/// with `{}` (shortest round-trip representation), so two bitwise-equal
-/// grids — e.g. a merged sharded sweep vs. the unsharded one, or a
-/// warm-store replay vs. the computed path — produce byte-identical
-/// files; CI diffs them directly.
+/// with [`fnum`] (shortest round-trip representation), so two
+/// bitwise-equal grids — e.g. a merged sharded sweep vs. the unsharded
+/// one, or a warm-store replay vs. the computed path — produce
+/// byte-identical files; CI diffs them directly. Every figure CSV in
+/// this module writes floats the same way.
 pub fn grid_table(points: &[DesignPoint]) -> (Table, Csv) {
     let mut t = Table::new(
         "Sweep grid (network × design × batch)",
@@ -358,11 +359,11 @@ pub fn grid_table(points: &[DesignPoint]) -> (Table, Csv) {
             p.design.label().to_string(),
             p.batch.to_string(),
             p.weights.to_string(),
-            format!("{}", p.throughput_fps),
-            format!("{}", p.tops_per_watt),
-            format!("{}", p.gops_per_mm2),
-            format!("{}", p.area_mm2),
-            format!("{}", p.compute_fraction),
+            fnum(p.throughput_fps),
+            fnum(p.tops_per_watt),
+            fnum(p.gops_per_mm2),
+            fnum(p.area_mm2),
+            fnum(p.compute_fraction),
             p.num_parts.to_string(),
         ]);
     }
@@ -458,15 +459,15 @@ pub fn trace_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv) 
             n.coalesced.to_string(),
             n.rejected.to_string(),
             n.batches.to_string(),
-            format!("{:.4}", n.mean_batch()),
+            fnum(n.mean_batch()),
             n.reloads.to_string(),
             n.prewarms.to_string(),
             n.drains.to_string(),
-            format!("{:.4}", n.slo_attainment()),
-            format!("{:.6}", n.mean_latency_s()),
-            format!("{:.6}", n.hist.p50()),
-            format!("{:.6}", n.hist.p99()),
-            format!("{:.6}", n.hist.p999()),
+            fnum(n.slo_attainment()),
+            fnum(n.mean_latency_s()),
+            fnum(n.hist.p50()),
+            fnum(n.hist.p99()),
+            fnum(n.hist.p999()),
         ]);
     };
     for n in &report.per_net {
@@ -547,11 +548,11 @@ pub fn worker_table(report: &crate::coordinator::SimServeReport) -> (Table, Csv)
             w.completed.to_string(),
             w.reloads.to_string(),
             w.prewarms.to_string(),
-            format!("{:.6}", w.busy_s),
-            format!("{util:.4}"),
-            format!("{:.6}", w.hist.p50()),
-            format!("{:.6}", w.hist.p99()),
-            format!("{:.6}", w.hist.p999()),
+            fnum(w.busy_s),
+            fnum(util),
+            fnum(w.hist.p50()),
+            fnum(w.hist.p99()),
+            fnum(w.hist.p999()),
             resident,
         ]);
     }
@@ -601,10 +602,10 @@ pub fn placement_table(rows: &[crate::explore::PlacementPoint]) -> (Table, Csv) 
             r.rejected().to_string(),
             r.batches().to_string(),
             r.reloads().to_string(),
-            format!("{:.3}", r.throughput_rps()),
-            format!("{:.4}", r.slo_attainment()),
-            format!("{:.4}", r.mean_utilization()),
-            format!("{:.6}", r.span_s),
+            fnum(r.throughput_rps()),
+            fnum(r.slo_attainment()),
+            fnum(r.mean_utilization()),
+            fnum(r.span_s),
         ]);
     }
     (t, csv)
@@ -661,7 +662,7 @@ pub fn replication_table(rows: &[crate::explore::ReplicationPoint]) -> (Table, C
             latency_ms_cell(&hist, hist.p999()),
         ]);
         csv.row(vec![
-            format!("{:.3}", p.skew),
+            fnum(p.skew),
             p.workers.to_string(),
             p.policy.label().to_string(),
             r.accepted().to_string(),
@@ -671,13 +672,13 @@ pub fn replication_table(rows: &[crate::explore::ReplicationPoint]) -> (Table, C
             r.prewarms().to_string(),
             r.drains().to_string(),
             r.goodput().to_string(),
-            format!("{:.3}", r.throughput_rps()),
-            format!("{:.4}", r.slo_attainment()),
-            format!("{:.4}", r.mean_utilization()),
-            format!("{:.6}", r.span_s),
-            format!("{:.6}", hist.p50()),
-            format!("{:.6}", hist.p99()),
-            format!("{:.6}", hist.p999()),
+            fnum(r.throughput_rps()),
+            fnum(r.slo_attainment()),
+            fnum(r.mean_utilization()),
+            fnum(r.span_s),
+            fnum(hist.p50()),
+            fnum(hist.p99()),
+            fnum(hist.p999()),
         ]);
     }
     (t, csv)
@@ -749,16 +750,72 @@ pub fn chaos_table(rows: &[crate::explore::ChaosPoint]) -> (Table, Csv) {
             r.missed_bug().to_string(),
             r.chaos.crashes.to_string(),
             r.chaos.recoveries.to_string(),
-            format!("{:.6}", r.chaos.downtime_s),
+            fnum(r.chaos.downtime_s),
             r.chaos.repaired().to_string(),
-            format!("{:.6}", r.chaos.mean_repair_s()),
-            format!("{:.6}", r.chaos.max_repair_s()),
+            fnum(r.chaos.mean_repair_s()),
+            fnum(r.chaos.max_repair_s()),
             r.reloads().to_string(),
             r.prewarms().to_string(),
-            format!("{:.3}", r.throughput_rps()),
-            format!("{:.4}", r.slo_attainment()),
-            format!("{:.6}", r.span_s),
-            format!("{:.6}", hist.p99()),
+            fnum(r.throughput_rps()),
+            fnum(r.slo_attainment()),
+            fnum(r.span_s),
+            fnum(hist.p99()),
+        ]);
+    }
+    (t, csv)
+}
+
+/// Movement-sweep curve: one row per `max_batch` rung of a
+/// [`movement_sweep`](crate::explore::movement_sweep) ladder — the
+/// paper's Fig. 7 data-movement argument at fleet scale. `movement_pct`
+/// is the off-chip DRAM share of total fleet energy (reload and pre-warm
+/// streams count as pure movement); growing the batch ceiling amortizes
+/// both the per-batch DRAM traffic and the reload rate, so the share
+/// falls down the table (`results/movement_sweep.csv`;
+/// `tests/obs_trace.rs` pins the monotone decrease).
+pub fn movement_table(rows: &[crate::explore::MovementPoint]) -> (Table, Csv) {
+    let mut t = Table::new(
+        "movement sweep: data-movement energy share vs max batch (fleet scale)",
+        vec![
+            "max_batch", "movement", "compute", "bytes(MB)", "energy(J)", "batches", "reloads",
+            "req/s",
+        ],
+    );
+    let mut csv = Csv::new(vec![
+        "max_batch",
+        "movement_fraction",
+        "compute_fraction",
+        "bytes",
+        "fleet_energy_j",
+        "batches",
+        "reloads",
+        "prewarms",
+        "throughput_rps",
+        "span_s",
+    ]);
+    for p in rows {
+        let r = &p.report;
+        t.row(vec![
+            p.max_batch.to_string(),
+            format!("{:.1}%", 100.0 * p.movement_fraction),
+            format!("{:.1}%", 100.0 * p.compute_fraction),
+            format!("{:.2}", p.bytes as f64 / 1e6),
+            format!("{:.3}", p.fleet_energy_j),
+            r.batches().to_string(),
+            p.reloads.to_string(),
+            format!("{:.1}", r.throughput_rps()),
+        ]);
+        csv.row(vec![
+            p.max_batch.to_string(),
+            fnum(p.movement_fraction),
+            fnum(p.compute_fraction),
+            p.bytes.to_string(),
+            fnum(p.fleet_energy_j),
+            r.batches().to_string(),
+            p.reloads.to_string(),
+            r.prewarms().to_string(),
+            fnum(r.throughput_rps()),
+            fnum(r.span_s),
         ]);
     }
     (t, csv)
@@ -814,9 +871,9 @@ pub fn gap_table(sweep: &crate::explore::GapSweep) -> (Table, Csv) {
             strategy_label(p.strategy).to_string(),
             p.units.to_string(),
             p.budget_tiles.to_string(),
-            format!("{:.4}", p.heuristic_ns),
-            format!("{:.4}", p.exact_ns),
-            format!("{:.6}", p.gap_pct),
+            fnum(p.heuristic_ns),
+            fnum(p.exact_ns),
+            fnum(p.gap_pct),
             p.bnb_nodes.to_string(),
         ]);
     }
@@ -1049,6 +1106,33 @@ mod tests {
     }
 
     #[test]
+    fn movement_table_renders_the_fleet_fig7_curve() {
+        use crate::coordinator::{Arrival, SimServeConfig};
+        use crate::explore::trace::{mixed_trace, movement_sweep};
+        let engine = crate::explore::Engine::compact(presets::lpddr5());
+        let (nets, trace) =
+            mixed_trace(&["mobilenetv1", "vgg11"], 32, Arrival::Poisson(2000.0), 7).unwrap();
+        let base = SimServeConfig {
+            slo_s: 1e6,
+            max_batch: 8,
+            max_wait_s: 0.001,
+            workers: 2,
+            ..SimServeConfig::default()
+        };
+        let rows = movement_sweep(&engine, &nets, &trace, &base, &[1, 8]).unwrap();
+        let (t, csv) = movement_table(&rows);
+        let s = t.render();
+        assert!(s.contains("movement"));
+        assert!(s.contains('%'));
+        assert_eq!(csv.num_rows(), 2);
+        // Fractions land in the CSV as shortest-roundtrip floats in (0, 1).
+        for line in csv.to_string().lines().skip(1) {
+            let frac: f64 = line.split(',').nth(1).unwrap().parse().unwrap();
+            assert!(frac > 0.0 && frac < 1.0, "bad movement fraction: {line}");
+        }
+    }
+
+    #[test]
     fn empty_latency_histograms_render_as_dashes_not_zero_ms() {
         use crate::coordinator::{Arrival, SimServeConfig};
         use crate::explore::trace::{mixed_trace, replay};
@@ -1085,10 +1169,11 @@ mod tests {
         assert!(s.contains("greedy") && s.contains("search"));
         assert!(s.contains("exact"), "zero-gap rows must print as `exact`");
         assert_eq!(csv.num_rows(), sweep.points.len());
-        // search rows certify gap 0.000000 in the CSV
+        // search rows certify an exactly-zero gap in the CSV (fnum
+        // renders 0.0 as the shortest round-trip form)
         for line in csv.to_string().lines().filter(|l| l.contains(",search,")) {
             let gap = line.split(',').nth(6).unwrap();
-            assert_eq!(gap, "0.000000", "search row with nonzero gap: {line}");
+            assert_eq!(gap, "0", "search row with nonzero gap: {line}");
         }
     }
 

@@ -154,6 +154,53 @@ pub struct CacheStats {
     pub store_errors: u64,
 }
 
+impl CacheStats {
+    /// Register the counters under `plan_cache.*` in a metrics registry.
+    pub fn register(&self, reg: &mut crate::obs::Registry) {
+        reg.counter("plan_cache.hits_total", self.hits);
+        reg.counter("plan_cache.misses_total", self.misses);
+        reg.counter("plan_cache.store_hits_total", self.store_hits);
+        reg.counter("plan_cache.store_errors_total", self.store_errors);
+    }
+}
+
+/// How one plan lookup was satisfied (see [`Engine::entry`]'s memory →
+/// store → compute ladder). Recorded per lookup when plan-event
+/// observation is enabled ([`Engine::with_plan_events`]) so a trace can
+/// show which networks were planned fresh vs served from cache/store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanEventKind {
+    /// Served from the in-memory plan cache.
+    CacheHit,
+    /// Rebuilt from the on-disk [`PlanStore`].
+    StoreHit,
+    /// A store read failed and the plan was recomputed (non-fatal).
+    StoreError,
+    /// Freshly computed (a cache miss).
+    Computed,
+}
+
+impl PlanEventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlanEventKind::CacheHit => "cache_hit",
+            PlanEventKind::StoreHit => "store_hit",
+            PlanEventKind::StoreError => "store_error",
+            PlanEventKind::Computed => "computed",
+        }
+    }
+}
+
+/// One observed plan lookup, in lookup order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanEvent {
+    pub kind: PlanEventKind,
+    /// Network the lookup was for.
+    pub net: String,
+    /// Whether DDM was on for the resolved design.
+    pub ddm: bool,
+}
+
 /// Batch-invariant plan ingredients for one (chip, network, strategy, ddm).
 struct PlanEntry {
     chip: ChipModel,
@@ -299,6 +346,10 @@ pub struct Engine {
     misses: AtomicU64,
     store_hits: AtomicU64,
     store_errors: AtomicU64,
+    /// Per-lookup plan events, recorded only when enabled
+    /// ([`Engine::with_plan_events`]); `None` keeps the hot path free of
+    /// the mutex entirely.
+    plan_events: Option<Mutex<Vec<PlanEvent>>>,
 }
 
 impl Engine {
@@ -314,6 +365,7 @@ impl Engine {
             misses: AtomicU64::new(0),
             store_hits: AtomicU64::new(0),
             store_errors: AtomicU64::new(0),
+            plan_events: None,
         }
     }
 
@@ -335,6 +387,37 @@ impl Engine {
     pub fn with_store(mut self, root: impl AsRef<Path>) -> Result<Self> {
         self.store = Some(PlanStore::open(root)?);
         Ok(self)
+    }
+
+    /// Record a [`PlanEvent`] per plan lookup (drained with
+    /// [`Engine::take_plan_events`]). Off by default: the counters in
+    /// [`CacheStats`] are always on, but the per-event log costs a mutex
+    /// push per lookup, so only observability-enabled runs pay it.
+    pub fn with_plan_events(mut self) -> Self {
+        self.plan_events = Some(Mutex::new(Vec::new()));
+        self
+    }
+
+    /// Drain the recorded plan events (empty unless
+    /// [`Engine::with_plan_events`] enabled recording). Events are in
+    /// lookup order; under a parallel sweep that order follows lock
+    /// acquisition, so deterministic traces should drain single-threaded
+    /// replays (the serving path is single-threaded by construction).
+    pub fn take_plan_events(&self) -> Vec<PlanEvent> {
+        match &self.plan_events {
+            Some(m) => std::mem::take(&mut *m.lock().unwrap()),
+            None => Vec::new(),
+        }
+    }
+
+    fn note_plan_event(&self, kind: PlanEventKind, net: &Network, ddm: bool) {
+        if let Some(m) = &self.plan_events {
+            m.lock().unwrap().push(PlanEvent {
+                kind,
+                net: net.name.clone(),
+                ddm,
+            });
+        }
     }
 
     /// Use the pre-striping single global `Mutex` cache. Only interesting
@@ -460,6 +543,7 @@ impl Engine {
         let key = PlanKey::new(cfg, net, strategy, ddm_on);
         if let Some(e) = self.cache.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.note_plan_event(PlanEventKind::CacheHit, net, ddm_on);
             return Ok(e);
         }
         if let Some(plan_store) = &self.store {
@@ -467,6 +551,7 @@ impl Engine {
                 Ok(Some(stored)) => {
                     let chip = ChipModel::new(stored.chip)?;
                     self.store_hits.fetch_add(1, Ordering::Relaxed);
+                    self.note_plan_event(PlanEventKind::StoreHit, net, ddm_on);
                     let entry = Arc::new(PlanEntry {
                         chip,
                         plan: stored.plan,
@@ -477,11 +562,13 @@ impl Engine {
                 Ok(None) => {}
                 Err(e) => {
                     self.store_errors.fetch_add(1, Ordering::Relaxed);
+                    self.note_plan_event(PlanEventKind::StoreError, net, ddm_on);
                     log::warn!("plan store read failed ({e:#}); recomputing");
                 }
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.note_plan_event(PlanEventKind::Computed, net, ddm_on);
         let chip = ChipModel::new(cfg.clone())?;
         let greedy = partition(net, &chip)?;
         let plan = match strategy {
@@ -795,5 +882,33 @@ mod tests {
         let out = parallel_map(&items, |&x| x * x);
         assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
         assert_eq!(parallel_map::<u64, u64, _>(&[], |&x| x), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn plan_events_record_the_lookup_ladder_only_when_enabled() {
+        let net = resnet::resnet18(100);
+
+        // Disabled by default: counters advance, the event log stays empty.
+        let silent = engine();
+        silent.warm(Design::CompactDdm, &net).unwrap();
+        assert_eq!(silent.cache_stats().misses, 1);
+        assert!(silent.take_plan_events().is_empty());
+
+        // Enabled: one Computed for the fresh plan, one CacheHit for the
+        // re-warm, in lookup order; draining empties the log.
+        let eng = engine().with_plan_events();
+        eng.warm(Design::CompactDdm, &net).unwrap();
+        eng.warm(Design::CompactDdm, &net).unwrap();
+        let events = eng.take_plan_events();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, PlanEventKind::Computed);
+        assert_eq!(events[1].kind, PlanEventKind::CacheHit);
+        assert_eq!(events[0].net, net.name);
+        assert!(events[0].ddm);
+        assert!(eng.take_plan_events().is_empty(), "drained");
+
+        // The event log mirrors the counters exactly.
+        assert_eq!(eng.cache_stats().misses, 1);
+        assert_eq!(eng.cache_stats().hits, 1);
     }
 }

@@ -14,8 +14,10 @@
 pub mod engine;
 pub mod store;
 
-pub use engine::{find, find_net, CacheStats, Design, DesignPoint, Engine};
-pub use store::{MergeStats, PlanStore};
+pub use engine::{
+    find, find_net, CacheStats, Design, DesignPoint, Engine, PlanEvent, PlanEventKind,
+};
+pub use store::{IoStats, MergeStats, PlanStore};
 
 use crate::cfg::chip::ChipConfig;
 use crate::cfg::dram::DramConfig;

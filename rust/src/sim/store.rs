@@ -33,6 +33,7 @@ use std::fs;
 use std::io::ErrorKind;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -507,10 +508,44 @@ pub struct MergeStats {
     pub identical: usize,
 }
 
+/// Cumulative store I/O, shared across clones of one [`PlanStore`] handle
+/// (the engine clones the store into its lock-striped cache shards).
+#[derive(Debug, Default)]
+struct IoCounters {
+    loads: AtomicU64,
+    load_bytes: AtomicU64,
+    saves: AtomicU64,
+    save_bytes: AtomicU64,
+}
+
+/// Snapshot of one store handle's disk traffic ([`PlanStore::io_stats`]).
+///
+/// `loads`/`load_bytes` count successfully read entry files (misses cost
+/// no bytes and are not counted); `saves`/`save_bytes` count published
+/// entries. Registered under `store.*` in the unified metrics registry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoStats {
+    pub loads: u64,
+    pub load_bytes: u64,
+    pub saves: u64,
+    pub save_bytes: u64,
+}
+
+impl IoStats {
+    /// Register the snapshot under `store.*`.
+    pub fn register(&self, reg: &mut crate::obs::Registry) {
+        reg.counter("store.loads_total", self.loads);
+        reg.counter("store.load_bytes_total", self.load_bytes);
+        reg.counter("store.saves_total", self.saves);
+        reg.counter("store.save_bytes_total", self.save_bytes);
+    }
+}
+
 /// A content-addressed plan store rooted at one directory.
 #[derive(Debug, Clone)]
 pub struct PlanStore {
     root: PathBuf,
+    io: Arc<IoCounters>,
 }
 
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -546,7 +581,10 @@ impl PlanStore {
         }
         fs::create_dir_all(&root)
             .with_context(|| format!("cannot create plan store root {}", root.display()))?;
-        Ok(PlanStore { root })
+        Ok(PlanStore {
+            root,
+            io: Arc::default(),
+        })
     }
 
     /// Open a store that must already exist (merge sources, `store ls`).
@@ -557,11 +595,24 @@ impl PlanStore {
             "plan store root {} is not an existing directory",
             root.display()
         );
-        Ok(PlanStore { root })
+        Ok(PlanStore {
+            root,
+            io: Arc::default(),
+        })
     }
 
     pub fn root(&self) -> &Path {
         &self.root
+    }
+
+    /// Disk traffic observed through this handle (and its clones) so far.
+    pub fn io_stats(&self) -> IoStats {
+        IoStats {
+            loads: self.io.loads.load(Ordering::Relaxed),
+            load_bytes: self.io.load_bytes.load(Ordering::Relaxed),
+            saves: self.io.saves.load(Ordering::Relaxed),
+            save_bytes: self.io.save_bytes.load(Ordering::Relaxed),
+        }
     }
 
     /// Path an entry with this key hash lives at.
@@ -591,6 +642,10 @@ impl PlanStore {
                     .with_context(|| format!("cannot read plan store entry {}", path.display()))
             }
         };
+        self.io.loads.fetch_add(1, Ordering::Relaxed);
+        self.io
+            .load_bytes
+            .fetch_add(bytes.len() as u64, Ordering::Relaxed);
         let (stored_key, payload) = split_file(&bytes, Some(hash))
             .with_context(|| format!("invalid plan store entry {}", path.display()))?;
         ensure!(
@@ -618,7 +673,12 @@ impl PlanStore {
         let key = encode_key(cfg, net, strategy, ddm);
         let payload = encode_payload(cfg, plan, dups);
         let path = self.path_for(fnv1a64(&key));
-        write_atomic(&path, &encode_file(&key, &payload))?;
+        let file = encode_file(&key, &payload);
+        write_atomic(&path, &file)?;
+        self.io.saves.fetch_add(1, Ordering::Relaxed);
+        self.io
+            .save_bytes
+            .fetch_add(file.len() as u64, Ordering::Relaxed);
         Ok(path)
     }
 
@@ -756,6 +816,7 @@ mod tests {
         let (cfg, net, plan, dups) = sample();
         let store = PlanStore::open(&root).unwrap();
         assert_eq!(store.num_entries().unwrap(), 0);
+        assert_eq!(store.io_stats(), IoStats::default());
         let path = store.save(&cfg, &net, PartitionStrategy::Greedy, true, &plan, &dups).unwrap();
         assert!(path.starts_with(&root));
         let got = store
@@ -768,6 +829,13 @@ mod tests {
         );
         // a different identity is absent, not an error
         assert!(store.load(&cfg, &net, PartitionStrategy::Greedy, false).unwrap().is_none());
+        // I/O counters: one save and one successful load of the same file;
+        // the miss moved no bytes. Clones share the same counters.
+        let io = store.clone().io_stats();
+        assert_eq!(io.saves, 1);
+        assert_eq!(io.loads, 1);
+        assert!(io.save_bytes > 0);
+        assert_eq!(io.load_bytes, io.save_bytes);
         assert_eq!(
             store.hashes().unwrap(),
             vec![plan_key_hash(&cfg, &net, PartitionStrategy::Greedy, true)]

@@ -4,6 +4,17 @@ use std::fs;
 use std::io::Write as _;
 use std::path::Path;
 
+/// Shortest-roundtrip float formatting for CSV cells: `format!("{}", v)`
+/// prints the fewest digits that parse back to the same `f64` bits, so
+/// equal values render byte-identically across runs and platforms —
+/// every figure emitter writes floats through this one helper, which is
+/// what makes `cmp`-based CI determinism checks possible on the CSVs.
+/// Non-finite values render as their Rust display forms (`NaN`, `inf`,
+/// `-inf`); emitters are expected not to produce them.
+pub fn fnum(v: f64) -> String {
+    format!("{v}")
+}
+
 /// In-memory CSV table with RFC-4180 quoting on write.
 #[derive(Debug, Clone)]
 pub struct Csv {
@@ -98,6 +109,17 @@ mod tests {
     fn rejects_mismatched_row() {
         let mut c = Csv::new(vec!["a", "b"]);
         c.row(vec!["1"]);
+    }
+
+    #[test]
+    fn fnum_is_shortest_roundtrip() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(1.5), "1.5");
+        assert_eq!(fnum(0.1), "0.1");
+        assert_eq!(fnum(1e-9), "0.000000001");
+        for v in [0.1, 2.35, 1.0 / 3.0, 123456.789, 4.9e-12] {
+            assert_eq!(fnum(v).parse::<f64>().unwrap().to_bits(), v.to_bits());
+        }
     }
 
     #[test]

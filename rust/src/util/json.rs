@@ -251,6 +251,37 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Append `s` to `out` as a JSON string literal (including the quotes),
+/// escaping exactly what [`parse`] understands — `"` `\` control chars —
+/// so every emitted string round-trips through the in-repo parser.
+pub fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// [`escape_into`] as an owned string.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    escape_into(&mut out, s);
+    out
+}
+
 /// Parse a complete JSON document.
 pub fn parse(text: &str) -> Result<Json, JsonError> {
     let mut p = Parser {
@@ -334,5 +365,28 @@ mod tests {
     fn nested_arrays() {
         let j = parse("[[1,2],[3]]").unwrap();
         assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn escape_round_trips_through_the_parser() {
+        for s in [
+            "plain",
+            "quote\"backslash\\slash/",
+            "newline\ntab\tcr\r",
+            "bell\u{0007}backspace\u{0008}formfeed\u{000C}",
+            "unicode λ → 終",
+            "",
+        ] {
+            let lit = escape(s);
+            assert_eq!(parse(&lit).unwrap().as_str(), Some(s), "literal {lit}");
+        }
+    }
+
+    #[test]
+    fn escape_uses_short_escapes_and_u_escapes_for_controls() {
+        assert_eq!(escape("a\"b"), r#""a\"b""#);
+        assert_eq!(escape("a\\b"), r#""a\\b""#);
+        assert_eq!(escape("\n"), r#""\n""#);
+        assert_eq!(escape("\u{0001}"), "\"\\u0001\"");
     }
 }

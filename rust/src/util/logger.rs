@@ -1,8 +1,43 @@
 //! Minimal `log`-facade backend writing to stderr, controlled by
 //! `PIMFLOW_LOG` (error|warn|info|debug|trace; default info).
+//!
+//! The backend also counts every warn- and error-level line it sees in
+//! process-wide atomics ([`counts`]), independent of whether the line was
+//! printed. The observability layer snapshots those counters around a run
+//! and registers the *deltas* as `log.warn_total` / `log.error_total` in
+//! [`crate::obs::metrics::Registry`], so a noisy run (store corruption
+//! warnings, config fallbacks) is machine-detectable in CI without
+//! scraping stderr.
 
 use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Once;
+
+static WARN_TOTAL: AtomicU64 = AtomicU64::new(0);
+static ERROR_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Parse a `PIMFLOW_LOG` value. Unset or unrecognized values fall back to
+/// `Info` — a typo in the env var must never silence errors below the
+/// default or crash startup.
+pub fn parse_level(raw: Option<&str>) -> Level {
+    match raw {
+        Some("error") => Level::Error,
+        Some("warn") => Level::Warn,
+        Some("debug") => Level::Debug,
+        Some("trace") => Level::Trace,
+        _ => Level::Info,
+    }
+}
+
+/// Cumulative `(warn, error)` line counts since process start. Monotone;
+/// callers interested in one run's noise snapshot before and after and
+/// subtract.
+pub fn counts() -> (u64, u64) {
+    (
+        WARN_TOTAL.load(Ordering::Relaxed),
+        ERROR_TOTAL.load(Ordering::Relaxed),
+    )
+}
 
 struct StderrLogger {
     max: Level,
@@ -14,6 +49,15 @@ impl Log for StderrLogger {
     }
 
     fn log(&self, record: &Record) {
+        match record.level() {
+            Level::Error => {
+                ERROR_TOTAL.fetch_add(1, Ordering::Relaxed);
+            }
+            Level::Warn => {
+                WARN_TOTAL.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
         if self.enabled(record.metadata()) {
             eprintln!(
                 "[{:<5} {}] {}",
@@ -32,13 +76,8 @@ static INIT: Once = Once::new();
 /// Install the logger once; later calls are no-ops. Safe to call from tests.
 pub fn init() {
     INIT.call_once(|| {
-        let level = match std::env::var("PIMFLOW_LOG").as_deref() {
-            Ok("error") => Level::Error,
-            Ok("warn") => Level::Warn,
-            Ok("debug") => Level::Debug,
-            Ok("trace") => Level::Trace,
-            _ => Level::Info,
-        };
+        let var = std::env::var("PIMFLOW_LOG");
+        let level = parse_level(var.as_deref().ok());
         let logger: Box<StderrLogger> = Box::new(StderrLogger { max: level });
         if log::set_boxed_logger(logger).is_ok() {
             log::set_max_level(match level {
@@ -54,10 +93,42 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logger smoke test");
+    }
+
+    #[test]
+    fn level_parse_falls_back_to_info() {
+        assert_eq!(parse_level(Some("error")), Level::Error);
+        assert_eq!(parse_level(Some("warn")), Level::Warn);
+        assert_eq!(parse_level(Some("debug")), Level::Debug);
+        assert_eq!(parse_level(Some("trace")), Level::Trace);
+        // The fallback net: unset, the default spelled out, typos, case
+        // mismatches, and garbage all land on Info rather than erroring.
+        assert_eq!(parse_level(None), Level::Info);
+        assert_eq!(parse_level(Some("info")), Level::Info);
+        assert_eq!(parse_level(Some("INFO")), Level::Info);
+        assert_eq!(parse_level(Some("Warn")), Level::Info);
+        assert_eq!(parse_level(Some("verbose")), Level::Info);
+        assert_eq!(parse_level(Some("")), Level::Info);
+    }
+
+    #[test]
+    fn warn_and_error_lines_are_counted() {
+        super::init();
+        let (w0, e0) = counts();
+        log::warn!("counted warn");
+        log::error!("counted error");
+        log::info!("info lines are not counted");
+        let (w1, e1) = counts();
+        // Other tests in the same process may log concurrently, so the
+        // counters are monotone lower bounds, not exact deltas.
+        assert!(w1 >= w0 + 1, "warn counter must advance: {w0} -> {w1}");
+        assert!(e1 >= e0 + 1, "error counter must advance: {e0} -> {e1}");
     }
 }

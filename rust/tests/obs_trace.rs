@@ -1,0 +1,348 @@
+//! Tier-1 pins for the observability layer (`obs`):
+//!
+//! * **bitwise inertness when disabled** — a replay with no trace sink and
+//!   no movement ledger attached is the pre-observability replay, bit for
+//!   bit, across placement × replication × fault plans;
+//! * **byte-identical double runs** — the same pinned faulted workload
+//!   exported twice produces byte-identical Chrome-trace JSON and metrics
+//!   text/CSV (no wall-clock, no RNG, sorted iteration everywhere);
+//! * **Chrome `trace_event` shape** — the in-repo JSON parser validates
+//!   every emitted event, lanes are named, and the span taxonomy (exec /
+//!   reload / prewarm spans; batch_open / crash / recover /
+//!   controller_tick instants; dram_brownout windows; plan-ladder
+//!   provenance) shows up under the expected categories;
+//! * **streaming = buffered** — the O(1)-memory streaming sink writes the
+//!   exact bytes the buffered sink renders;
+//! * **movement attribution** — the data-movement energy share decreases
+//!   monotonically along a growing `max_batch` ladder (the paper's Fig. 7
+//!   argument at fleet scale).
+
+use pimflow::cfg::presets;
+use pimflow::coordinator::{
+    AdaptiveConfig, FaultPlan, Placement, ReplicationPolicy, SimRequest, SimServeConfig,
+    SimServeReport,
+};
+use pimflow::explore::trace::{mixed_trace, movement_sweep, replay, replay_obs};
+use pimflow::nn::{zoo, Network};
+use pimflow::obs::{event_counts, validate_chrome_trace, Registry, TraceSink};
+use pimflow::sim::Engine;
+
+fn engine() -> Engine {
+    Engine::compact(presets::lpddr5())
+}
+
+/// The pinned skewed workload shared with `tests/chaos_sim.rs`: one hot
+/// network every other request, three cold ones cycling behind it.
+fn skewed_nets() -> Vec<Network> {
+    ["mobilenetv1", "vgg11", "resnet18", "vgg13"]
+        .iter()
+        .map(|n| zoo::by_name(n, 100).unwrap())
+        .collect()
+}
+
+fn skewed_trace(n: usize) -> Vec<SimRequest> {
+    (0..n)
+        .map(|j| SimRequest {
+            id: j as u64,
+            net: if j % 2 == 0 { 0 } else { 1 + (j / 2) % 3 },
+            arrival_s: j as f64 * 0.025,
+        })
+        .collect()
+}
+
+fn base_cfg() -> SimServeConfig {
+    SimServeConfig {
+        slo_s: 1e6,
+        max_batch: 8,
+        max_wait_s: 0.001,
+        workers: 3,
+        placement: Placement::NetworkAffinity,
+        ..SimServeConfig::default()
+    }
+}
+
+/// The pinned chaos scenario from `tests/chaos_sim.rs`: adaptive
+/// replication with the hot-network worker crashed mid-trace.
+fn faulted_cfg() -> SimServeConfig {
+    SimServeConfig {
+        replication: ReplicationPolicy::Adaptive(AdaptiveConfig::default()),
+        faults: FaultPlan::parse("crash:w0@3.0005s+1.0s").unwrap(),
+        ..base_cfg()
+    }
+}
+
+/// Bitwise equality on every externally visible report dimension.
+fn assert_bitwise_equal(a: &SimServeReport, b: &SimServeReport, label: &str) {
+    assert_eq!(a.accepted(), b.accepted(), "{label}: accepted");
+    assert_eq!(a.coalesced(), b.coalesced(), "{label}: coalesced");
+    assert_eq!(a.rejected(), b.rejected(), "{label}: rejected");
+    assert_eq!(a.batches(), b.batches(), "{label}: batches");
+    assert_eq!(a.reloads(), b.reloads(), "{label}: reloads");
+    assert_eq!(a.prewarms(), b.prewarms(), "{label}: prewarms");
+    assert_eq!(a.goodput(), b.goodput(), "{label}: goodput");
+    assert_eq!(a.span_s.to_bits(), b.span_s.to_bits(), "{label}: span");
+    assert_eq!(a.completions.len(), b.completions.len(), "{label}: completions");
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.id, y.id, "{label}: completion order");
+        assert_eq!(x.worker, y.worker, "{label}: worker of request {}", x.id);
+        assert_eq!(
+            x.completion_s.to_bits(),
+            y.completion_s.to_bits(),
+            "{label}: completion time of request {}",
+            x.id
+        );
+    }
+    assert_eq!(a.replica_holders, b.replica_holders, "{label}: residency");
+    for (x, y) in a.per_worker.iter().zip(&b.per_worker) {
+        assert_eq!(x.busy_s.to_bits(), y.busy_s.to_bits(), "{label}: worker {} busy", x.id);
+        assert_eq!(
+            x.idle_at_s.to_bits(),
+            y.idle_at_s.to_bits(),
+            "{label}: worker {} idle-at",
+            x.id
+        );
+    }
+}
+
+#[test]
+fn disabled_sinks_are_bitwise_inert_across_the_policy_grid() {
+    // `replay_obs` with nothing attached must BE `replay`: no sink checks
+    // change arithmetic, no extra events, no perturbed ordering. Pinned
+    // across every placement × a replication ladder × fault plans so the
+    // instrumentation hooks in flush/crash/prewarm/controller paths are
+    // all covered by a disabled-path replay.
+    let nets = skewed_nets();
+    let trace = skewed_trace(120);
+    let policies = [
+        ReplicationPolicy::None,
+        ReplicationPolicy::Static { targets: vec![("mobilenetv1".to_string(), 2)] },
+        ReplicationPolicy::Adaptive(AdaptiveConfig::default()),
+    ];
+    let plans = [
+        FaultPlan::default(),
+        FaultPlan::parse("crash:w0@1.5s+0.5s,dramslow:0.5x@0.5s..2.5s").unwrap(),
+    ];
+    for placement in Placement::ALL {
+        for policy in &policies {
+            for faults in &plans {
+                let cfg = SimServeConfig {
+                    placement,
+                    replication: policy.clone(),
+                    faults: faults.clone(),
+                    ..base_cfg()
+                };
+                let plain = replay(&engine(), &nets, &trace, cfg.clone()).unwrap();
+                let obs = replay_obs(&engine(), &nets, &trace, cfg, None, false).unwrap();
+                let label = format!(
+                    "{} / {} / faults {}",
+                    placement.label(),
+                    policy.label(),
+                    !faults.is_off()
+                );
+                assert!(obs.trace.is_none(), "{label}: no sink, no trace");
+                assert!(obs.movement.is_none(), "{label}: no ledger, no movement");
+                assert_bitwise_equal(&plain, &obs, &label);
+            }
+        }
+    }
+}
+
+/// One instrumented run of the pinned faulted workload: fresh engine,
+/// buffered sink + movement ledger, full metrics registry. Returns the
+/// rendered trace JSON and both metrics exports.
+fn instrumented_run() -> (SimServeReport, String, String, String) {
+    let eng = engine().with_plan_events();
+    let nets = skewed_nets();
+    let trace = skewed_trace(240);
+    let report = replay_obs(
+        &eng,
+        &nets,
+        &trace,
+        faulted_cfg(),
+        Some(TraceSink::buffered()),
+        true,
+    )
+    .unwrap();
+    let json = report
+        .trace
+        .as_ref()
+        .expect("buffered sink reaches the report")
+        .json
+        .clone()
+        .expect("buffered sinks render JSON in-memory");
+    let mut reg = Registry::new();
+    report.register_metrics(&mut reg);
+    eng.cache_stats().register(&mut reg);
+    (report, json, reg.to_text(), reg.to_csv())
+}
+
+#[test]
+fn double_runs_export_byte_identical_trace_and_metrics() {
+    let (r1, json1, text1, csv1) = instrumented_run();
+    let (r2, json2, text2, csv2) = instrumented_run();
+    assert_bitwise_equal(&r1, &r2, "instrumented double run");
+    assert_eq!(json1, json2, "trace JSON must be byte-identical across runs");
+    assert_eq!(text1, text2, "metrics text must be byte-identical across runs");
+    assert_eq!(csv1, csv2, "metrics CSV must be byte-identical across runs");
+
+    // The export is a valid Chrome trace, and the counted events match
+    // what the sink reported.
+    let done = r1.trace.as_ref().unwrap();
+    let n = validate_chrome_trace(&json1).expect("well-formed trace_event JSON");
+    assert_eq!(n as u64, done.events, "validator count vs sink count");
+    assert!(done.high_water > 0, "buffered sinks hold the whole trace");
+
+    // Span taxonomy under the pinned chaos scenario: executions, weight
+    // reloads, adaptive pre-warms, batch opens, the crash/recover pair
+    // with its down window, controller ticks, residency churn, and
+    // plan-ladder provenance all show up under their categories.
+    let counts = event_counts(&json1).unwrap();
+    let c = |cat: &str, name: &str| {
+        counts
+            .get(&(cat.to_string(), name.to_string()))
+            .copied()
+            .unwrap_or(0)
+    };
+    assert_eq!(c("batch", "exec") as u64, r1.batches(), "one exec span per batch");
+    assert_eq!(c("weights", "reload") as u64, r1.reloads(), "one reload span per reload");
+    assert_eq!(c("weights", "prewarm") as u64, r1.prewarms(), "one prewarm span per prewarm");
+    assert!(c("batch", "batch_open") > 0, "fresh batches emit open instants");
+    assert_eq!(c("fault", "crash"), 1, "the pinned crash fires once");
+    assert_eq!(c("fault", "down"), 1, "one down window per crash");
+    assert_eq!(c("fault", "recover"), 1, "the worker comes back");
+    assert!(c("controller", "controller_tick") > 0, "adaptive controller ticks");
+    assert!(c("residency", "load") > 0, "weight loads land on the residency lane");
+    assert!(c("residency", "evict") > 0, "the crash evicts residency");
+    assert!(c("plan", "computed") > 0, "fresh plan computations are recorded");
+
+    // Metrics snapshot: fleet, per-network, per-worker, chaos, movement,
+    // plan-cache, and trace self-accounting all registered.
+    for key in [
+        "serve.completed_total",
+        "serve.workers",
+        "net.mobilenetv1.batches_total",
+        "worker.0.crashes_total",
+        "chaos.crashes_total",
+        "movement.fraction",
+        "movement.reload.bytes_total",
+        "plan_cache.misses_total",
+        "trace.events_total",
+    ] {
+        assert!(
+            text1.lines().any(|l| l.starts_with(&format!("{key} "))),
+            "metric {key} missing from:\n{text1}"
+        );
+    }
+    // Deterministic export order: sorted by name.
+    let names: Vec<&str> = text1.lines().filter_map(|l| l.split(' ').next()).collect();
+    let mut sorted = names.clone();
+    sorted.sort_unstable();
+    assert_eq!(names, sorted, "metrics text must be name-sorted");
+}
+
+#[test]
+fn streaming_sink_writes_the_exact_buffered_bytes() {
+    let nets = skewed_nets();
+    let trace = skewed_trace(60);
+    // Brownout plan so the synthetic fault lane gets a window span too.
+    let cfg = SimServeConfig {
+        faults: FaultPlan::parse("dramslow:0.5x@0.2s..0.8s").unwrap(),
+        ..base_cfg()
+    };
+
+    let buffered = replay_obs(
+        &engine(),
+        &nets,
+        &trace,
+        cfg.clone(),
+        Some(TraceSink::buffered()),
+        false,
+    )
+    .unwrap();
+    let bdone = buffered.trace.as_ref().unwrap();
+    let json = bdone.json.as_ref().unwrap();
+    assert_eq!(event_counts(json).unwrap().get(&("fault".into(), "dram_brownout".into())), Some(&1));
+    // Lanes are named for the Perfetto UI: workers, controller, faults, plan.
+    for lane in ["worker 0", "worker 2", "controller", "faults", "plan"] {
+        assert!(json.contains(lane), "lane `{lane}` unnamed in:\n{json}");
+    }
+
+    let dir = std::env::temp_dir().join("pimflow_obs_trace_test");
+    let path = dir.join("stream.trace.json");
+    let streamed = replay_obs(
+        &engine(),
+        &nets,
+        &trace,
+        cfg,
+        Some(TraceSink::streaming(&path).unwrap()),
+        false,
+    )
+    .unwrap();
+    let sdone = streamed.trace.as_ref().unwrap();
+    assert_eq!(sdone.events, bdone.events);
+    assert_eq!(sdone.high_water, 0, "streaming sinks buffer nothing");
+    assert_eq!(sdone.path.as_deref(), Some(path.as_path()));
+    let on_disk = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(&on_disk, json, "streaming and buffered sinks must emit identical bytes");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn movement_share_decreases_monotonically_along_the_batch_ladder() {
+    // The acceptance curve: one trace, a growing max_batch ladder, the
+    // DRAM (data-movement) share of fleet energy falling rung over rung —
+    // batching amortizes both the per-batch weight streaming and the
+    // reload rate, the paper's Fig. 7 argument lifted to the fleet.
+    let eng = engine();
+    let (nets, trace) = mixed_trace(
+        &["mobilenetv1", "vgg11"],
+        96,
+        pimflow::coordinator::Arrival::Poisson(2000.0),
+        11,
+    )
+    .unwrap();
+    let base = SimServeConfig {
+        slo_s: 1e6,
+        max_batch: 8,
+        max_wait_s: 0.001,
+        workers: 2,
+        ..SimServeConfig::default()
+    };
+    let rows = movement_sweep(&eng, &nets, &trace, &base, &[1, 2, 4, 8]).unwrap();
+    assert_eq!(rows.len(), 4);
+    for w in rows.windows(2) {
+        assert!(
+            w[1].movement_fraction <= w[0].movement_fraction,
+            "movement share grew with batch: {} @ b={} -> {} @ b={}",
+            w[0].movement_fraction,
+            w[0].max_batch,
+            w[1].movement_fraction,
+            w[1].max_batch
+        );
+    }
+    let first = &rows[0];
+    let last = rows.last().unwrap();
+    assert!(
+        last.movement_fraction < first.movement_fraction,
+        "the ladder must actually amortize: {} !< {}",
+        last.movement_fraction,
+        first.movement_fraction
+    );
+    assert!(last.movement_fraction > 0.0 && last.movement_fraction < 1.0);
+    assert!(
+        first.reloads >= last.reloads,
+        "bigger batches cannot reload more often"
+    );
+    // Every rung attributes every executed batch and every reload.
+    for r in &rows {
+        let m = r.report.movement.as_ref().unwrap();
+        assert_eq!(
+            m.by_cause(pimflow::obs::MoveCause::Batch).events,
+            r.report.batches()
+        );
+        assert_eq!(
+            m.by_cause(pimflow::obs::MoveCause::Reload).events,
+            r.report.reloads()
+        );
+    }
+}
